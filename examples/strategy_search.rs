@@ -1,0 +1,60 @@
+//! Batching-strategy search (paper §4.3–4.4) across the paper's models
+//! and testbeds, plus a live per-module latency profile of the tiny MoE
+//! (the paper's App. B "workload profiling" — what the search consumes on
+//! real hardware).
+//!
+//!     cargo run --release --example strategy_search
+
+use anyhow::Result;
+
+use moe_gen::config::EngineConfig;
+use moe_gen::engine::Engine;
+use moe_gen::sched::{self, Knobs, Scenario};
+use moe_gen::{hw, model};
+
+fn main() -> Result<()> {
+    println!("=== batching-strategy search (prompt 512, decode 256) ===\n");
+    let models = [
+        model::mixtral_8x7b(),
+        model::mixtral_8x22b(),
+        model::deepseek_v2(),
+        model::deepseek_r1(),
+    ];
+    let testbeds = [hw::c1(), hw::c2(), hw::c3()];
+    for m in &models {
+        for h in &testbeds {
+            let scn = Scenario::new(m.clone(), h.clone(), 512, 256);
+            if sched::max_host_batch(&scn) == 0 {
+                println!("{:<18} {:<10} N/A (model+KV exceed host memory)", m.name, h.name.split(' ').next().unwrap());
+                continue;
+            }
+            let r = sched::search_decode(&scn, &Knobs::moe_gen());
+            println!(
+                "{:<18} {:<10} B={:<6} b_a={:<5} b_e={:<6} ω={:.1} S_exp={:<8} S_par={:<8} → {:>8.1} tok/s",
+                m.name,
+                h.name.split(' ').next().unwrap(),
+                r.strategy.b,
+                r.strategy.b_a,
+                r.strategy.b_e,
+                r.strategy.omega,
+                moe_gen::util::fmt_bytes(r.strategy.s_expert as f64),
+                moe_gen::util::fmt_bytes(r.strategy.s_params as f64),
+                r.throughput,
+            );
+        }
+    }
+
+    println!("\n=== live module profile (tiny MoE on PJRT-CPU) ===\n");
+    let cfg = EngineConfig { artifacts_dir: "artifacts".into(), ..EngineConfig::default() };
+    match Engine::new(cfg) {
+        Ok(mut eng) => {
+            eng.warmup()?;
+            println!("{:<14} {:>8} {:>14}", "module", "bucket", "latency (ms)");
+            for (name, bucket, secs) in eng.profile_modules()? {
+                println!("{name:<14} {bucket:>8} {:>14.3}", secs * 1e3);
+            }
+        }
+        Err(e) => println!("(live profile skipped: {e})"),
+    }
+    Ok(())
+}

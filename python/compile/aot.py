@@ -1,0 +1,222 @@
+"""AOT pipeline: lower every model module to HLO text + emit artifacts.
+
+Run once at build time (`make artifacts`); python is never on the request
+path.  Outputs, all under ``artifacts/``:
+
+  <module>_b<bucket>[_s<seq>].hlo.txt   one HLO text file per module per
+                                        static batch bucket (HLO text, NOT
+                                        serialized proto: jax >= 0.5 emits
+                                        64-bit instruction ids that the xla
+                                        crate's xla_extension 0.5.1 rejects;
+                                        the text parser reassigns ids)
+  manifest.json                         module -> file/params/outputs map +
+                                        the full model config, consumed by
+                                        rust/src/runtime/artifacts.rs
+  weights.npz                           deterministic random weights
+  golden.npz                            per-module input/output pairs and a
+                                        full greedy-decode trace produced by
+                                        the python ReferenceEngine, asserted
+                                        against by rust integration tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import CONFIG, TinyMoEConfig
+from .engine_ref import ReferenceEngine
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def module_variants(cfg: TinyMoEConfig):
+    """Yield (name, bucket_meta, filename, [param specs with names])."""
+    H, V, E = cfg.hidden_size, cfg.vocab_size, cfg.num_experts
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    qd, kvd, I = cfg.q_dim, cfg.kv_dim, cfg.ffn_inter
+    S = cfg.max_context
+
+    for n in cfg.token_buckets:
+        yield ("embed", {"tokens": n}, f"embed_b{n}",
+               [("emb", spec((V, H))), ("ids", spec((n,), I32))])
+        yield ("pre_attention", {"tokens": n}, f"pre_attention_b{n}",
+               [("ln", spec((H,))), ("wq", spec((H, qd))),
+                ("wk", spec((H, kvd))), ("wv", spec((H, kvd))),
+                ("x", spec((n, H))), ("pos", spec((n,), I32))])
+        yield ("post_attention", {"tokens": n}, f"post_attention_b{n}",
+               [("wo", spec((qd, H))), ("ctx", spec((n, qd))),
+                ("resid", spec((n, H)))])
+        yield ("router", {"tokens": n}, f"router_b{n}",
+               [("ln2", spec((H,))), ("wr", spec((H, E))),
+                ("x", spec((n, H)))])
+        yield ("lm_head", {"tokens": n}, f"lm_head_b{n}",
+               [("lnf", spec((H,))), ("wo", spec((H, V))),
+                ("x", spec((n, H)))])
+
+    for m in cfg.expert_buckets:
+        yield ("expert_ffn", {"tokens": m}, f"expert_ffn_b{m}",
+               [("wg", spec((H, I))), ("wu", spec((H, I))),
+                ("wd", spec((I, H))), ("x", spec((m, H)))])
+
+    s = cfg.prefill_seq
+    for b in cfg.prefill_batch_buckets:
+        yield ("attn_prefill", {"batch": b, "seq": s},
+               f"attn_prefill_b{b}_s{s}",
+               [("q", spec((b, s, nh, hd))), ("k", spec((b, s, nkv, hd))),
+                ("v", spec((b, s, nkv, hd))), ("lens", spec((b,), I32))])
+
+    for b in cfg.decode_batch_buckets:
+        yield ("attn_decode", {"batch": b, "kv_capacity": S},
+               f"attn_decode_b{b}",
+               [("q", spec((b, nh, hd))), ("kc", spec((b, S, nkv, hd))),
+                ("vc", spec((b, S, nkv, hd))), ("lens", spec((b,), I32))])
+
+
+def lower_all(cfg: TinyMoEConfig, out_dir: str) -> list:
+    entries = []
+    for name, meta, stem, params in module_variants(cfg):
+        fn = functools.partial(getattr(model, name), cfg)
+        lowered = jax.jit(fn).lower(*[s for _, s in params])
+        text = to_hlo_text(lowered)
+        fname = stem + ".hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *[s for _, s in params])
+        entries.append({
+            "name": name,
+            "meta": meta,
+            "file": fname,
+            "params": [
+                {"name": pn, "shape": list(ps.shape), "dtype": ps.dtype.name}
+                for pn, ps in params
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": o.dtype.name} for o in outs
+            ],
+        })
+        print(f"  lowered {fname} ({len(text)} chars)")
+    return entries
+
+
+def make_goldens(cfg: TinyMoEConfig, weights: dict) -> dict:
+    """Per-module golden input/output pairs + a full greedy trace."""
+    rng = np.random.default_rng(1234)
+    g = {}
+
+    def sample(mod_name, bucket_args):
+        fn = functools.partial(getattr(model, mod_name), cfg)
+        args = []
+        for (_, sp) in bucket_args:
+            if sp.dtype == np.int32:
+                hi = cfg.vocab_size if mod_name == "embed" else cfg.max_context // 2
+                args.append(rng.integers(0, hi, sp.shape).astype(np.int32))
+            else:
+                args.append(rng.standard_normal(sp.shape).astype(np.float32))
+        outs = jax.jit(fn)(*args)
+        for i, a in enumerate(args):
+            g[f"g.{mod_name}.in{i}"] = np.asarray(a)
+        for i, o in enumerate(outs):
+            g[f"g.{mod_name}.out{i}"] = np.asarray(o)
+
+    chosen = {}
+    for name, meta, stem, params in module_variants(cfg):
+        # One golden per module, at its smallest bucket.
+        if name not in chosen:
+            chosen[name] = params
+    for name, params in chosen.items():
+        sample(name, params)
+
+    # Full greedy-decode trace through the reference engine.
+    prompts = [
+        list(rng.integers(1, cfg.vocab_size, size=L).astype(int))
+        for L in (5, 9, 16, 12)
+    ]
+    steps = 16
+    engine = ReferenceEngine(cfg, weights)
+    tokens = engine.generate(prompts, steps)
+
+    maxlen = max(len(p) for p in prompts)
+    pmat = np.zeros((len(prompts), maxlen), dtype=np.int32)
+    for i, p in enumerate(prompts):
+        pmat[i, : len(p)] = p
+    g["trace.prompts"] = pmat
+    g["trace.lens"] = np.array([len(p) for p in prompts], dtype=np.int32)
+    g["trace.tokens"] = tokens.astype(np.int32)
+    return g
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = CONFIG
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print("[aot] lowering modules to HLO text ...")
+    entries = lower_all(cfg, args.out_dir)
+
+    print("[aot] initializing weights ...")
+    weights = {k: np.asarray(v) for k, v in model.init_weights(cfg, args.seed).items()}
+    np.savez(os.path.join(args.out_dir, "weights.npz"), **weights)
+
+    print("[aot] generating goldens (reference engine trace) ...")
+    goldens = make_goldens(cfg, weights)
+    np.savez(os.path.join(args.out_dir, "golden.npz"), **goldens)
+
+    manifest = {
+        "config": {
+            "vocab_size": cfg.vocab_size,
+            "hidden_size": cfg.hidden_size,
+            "num_layers": cfg.num_layers,
+            "num_heads": cfg.num_heads,
+            "num_kv_heads": cfg.num_kv_heads,
+            "head_dim": cfg.head_dim,
+            "ffn_inter": cfg.ffn_inter,
+            "num_experts": cfg.num_experts,
+            "top_k": cfg.top_k,
+            "use_shared_expert": cfg.use_shared_expert,
+            "shared_inter": cfg.shared_inter,
+            "rope_theta": cfg.rope_theta,
+            "max_context": cfg.max_context,
+            "rms_eps": cfg.rms_eps,
+            "token_buckets": list(cfg.token_buckets),
+            "expert_buckets": list(cfg.expert_buckets),
+            "prefill_batch_buckets": list(cfg.prefill_batch_buckets),
+            "prefill_seq": cfg.prefill_seq,
+            "decode_batch_buckets": list(cfg.decode_batch_buckets),
+        },
+        "modules": entries,
+        "weights_file": "weights.npz",
+        "golden_file": "golden.npz",
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(entries)} HLO modules + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Configuration for the tiny MoE used on the live PJRT path.
+
+The live model is a genuinely runnable MoE transformer with the same
+*topology* as the paper's models (GQA attention + top-k router + SwiGLU
+experts + optional DeepSeek-style shared expert), sized so that the PJRT CPU
+client executes it quickly. Paper-scale models (Mixtral-8x7B, DeepSeek-V2,
+...) are represented on the rust side as architecture descriptors for the
+cost model; this config only describes the model that actually runs.
+
+Shapes are static in HLO, so every module is lowered at a set of *batch
+buckets*; the rust engine pads the live batch up to the nearest bucket
+(the same trick CUDA-graph based serving systems use).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class TinyMoEConfig:
+    # Model architecture.
+    vocab_size: int = 512
+    hidden_size: int = 64
+    num_layers: int = 2
+    num_heads: int = 4
+    num_kv_heads: int = 2          # GQA: 2 query heads per kv head
+    head_dim: int = 16
+    ffn_inter: int = 128           # expert intermediate size
+    num_experts: int = 8
+    top_k: int = 2
+    use_shared_expert: bool = True # DeepSeek-style shared expert
+    shared_inter: int = 128
+    rope_theta: float = 10000.0
+    max_context: int = 128         # decode KV-cache capacity (tokens/seq)
+    rms_eps: float = 1e-5
+
+    # Static-shape buckets. Flat-token modules (embed / pre_attention /
+    # post_attention / router / lm_head) are lowered per token-count bucket;
+    # expert_ffn per expert-batch bucket; attention per (batch, seq) bucket.
+    token_buckets: Tuple[int, ...] = (8, 32, 128, 512)
+    expert_buckets: Tuple[int, ...] = (8, 32, 128, 512)
+    prefill_batch_buckets: Tuple[int, ...] = (1, 4, 16)
+    prefill_seq: int = 64          # prompts are padded to this length
+    decode_batch_buckets: Tuple[int, ...] = (8, 32, 128)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+
+CONFIG = TinyMoEConfig()

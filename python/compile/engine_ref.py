@@ -1,0 +1,215 @@
+"""Reference engine: a python mirror of the rust coordinator's module loop.
+
+Purpose: generate *golden traces* for rust integration tests.  It calls the
+exact same jitted module functions that aot.py lowers to HLO, at the exact
+same static batch buckets with the exact same padding rules, and performs
+the host-side steps (KV-cache writes, expert gather/scatter, weighted
+combine, residual adds) in the exact same order the rust engine does.
+Because both sides run the same XLA programs on the same CPU backend and
+the host-side f32 arithmetic is order-identical, the greedy token streams
+must agree exactly (hidden states to ~1e-5).
+
+Contract mirrored by rust (keep in sync with rust/src/engine/):
+  * bucket(n) = smallest configured bucket >= n  (error if n > max).
+  * flat-module padding: zero tokens, pos = 0, len = 0.
+  * prefill pads every prompt to cfg.prefill_seq; positions of pads = 0.
+  * expert grouping: experts visited in ascending id; within an expert,
+    tokens in ascending flat-token order; combine acc[t] += w_rank * y.
+  * shared expert added after routed experts; final x = resid + acc.
+  * KV append happens BEFORE attn_decode (mask is kv_pos < len).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import TinyMoEConfig
+from . import model
+
+
+def pick_bucket(n: int, buckets) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"batch {n} exceeds max bucket {max(buckets)}")
+
+
+class ReferenceEngine:
+    """Greedy-decode MoE engine over the module-split model (python mirror)."""
+
+    def __init__(self, cfg: TinyMoEConfig, weights: dict):
+        self.cfg = cfg
+        self.w = {k: np.asarray(v) for k, v in weights.items()}
+        self._jits = {}
+
+    # -- jitted module dispatch (cached per static shape) -------------------
+
+    def _call(self, name, *args):
+        fn = getattr(model, name)
+        shapes = tuple((a.shape, str(a.dtype)) for a in args)
+        key = (name, shapes)
+        if key not in self._jits:
+            self._jits[key] = jax.jit(functools.partial(fn, self.cfg))
+        out = self._jits[key](*args)
+        return tuple(np.asarray(o) for o in out)
+
+    # -- host-side helpers ---------------------------------------------------
+
+    def _pad_rows(self, x: np.ndarray, bucket: int) -> np.ndarray:
+        if x.shape[0] == bucket:
+            return x
+        pad = np.zeros((bucket - x.shape[0],) + x.shape[1:], dtype=x.dtype)
+        return np.concatenate([x, pad], axis=0)
+
+    def _flat(self, name, weights, x_list, n_valid):
+        """Run a flat-token module at its bucket; return unpadded outputs."""
+        bucket = pick_bucket(n_valid, self.cfg.token_buckets)
+        args = [np.asarray(w) for w in weights] + [
+            self._pad_rows(np.asarray(x), bucket) for x in x_list
+        ]
+        outs = self._call(name, *args)
+        return tuple(o[:n_valid] for o in outs)
+
+    def _moe(self, layer: int, x: np.ndarray) -> np.ndarray:
+        """Router + expert micro-batches + shared expert + residual."""
+        cfg, w = self.cfg, self.w
+        p = f"l{layer}."
+        n = x.shape[0]
+        xn, idx, wts = self._flat("router", [w[p + "ln2"], w[p + "wr"]], [x], n)
+
+        acc = np.zeros_like(x, dtype=np.float32)
+        for e in range(cfg.num_experts):
+            rows, ranks = np.nonzero(idx == e)
+            if rows.size == 0:
+                continue
+            bucket = pick_bucket(rows.size, cfg.expert_buckets)
+            gathered = self._pad_rows(xn[rows], bucket)
+            (y,) = self._call(
+                "expert_ffn", w[p + f"e{e}.wg"], w[p + f"e{e}.wu"],
+                w[p + f"e{e}.wd"], gathered,
+            )
+            acc[rows] += wts[rows, ranks][:, None] * y[: rows.size]
+
+        if cfg.use_shared_expert:
+            bucket = pick_bucket(n, cfg.expert_buckets)
+            (ys,) = self._call(
+                "expert_ffn", w[p + "se.wg"], w[p + "se.wu"], w[p + "se.wd"],
+                self._pad_rows(xn, bucket),
+            )
+            acc += ys[:n]
+        return x + acc
+
+    # -- phases ---------------------------------------------------------------
+
+    def prefill(self, prompts: List[List[int]]):
+        """Process padded prompts; returns (kv_caches, lens, first_tokens).
+
+        kv_caches: per-layer (k, v) arrays of shape (b, S, nkv, hd).
+        """
+        cfg, w = self.cfg, self.w
+        b = len(prompts)
+        s = cfg.prefill_seq
+        lens = np.array([len(pr) for pr in prompts], dtype=np.int32)
+        assert lens.max() <= s
+
+        ids = np.zeros((b, s), dtype=np.int32)
+        pos = np.zeros((b, s), dtype=np.int32)
+        for i, pr in enumerate(prompts):
+            ids[i, : len(pr)] = pr
+            pos[i, : len(pr)] = np.arange(len(pr))
+
+        n = b * s
+        (x,) = self._flat("embed", [w["emb"]], [ids.reshape(n)], n)
+
+        S = cfg.max_context
+        caches = [
+            (
+                np.zeros((b, S, cfg.num_kv_heads, cfg.head_dim), np.float32),
+                np.zeros((b, S, cfg.num_kv_heads, cfg.head_dim), np.float32),
+            )
+            for _ in range(cfg.num_layers)
+        ]
+
+        ab = pick_bucket(b, cfg.prefill_batch_buckets)
+        for layer in range(cfg.num_layers):
+            p = f"l{layer}."
+            q, k, v = self._flat(
+                "pre_attention",
+                [w[p + "ln1"], w[p + "wq"], w[p + "wk"], w[p + "wv"]],
+                [x, pos.reshape(n)],
+                n,
+            )
+            qb = self._pad_rows(
+                q.reshape(b, s, cfg.num_heads, cfg.head_dim), ab)
+            kb = self._pad_rows(
+                k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim), ab)
+            vb = self._pad_rows(
+                v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim), ab)
+            lens_b = self._pad_rows(lens, ab)
+            (ctx,) = self._call("attn_prefill", qb, kb, vb, lens_b)
+            ctx = ctx[:b].reshape(n, cfg.q_dim)
+
+            kc, vc = caches[layer]
+            for i in range(b):
+                kc[i, : lens[i]] = kb[i, : lens[i]]
+                vc[i, : lens[i]] = vb[i, : lens[i]]
+
+            (x,) = self._flat(
+                "post_attention", [w[p + "wo"]], [ctx, x], n)
+            x = self._moe(layer, x)
+
+        # Last valid token of each sequence -> first generated token.
+        last = np.stack([x[i * s + lens[i] - 1] for i in range(b)])
+        (toks,) = self._flat("lm_head", [w["lnf"], w["lm_head"]], [last], b)
+        return caches, lens.copy(), toks.astype(np.int32)
+
+    def decode_step(self, caches, lens, tokens):
+        """One greedy decode step for all sequences; mutates caches/lens."""
+        cfg, w = self.cfg, self.w
+        b = tokens.shape[0]
+        pos = lens.astype(np.int32)  # next position per sequence
+
+        (x,) = self._flat("embed", [w["emb"]], [tokens.astype(np.int32)], b)
+
+        db = pick_bucket(b, cfg.decode_batch_buckets)
+        new_lens = lens + 1
+        for layer in range(cfg.num_layers):
+            p = f"l{layer}."
+            q, k, v = self._flat(
+                "pre_attention",
+                [w[p + "ln1"], w[p + "wq"], w[p + "wk"], w[p + "wv"]],
+                [x, pos],
+                b,
+            )
+            kc, vc = caches[layer]
+            for i in range(b):
+                kc[i, pos[i]] = k[i]
+                vc[i, pos[i]] = v[i]
+
+            qd = self._pad_rows(q, db)
+            kd = self._pad_rows(kc, db)
+            vd = self._pad_rows(vc, db)
+            ld = self._pad_rows(new_lens.astype(np.int32), db)
+            (ctx,) = self._call("attn_decode", qd, kd, vd, ld)
+            ctx = ctx[:b]
+
+            (x,) = self._flat("post_attention", [w[p + "wo"]], [ctx, x], b)
+            x = self._moe(layer, x)
+
+        (toks,) = self._flat("lm_head", [w["lnf"], w["lm_head"]], [x], b)
+        lens += 1
+        return toks.astype(np.int32)
+
+    def generate(self, prompts: List[List[int]], steps: int) -> np.ndarray:
+        """Greedy decode `steps` tokens; returns (b, steps) int32."""
+        caches, lens, toks = self.prefill(prompts)
+        out = [toks]
+        for _ in range(steps - 1):
+            toks = self.decode_step(caches, lens, toks)
+            out.append(toks)
+        return np.stack(out, axis=1)

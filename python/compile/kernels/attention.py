@@ -1,0 +1,173 @@
+"""Pallas flash-attention kernel (GQA, length-masked, optionally causal).
+
+This is the L1 hot-spot for the attention module. One kernel serves both
+phases of the paper's engine:
+
+* prefill  — q has the full (padded) sequence, causal mask + length mask;
+* decode   — q is a single position per sequence, length mask only (the
+  current token's K/V have already been appended by the coordinator, the
+  mask is ``kv_pos < length``).
+
+TPU adaptation of the paper's CPU AVX kernel (see DESIGN.md
+§Hardware-Adaptation): instead of L2-cache blocking we express the
+HBM→VMEM schedule with BlockSpecs — K/V stream through VMEM in
+``(block_kv, head_dim)`` tiles while an online-softmax accumulator lives in
+the revisited output block.  The grid is ``(batch, q_head, q_tile,
+kv_tile)`` with the kv axis innermost, so the running ``(m, l, acc)`` state
+persists across kv tiles of a fixed query tile — the classic
+flash-attention recurrence.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated through the interpreter and the same
+HLO runs from rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps exp() well-defined on
+                 # fully-masked tiles (exp(-1e30 + 1e30) == 1, guarded below)
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    lens_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_kv: int,
+):
+    qt = pl.program_id(2)
+    kt = pl.program_id(3)
+
+    @pl.when(kt == 0)
+    def _init():
+        # NEG_INF (not -inf) so that alpha = exp(m_prev - m_cur) is 1, not
+        # inf, when the first tile is fully masked.
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    length = lens_ref[0]
+    kv_pos = kt * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1
+    )
+    mask = kv_pos < length
+    if causal:
+        q_pos = qt * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0
+        )
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]  # (bq,)
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    # Zero out masked lanes explicitly: on a *fully*-masked tile s == m_cur
+    # == NEG_INF and exp(0) == 1 would otherwise pollute the accumulator.
+    p = jnp.where(mask, p, 0.0)
+    l_cur = alpha * l_prev + p.sum(axis=1)
+
+    m_ref[0, 0] = m_cur
+    l_ref[0, 0] = l_cur
+    acc = o_ref[0, :, 0, :]
+    o_ref[0, :, 0, :] = acc * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kt == pl.num_programs(3) - 1)
+    def _finalize():
+        l_fin = l_ref[0, 0]
+        # Rows with zero mass (padded query positions) stay 0 instead of NaN.
+        l_safe = jnp.where(l_fin == 0.0, 1.0, l_fin)
+        o_ref[0, :, 0, :] = o_ref[0, :, 0, :] / l_safe[:, None]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    causal: bool,
+    block_q: int = 32,
+    block_kv: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """GQA flash attention.
+
+    Args:
+      q: (batch, sq, num_heads, head_dim)
+      k, v: (batch, skv, num_kv_heads, head_dim)
+      lengths: (batch,) int32 — valid kv length per sequence.
+      causal: apply causal mask (prefill); decode uses length mask only.
+
+    Returns:
+      (batch, sq, num_heads, head_dim) float32.
+    """
+    b, sq, nh, hd = q.shape
+    _, skv, nkv, _ = k.shape
+    assert nh % nkv == 0, "query heads must be a multiple of kv heads"
+    group = nh // nkv
+
+    from .expert import largest_divisor_leq
+
+    block_q = largest_divisor_leq(sq, block_q)
+    block_kv = largest_divisor_leq(skv, block_kv)
+
+    grid = (b, nh, sq // block_q, skv // block_kv)
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_kv=block_kv,
+    )
+
+    o, _m, _l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda bi, h, qt, kt: (bi, qt, h, 0)),
+            pl.BlockSpec(
+                (1, block_kv, 1, hd), lambda bi, h, qt, kt: (bi, kt, h // group, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_kv, 1, hd), lambda bi, h, qt, kt: (bi, kt, h // group, 0)
+            ),
+            pl.BlockSpec((1,), lambda bi, h, qt, kt: (bi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda bi, h, qt, kt: (bi, qt, h, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, h, qt, kt: (bi, h, qt)),
+            pl.BlockSpec((1, 1, block_q), lambda bi, h, qt, kt: (bi, h, qt)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sq, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nh, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, nh, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths)
+    return o

@@ -1,0 +1,96 @@
+"""Pallas SwiGLU expert-FFN kernel — the throughput hot-spot of the paper.
+
+Computes ``down( silu(x @ gate) * (x @ up) )`` for one expert over a large
+accumulated token batch.  Module-based batching exists precisely to feed
+this kernel ≥2^10 tokens at a time (paper Fig. 3), so the kernel is written
+to scale with the token dimension.
+
+TPU schedule (DESIGN.md §Hardware-Adaptation): grid is
+``(m_tiles, i_tiles)`` — token tiles × intermediate-dim tiles.  The three
+weight matrices stream through VMEM in ``block_i``-wide stripes, targeting
+128-wide MXU tiles at real model dims; the output block has a constant
+index along the ``i`` axis, so it is revisited and serves as the f32
+accumulator (``o += silu(x@Wg_i) * (x@Wu_i) @ Wd_i``), the standard
+K-blocked matmul recurrence with no scratch required.
+
+``interpret=True`` — see attention.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (block-shape snapping)."""
+    cap = min(cap, n)
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _expert_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # (bm, H)
+    g = jnp.dot(x, wg_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)   # (bm, bi)
+    u = jnp.dot(x, wu_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)   # (bm, bi)
+    h = jax.nn.silu(g) * u
+    o_ref[...] += jnp.dot(h, wd_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)  # (bm, H)
+
+
+def expert_ffn(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    block_m: int = 64,
+    block_i: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """SwiGLU FFN for a single expert.
+
+    Args:
+      x: (m, hidden) token batch routed to this expert.
+      w_gate, w_up: (hidden, inter)
+      w_down: (inter, hidden)
+
+    Returns:
+      (m, hidden) float32.
+    """
+    m, hidden = x.shape
+    inter = w_gate.shape[1]
+    assert w_gate.shape == (hidden, inter)
+    assert w_up.shape == (hidden, inter)
+    assert w_down.shape == (inter, hidden)
+
+    block_m = largest_divisor_leq(m, block_m)
+    block_i = largest_divisor_leq(inter, block_i)
+
+    grid = (m // block_m, inter // block_i)
+
+    return pl.pallas_call(
+        _expert_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, hidden), lambda mt, it: (mt, 0)),
+            pl.BlockSpec((hidden, block_i), lambda mt, it: (0, it)),
+            pl.BlockSpec((hidden, block_i), lambda mt, it: (0, it)),
+            pl.BlockSpec((block_i, hidden), lambda mt, it: (it, 0)),
+        ],
+        # Constant index along `it` → revisited block → f32 accumulator.
+        out_specs=pl.BlockSpec((block_m, hidden), lambda mt, it: (mt, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, hidden), jnp.float32),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

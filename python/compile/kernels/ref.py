@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the Pallas kernels and shared model math.
+
+Everything here is straight-line jnp with no Pallas, no blocking and no
+online-softmax trickery — the correctness ground truth the kernels (and,
+transitively, the HLO artifacts the rust engine executes) are checked
+against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_ref(x: jax.Array, pos: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding, rotate-half convention.
+
+    x: (n, heads, head_dim), pos: (n,) int32.
+    """
+    n, h, hd = x.shape
+    half = hd // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (n, half)
+    cos = jnp.cos(ang)[:, None, :]  # (n, 1, half)
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths: jax.Array,
+    *,
+    causal: bool,
+) -> jax.Array:
+    """Dense GQA attention oracle.
+
+    q: (b, sq, nh, hd); k, v: (b, skv, nkv, hd); lengths: (b,).
+    Returns (b, sq, nh, hd) f32. Fully-masked query rows return 0.
+    """
+    b, sq, nh, hd = q.shape
+    _, skv, nkv, _ = k.shape
+    group = nh // nkv
+    # Expand kv heads to query heads.
+    k = jnp.repeat(k.astype(jnp.float32), group, axis=2)
+    v = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    q = q.astype(jnp.float32)
+
+    scale = 1.0 / (hd ** 0.5)
+    # (b, nh, sq, skv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    kv_pos = jnp.arange(skv)[None, None, None, :]
+    mask = kv_pos < lengths[:, None, None, None]
+    if causal:
+        q_pos = jnp.arange(sq)[None, None, :, None]
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = p.sum(axis=-1, keepdims=True)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    p = p / denom
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def expert_ffn_ref(
+    x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array
+) -> jax.Array:
+    """SwiGLU FFN oracle: down( silu(x@gate) * (x@up) )."""
+    x = x.astype(jnp.float32)
+    g = x @ w_gate.astype(jnp.float32)
+    u = x @ w_up.astype(jnp.float32)
+    return (jax.nn.silu(g) * u) @ w_down.astype(jnp.float32)
+
+
+def router_ref(x: jax.Array, w_router: jax.Array, top_k: int):
+    """Top-k softmax router with renormalized weights (Mixtral-style)."""
+    logits = x.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return idx.astype(jnp.int32), weights

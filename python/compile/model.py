@@ -1,0 +1,203 @@
+"""L2: the MoE model as *separately lowered modules* (module-split).
+
+Module-based batching (the paper's contribution) requires the coordinator
+to launch attention and expert modules independently with different batch
+sizes.  The model is therefore not one jitted function but a set of module
+functions — each taking its weights as explicit parameters (so weight fetch
+is an explicit, schedulable transfer on the rust side) and each lowered to
+its own HLO artifact at several static batch buckets (see aot.py).
+
+Module inventory (shapes use n = flat token count, b = sequence count):
+
+  embed           (emb[V,H], ids[n]i32)                      -> x[n,H]
+  pre_attention   (ln[H], wq, wk, wv, x[n,H], pos[n]i32)     -> q,k,v
+  attn_prefill    (q[b,s,nh,hd], k, v [b,s,nkv,hd], lens[b]) -> ctx[b,s,nh*hd]
+  attn_decode     (q[b,nh,hd], kc, vc [b,S,nkv,hd], lens[b]) -> ctx[b,nh*hd]
+  post_attention  (wo, ctx[n,nh*hd], resid[n,H])             -> x[n,H]
+  router          (ln2[H], wr[H,E], x[n,H])                  -> xn, idx, w
+  expert_ffn      (wg, wu, wd, x[m,H])                       -> y[m,H]   (Pallas)
+  lm_head         (lnf[H], wo[H,V], x[b,H])                  -> ids[b]i32
+
+The weighted combine of expert outputs, residual adds between modules, and
+all KV-cache management are deliberately *not* modules: they are the
+coordinator's job (the gather/scatter across expert micro-batches IS
+module-based batching) and run in rust on host memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import TinyMoEConfig
+from .kernels.attention import flash_attention
+from .kernels.expert import expert_ffn as expert_ffn_kernel
+from .kernels.ref import rmsnorm_ref, rope_ref
+
+
+# ---------------------------------------------------------------------------
+# Module functions. Each returns a tuple (lowered with return_tuple=True).
+# ---------------------------------------------------------------------------
+
+
+def embed(cfg: TinyMoEConfig, emb: jax.Array, ids: jax.Array):
+    """Token embedding lookup: (V,H), (n,)i32 -> (n,H)."""
+    return (emb[ids],)
+
+
+def pre_attention(
+    cfg: TinyMoEConfig,
+    ln: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    x: jax.Array,
+    pos: jax.Array,
+):
+    """RMSNorm + QKV projection + RoPE over a flat token batch.
+
+    x: (n, H), pos: (n,) absolute positions.
+    Returns q (n, nh, hd), k (n, nkv, hd), v (n, nkv, hd).
+    """
+    n = x.shape[0]
+    xn = rmsnorm_ref(x, ln, cfg.rms_eps)
+    q = (xn @ wq).reshape(n, cfg.num_heads, cfg.head_dim)
+    k = (xn @ wk).reshape(n, cfg.num_kv_heads, cfg.head_dim)
+    v = (xn @ wv).reshape(n, cfg.num_kv_heads, cfg.head_dim)
+    q = rope_ref(q, pos, cfg.rope_theta)
+    k = rope_ref(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_prefill(
+    cfg: TinyMoEConfig,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lens: jax.Array,
+):
+    """Causal self-attention over padded prompts (Pallas flash kernel).
+
+    q: (b, s, nh, hd); k, v: (b, s, nkv, hd); lens: (b,).
+    Returns ctx (b, s, nh*hd).
+    """
+    b, s = q.shape[0], q.shape[1]
+    ctx = flash_attention(q, k, v, lens, causal=True)
+    return (ctx.reshape(b, s, cfg.q_dim),)
+
+
+def attn_decode(
+    cfg: TinyMoEConfig,
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lens: jax.Array,
+):
+    """Single-position attention against the staged KV cache (Pallas).
+
+    q: (b, nh, hd); k_cache, v_cache: (b, S, nkv, hd); lens: (b,) where the
+    current token's K/V are already appended (mask is kv_pos < len).
+    Returns ctx (b, nh*hd).
+    """
+    b = q.shape[0]
+    ctx = flash_attention(q[:, None], k_cache, v_cache, lens, causal=False)
+    return (ctx[:, 0].reshape(b, cfg.q_dim),)
+
+
+def post_attention(cfg: TinyMoEConfig, wo: jax.Array, ctx: jax.Array, resid: jax.Array):
+    """Output projection + residual: (nh*hd,H), (n,nh*hd), (n,H) -> (n,H)."""
+    return (resid + ctx @ wo,)
+
+
+def topk_by_argmax(probs: jax.Array, k: int):
+    """Top-k via k iterative argmax+mask rounds.
+
+    Functionally identical to ``jax.lax.top_k`` (stable first-max tie
+    break) but lowers to plain reduce/iota/select HLO — jax's native
+    ``top_k`` emits a ``topk()`` HLO instruction that the pinned
+    xla_extension 0.5.1 text parser cannot ingest.
+    """
+    n, e = probs.shape
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        v = jnp.max(p, axis=-1)
+        vals.append(v)
+        idxs.append(i)
+        mask = jax.nn.one_hot(i, e, dtype=jnp.bool_)
+        p = jnp.where(mask, -jnp.inf, p)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def router(cfg: TinyMoEConfig, ln2: jax.Array, wr: jax.Array, x: jax.Array):
+    """Pre-MoE RMSNorm + top-k softmax router.
+
+    Returns (xn (n,H) — normalized tokens the experts consume,
+             idx (n,k) i32, weights (n,k) f32 renormalized).
+    """
+    xn = rmsnorm_ref(x, ln2, cfg.rms_eps)
+    logits = xn @ wr
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = topk_by_argmax(probs, cfg.top_k)
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return xn, idx.astype(jnp.int32), weights
+
+
+def expert_ffn(
+    cfg: TinyMoEConfig,
+    wg: jax.Array,
+    wu: jax.Array,
+    wd: jax.Array,
+    x: jax.Array,
+):
+    """One expert's SwiGLU FFN over its gathered micro-batch (Pallas)."""
+    return (expert_ffn_kernel(x, wg, wu, wd),)
+
+
+def lm_head(cfg: TinyMoEConfig, lnf: jax.Array, wo: jax.Array, x: jax.Array):
+    """Final norm + greedy next-token: (b,H) -> ids (b,) i32."""
+    xn = rmsnorm_ref(x, lnf, cfg.rms_eps)
+    logits = xn @ wo
+    return (jnp.argmax(logits, axis=-1).astype(jnp.int32),)
+
+
+# ---------------------------------------------------------------------------
+# Weight construction (shared by aot.py, goldens and tests).
+# ---------------------------------------------------------------------------
+
+
+def init_weights(cfg: TinyMoEConfig, seed: int = 0) -> dict:
+    """Deterministic random init; flat dict keyed by artifact names."""
+    key = jax.random.PRNGKey(seed)
+
+    def nrm(key, shape, scale=0.05):
+        return (scale * jax.random.normal(key, shape)).astype(jnp.float32)
+
+    w = {}
+    key, k0 = jax.random.split(key)
+    w["emb"] = nrm(k0, (cfg.vocab_size, cfg.hidden_size), 0.1)
+    for layer in range(cfg.num_layers):
+        p = f"l{layer}."
+        key, *ks = jax.random.split(key, 12)
+        w[p + "ln1"] = jnp.ones(cfg.hidden_size, jnp.float32)
+        w[p + "wq"] = nrm(ks[0], (cfg.hidden_size, cfg.q_dim))
+        w[p + "wk"] = nrm(ks[1], (cfg.hidden_size, cfg.kv_dim))
+        w[p + "wv"] = nrm(ks[2], (cfg.hidden_size, cfg.kv_dim))
+        w[p + "wo"] = nrm(ks[3], (cfg.q_dim, cfg.hidden_size))
+        w[p + "ln2"] = jnp.ones(cfg.hidden_size, jnp.float32)
+        w[p + "wr"] = nrm(ks[4], (cfg.hidden_size, cfg.num_experts), 0.5)
+        for e in range(cfg.num_experts):
+            key, a, b, c = jax.random.split(key, 4)
+            w[p + f"e{e}.wg"] = nrm(a, (cfg.hidden_size, cfg.ffn_inter))
+            w[p + f"e{e}.wu"] = nrm(b, (cfg.hidden_size, cfg.ffn_inter))
+            w[p + f"e{e}.wd"] = nrm(c, (cfg.ffn_inter, cfg.hidden_size))
+        if cfg.use_shared_expert:
+            key, a, b, c = jax.random.split(key, 4)
+            w[p + "se.wg"] = nrm(a, (cfg.hidden_size, cfg.shared_inter))
+            w[p + "se.wu"] = nrm(b, (cfg.hidden_size, cfg.shared_inter))
+            w[p + "se.wd"] = nrm(c, (cfg.shared_inter, cfg.hidden_size))
+    key, k1 = jax.random.split(key)
+    w["lnf"] = jnp.ones(cfg.hidden_size, jnp.float32)
+    w["lm_head"] = nrm(k1, (cfg.hidden_size, cfg.vocab_size), 0.1)
+    return w

@@ -1,0 +1,94 @@
+"""AOT artifact integrity: manifest completeness, golden consistency.
+
+Skipped when artifacts/ has not been built (`make artifacts`).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.config import CONFIG
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_config_matches(manifest):
+    c = manifest["config"]
+    assert c["hidden_size"] == CONFIG.hidden_size
+    assert c["num_experts"] == CONFIG.num_experts
+    assert c["top_k"] == CONFIG.top_k
+    assert tuple(c["token_buckets"]) == CONFIG.token_buckets
+    assert tuple(c["expert_buckets"]) == CONFIG.expert_buckets
+
+
+def test_all_module_files_exist_and_parse_as_hlo(manifest):
+    assert len(manifest["modules"]) >= 25
+    for m in manifest["modules"]:
+        path = os.path.join(ART, m["file"])
+        assert os.path.exists(path), m["file"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), m["file"]
+        # Entry computation must declare every manifest parameter.
+        assert text.count("parameter(") >= len(m["params"]), m["file"]
+
+
+def test_every_bucket_lowered(manifest):
+    by_name = {}
+    for m in manifest["modules"]:
+        by_name.setdefault(m["name"], []).append(m["meta"])
+    for name in ("embed", "pre_attention", "post_attention", "router", "lm_head"):
+        got = sorted(meta["tokens"] for meta in by_name[name])
+        assert got == sorted(CONFIG.token_buckets), name
+    got = sorted(meta["tokens"] for meta in by_name["expert_ffn"])
+    assert got == sorted(CONFIG.expert_buckets)
+    got = sorted(meta["batch"] for meta in by_name["attn_decode"])
+    assert got == sorted(CONFIG.decode_batch_buckets)
+    got = sorted(meta["batch"] for meta in by_name["attn_prefill"])
+    assert got == sorted(CONFIG.prefill_batch_buckets)
+
+
+def test_weights_npz_complete(manifest):
+    w = np.load(os.path.join(ART, manifest["weights_file"]))
+    assert "emb" in w and "lnf" in w and "lm_head" in w
+    for layer in range(CONFIG.num_layers):
+        for e in range(CONFIG.num_experts):
+            assert f"l{layer}.e{e}.wg" in w
+    assert w["emb"].shape == (CONFIG.vocab_size, CONFIG.hidden_size)
+
+
+def test_golden_trace_present_and_sane(manifest):
+    g = np.load(os.path.join(ART, manifest["golden_file"]))
+    toks = g["trace.tokens"]
+    assert toks.shape[1] == 16
+    assert toks.min() >= 0 and toks.max() < CONFIG.vocab_size
+    assert g["trace.lens"].shape[0] == toks.shape[0]
+
+
+def test_golden_module_pairs_present(manifest):
+    g = np.load(os.path.join(ART, manifest["golden_file"]))
+    names = set(k.split(".")[1] for k in g.files if k.startswith("g."))
+    for mod in ("embed", "pre_attention", "attn_prefill", "attn_decode",
+                "post_attention", "router", "expert_ffn", "lm_head"):
+        assert mod in names, mod
+
+
+def test_golden_regeneration_deterministic(manifest):
+    """Weights in npz must equal a fresh init (same seed) — guards drift."""
+    from compile import model
+    w_new = model.init_weights(CONFIG, seed=0)
+    w_old = np.load(os.path.join(ART, manifest["weights_file"]))
+    np.testing.assert_allclose(
+        np.asarray(w_new["l0.wq"]), w_old["l0.wq"], rtol=0, atol=0)

@@ -1,0 +1,235 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes; every case asserts allclose against
+ref.py. Kernels run under interpret=True (the same lowering the AOT HLO
+artifacts embed).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.expert import expert_ffn
+from compile.kernels.ref import (
+    attention_ref,
+    expert_ffn_ref,
+    rmsnorm_ref,
+    rope_ref,
+    router_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN kernel
+# ---------------------------------------------------------------------------
+
+
+class TestExpertKernel:
+    @pytest.mark.parametrize("m,h,inter", [(8, 64, 128), (32, 64, 128), (128, 32, 64)])
+    def test_matches_ref(self, m, h, inter):
+        rng = np.random.default_rng(0)
+        x, wg, wu, wd = rand(rng, m, h), rand(rng, h, inter), rand(rng, h, inter), rand(rng, inter, h)
+        got = expert_ffn(x, wg, wu, wd)
+        want = expert_ffn_ref(x, wg, wu, wd)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 64, 96]),
+        h=st.sampled_from([16, 32, 64]),
+        inter=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m, h, inter, seed):
+        rng = np.random.default_rng(seed)
+        x, wg, wu, wd = rand(rng, m, h), rand(rng, h, inter), rand(rng, h, inter), rand(rng, inter, h)
+        got = expert_ffn(x, wg, wu, wd)
+        want = expert_ffn_ref(x, wg, wu, wd)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_bf16_inputs_accumulate_f32(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, 32, 64).astype(jnp.bfloat16)
+        wg, wu, wd = (rand(rng, 64, 128).astype(jnp.bfloat16),
+                      rand(rng, 64, 128).astype(jnp.bfloat16),
+                      rand(rng, 128, 64).astype(jnp.bfloat16))
+        got = expert_ffn(x, wg, wu, wd)
+        assert got.dtype == jnp.float32
+        want = expert_ffn_ref(x, wg, wu, wd)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+    def test_block_tiling_invariance(self):
+        """Result must not depend on the chosen block shapes."""
+        rng = np.random.default_rng(2)
+        x, wg, wu, wd = rand(rng, 64, 32), rand(rng, 32, 128), rand(rng, 32, 128), rand(rng, 128, 32)
+        a = expert_ffn(x, wg, wu, wd, block_m=64, block_i=128)
+        b = expert_ffn(x, wg, wu, wd, block_m=8, block_i=16)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_single_token_row(self):
+        rng = np.random.default_rng(3)
+        x, wg, wu, wd = rand(rng, 8, 16), rand(rng, 16, 32), rand(rng, 16, 32), rand(rng, 32, 16)
+        got = expert_ffn(x, wg, wu, wd, block_m=8)
+        want = expert_ffn_ref(x, wg, wu, wd)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel
+# ---------------------------------------------------------------------------
+
+
+class TestAttentionKernel:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("b,sq,skv,nh,nkv,hd", [
+        (2, 32, 32, 4, 2, 16),
+        (1, 64, 64, 4, 4, 16),
+        (4, 16, 64, 8, 2, 8),
+    ])
+    def test_matches_ref(self, b, sq, skv, nh, nkv, hd, causal):
+        rng = np.random.default_rng(0)
+        q = rand(rng, b, sq, nh, hd)
+        k = rand(rng, b, skv, nkv, hd)
+        v = rand(rng, b, skv, nkv, hd)
+        lens = rng.integers(1, skv + 1, size=b).astype(np.int32)
+        got = flash_attention(q, k, v, lens, causal=causal)
+        want = attention_ref(q, k, v, lens, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4]),
+        sq=st.sampled_from([16, 32, 64]),
+        skv=st.sampled_from([32, 64, 128]),
+        heads=st.sampled_from([(4, 2), (4, 4), (8, 2)]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, b, sq, skv, heads, causal, seed):
+        nh, nkv = heads
+        hd = 16
+        rng = np.random.default_rng(seed)
+        q = rand(rng, b, sq, nh, hd)
+        k = rand(rng, b, skv, nkv, hd)
+        v = rand(rng, b, skv, nkv, hd)
+        lens = rng.integers(0, skv + 1, size=b).astype(np.int32)
+        got = flash_attention(q, k, v, lens, causal=causal)
+        want = attention_ref(q, k, v, lens, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_zero_length_rows_are_zero(self):
+        """Fully masked sequences (pad rows) must yield 0, never NaN."""
+        rng = np.random.default_rng(1)
+        q = rand(rng, 2, 16, 4, 16)
+        k = rand(rng, 2, 32, 2, 16)
+        v = rand(rng, 2, 32, 2, 16)
+        lens = np.array([0, 16], dtype=np.int32)
+        got = np.asarray(flash_attention(q, k, v, lens, causal=False))
+        assert np.all(np.isfinite(got))
+        np.testing.assert_array_equal(got[0], np.zeros_like(got[0]))
+
+    def test_decode_single_position(self):
+        """sq=1 (decode) against a staged cache with varying lengths."""
+        rng = np.random.default_rng(2)
+        b, S, nh, nkv, hd = 4, 128, 4, 2, 16
+        q = rand(rng, b, 1, nh, hd)
+        k = rand(rng, b, S, nkv, hd)
+        v = rand(rng, b, S, nkv, hd)
+        lens = np.array([1, 7, 64, 128], dtype=np.int32)
+        got = flash_attention(q, k, v, lens, causal=False, block_q=1)
+        want = attention_ref(q, k, v, lens, causal=False)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_block_tiling_invariance(self):
+        rng = np.random.default_rng(3)
+        q = rand(rng, 2, 64, 4, 16)
+        k = rand(rng, 2, 64, 2, 16)
+        v = rand(rng, 2, 64, 2, 16)
+        lens = np.array([64, 33], dtype=np.int32)
+        a = flash_attention(q, k, v, lens, causal=True, block_q=64, block_kv=64)
+        b_ = flash_attention(q, k, v, lens, causal=True, block_q=16, block_kv=16)
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5)
+
+    def test_causal_first_position_attends_self_only(self):
+        rng = np.random.default_rng(4)
+        b, s, nh, nkv, hd = 1, 32, 4, 2, 16
+        q = rand(rng, b, s, nh, hd)
+        k = rand(rng, b, s, nkv, hd)
+        v = rand(rng, b, s, nkv, hd)
+        lens = np.array([s], dtype=np.int32)
+        got = np.asarray(flash_attention(q, k, v, lens, causal=True))
+        # Position 0 attends only to kv position 0 -> output == v[0] per head
+        group = nh // nkv
+        for h in range(nh):
+            np.testing.assert_allclose(
+                got[0, 0, h], v[0, 0, h // group], rtol=1e-5, atol=1e-6
+            )
+
+
+# ---------------------------------------------------------------------------
+# Shared math helpers (used by both ref and model)
+# ---------------------------------------------------------------------------
+
+
+class TestSharedMath:
+    def test_rmsnorm_unit_variance(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 16, 64) * 10.0
+        w = np.ones(64, dtype=np.float32)
+        y = np.asarray(rmsnorm_ref(x, w))
+        rms = np.sqrt((y ** 2).mean(axis=-1))
+        np.testing.assert_allclose(rms, np.ones(16), rtol=1e-3)
+
+    def test_rope_preserves_norm(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, 8, 4, 16)
+        pos = np.arange(8, dtype=np.int32)
+        y = np.asarray(rope_ref(x, pos))
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=-1), np.linalg.norm(x, axis=-1), rtol=1e-5
+        )
+
+    def test_rope_position_zero_identity(self):
+        rng = np.random.default_rng(2)
+        x = rand(rng, 4, 2, 16)
+        pos = np.zeros(4, dtype=np.int32)
+        np.testing.assert_allclose(np.asarray(rope_ref(x, pos)), x, rtol=1e-6)
+
+    def test_rope_relative_shift_invariance(self):
+        """<rope(q,i), rope(k,j)> depends only on i - j."""
+        rng = np.random.default_rng(3)
+        q = rand(rng, 1, 1, 16)
+        k = rand(rng, 1, 1, 16)
+        def dot(i, j):
+            qi = np.asarray(rope_ref(q, np.array([i], np.int32)))
+            kj = np.asarray(rope_ref(k, np.array([j], np.int32)))
+            return float((qi * kj).sum())
+        np.testing.assert_allclose(dot(5, 3), dot(9, 7), rtol=1e-4)
+
+    def test_router_weights_normalized(self):
+        rng = np.random.default_rng(4)
+        x = rand(rng, 32, 64)
+        wr = rand(rng, 64, 8)
+        idx, w = router_ref(x, wr, 2)
+        assert idx.shape == (32, 2) and w.shape == (32, 2)
+        np.testing.assert_allclose(np.asarray(w).sum(-1), np.ones(32), rtol=1e-5)
+        # top-1 weight >= top-2 weight
+        w = np.asarray(w)
+        assert np.all(w[:, 0] >= w[:, 1] - 1e-7)
+
+    def test_router_indices_distinct(self):
+        rng = np.random.default_rng(5)
+        x = rand(rng, 64, 32)
+        wr = rand(rng, 32, 8)
+        idx, _ = router_ref(x, wr, 2)
+        idx = np.asarray(idx)
+        assert np.all(idx[:, 0] != idx[:, 1])

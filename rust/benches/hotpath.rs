@@ -1,0 +1,167 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the coordinator's
+//! hot paths (the §Perf targets in EXPERIMENTS.md):
+//!
+//!   * cpu_attn        — rust GQA attention kernel (the ω split's CPU side)
+//!   * gather/scatter  — the module-batching boundary
+//!   * kv_gather       — staging-window pack (HtoD engine job body)
+//!   * dag_dp          — critical-path DP on a DeepSeek-sized DAG
+//!   * search          — full decode strategy search
+//!   * module_exec     — one expert_ffn execution on PJRT (needs artifacts)
+//!
+//! Hand-rolled harness (criterion unavailable offline): N timed iters,
+//! reports min/mean.
+
+use std::time::Instant;
+
+use moe_gen::batching::{gather_rows, group_by_expert, scatter_add};
+use moe_gen::cpu_attn::{decode_attention, Numerics, SeqAttn};
+use moe_gen::kv::KvCache;
+use moe_gen::sched::{self, Knobs, Scenario, Strategy};
+use moe_gen::util::rng::Rng;
+use moe_gen::{hw, model};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    f(); // warm-up
+    let mut best = f64::INFINITY;
+    let mut sum = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+        sum += dt;
+    }
+    println!(
+        "bench: {name:<22} min {:>10.3} ms   mean {:>10.3} ms   ({iters} iters)",
+        best * 1e3,
+        sum / iters as f64 * 1e3
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // -- cpu_attn: 64 seqs, ctx 128, 4 heads (tiny-MoE shape) ------------
+    {
+        let (nh, nkv, hd, len, b) = (4usize, 2usize, 16usize, 128usize, 64usize);
+        let kvd = nkv * hd;
+        let data: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..b)
+            .map(|_| (rng.normal_vec(nh * hd), rng.normal_vec(len * kvd), rng.normal_vec(len * kvd)))
+            .collect();
+        let seqs: Vec<SeqAttn<'_>> =
+            data.iter().map(|(q, k, v)| SeqAttn { q, k, v, len }).collect();
+        let mut out = vec![Vec::new(); b];
+        bench("cpu_attn_b64_ctx128", 50, || {
+            decode_attention(&seqs, nh, nkv, hd, Numerics::Bf16Consistent, &mut out, 8);
+        });
+        bench("cpu_attn_1thread", 50, || {
+            decode_attention(&seqs, nh, nkv, hd, Numerics::Bf16Consistent, &mut out, 1);
+        });
+    }
+
+    // -- expert gather/scatter over a 4096-token accumulated batch ------
+    {
+        let (n, k, e, dim) = (4096usize, 2usize, 8usize, 64usize);
+        let x = rng.normal_vec(n * dim);
+        let idx: Vec<i32> = (0..n * k).map(|_| rng.below(e) as i32).collect();
+        let w: Vec<f32> = (0..n * k).map(|_| 0.5f32).collect();
+        bench("group_by_expert_4k", 100, || {
+            let g = group_by_expert(&idx, &w, n, k, e);
+            std::hint::black_box(g.len());
+        });
+        let groups = group_by_expert(&idx, &w, n, k, e);
+        let mut acc = vec![0.0f32; n * dim];
+        bench("gather_scatter_4k", 50, || {
+            for g in &groups {
+                let bucket = g.rows.len().next_power_of_two();
+                let gathered = gather_rows(&x, dim, &g.rows, bucket);
+                scatter_add(&mut acc, dim, &g.rows, &g.weights, &gathered);
+            }
+        });
+    }
+
+    // -- KV staging-window gather (128 seqs, cap 128) --------------------
+    {
+        let mut kv = KvCache::new(1, 2, 16, 128, 128);
+        let slots: Vec<usize> = (0..128).map(|_| kv.alloc_slot().unwrap()).collect();
+        let kvd = kv.kvd;
+        for &s in &slots {
+            kv.write_prefill(0, s, &rng.normal_vec(100 * kvd), &rng.normal_vec(100 * kvd));
+            kv.set_len(s, 100);
+        }
+        let lens = vec![100usize; 128];
+        bench("kv_gather_b128", 50, || {
+            let k = kv.gather_side(0, &slots, &lens, 128, true);
+            std::hint::black_box(k.len());
+        });
+    }
+
+    // -- DAG DP on a DeepSeek-scale decode DAG ---------------------------
+    {
+        let scn = Scenario::new(model::deepseek_v2(), hw::c2(), 512, 256);
+        let s = Strategy {
+            b: 1024, b_a: 64, b_e: 8192, omega: 0.0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+        };
+        let g = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 3);
+        println!("(dag nodes: {})", g.len());
+        bench("dag_critical_path", 100, || {
+            std::hint::black_box(g.critical_path());
+        });
+        bench("dag_simulate", 100, || {
+            std::hint::black_box(g.simulate());
+        });
+        bench("dag_build_3layers", 50, || {
+            let g = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 3);
+            std::hint::black_box(g.len());
+        });
+    }
+
+    // -- full decode strategy search --------------------------------------
+    {
+        let scn = Scenario::new(model::mixtral_8x7b(), hw::c2(), 512, 256);
+        bench("search_decode_8x7b", 5, || {
+            std::hint::black_box(sched::search_decode(&scn, &Knobs::moe_gen()).throughput);
+        });
+        let scn2 = Scenario::new(model::deepseek_v2(), hw::c2(), 512, 256);
+        bench("search_decode_dsv2", 3, || {
+            std::hint::black_box(sched::search_decode(&scn2, &Knobs::moe_gen()).throughput);
+        });
+    }
+
+    // -- live module exec (PJRT), if artifacts are present ----------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use moe_gen::runtime::{lit_f32, Runtime};
+        let rt = Runtime::new("artifacts").expect("artifacts");
+        let c = rt.cfg().clone();
+        for &b in &[8usize, 128, 512] {
+            let x = lit_f32(&vec![0.1f32; b * c.hidden_size], &[b, c.hidden_size]).unwrap();
+            let wg = rt.weights.get("l0.e0.wg").unwrap();
+            let wu = rt.weights.get("l0.e0.wu").unwrap();
+            let wd = rt.weights.get("l0.e0.wd").unwrap();
+            let spec = rt.artifacts.variant("expert_ffn", b).unwrap().clone();
+            let _ = rt.execute(&spec, &[wg.as_ref(), wu.as_ref(), wd.as_ref(), &x]);
+            bench(&format!("pjrt_expert_ffn_b{b}"), 30, || {
+                let out = rt
+                    .execute(&spec, &[wg.as_ref(), wu.as_ref(), wd.as_ref(), &x])
+                    .unwrap();
+                std::hint::black_box(out.len());
+            });
+            // §Perf optimization: device-cached weight buffers (S_Params)
+            // + per-launch activation upload, vs re-copying weights each
+            // execute.
+            let (bg, _) = rt.weight_buffer("l0.e0.wg").unwrap();
+            let (bu, _) = rt.weight_buffer("l0.e0.wu").unwrap();
+            let (bd, _) = rt.weight_buffer("l0.e0.wd").unwrap();
+            bench(&format!("pjrt_expert_cached_b{b}"), 30, || {
+                let xb = rt.upload(&x).unwrap();
+                let out = rt
+                    .execute_b(&spec, &[bg.as_ref(), bu.as_ref(), bd.as_ref(), &xb])
+                    .unwrap();
+                std::hint::black_box(out.len());
+            });
+        }
+    } else {
+        println!("(pjrt module benches skipped: run `make artifacts`)");
+    }
+}

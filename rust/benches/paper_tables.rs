@@ -1,0 +1,36 @@
+//! `cargo bench --bench paper_tables` — regenerates every table and
+//! figure of the paper's evaluation (the workload is the simulator +
+//! strategy search itself) and reports how long each takes.
+//!
+//! Criterion is unavailable offline; this is a hand-rolled harness with
+//! the same contract: timed, repeatable, machine-parseable lines.
+
+use std::time::Instant;
+
+use moe_gen::sim::tables;
+
+fn bench_table(id: &str) -> (String, f64) {
+    // Warm-up + 3 timed repetitions; report the minimum (least noise).
+    let _ = tables::render(id);
+    let mut best = f64::INFINITY;
+    let mut out = String::new();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        out = tables::render(id);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    (out, best)
+}
+
+fn main() {
+    let ids = ["1", "fig3", "fig4", "4", "5", "6", "7", "8", "9", "10", "fig7"];
+    println!("== paper_tables bench: regenerating all evaluation tables ==\n");
+    let mut total = 0.0;
+    for id in ids {
+        let (out, secs) = bench_table(id);
+        total += secs;
+        println!("{out}");
+        println!("bench: table_{id:<5} {:>10.3} ms\n", secs * 1e3);
+    }
+    println!("bench: all_tables  {:>10.3} ms", total * 1e3);
+}

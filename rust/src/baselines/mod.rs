@@ -1,0 +1,135 @@
+//! Live baseline batching policies over the same engine substrate.
+//!
+//! The paper's throughput tables compare module-based batching against
+//! model-based batching (DeepSpeed/FlexGen-style unified batches) and
+//! continuous batching (vLLM-style sequence-level scheduling with prefill
+//! insertion). These runners drive the *identical* runtime, KV manager and
+//! module wrappers — only the batching policy differs, so live A/B
+//! comparisons (examples/offline_benchmark.rs) isolate exactly the paper's
+//! variable. Greedy decode is policy-invariant, so all runners must emit
+//! identical tokens (asserted in integration tests).
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::engine::{BatchState, Engine};
+use crate::kv::KvCache;
+
+/// Model-based batching: a unified micro-batch walks the entire model;
+/// experts see only that micro-batch's tokens (paper Fig. 2 left).
+pub fn run_model_based(
+    eng: &mut Engine,
+    prompts: &[Vec<i32>],
+    steps: usize,
+    micro_batch: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let mut out = Vec::with_capacity(prompts.len());
+    for chunk in prompts.chunks(micro_batch.max(1)) {
+        let (mut state, first) = eng.prefill(chunk)?;
+        let mut toks: Vec<Vec<i32>> = first.iter().map(|&t| vec![t]).collect();
+        for _ in 0..steps - 1 {
+            let next = eng.decode_step(&mut state)?;
+            for (i, &t) in next.iter().enumerate() {
+                toks[i].push(t);
+            }
+        }
+        let bytes = state.kv.read().unwrap().host_bytes();
+        eng.host_pool.free(bytes);
+        out.extend(toks);
+    }
+    Ok(out)
+}
+
+/// Continuous batching (vLLM-style): a slot pool; whenever a slot frees,
+/// the next pending prompt is prefilled *individually* (batch-1 insertion
+/// — the TTFT-optimizing behaviour the paper highlights) and joins the
+/// decode set; every step decodes whatever is active.
+pub struct ContinuousRunner {
+    pub max_slots: usize,
+}
+
+impl ContinuousRunner {
+    pub fn new(max_slots: usize) -> Self {
+        ContinuousRunner { max_slots }
+    }
+
+    pub fn run(
+        &self,
+        eng: &mut Engine,
+        prompts: &[Vec<i32>],
+        steps: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let c = eng.rt.cfg().clone();
+        let kv = KvCache::new(
+            c.num_layers,
+            c.num_kv_heads,
+            c.head_dim,
+            c.max_context,
+            self.max_slots,
+        );
+        let kv_bytes = kv.host_bytes();
+        eng.host_pool.alloc(kv_bytes).map_err(anyhow::Error::msg)?;
+        let kv = Arc::new(RwLock::new(kv));
+
+        let mut results: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        let mut next_prompt = 0usize;
+        // Active set: (prompt index, slot, len, last token).
+        let mut active: Vec<(usize, usize, usize, i32)> = Vec::new();
+        let mut finished = 0usize;
+
+        while finished < prompts.len() {
+            // Insert prefills one at a time while slots are free.
+            while next_prompt < prompts.len() && active.len() < self.max_slots {
+                let idx = next_prompt;
+                next_prompt += 1;
+                let (slots, lens, first) =
+                    eng.prefill_into(&kv, std::slice::from_ref(&prompts[idx]))?;
+                results[idx].push(first[0]);
+                if steps == 1 {
+                    kv.write().unwrap().free_slot(slots[0]);
+                    finished += 1;
+                } else {
+                    active.push((idx, slots[0], lens[0], first[0]));
+                }
+            }
+            if active.is_empty() {
+                break;
+            }
+            // One decode step over the current active set.
+            let mut state = BatchState {
+                kv: Arc::clone(&kv),
+                slots: active.iter().map(|a| a.1).collect(),
+                lens: active.iter().map(|a| a.2).collect(),
+                last: active.iter().map(|a| a.3).collect(),
+            };
+            let next = eng.decode_step(&mut state)?;
+            // Sync back; retire sequences that reached their budget.
+            let mut still = Vec::with_capacity(active.len());
+            for (i, (idx, slot, _, _)) in active.iter().cloned().enumerate() {
+                results[idx].push(next[i]);
+                if results[idx].len() >= steps {
+                    kv.write().unwrap().free_slot(slot);
+                    finished += 1;
+                } else {
+                    still.push((idx, slot, state.lens[i], next[i]));
+                }
+            }
+            active = still;
+        }
+        eng.host_pool.free(kv_bytes);
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Live-policy agreement tests need artifacts; they live in
+    // rust/tests/integration_engine.rs. Here: pure logic checks.
+
+    #[test]
+    fn continuous_runner_constructs() {
+        let r = super::ContinuousRunner::new(8);
+        assert_eq!(r.max_slots, 8);
+    }
+}

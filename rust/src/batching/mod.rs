@@ -1,0 +1,312 @@
+//! Module-based batching primitives (paper §4.1–4.2).
+//!
+//! The heart of MoE-Gen: instead of one unified batch walking the whole
+//! model, each *module* gets its own batch. Concretely:
+//!
+//! * attention runs in micro-batches of `b_a` sequences;
+//! * their outputs **accumulate** in host memory ([`Accumulator`]);
+//! * the router assigns the accumulated tokens to experts, and each expert
+//!   runs once over *all* tokens routed to it ([`group_by_expert`] →
+//!   gather → expert kernel → [`scatter_add`]), turning the per-expert
+//!   batch from `b·k/E` into `B·k/E` tokens.
+//!
+//! The gather/scatter pair is the module-batching boundary itself, so its
+//! invariants are heavily tested: grouping is a partition of the (token,
+//! rank) assignment set, and scatter is the exact adjoint of gather.
+
+/// Tokens routed to one expert: parallel arrays of flat-token rows and
+/// their routing weights (one entry per (token, rank) assignment).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertGroup {
+    pub expert: usize,
+    pub rows: Vec<usize>,
+    pub weights: Vec<f32>,
+}
+
+/// Partition router output `(idx, weights)` — both `n × k` row-major —
+/// into per-expert groups. Experts are visited in ascending id and tokens
+/// in ascending row order (the combine-order contract shared with
+/// `python/compile/engine_ref.py`). Empty experts are omitted.
+pub fn group_by_expert(
+    idx: &[i32],
+    weights: &[f32],
+    n: usize,
+    k: usize,
+    num_experts: usize,
+) -> Vec<ExpertGroup> {
+    assert_eq!(idx.len(), n * k);
+    assert_eq!(weights.len(), n * k);
+    let mut groups: Vec<ExpertGroup> = (0..num_experts)
+        .map(|e| ExpertGroup { expert: e, rows: Vec::new(), weights: Vec::new() })
+        .collect();
+    for t in 0..n {
+        for r in 0..k {
+            let e = idx[t * k + r];
+            assert!(
+                (0..num_experts as i32).contains(&e),
+                "router produced expert id {e} out of range"
+            );
+            groups[e as usize].rows.push(t);
+            groups[e as usize].weights.push(weights[t * k + r]);
+        }
+    }
+    groups.retain(|g| !g.rows.is_empty());
+    groups
+}
+
+/// Gather `rows` of an `n × dim` row-major matrix into a `bucket × dim`
+/// buffer, zero-padded past `rows.len()` (the expert micro-batch input).
+pub fn gather_rows(x: &[f32], dim: usize, rows: &[usize], bucket: usize) -> Vec<f32> {
+    assert!(rows.len() <= bucket, "{} rows > bucket {bucket}", rows.len());
+    let mut out = vec![0.0f32; bucket * dim];
+    for (i, &r) in rows.iter().enumerate() {
+        out[i * dim..(i + 1) * dim].copy_from_slice(&x[r * dim..(r + 1) * dim]);
+    }
+    out
+}
+
+/// Scatter-accumulate expert output back: `acc[rows[i]] += weights[i] * y[i]`.
+/// The adjoint of [`gather_rows`]; `y` may be bucket-padded (extra rows
+/// are ignored).
+pub fn scatter_add(
+    acc: &mut [f32],
+    dim: usize,
+    rows: &[usize],
+    weights: &[f32],
+    y: &[f32],
+) {
+    assert_eq!(rows.len(), weights.len());
+    assert!(y.len() >= rows.len() * dim);
+    for (i, (&r, &w)) in rows.iter().zip(weights).enumerate() {
+        let src = &y[i * dim..(i + 1) * dim];
+        let dst = &mut acc[r * dim..(r + 1) * dim];
+        for d in 0..dim {
+            dst[d] += w * src[d];
+        }
+    }
+}
+
+/// Plain element-wise accumulate (shared-expert / residual adds).
+pub fn add_assign(acc: &mut [f32], y: &[f32]) {
+    assert!(y.len() >= acc.len());
+    for (a, b) in acc.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+/// Host-memory token accumulator: collects attention micro-batch outputs
+/// until the accumulated batch reaches the target `B`, then releases one
+/// large batch for the sparse-MoE phase (paper Fig. 2, right).
+#[derive(Debug)]
+pub struct Accumulator {
+    dim: usize,
+    target_rows: usize,
+    data: Vec<f32>,
+    rows: usize,
+}
+
+impl Accumulator {
+    pub fn new(dim: usize, target_rows: usize) -> Self {
+        Accumulator {
+            dim,
+            target_rows,
+            data: Vec::with_capacity(dim * target_rows),
+            rows: 0,
+        }
+    }
+
+    /// Append a micro-batch of `rows × dim` values.
+    pub fn push(&mut self, x: &[f32]) {
+        assert_eq!(x.len() % self.dim, 0);
+        self.data.extend_from_slice(x);
+        self.rows += x.len() / self.dim;
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.rows >= self.target_rows
+    }
+
+    /// Take the accumulated batch (resets the accumulator).
+    pub fn take(&mut self) -> (Vec<f32>, usize) {
+        let rows = self.rows;
+        self.rows = 0;
+        (std::mem::take(&mut self.data), rows)
+    }
+}
+
+/// Split `n` items into micro-batches of at most `micro` (the attention
+/// micro-batcher: ranges over the accumulated sequence list).
+pub fn micro_batches(n: usize, micro: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(micro > 0);
+    (0..n.div_ceil(micro))
+        .map(|i| i * micro..((i + 1) * micro).min(n))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn random_routing(rng: &mut Rng, n: usize, k: usize, e: usize) -> (Vec<i32>, Vec<f32>) {
+        let mut idx = Vec::with_capacity(n * k);
+        let mut w = Vec::with_capacity(n * k);
+        for _ in 0..n {
+            // k distinct experts per token.
+            let mut pool: Vec<usize> = (0..e).collect();
+            rng.shuffle(&mut pool);
+            let mut ws: Vec<f32> = (0..k).map(|_| rng.f64() as f32 + 0.1).collect();
+            let sum: f32 = ws.iter().sum();
+            for x in ws.iter_mut() {
+                *x /= sum;
+            }
+            for r in 0..k {
+                idx.push(pool[r] as i32);
+                w.push(ws[r]);
+            }
+        }
+        (idx, w)
+    }
+
+    #[test]
+    fn grouping_is_partition() {
+        let mut rng = Rng::new(0);
+        let (n, k, e) = (50, 2, 8);
+        let (idx, w) = random_routing(&mut rng, n, k, e);
+        let groups = group_by_expert(&idx, &w, n, k, e);
+        let total: usize = groups.iter().map(|g| g.rows.len()).sum();
+        assert_eq!(total, n * k);
+        // Each (token, expert) pair appears exactly once.
+        let mut seen = std::collections::HashSet::new();
+        for g in &groups {
+            for &r in &g.rows {
+                assert!(seen.insert((g.expert, r)), "duplicate assignment");
+            }
+        }
+    }
+
+    #[test]
+    fn groups_ordered_and_nonempty() {
+        let idx = vec![1, 0, 1, 2];
+        let w = vec![0.5, 0.5, 0.7, 0.3];
+        let groups = group_by_expert(&idx, &w, 2, 2, 4);
+        let experts: Vec<usize> = groups.iter().map(|g| g.expert).collect();
+        assert_eq!(experts, vec![0, 1, 2]); // ascending, expert 3 omitted
+        assert_eq!(groups[1].rows, vec![0, 1]); // ascending token order
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_expert_id() {
+        group_by_expert(&[5], &[1.0], 1, 1, 4);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_identity() {
+        // gather with weight 1.0 then scatter into zeros reproduces rows.
+        let dim = 3;
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 4 rows
+        let rows = vec![2, 0];
+        let g = gather_rows(&x, dim, &rows, 8);
+        assert_eq!(&g[0..3], &x[6..9]);
+        assert_eq!(&g[3..6], &x[0..3]);
+        assert!(g[6..].iter().all(|&v| v == 0.0));
+
+        let mut acc = vec![0.0f32; 12];
+        scatter_add(&mut acc, dim, &rows, &[1.0, 1.0], &g);
+        assert_eq!(&acc[6..9], &x[6..9]);
+        assert_eq!(&acc[0..3], &x[0..3]);
+        assert!(acc[3..6].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prop_moe_combine_conserves_weighted_rows() {
+        // Full pipeline property: for y = identity expert, the combined
+        // output equals sum of routing weights per token times the token
+        // (weights normalized to 1 -> combine == input).
+        prop_check(100, |rng| {
+            let n = rng.range(1, 40);
+            let k = rng.range(1, 3);
+            let e = rng.range(k, 8);
+            let dim = rng.range(1, 8);
+            let (idx, w) = random_routing(rng, n, k, e);
+            let x = rng.normal_vec(n * dim);
+            let mut acc = vec![0.0f32; n * dim];
+            for g in group_by_expert(&idx, &w, n, k, e) {
+                let bucket = g.rows.len().next_power_of_two();
+                let gathered = gather_rows(&x, dim, &g.rows, bucket);
+                // identity "expert"
+                scatter_add(&mut acc, dim, &g.rows, &g.weights, &gathered);
+            }
+            for t in 0..n {
+                for d in 0..dim {
+                    let got = acc[t * dim + d];
+                    let want = x[t * dim + d]; // weights sum to 1
+                    assert!(
+                        (got - want).abs() < 1e-4,
+                        "t={t} d={d}: {got} vs {want}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_scatter_linear_in_weights() {
+        prop_check(50, |rng| {
+            let dim = 4;
+            let n = rng.range(2, 16);
+            let rows: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+            let w: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+            let y = rng.normal_vec(n * dim);
+            let mut a1 = vec![0.0f32; n * dim];
+            scatter_add(&mut a1, dim, &rows, &w, &y);
+            // doubling weights doubles the result
+            let w2: Vec<f32> = w.iter().map(|x| 2.0 * x).collect();
+            let mut a2 = vec![0.0f32; n * dim];
+            scatter_add(&mut a2, dim, &rows, &w2, &y);
+            for (u, v) in a1.iter().zip(&a2) {
+                assert!((2.0 * u - v).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn accumulator_reaches_target_and_resets() {
+        let mut acc = Accumulator::new(4, 10);
+        acc.push(&vec![1.0; 4 * 6]);
+        assert!(!acc.is_ready());
+        acc.push(&vec![2.0; 4 * 5]);
+        assert!(acc.is_ready());
+        let (data, rows) = acc.take();
+        assert_eq!(rows, 11);
+        assert_eq!(data.len(), 44);
+        assert_eq!(acc.rows(), 0);
+        assert!(!acc.is_ready());
+    }
+
+    #[test]
+    fn micro_batch_ranges_cover_exactly() {
+        assert_eq!(micro_batches(10, 4), vec![0..4, 4..8, 8..10]);
+        assert_eq!(micro_batches(4, 4), vec![0..4]);
+        assert_eq!(micro_batches(0, 4), Vec::<std::ops::Range<usize>>::new());
+        prop_check(50, |rng| {
+            let n = rng.range(0, 200);
+            let m = rng.range(1, 50);
+            let ranges = micro_batches(n, m);
+            let covered: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(covered, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "gap or overlap");
+            }
+            for r in &ranges {
+                assert!(r.len() <= m);
+            }
+        });
+    }
+}

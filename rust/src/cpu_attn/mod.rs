@@ -1,0 +1,301 @@
+//! CPU attention kernel — the rust analog of the paper's AVX GQA kernel
+//! (paper §4.2 "CPU for self-attention", Appendix B "Numerical
+//! Consistency of CPU Attention").
+//!
+//! Under the ω split, a fraction of the accumulated decode batch runs its
+//! attention *mechanism* (QKᵀ → softmax → ·V) on CPU, reading K/V directly
+//! from the host-resident cache — zero HtoD traffic for those sequences.
+//! This is profitable because decode attention is GEMV-shaped (arithmetic
+//! intensity ≈ 1): the CPU streams KV from DRAM at a pace comparable to
+//! copying it over PCIe and computing on the GPU.
+//!
+//! Numerical consistency: the paper computes in FP32 but rounds to BF16
+//! after each dot-product accumulation so CPU and GPU paths agree. The
+//! same contract is implemented here (`Bf16Consistent` mode); tests verify
+//! both modes against an oracle.
+//!
+//! Parallelism: sequences × query-heads are sharded across a scoped thread
+//! pool (std threads; rayon unavailable offline).
+
+use crate::util::round_bf16;
+
+/// Numerics mode for the CPU kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Numerics {
+    /// Plain FP32 accumulation.
+    F32,
+    /// FP32 accumulate, BF16 rounding after each dot product (paper App. B).
+    Bf16Consistent,
+}
+
+/// One sequence's attention inputs for the CPU path.
+pub struct SeqAttn<'a> {
+    /// Query for this step: `num_heads * head_dim`.
+    pub q: &'a [f32],
+    /// K/V cache slices: `len * kv_heads * head_dim` (layout [pos][kvh][hd]).
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub len: usize,
+}
+
+/// Grouped-query attention for a batch of sequences; writes each result
+/// (`num_heads * head_dim`) into `out` rows. Parallel over sequences.
+pub fn decode_attention(
+    seqs: &[SeqAttn<'_>],
+    num_heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    numerics: Numerics,
+    out: &mut [Vec<f32>],
+    threads: usize,
+) {
+    assert_eq!(seqs.len(), out.len());
+    // Thread-spawn costs ~tens of µs; below ~1M MACs the single-threaded
+    // loop wins (measured in benches/hotpath.rs — EXPERIMENTS.md §Perf).
+    let work: usize =
+        seqs.iter().map(|s| s.len).sum::<usize>() * num_heads * head_dim;
+    let nt = if work < 1_000_000 {
+        1
+    } else {
+        threads.clamp(1, seqs.len().max(1))
+    };
+    if nt <= 1 || seqs.len() <= 1 {
+        for (s, o) in seqs.iter().zip(out.iter_mut()) {
+            attend_one(s, num_heads, kv_heads, head_dim, numerics, o);
+        }
+        return;
+    }
+    // Shard sequences across scoped threads.
+    let chunks: Vec<(usize, &[SeqAttn<'_>], &mut [Vec<f32>])> = {
+        let mut res = Vec::new();
+        let per = seqs.len().div_ceil(nt);
+        let mut s_rest = seqs;
+        let mut o_rest = out;
+        let mut base = 0;
+        while !s_rest.is_empty() {
+            let take = per.min(s_rest.len());
+            let (s_now, s_next) = s_rest.split_at(take);
+            let (o_now, o_next) = o_rest.split_at_mut(take);
+            res.push((base, s_now, o_now));
+            s_rest = s_next;
+            o_rest = o_next;
+            base += take;
+        }
+        res
+    };
+    std::thread::scope(|scope| {
+        for (_base, s_chunk, o_chunk) in chunks {
+            scope.spawn(move || {
+                for (s, o) in s_chunk.iter().zip(o_chunk.iter_mut()) {
+                    attend_one(s, num_heads, kv_heads, head_dim, numerics, o);
+                }
+            });
+        }
+    });
+}
+
+/// Attention for one sequence, all query heads.
+fn attend_one(
+    s: &SeqAttn<'_>,
+    num_heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    numerics: Numerics,
+    out: &mut Vec<f32>,
+) {
+    let group = num_heads / kv_heads;
+    let kvd = kv_heads * head_dim;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    out.clear();
+    out.resize(num_heads * head_dim, 0.0);
+    let mut scores = vec![0.0f32; s.len];
+    for h in 0..num_heads {
+        let kvh = h / group;
+        let q = &s.q[h * head_dim..(h + 1) * head_dim];
+        // scores[t] = <q, k_t> * scale
+        let mut max = f32::NEG_INFINITY;
+        for t in 0..s.len {
+            let k = &s.k[t * kvd + kvh * head_dim..t * kvd + (kvh + 1) * head_dim];
+            let mut acc = 0.0f32;
+            for d in 0..head_dim {
+                acc += q[d] * k[d];
+            }
+            if numerics == Numerics::Bf16Consistent {
+                acc = round_bf16(acc);
+            }
+            let sc = acc * scale;
+            scores[t] = sc;
+            max = max.max(sc);
+        }
+        // softmax
+        let mut denom = 0.0f32;
+        for t in 0..s.len {
+            let e = (scores[t] - max).exp();
+            scores[t] = e;
+            denom += e;
+        }
+        let inv = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+        // out_h = sum_t p_t * v_t
+        let o = &mut out[h * head_dim..(h + 1) * head_dim];
+        for t in 0..s.len {
+            let p = scores[t] * inv;
+            let v = &s.v[t * kvd + kvh * head_dim..t * kvd + (kvh + 1) * head_dim];
+            for d in 0..head_dim {
+                o[d] += p * v[d];
+            }
+        }
+        if numerics == Numerics::Bf16Consistent {
+            for d in 0..head_dim {
+                o[d] = round_bf16(o[d]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    /// Straight-line oracle (no blocking, no bf16): full-precision GQA.
+    fn oracle(s: &SeqAttn<'_>, nh: usize, nkv: usize, hd: usize) -> Vec<f32> {
+        let group = nh / nkv;
+        let kvd = nkv * hd;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = vec![0.0f32; nh * hd];
+        for h in 0..nh {
+            let kvh = h / group;
+            let q = &s.q[h * hd..(h + 1) * hd];
+            let scores: Vec<f32> = (0..s.len)
+                .map(|t| {
+                    let k = &s.k[t * kvd + kvh * hd..t * kvd + (kvh + 1) * hd];
+                    q.iter().zip(k).map(|(a, b)| a * b).sum::<f32>() * scale
+                })
+                .collect();
+            let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|x| (x - max).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            for t in 0..s.len {
+                let p = exps[t] / denom;
+                let v = &s.v[t * kvd + kvh * hd..t * kvd + (kvh + 1) * hd];
+                for d in 0..hd {
+                    out[h * hd + d] += p * v[d];
+                }
+            }
+        }
+        out
+    }
+
+    fn rand_seq(rng: &mut Rng, len: usize, nh: usize, nkv: usize, hd: usize)
+        -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            rng.normal_vec(nh * hd),
+            rng.normal_vec(len * nkv * hd),
+            rng.normal_vec(len * nkv * hd),
+        )
+    }
+
+    #[test]
+    fn matches_oracle_f32() {
+        let mut rng = Rng::new(0);
+        let (nh, nkv, hd) = (4, 2, 16);
+        let (q, k, v) = rand_seq(&mut rng, 37, nh, nkv, hd);
+        let seqs = [SeqAttn { q: &q, k: &k, v: &v, len: 37 }];
+        let mut out = vec![Vec::new()];
+        decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut out, 1);
+        let want = oracle(&seqs[0], nh, nkv, hd);
+        for (a, b) in out[0].iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bf16_mode_close_to_f32() {
+        let mut rng = Rng::new(1);
+        let (nh, nkv, hd) = (4, 4, 8);
+        let (q, k, v) = rand_seq(&mut rng, 50, nh, nkv, hd);
+        let seqs = [SeqAttn { q: &q, k: &k, v: &v, len: 50 }];
+        let mut o32 = vec![Vec::new()];
+        let mut obf = vec![Vec::new()];
+        decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut o32, 1);
+        decode_attention(&seqs, nh, nkv, hd, Numerics::Bf16Consistent, &mut obf, 1);
+        for (a, b) in o32[0].iter().zip(&obf[0]) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        // And the bf16 outputs are exactly bf16-representable.
+        for &x in &obf[0] {
+            assert_eq!(x, crate::util::round_bf16(x));
+        }
+    }
+
+    #[test]
+    fn threaded_matches_single_thread() {
+        let mut rng = Rng::new(2);
+        let (nh, nkv, hd) = (8, 2, 16);
+        let data: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, usize)> = (0..13)
+            .map(|_| {
+                let len = rng.range(1, 64);
+                let (q, k, v) = rand_seq(&mut rng, len, nh, nkv, hd);
+                (q, k, v, len)
+            })
+            .collect();
+        let seqs: Vec<SeqAttn<'_>> = data
+            .iter()
+            .map(|(q, k, v, len)| SeqAttn { q, k, v, len: *len })
+            .collect();
+        let mut a = vec![Vec::new(); seqs.len()];
+        let mut b = vec![Vec::new(); seqs.len()];
+        decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut a, 1);
+        decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut b, 6);
+        assert_eq!(a, b, "thread count must not change results");
+    }
+
+    #[test]
+    fn single_token_context_returns_v() {
+        // len=1: softmax over one score = 1 -> output == v row per head.
+        let mut rng = Rng::new(3);
+        let (nh, nkv, hd) = (4, 2, 8);
+        let (q, k, v) = rand_seq(&mut rng, 1, nh, nkv, hd);
+        let seqs = [SeqAttn { q: &q, k: &k, v: &v, len: 1 }];
+        let mut out = vec![Vec::new()];
+        decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut out, 1);
+        let group = nh / nkv;
+        for h in 0..nh {
+            let kvh = h / group;
+            for d in 0..hd {
+                assert!((out[0][h * hd + d] - v[kvh * hd + d]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_output_within_v_convex_hull() {
+        // Attention output is a convex combination of V rows: each output
+        // coordinate must lie within [min_t v, max_t v] per (head, dim).
+        prop_check(50, |rng: &mut Rng| {
+            let (nh, nkv, hd) = (4, 2, 8);
+            let len = rng.range(1, 32);
+            let (q, k, v) = rand_seq(rng, len, nh, nkv, hd);
+            let seqs = [SeqAttn { q: &q, k: &k, v: &v, len }];
+            let mut out = vec![Vec::new()];
+            decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut out, 1);
+            let group = nh / nkv;
+            let kvd = nkv * hd;
+            for h in 0..nh {
+                let kvh = h / group;
+                for d in 0..hd {
+                    let col: Vec<f32> =
+                        (0..len).map(|t| v[t * kvd + kvh * hd + d]).collect();
+                    let lo = col.iter().cloned().fold(f32::INFINITY, f32::min);
+                    let hi = col.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let x = out[0][h * hd + d];
+                    assert!(
+                        x >= lo - 1e-4 && x <= hi + 1e-4,
+                        "h={h} d={d}: {x} outside [{lo}, {hi}]"
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,307 @@
+//! KV-cache manager with **full host offloading** (paper §4.2).
+//!
+//! The paper shows that fully offloading the KV-cache to host memory beats
+//! partial GPU caching for dataset-scale inference (Fig. 4): GPU-resident
+//! KV squeezes the batch size, which multiplies expert-weight fetch
+//! traffic; trading KV copy traffic for batch size wins by up to 20×.
+//!
+//! Layout: per layer, one contiguous host slab indexed by sequence slot —
+//! `[slot][capacity][kv_heads * head_dim]` for K and V separately. This
+//! makes the two hot operations cheap and contiguous:
+//!
+//! * `append` — write one token's K/V for a sequence (decode step), and
+//! * `gather_window` — pack a padded `[bucket][capacity][kvd]` staging
+//!   buffer for the accelerator-side attention micro-batch (the HtoD
+//!   engine runs this, overlapping the gather with accelerator compute).
+//!
+//! The CPU-attention path (ω split) reads slices in place — zero copies,
+//! which is exactly why the paper runs the attention *mechanism* on CPU.
+
+/// Per-layer K/V slabs for a fixed population of sequence slots.
+pub struct KvCache {
+    pub num_layers: usize,
+    pub kvd: usize,
+    /// Max context length per sequence (tokens).
+    pub capacity: usize,
+    /// k[layer] / v[layer]: slab of `slots * capacity * kvd` f32.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    lens: Vec<usize>,
+    free_slots: Vec<usize>,
+    slots: usize,
+}
+
+impl KvCache {
+    pub fn new(num_layers: usize, kv_heads: usize, head_dim: usize, capacity: usize, slots: usize) -> Self {
+        let kvd = kv_heads * head_dim;
+        let slab = vec![0.0f32; slots * capacity * kvd];
+        KvCache {
+            num_layers,
+            kvd,
+            capacity,
+            k: vec![slab.clone(); num_layers],
+            v: vec![slab; num_layers],
+            lens: vec![0; slots],
+            free_slots: (0..slots).rev().collect(),
+            slots,
+        }
+    }
+
+    /// Host bytes held by this cache (both K and V, all layers).
+    pub fn host_bytes(&self) -> usize {
+        2 * self.num_layers * self.slots * self.capacity * self.kvd * 4
+    }
+
+    pub fn alloc_slot(&mut self) -> Option<usize> {
+        let s = self.free_slots.pop()?;
+        self.lens[s] = 0;
+        Some(s)
+    }
+
+    pub fn free_slot(&mut self, slot: usize) {
+        debug_assert!(!self.free_slots.contains(&slot));
+        self.lens[slot] = 0;
+        self.free_slots.push(slot);
+    }
+
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    pub fn free_slot_count(&self) -> usize {
+        self.free_slots.len()
+    }
+
+    #[inline]
+    fn off(&self, slot: usize, pos: usize) -> usize {
+        (slot * self.capacity + pos) * self.kvd
+    }
+
+    /// Write the prompt's K/V for one layer (positions `0..n`).
+    /// `k_flat`/`v_flat` are `n * kvd` floats.
+    pub fn write_prefill(&mut self, layer: usize, slot: usize, k_flat: &[f32], v_flat: &[f32]) {
+        let n = k_flat.len() / self.kvd;
+        assert_eq!(k_flat.len(), n * self.kvd);
+        assert!(n <= self.capacity, "prompt longer than kv capacity");
+        let o = self.off(slot, 0);
+        self.k[layer][o..o + n * self.kvd].copy_from_slice(k_flat);
+        self.v[layer][o..o + n * self.kvd].copy_from_slice(v_flat);
+    }
+
+    /// Mark a sequence's length after prefill (all layers written).
+    pub fn set_len(&mut self, slot: usize, len: usize) {
+        assert!(len <= self.capacity);
+        self.lens[slot] = len;
+    }
+
+    /// Append one token's K/V at the current end for `layer`.
+    /// Caller bumps the length once per step via `advance`.
+    pub fn append(&mut self, layer: usize, slot: usize, k_tok: &[f32], v_tok: &[f32]) {
+        assert_eq!(k_tok.len(), self.kvd);
+        let pos = self.lens[slot];
+        assert!(pos < self.capacity, "kv capacity exceeded");
+        let o = self.off(slot, pos);
+        self.k[layer][o..o + self.kvd].copy_from_slice(k_tok);
+        self.v[layer][o..o + self.kvd].copy_from_slice(v_tok);
+    }
+
+    /// Advance a sequence's length by one token (after all layers appended).
+    pub fn advance(&mut self, slot: usize) {
+        assert!(self.lens[slot] < self.capacity);
+        self.lens[slot] += 1;
+    }
+
+    /// In-place K/V views for the CPU-attention path: `(k, v, len)` where
+    /// slices cover `len * kvd` floats.
+    pub fn slices(&self, layer: usize, slot: usize) -> (&[f32], &[f32], usize) {
+        let len = self.lens[slot];
+        let o = self.off(slot, 0);
+        (
+            &self.k[layer][o..o + len * self.kvd],
+            &self.v[layer][o..o + len * self.kvd],
+            len,
+        )
+    }
+
+    /// In-place K/V views with an explicit length (used mid-step, when a
+    /// token has been appended but `advance` not yet called).
+    pub fn slices_n(&self, layer: usize, slot: usize, n: usize) -> (&[f32], &[f32]) {
+        assert!(n <= self.capacity);
+        let o = self.off(slot, 0);
+        (
+            &self.k[layer][o..o + n * self.kvd],
+            &self.v[layer][o..o + n * self.kvd],
+        )
+    }
+
+    /// Gather one side (K or V) of the staging window with explicit
+    /// per-sequence lengths. Runs on the HtoD engine thread on the live
+    /// path, overlapping the pack with CPU attention / device compute.
+    pub fn gather_side(
+        &self,
+        layer: usize,
+        seq_slots: &[usize],
+        lens: &[usize],
+        bucket: usize,
+        side_k: bool,
+    ) -> Vec<f32> {
+        assert!(seq_slots.len() <= bucket);
+        assert_eq!(seq_slots.len(), lens.len());
+        let row = self.capacity * self.kvd;
+        let src = if side_k { &self.k[layer] } else { &self.v[layer] };
+        let mut out = vec![0.0f32; bucket * row];
+        for (i, (&slot, &len)) in seq_slots.iter().zip(lens).enumerate() {
+            assert!(len <= self.capacity);
+            let o = self.off(slot, 0);
+            let n = len * self.kvd;
+            out[i * row..i * row + n].copy_from_slice(&src[o..o + n]);
+        }
+        out
+    }
+
+    /// Pack the padded staging window `[bucket][capacity][kvd]` for the
+    /// accelerator attention micro-batch. Slots beyond `seqs.len()` are
+    /// zero. Returns (k_staged, v_staged, lens) and the byte volume that
+    /// crossed the (simulated) link.
+    pub fn gather_window(
+        &self,
+        layer: usize,
+        seq_slots: &[usize],
+        bucket: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<i32>, usize) {
+        assert!(seq_slots.len() <= bucket);
+        let row = self.capacity * self.kvd;
+        let mut ks = vec![0.0f32; bucket * row];
+        let mut vs = vec![0.0f32; bucket * row];
+        let mut lens = vec![0i32; bucket];
+        let mut bytes = 0usize;
+        for (i, &slot) in seq_slots.iter().enumerate() {
+            let len = self.lens[slot];
+            let o = self.off(slot, 0);
+            let n = len * self.kvd;
+            ks[i * row..i * row + n].copy_from_slice(&self.k[layer][o..o + n]);
+            vs[i * row..i * row + n].copy_from_slice(&self.v[layer][o..o + n]);
+            lens[i] = len as i32;
+            bytes += 2 * n * 4;
+        }
+        (ks, vs, lens, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn mk() -> KvCache {
+        KvCache::new(2, 2, 4, 16, 4)
+    }
+
+    #[test]
+    fn slot_lifecycle() {
+        let mut kv = mk();
+        assert_eq!(kv.free_slot_count(), 4);
+        let a = kv.alloc_slot().unwrap();
+        let b = kv.alloc_slot().unwrap();
+        assert_ne!(a, b);
+        kv.free_slot(a);
+        assert_eq!(kv.free_slot_count(), 3);
+        let c = kv.alloc_slot().unwrap();
+        assert_eq!(c, a, "slots are reused LIFO");
+    }
+
+    #[test]
+    fn exhausts_slots() {
+        let mut kv = mk();
+        for _ in 0..4 {
+            kv.alloc_slot().unwrap();
+        }
+        assert!(kv.alloc_slot().is_none());
+    }
+
+    #[test]
+    fn prefill_then_append_roundtrip() {
+        let mut kv = mk();
+        let s = kv.alloc_slot().unwrap();
+        let kvd = kv.kvd;
+        let kp: Vec<f32> = (0..3 * kvd).map(|i| i as f32).collect();
+        let vp: Vec<f32> = (0..3 * kvd).map(|i| -(i as f32)).collect();
+        for layer in 0..2 {
+            kv.write_prefill(layer, s, &kp, &vp);
+        }
+        kv.set_len(s, 3);
+        // Append a 4th token on both layers.
+        let kt = vec![100.0f32; kvd];
+        let vt = vec![200.0f32; kvd];
+        for layer in 0..2 {
+            kv.append(layer, s, &kt, &vt);
+        }
+        kv.advance(s);
+        let (k, v, len) = kv.slices(1, s);
+        assert_eq!(len, 4);
+        assert_eq!(&k[..3 * kvd], &kp[..]);
+        assert_eq!(&k[3 * kvd..], &kt[..]);
+        assert_eq!(&v[3 * kvd..], &vt[..]);
+    }
+
+    #[test]
+    fn gather_window_pads_and_meters() {
+        let mut kv = mk();
+        let s0 = kv.alloc_slot().unwrap();
+        let s1 = kv.alloc_slot().unwrap();
+        let kvd = kv.kvd;
+        kv.write_prefill(0, s0, &vec![1.0; 2 * kvd], &vec![2.0; 2 * kvd]);
+        kv.set_len(s0, 2);
+        kv.write_prefill(0, s1, &vec![3.0; 5 * kvd], &vec![4.0; 5 * kvd]);
+        kv.set_len(s1, 5);
+        let (ks, vs, lens, bytes) = kv.gather_window(0, &[s0, s1], 4);
+        let row = kv.capacity * kvd;
+        assert_eq!(ks.len(), 4 * row);
+        assert_eq!(lens, vec![2, 5, 0, 0]);
+        assert_eq!(bytes, 2 * (2 + 5) * kvd * 4);
+        assert_eq!(ks[0], 1.0);
+        assert_eq!(ks[row], 3.0);
+        // Padding rows all zero.
+        assert!(ks[2 * row..].iter().all(|&x| x == 0.0));
+        assert!(vs[2 * row..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "kv capacity exceeded")]
+    fn append_past_capacity_panics() {
+        let mut kv = KvCache::new(1, 1, 2, 2, 1);
+        let s = kv.alloc_slot().unwrap();
+        for _ in 0..3 {
+            kv.append(0, s, &[0.0, 0.0], &[0.0, 0.0]);
+            kv.advance(s);
+        }
+    }
+
+    #[test]
+    fn host_bytes_accounting() {
+        let kv = KvCache::new(2, 2, 4, 16, 4);
+        // 2 (k+v) * 2 layers * 4 slots * 16 cap * 8 kvd * 4 B
+        assert_eq!(kv.host_bytes(), 2 * 2 * 4 * 16 * 8 * 4);
+    }
+
+    #[test]
+    fn prop_append_preserves_other_slots() {
+        prop_check(50, |rng: &mut Rng| {
+            let mut kv = KvCache::new(1, 1, 4, 8, 3);
+            let a = kv.alloc_slot().unwrap();
+            let b = kv.alloc_slot().unwrap();
+            let ka: Vec<f32> = rng.normal_vec(2 * 4);
+            kv.write_prefill(0, a, &ka, &ka);
+            kv.set_len(a, 2);
+            // Mutate slot b arbitrarily.
+            for _ in 0..rng.range(1, 8) {
+                kv.append(0, b, &rng.normal_vec(4), &rng.normal_vec(4));
+                kv.advance(b);
+            }
+            let (k, _, len) = kv.slices(0, a);
+            assert_eq!(len, 2);
+            assert_eq!(k, &ka[..], "slot a corrupted by writes to slot b");
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! # MoE-Gen — module-based batching for high-throughput MoE inference
+//!
+//! Rust reproduction of *MoE-Gen: High-Throughput MoE Inference on a Single
+//! GPU with Module-Based Batching* (Xu, Xue, Lu, Jackson, Mai — 2025).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **Layer 3 (this crate)** — the coordinator: module-based batching
+//!   engine, host/device memory substrate with explicit HtoD/DtoH transfer
+//!   engines, full KV-cache offloading, the offloading-DAG critical-path
+//!   cost model (paper Eq. 4) and the batching-strategy search over
+//!   `(B, b_a, b_e, ω, S_Expert, S_Params)` (paper §4.3–4.4).
+//! * **Layer 2** — the MoE model, written in JAX as *separately lowered
+//!   modules* (`python/compile/model.py`), AOT-compiled to HLO text.
+//! * **Layer 1** — Pallas kernels for the expert FFN and flash attention
+//!   (`python/compile/kernels/`), embedded in the L2 HLO.
+//!
+//! Python never runs on the request path: the coordinator loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) once and
+//! serves everything from rust.
+
+pub mod baselines;
+pub mod batching;
+pub mod config;
+pub mod cpu_attn;
+pub mod dag;
+pub mod engine;
+pub mod hw;
+pub mod kv;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,155 @@
+//! moe-gen CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   run       live offline inference on the tiny MoE (real PJRT path)
+//!   tables    regenerate the paper's evaluation tables from the simulator
+//!   search    batching-strategy search for a paper model/testbed
+//!   simulate  per-system throughput for one scenario
+//!   profile   live per-module latency profile across buckets
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use moe_gen::config::{EngineConfig, Policy};
+use moe_gen::engine::Engine;
+use moe_gen::sim::tables;
+use moe_gen::{hw, model, sched, server, sim, workload};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "moe-gen — MoE-Gen reproduction (module-based batching)\n\
+         \n\
+         USAGE: moe-gen <command> [flags]\n\
+         \n\
+         COMMANDS:\n\
+           run       --policy module|model|continuous  --n 64  --steps 16\n\
+                     --omega 0.0  --artifacts artifacts  --seed 0\n\
+           tables    --table all|1|4|5|6|7|8|9|10|fig3|fig4|fig7\n\
+           search    --model mixtral-8x7b --testbed c2 --prompt 512 --decode 256\n\
+           simulate  --model deepseek-v2 --testbed c2 --prompt 512 --decode 256\n\
+           profile   --artifacts artifacts"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+
+    match cmd.as_str() {
+        "run" => {
+            let policy = Policy::parse(&get("policy", "module"))
+                .unwrap_or(Policy::ModuleBased);
+            let n: usize = get("n", "64").parse()?;
+            let steps: usize = get("steps", "16").parse()?;
+            let cfg = EngineConfig {
+                artifacts_dir: get("artifacts", "artifacts").into(),
+                policy,
+                omega: get("omega", "0").parse()?,
+                max_batch: get("max-batch", "128").parse()?,
+                seed: get("seed", "0").parse()?,
+                ..EngineConfig::default()
+            };
+            let prompts = workload::generate_prompts(n, 24, 64, 512, cfg.seed);
+            println!("[run] {} prompts, {steps} steps, policy={}", n, policy.name());
+            let report = server::run_offline(cfg, &prompts, steps)?;
+            println!("{}", report.summary());
+        }
+        "tables" => {
+            let which = get("table", "all");
+            print!("{}", tables::render(&which));
+        }
+        "search" => {
+            let m = model::by_name(&get("model", "mixtral-8x7b"))
+                .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+            let h = hw::by_name(&get("testbed", "c2"))
+                .ok_or_else(|| anyhow::anyhow!("unknown testbed"))?;
+            let scn = sched::Scenario::new(
+                m, h,
+                get("prompt", "512").parse()?,
+                get("decode", "256").parse()?,
+            );
+            let dec = sched::search_decode(&scn, &sched::Knobs::moe_gen());
+            let pre = sched::search_prefill(&scn, &sched::Knobs::moe_gen_gpu_only());
+            println!("scenario: {} on {}", scn.model.name, scn.hw.name);
+            println!(
+                "decode : B={} b_a={} b_e={} ω={:.1} S_expert={} S_params={} → {:.1} tok/s ({} candidates)",
+                dec.strategy.b, dec.strategy.b_a, dec.strategy.b_e, dec.strategy.omega,
+                moe_gen::util::fmt_bytes(dec.strategy.s_expert as f64),
+                moe_gen::util::fmt_bytes(dec.strategy.s_params as f64),
+                dec.throughput, dec.candidates_evaluated
+            );
+            println!(
+                "prefill: B={} tokens b_a={} b_e={} → {:.1} tok/s ({} candidates)",
+                pre.strategy.b, pre.strategy.b_a, pre.strategy.b_e,
+                pre.throughput, pre.candidates_evaluated
+            );
+        }
+        "simulate" => {
+            let m = model::by_name(&get("model", "deepseek-v2"))
+                .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+            let h = hw::by_name(&get("testbed", "c2"))
+                .ok_or_else(|| anyhow::anyhow!("unknown testbed"))?;
+            let scn = sched::Scenario::new(
+                m, h,
+                get("prompt", "512").parse()?,
+                get("decode", "256").parse()?,
+            );
+            println!("scenario: {} on {} (prompt {}, decode {})",
+                scn.model.name, scn.hw.name, scn.prompt_len, scn.decode_len);
+            println!("{:<16} {:>12} {:>12}", "system", "decode tok/s", "prefill tok/s");
+            for sys in sim::System::table_order() {
+                let d = sim::decode_tp(&scn, sys);
+                let p = sim::prefill_tp(&scn, sys);
+                println!(
+                    "{:<16} {:>12} {:>12}",
+                    sys.name(),
+                    d.map(|x| format!("{x:.1}")).unwrap_or_else(|| "Fail".into()),
+                    p.map(|x| format!("{x:.1}")).unwrap_or_else(|| "Fail".into()),
+                );
+            }
+        }
+        "profile" => {
+            let cfg = EngineConfig {
+                artifacts_dir: get("artifacts", "artifacts").into(),
+                ..EngineConfig::default()
+            };
+            let mut eng = Engine::new(cfg)?;
+            eng.warmup()?;
+            println!("{:<14} {:>8} {:>12}", "module", "bucket", "latency (ms)");
+            for (name, bucket, secs) in eng.profile_modules()? {
+                println!("{name:<14} {bucket:>8} {:>12.3}", secs * 1e3);
+            }
+            println!(
+                "compile time total: {:.2}s",
+                *eng.rt.compile_secs.borrow()
+            );
+        }
+        _ => {
+            bail!("unknown command {cmd}; try `moe-gen` with no args for usage");
+        }
+    }
+    Ok(())
+}

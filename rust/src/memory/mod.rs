@@ -1,0 +1,323 @@
+//! Two-tier memory substrate: host/device byte accounting and the
+//! HtoD/DtoH transfer engines (paper §2 "MoE offloading", §4.2 "System
+//! components").
+//!
+//! The paper's machine has GPU memory, host memory, and two unidirectional
+//! PCIe links with dedicated copy engines. Here:
+//!
+//! * [`MemoryPool`] does capacity accounting for each tier — the strategy
+//!   search's constraints (Eqs. 2–3) and the engine's buffer allocations
+//!   (`S_Expert`, `S_Dense`, KV staging, `S_Params`) charge against it,
+//!   and over-subscription is a hard error (the OOM the paper's `b_e`
+//!   choice must avoid).
+//! * [`TransferEngine`] is a dedicated copy thread per link direction.
+//!   On the live path its jobs do the real host-side staging work (KV
+//!   window gathers, weight-buffer packing) so they genuinely overlap
+//!   with accelerator compute, and it meters bytes/busy-time. An optional
+//!   bandwidth throttle emulates a PCIe-class link for experiments.
+//!
+//! PJRT handles (client/executables/literals) are not `Send`, so device
+//! upload itself happens on the engine thread at launch; the transfer
+//! engines own everything that is legal to move off-thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Byte-capacity accounting for one memory tier.
+#[derive(Debug)]
+pub struct MemoryPool {
+    name: String,
+    capacity: usize,
+    used: usize,
+    peak: usize,
+}
+
+#[derive(Debug)]
+pub struct OutOfMemory {
+    pub pool: String,
+    pub requested: usize,
+    pub free: usize,
+}
+
+impl std::fmt::Display for OutOfMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: OOM requesting {} bytes with {} free",
+            self.pool, self.requested, self.free
+        )
+    }
+}
+
+impl std::error::Error for OutOfMemory {}
+
+impl MemoryPool {
+    pub fn new(name: impl Into<String>, capacity: usize) -> Self {
+        MemoryPool { name: name.into(), capacity, used: 0, peak: 0 }
+    }
+
+    pub fn alloc(&mut self, bytes: usize) -> Result<(), OutOfMemory> {
+        if self.used + bytes > self.capacity {
+            return Err(OutOfMemory {
+                pool: self.name.clone(),
+                requested: bytes,
+                free: self.capacity - self.used,
+            });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: usize) {
+        assert!(bytes <= self.used, "{}: freeing more than allocated", self.name);
+        self.used -= bytes;
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Transfer counters for one link direction.
+#[derive(Debug, Default)]
+pub struct LinkStats {
+    pub bytes: AtomicU64,
+    pub jobs: AtomicU64,
+    pub busy_ns: AtomicU64,
+}
+
+impl LinkStats {
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+    pub fn jobs_total(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+type Job = Box<dyn FnOnce() -> Vec<f32> + Send>;
+
+struct Task {
+    bytes: usize,
+    job: Job,
+    done: Sender<Vec<f32>>,
+}
+
+/// Completion handle for a submitted transfer.
+pub struct TransferHandle {
+    rx: Receiver<Vec<f32>>,
+}
+
+impl TransferHandle {
+    /// Block until the copy/staging job finishes; returns its payload
+    /// (possibly empty for pure-accounting jobs).
+    pub fn wait(self) -> Vec<f32> {
+        self.rx.recv().expect("transfer engine died")
+    }
+}
+
+/// A dedicated copy engine for one link direction (HtoD or DtoH).
+pub struct TransferEngine {
+    tx: Option<Sender<Task>>,
+    pub stats: Arc<LinkStats>,
+    /// Simulated link bandwidth (B/s): jobs additionally sleep
+    /// `bytes/bw - elapsed` to emulate a slower physical link.
+    throttle: Option<f64>,
+    worker: Option<JoinHandle<()>>,
+    name: &'static str,
+}
+
+impl TransferEngine {
+    pub fn new(name: &'static str, throttle: Option<f64>) -> Self {
+        let (tx, rx) = channel::<Task>();
+        let stats = Arc::new(LinkStats::default());
+        let st = Arc::clone(&stats);
+        let worker = std::thread::Builder::new()
+            .name(format!("xfer-{name}"))
+            .spawn(move || {
+                while let Ok(task) = rx.recv() {
+                    let t0 = std::time::Instant::now();
+                    let payload = (task.job)();
+                    if let Some(bw) = throttle {
+                        let want = task.bytes as f64 / bw;
+                        let got = t0.elapsed().as_secs_f64();
+                        if want > got {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(
+                                want - got,
+                            ));
+                        }
+                    }
+                    st.bytes.fetch_add(task.bytes as u64, Ordering::Relaxed);
+                    st.jobs.fetch_add(1, Ordering::Relaxed);
+                    st.busy_ns.fetch_add(
+                        t0.elapsed().as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                    let _ = task.done.send(payload);
+                }
+            })
+            .expect("spawn transfer engine");
+        TransferEngine { tx: Some(tx), stats, throttle, worker: Some(worker), name }
+    }
+
+    /// Submit a staging job that accounts for `bytes` on this link. The
+    /// closure runs on the link thread and may build a staging buffer
+    /// (returned via the handle).
+    pub fn submit<F>(&self, bytes: usize, job: F) -> TransferHandle
+    where
+        F: FnOnce() -> Vec<f32> + Send + 'static,
+    {
+        let (done, rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("engine shut down")
+            .send(Task { bytes, job: Box::new(job), done })
+            .expect("transfer engine died");
+        TransferHandle { rx }
+    }
+
+    /// Account-only job (no payload) — e.g. metering a DtoH writeback that
+    /// the caller already performed.
+    pub fn account(&self, bytes: usize) -> TransferHandle {
+        self.submit(bytes, Vec::new)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn throttle(&self) -> Option<f64> {
+        self.throttle
+    }
+}
+
+impl Drop for TransferEngine {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn pool_alloc_free_peak() {
+        let mut p = MemoryPool::new("gpu", 100);
+        p.alloc(60).unwrap();
+        p.alloc(30).unwrap();
+        assert_eq!(p.used(), 90);
+        p.free(50);
+        assert_eq!(p.used(), 40);
+        assert_eq!(p.peak(), 90);
+        assert_eq!(p.free_bytes(), 60);
+    }
+
+    #[test]
+    fn pool_oom() {
+        let mut p = MemoryPool::new("gpu", 10);
+        p.alloc(8).unwrap();
+        let e = p.alloc(4).unwrap_err();
+        assert_eq!(e.free, 2);
+        assert_eq!(e.requested, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "freeing more than allocated")]
+    fn pool_over_free_panics() {
+        let mut p = MemoryPool::new("gpu", 10);
+        p.alloc(4).unwrap();
+        p.free(5);
+    }
+
+    #[test]
+    fn prop_pool_conservation() {
+        prop_check(100, |rng| {
+            let cap = rng.range(100, 10_000);
+            let mut p = MemoryPool::new("t", cap);
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..rng.range(1, 50) {
+                if rng.f64() < 0.6 || live.is_empty() {
+                    let sz = rng.range(1, cap / 4 + 1);
+                    if p.alloc(sz).is_ok() {
+                        live.push(sz);
+                    }
+                } else {
+                    let i = rng.below(live.len());
+                    p.free(live.swap_remove(i));
+                }
+                assert_eq!(p.used(), live.iter().sum::<usize>());
+                assert!(p.used() <= cap);
+                assert!(p.peak() >= p.used());
+            }
+        });
+    }
+
+    #[test]
+    fn transfer_engine_runs_jobs_and_meters() {
+        let eng = TransferEngine::new("htod-test", None);
+        let h = eng.submit(1024, || vec![1.0f32; 4]);
+        assert_eq!(h.wait(), vec![1.0f32; 4]);
+        let h2 = eng.account(4096);
+        h2.wait();
+        assert_eq!(eng.stats.bytes_total(), 5120);
+        assert_eq!(eng.stats.jobs_total(), 2);
+    }
+
+    #[test]
+    fn transfer_engine_preserves_order() {
+        let eng = TransferEngine::new("order-test", None);
+        let h1 = eng.submit(1, || vec![1.0]);
+        let h2 = eng.submit(1, || vec![2.0]);
+        // FIFO on a single worker: h1 completes before h2 starts.
+        assert_eq!(h1.wait(), vec![1.0]);
+        assert_eq!(h2.wait(), vec![2.0]);
+    }
+
+    #[test]
+    fn throttle_enforces_minimum_duration() {
+        // 1 MB at 100 MB/s => >= 10 ms.
+        let eng = TransferEngine::new("slow-test", Some(100e6));
+        let t0 = std::time::Instant::now();
+        eng.submit(1_000_000, Vec::new).wait();
+        assert!(t0.elapsed().as_secs_f64() >= 0.009);
+        assert!(eng.stats.busy_secs() >= 0.009);
+    }
+
+    #[test]
+    fn jobs_overlap_with_caller_work() {
+        // Submitting is non-blocking: the caller can do work while the
+        // link thread stages.
+        let eng = TransferEngine::new("async-test", None);
+        let h = eng.submit(8, || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            vec![9.0]
+        });
+        let t0 = std::time::Instant::now();
+        // returns immediately — well before the job's 20 ms completes
+        assert!(t0.elapsed().as_millis() < 15);
+        assert_eq!(h.wait(), vec![9.0]);
+    }
+}

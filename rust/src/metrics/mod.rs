@@ -1,0 +1,174 @@
+//! Throughput / utilization / traffic metrics (paper Tables 1, 4–9 report
+//! exactly these quantities).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulated per-module timing.
+#[derive(Debug, Default, Clone)]
+pub struct ModuleStat {
+    pub calls: u64,
+    pub total_secs: f64,
+    /// Total rows (tokens or sequences) processed, for avg-batch metrics.
+    pub rows: u64,
+    /// Rows including bucket padding (measures padding overhead).
+    pub padded_rows: u64,
+}
+
+/// Engine-wide metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub modules: BTreeMap<String, ModuleStat>,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub htod_bytes: u64,
+    pub dtoh_bytes: u64,
+    pub cpu_attn_seqs: u64,
+    pub gpu_attn_seqs: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_module(&mut self, name: &str, secs: f64, rows: usize, padded: usize) {
+        let m = self.modules.entry(name.to_string()).or_default();
+        m.calls += 1;
+        m.total_secs += secs;
+        m.rows += rows as u64;
+        m.padded_rows += padded as u64;
+    }
+
+    /// Time a module invocation and record it.
+    pub fn time_module<T>(
+        &mut self,
+        name: &str,
+        rows: usize,
+        padded: usize,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_module(name, t0.elapsed().as_secs_f64(), rows, padded);
+        out
+    }
+
+    pub fn prefill_throughput(&self) -> f64 {
+        if self.prefill_secs > 0.0 {
+            self.prefill_tokens as f64 / self.prefill_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn decode_throughput(&self) -> f64 {
+        if self.decode_secs > 0.0 {
+            self.decode_tokens as f64 / self.decode_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Average rows per call for a module (paper Table 1 "expert avg bsz").
+    pub fn avg_batch(&self, module: &str) -> f64 {
+        self.modules
+            .get(module)
+            .filter(|m| m.calls > 0)
+            .map(|m| m.rows as f64 / m.calls as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// Fraction of processed rows that were bucket padding.
+    pub fn padding_overhead(&self, module: &str) -> f64 {
+        self.modules
+            .get(module)
+            .filter(|m| m.padded_rows > 0)
+            .map(|m| 1.0 - m.rows as f64 / m.padded_rows as f64)
+            .unwrap_or(0.0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "prefill: {} tok in {:.3}s = {:.1} tok/s\n",
+            self.prefill_tokens,
+            self.prefill_secs,
+            self.prefill_throughput()
+        ));
+        s.push_str(&format!(
+            "decode:  {} tok in {:.3}s = {:.1} tok/s\n",
+            self.decode_tokens,
+            self.decode_secs,
+            self.decode_throughput()
+        ));
+        s.push_str(&format!(
+            "traffic: HtoD {} DtoH {}\n",
+            crate::util::fmt_bytes(self.htod_bytes as f64),
+            crate::util::fmt_bytes(self.dtoh_bytes as f64)
+        ));
+        if self.cpu_attn_seqs + self.gpu_attn_seqs > 0 {
+            s.push_str(&format!(
+                "attention split: cpu {} / gpu {} seq-steps\n",
+                self.cpu_attn_seqs, self.gpu_attn_seqs
+            ));
+        }
+        s.push_str("module                 calls   avg-rows  pad%   total-s\n");
+        for (name, m) in &self.modules {
+            s.push_str(&format!(
+                "{name:<22} {:>6} {:>9.1} {:>5.1}  {:>8.3}\n",
+                m.calls,
+                m.rows as f64 / m.calls.max(1) as f64,
+                100.0 * (1.0 - m.rows as f64 / m.padded_rows.max(1) as f64),
+                m.total_secs
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_stats_accumulate() {
+        let mut m = Metrics::new();
+        m.record_module("expert_ffn", 0.5, 100, 128);
+        m.record_module("expert_ffn", 0.5, 50, 128);
+        let s = &m.modules["expert_ffn"];
+        assert_eq!(s.calls, 2);
+        assert_eq!(s.rows, 150);
+        assert_eq!(m.avg_batch("expert_ffn"), 75.0);
+        let pad = m.padding_overhead("expert_ffn");
+        assert!((pad - (1.0 - 150.0 / 256.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut m = Metrics::new();
+        m.decode_tokens = 200;
+        m.decode_secs = 4.0;
+        assert_eq!(m.decode_throughput(), 50.0);
+        assert_eq!(m.prefill_throughput(), 0.0);
+    }
+
+    #[test]
+    fn time_module_returns_value() {
+        let mut m = Metrics::new();
+        let v = m.time_module("x", 1, 1, || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.modules["x"].calls, 1);
+    }
+
+    #[test]
+    fn report_contains_sections() {
+        let mut m = Metrics::new();
+        m.record_module("router", 0.1, 10, 16);
+        let r = m.report();
+        assert!(r.contains("router"));
+        assert!(r.contains("tok/s"));
+    }
+}

@@ -1,0 +1,749 @@
+//! Batching-strategy formulation and search (paper §4.3–4.4).
+//!
+//! A candidate strategy is the tuple the paper optimizes,
+//! `(B, b_a, b_e, ω, S_Expert, S_Params)`, subject to the memory
+//! constraints
+//!
+//! ```text
+//! S_KV-CPU(B) + S_Model                          <= m_c    (Eq. 2)
+//! S_Params + S_Expert + S_Dense
+//!   + S_KV-GPU(b_a) + S_IS(B, b_a, b_e)          <= m_g    (Eq. 3)
+//! ```
+//!
+//! Each candidate is scored by building the offloading DAG of one decode
+//! step (or one prefill wave) — Fig. 6 — and solving its critical path
+//! with the Eq.-4 DP ([`crate::dag`]). P-D disaggregation: prefill DAGs
+//! carry no HtoD KV copy; decode DAGs carry every node class.
+//!
+//! The same builders serve the baseline policies through [`Knobs`]
+//! (prefetch off = DeepSpeed-style on-demand fetch; `weight_reuse` > 1 =
+//! FlexGen-style multi-round reuse; `kv_on_gpu` = vLLM-style partial
+//! offload), so every policy is scored by the *same* cost machinery.
+
+use crate::dag::{Dag, Resource};
+use crate::hw::HwProfile;
+use crate::model::ModelDesc;
+
+/// Workload scenario: model × hardware × context shape.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub model: ModelDesc,
+    pub hw: HwProfile,
+    pub prompt_len: usize,
+    pub decode_len: usize,
+}
+
+impl Scenario {
+    pub fn new(model: ModelDesc, hw: HwProfile, prompt_len: usize, decode_len: usize) -> Self {
+        Scenario { model, hw, prompt_len, decode_len }
+    }
+
+    /// Mean context length during decode.
+    pub fn ctx_avg(&self) -> usize {
+        self.prompt_len + self.decode_len / 2
+    }
+
+    /// Final context length (sizing constraint).
+    pub fn ctx_total(&self) -> usize {
+        self.prompt_len + self.decode_len
+    }
+}
+
+/// The search-space point (paper Table 2 variables).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Strategy {
+    /// Accumulated batch: decode = sequences in flight; prefill = tokens.
+    pub b: usize,
+    /// Attention micro-batch (sequences).
+    pub b_a: usize,
+    /// Expert micro-batch cap (tokens per expert launch).
+    pub b_e: usize,
+    /// CPU-attention split ratio.
+    pub omega: f64,
+    /// Reserved GPU expert prefetch buffer (bytes).
+    pub s_expert: usize,
+    /// GPU-cached model parameters (bytes).
+    pub s_params: usize,
+}
+
+/// Policy-structure knobs: how the DAG is wired for each batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct Knobs {
+    /// Prefetch the next expert's weights during the current compute
+    /// (MoE-Gen / FlexGen-style). Off = strict fetch→compute serialization
+    /// (DeepSpeed-style on-demand).
+    pub prefetch: bool,
+    /// Weight-fetch amortization: one fetch serves `reuse` micro-batches
+    /// (FlexGen / MoE-Lightning multi-round reuse).
+    pub reuse: f64,
+    /// Keep KV on the GPU (partial offload, vLLM-style). Shrinks the
+    /// feasible batch; removes the per-step KV HtoD copy.
+    pub kv_on_gpu: bool,
+    /// Whether the CPU-attention path exists in this system.
+    pub cpu_attention: bool,
+    /// Model-based systems treat the sparse MoE layer as a dense MLP and
+    /// fetch *every* expert's weights each step (paper §3: "treat MoE
+    /// layers as dense MLP layers"). MoE-Gen fetches only activated
+    /// experts on demand after the router — the Table-9 small-batch win.
+    pub fetch_all_experts: bool,
+}
+
+impl Knobs {
+    pub fn moe_gen() -> Self {
+        Knobs { prefetch: true, reuse: 1.0, kv_on_gpu: false,
+                cpu_attention: true, fetch_all_experts: false }
+    }
+    pub fn moe_gen_gpu_only() -> Self {
+        Knobs { cpu_attention: false, ..Knobs::moe_gen() }
+    }
+    pub fn deepspeed() -> Self {
+        Knobs { prefetch: false, reuse: 1.0, kv_on_gpu: true,
+                cpu_attention: false, fetch_all_experts: true }
+    }
+    pub fn flexgen() -> Self {
+        // FlexGen offloads KV to host but attends on GPU (pays the copy).
+        Knobs { prefetch: true, reuse: 4.0, kv_on_gpu: false,
+                cpu_attention: false, fetch_all_experts: true }
+    }
+    pub fn moe_lightning() -> Self {
+        // FlexGen + CPU-assisted attention + tighter copy/compute
+        // pipelining (modeled as a higher effective reuse).
+        Knobs { cpu_attention: true, reuse: 6.0, ..Knobs::flexgen() }
+    }
+    pub fn vllm() -> Self {
+        Knobs { prefetch: true, reuse: 1.0, kv_on_gpu: true,
+                cpu_attention: false, fetch_all_experts: true }
+    }
+}
+
+/// Effective CPU attention bandwidth: the AVX-class kernel streams KV at a
+/// fraction of peak DRAM bandwidth (cache misses, GQA gather pattern,
+/// per-head strided reads). Calibrated so the ω breakeven lands in the
+/// paper's ~0.6–0.8 band on C1/C2 (Fig. 7) rather than at ω = 1.
+const CPU_ATTN_BW_EFF: f64 = 0.12;
+
+// ---------------------------------------------------------------------------
+// Memory constraints (Eqs. 2–3)
+// ---------------------------------------------------------------------------
+
+/// Host constraint (Eq. 2): full model + full KV for B sequences.
+pub fn host_feasible(scn: &Scenario, b: usize) -> bool {
+    let kv = b as f64 * scn.ctx_total() as f64 * scn.model.kv_bytes_per_token() as f64;
+    kv + scn.model.model_bytes() as f64 <= scn.hw.host_mem_bytes as f64 * 0.95
+}
+
+/// Largest B the host can hold (Eq. 2 binding).
+pub fn max_host_batch(scn: &Scenario) -> usize {
+    let free = scn.hw.host_mem_bytes as f64 * 0.95 - scn.model.model_bytes() as f64;
+    if free <= 0.0 {
+        return 0;
+    }
+    (free / (scn.ctx_total() as f64 * scn.model.kv_bytes_per_token() as f64)) as usize
+}
+
+/// GPU intermediate-state bytes `S_IS` for a strategy: the attention
+/// micro-batch's staged KV window (up-projected for MLA models — the ×71
+/// blow-up that bounds DeepSeek's `b_a`), QKV activations, and the expert
+/// micro-batch activations.
+pub fn intermediate_bytes(scn: &Scenario, s: &Strategy, decode: bool) -> f64 {
+    let m = &scn.model;
+    let d = m.dtype_bytes as f64;
+    let ctx = if decode { scn.ctx_total() } else { scn.prompt_len } as f64;
+    // Staged (and up-projected) KV window for b_a sequences, double-buffered.
+    let kv_window = 2.0
+        * s.b_a as f64
+        * ctx
+        * m.kv_bytes_token_layer() as f64
+        * m.kv_upproj_factor;
+    let tokens_a = if decode { s.b_a as f64 } else { s.b_a as f64 * scn.prompt_len as f64 };
+    let acts_a = tokens_a * (m.hidden + m.q_dim() + 2 * m.kv_dim()) as f64 * d;
+    // Prefill attention scores (b, heads, s, s) dominate at long prompts.
+    let scores = if decode {
+        0.0
+    } else {
+        s.b_a as f64 * m.num_heads as f64 * (scn.prompt_len as f64).powi(2) * d
+    };
+    let acts_e = s.b_e as f64 * (2 * m.expert_inter + m.hidden) as f64 * d;
+    kv_window + acts_a + acts_e + scores
+}
+
+/// GPU constraint (Eq. 3).
+pub fn gpu_feasible(scn: &Scenario, s: &Strategy, decode: bool) -> bool {
+    let used = s.s_params as f64
+        + s.s_expert as f64
+        + scn.model.dense_bytes_per_layer() as f64
+        + intermediate_bytes(scn, s, decode);
+    used <= scn.hw.gpu_mem_bytes as f64 * 0.92
+}
+
+// ---------------------------------------------------------------------------
+// DAG construction (Fig. 6)
+// ---------------------------------------------------------------------------
+
+/// Build the offloading DAG of `layers` consecutive decode layers for a
+/// strategy under policy `knobs`. `b_tokens` = tokens entering each sparse
+/// layer per step (decode: B sequences × 1 token).
+pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) -> Dag {
+    let m = &scn.model;
+    let hw = &scn.hw;
+    let b = s.b as f64;
+    let ctx = scn.ctx_avg() as f64;
+    let cached = (s.s_params as f64 / m.model_bytes() as f64).min(1.0);
+    let omega = if k.cpu_attention { s.omega } else { 0.0 };
+
+    let mut g = Dag::new();
+    let mut prev_gpu: Option<usize> = None;
+    let mut prev_htod: Option<usize> = None;
+    let mut prev_dtoh: Option<usize> = None;
+    let mut prev_cpu: Option<usize> = None;
+    let chain =
+        |g: &mut Dag, prev: &mut Option<usize>, id: usize| {
+            if let Some(p) = *prev {
+                g.edge(p, id);
+            }
+            *prev = Some(id);
+        };
+
+    for l in 0..layers {
+        // -- dense weight fetch (skipped fraction cached on GPU) ----------
+        let dense_bytes = m.dense_bytes_per_layer() as f64 * (1.0 - cached) / k.reuse;
+        let f_dense = g.add(format!("L{l}/fetch_dense"), hw.htod_time(dense_bytes), Resource::HtoD);
+        chain(&mut g, &mut prev_htod, f_dense);
+
+        // -- pre-attention (QKV projections) over B tokens ----------------
+        let pre = g.add(
+            format!("L{l}/pre_attn"),
+            hw.gpu_time(
+                b * m.attn_proj_flops_per_token() * 0.75,
+                dense_bytes.max(1.0),
+                s.b_a as f64,
+            ),
+            Resource::GpuCompute,
+        );
+        chain(&mut g, &mut prev_gpu, pre);
+        g.edge(f_dense, pre);
+
+        // -- KV fetch for the GPU share (full offload only) ----------------
+        let kv_bytes_gpu = if k.kv_on_gpu {
+            0.0
+        } else {
+            (1.0 - omega) * b * ctx * m.kv_bytes_token_layer() as f64
+        };
+        let f_kv = g.add(format!("L{l}/fetch_kv"), hw.htod_time(kv_bytes_gpu), Resource::HtoD);
+        chain(&mut g, &mut prev_htod, f_kv);
+        if !k.prefetch {
+            // On-demand: KV copy can only start after QKV is known.
+            g.edge(pre, f_kv);
+        }
+
+        // -- attention mechanism: GPU share -------------------------------
+        let gpu_seqs = (1.0 - omega) * b;
+        let kv_stream = gpu_seqs * ctx * m.kv_bytes_token_layer() as f64 * m.kv_upproj_factor;
+        let a_gpu = g.add(
+            format!("L{l}/attn_gpu"),
+            hw.gpu_time(gpu_seqs * m.attn_mech_flops(ctx as usize), kv_stream, gpu_seqs),
+            Resource::GpuCompute,
+        );
+        chain(&mut g, &mut prev_gpu, a_gpu);
+        g.edge(f_kv, a_gpu);
+        g.edge(pre, a_gpu);
+
+        // -- attention mechanism: CPU share (reads host KV in place) ------
+        let cpu_kv = omega * b * ctx * m.kv_bytes_token_layer() as f64;
+        let a_cpu = g.add(
+            format!("L{l}/attn_cpu"),
+            if omega > 0.0 {
+                hw.cpu_attn_time(
+                    cpu_kv / CPU_ATTN_BW_EFF,
+                    omega * b * m.attn_mech_flops(ctx as usize),
+                    m.kv_upproj_factor,
+                )
+            } else {
+                0.0
+            },
+            Resource::CpuCompute,
+        );
+        chain(&mut g, &mut prev_cpu, a_cpu); // one CPU: serialize layers
+        g.edge(pre, a_cpu);
+
+        // -- post-attention + router --------------------------------------
+        let post = g.add(
+            format!("L{l}/post_attn"),
+            hw.gpu_time(b * m.attn_proj_flops_per_token() * 0.25, 1.0, s.b_a as f64),
+            Resource::GpuCompute,
+        );
+        chain(&mut g, &mut prev_gpu, post);
+        g.edge(a_gpu, post);
+        g.edge(a_cpu, post);
+
+        // -- experts: sequential exec with (optional) prefetch ------------
+        let e_act = if k.fetch_all_experts {
+            m.num_experts
+        } else {
+            m.experts_activated(s.b).round().max(1.0) as usize
+        };
+        let tpe = (b * m.top_k as f64 / e_act as f64).max(1.0).min(s.b_e as f64);
+        let launches_per_expert =
+            ((b * m.top_k as f64 / e_act as f64) / s.b_e as f64).ceil().max(1.0);
+        let exp_bytes = m.expert_bytes() as f64 * (1.0 - cached) / k.reuse;
+        let mut last_exec = post;
+        for e in 0..e_act {
+            let f_e = g.add(format!("L{l}/fetch_e{e}"), hw.htod_time(exp_bytes), Resource::HtoD);
+            chain(&mut g, &mut prev_htod, f_e);
+            if !k.prefetch {
+                // On-demand policy: the next expert's fetch starts only
+                // after the previous expert finished executing (no
+                // compute/copy overlap — the paper's DeepSpeed behaviour).
+                g.edge(last_exec, f_e);
+            }
+            let x_e = g.add(
+                format!("L{l}/exec_e{e}"),
+                launches_per_expert
+                    * hw.gpu_time(
+                        tpe * m.expert_flops_per_token(),
+                        m.expert_bytes() as f64,
+                        tpe,
+                    ),
+                Resource::GpuCompute,
+            );
+            chain(&mut g, &mut prev_gpu, x_e);
+            g.edge(f_e, x_e);
+            g.edge(post, x_e);
+            last_exec = x_e;
+        }
+
+        // -- shared experts (dense path, weights in the dense buffer) -----
+        if m.shared_experts > 0 {
+            let sh = g.add(
+                format!("L{l}/shared"),
+                hw.gpu_time(b * m.shared_flops_per_token(), m.shared_expert_bytes() as f64, b),
+                Resource::GpuCompute,
+            );
+            chain(&mut g, &mut prev_gpu, sh);
+            g.edge(post, sh);
+        }
+
+        // -- KV writeback of this step's token ----------------------------
+        let wb = g.add(
+            format!("L{l}/kv_writeback"),
+            hw.dtoh_time(b * m.kv_bytes_token_layer() as f64),
+            Resource::DtoH,
+        );
+        chain(&mut g, &mut prev_dtoh, wb);
+        g.edge(pre, wb);
+    }
+    g
+}
+
+/// Fix-up for the on-demand (no-prefetch) policy: the placeholder edges in
+/// `build_decode_dag` are approximated by simply serializing HtoD with GPU
+/// through `simulate()`-style scoring. To avoid dangling edges we build
+/// no-prefetch DAGs through this wrapper which post-hoc strips nothing but
+/// relies on chained structure (fetch chain + exec chain + fetch→exec
+/// deps) — the DP then underestimates on-demand stalls, so on-demand
+/// policies are scored with `simulate()` (resource-exclusive greedy),
+/// which *does* capture them.
+pub fn decode_step_time(scn: &Scenario, s: &Strategy, k: &Knobs) -> f64 {
+    // Steady-state per-layer time from a 3-layer window (captures
+    // cross-layer pipelining), extrapolated to the full depth.
+    let t1 = score_dag(&build_decode_dag(scn, s, k, 1), k);
+    let t3 = score_dag(&build_decode_dag(scn, s, k, 3), k);
+    let per_layer = ((t3 - t1) / 2.0).max(1e-12);
+    let layers = scn.model.num_layers as f64;
+    // lm_head + embed epilogue.
+    let epilogue = scn.hw.gpu_time(
+        2.0 * s.b as f64 * (scn.model.hidden * scn.model.vocab) as f64,
+        (scn.model.embedding_bytes() / 2) as f64,
+        s.b as f64,
+    );
+    t1 + per_layer * (layers - 1.0) + epilogue
+}
+
+fn score_dag(g: &Dag, k: &Knobs) -> f64 {
+    if k.prefetch {
+        g.critical_path()
+    } else {
+        // On-demand fetch policies stall on resource exclusivity that the
+        // pure longest-path DP cannot see.
+        g.simulate()
+    }
+}
+
+/// Prefill wave: B accumulated *tokens* (from b_a-sequence micro-batches)
+/// flow through one layer set; no KV HtoD copy (P-D disaggregation).
+pub fn build_prefill_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) -> Dag {
+    let m = &scn.model;
+    let hw = &scn.hw;
+    let tokens = s.b as f64; // accumulated tokens
+    let sp = scn.prompt_len as f64;
+    let cached = (s.s_params as f64 / m.model_bytes() as f64).min(1.0);
+
+    let mut g = Dag::new();
+    let mut prev_gpu: Option<usize> = None;
+    let mut prev_htod: Option<usize> = None;
+    let mut prev_dtoh: Option<usize> = None;
+    let chain =
+        |g: &mut Dag, prev: &mut Option<usize>, id: usize| {
+            if let Some(p) = *prev {
+                g.edge(p, id);
+            }
+            *prev = Some(id);
+        };
+
+    for l in 0..layers {
+        let dense_bytes = m.dense_bytes_per_layer() as f64 * (1.0 - cached) / k.reuse;
+        let f_dense = g.add(format!("L{l}/fetch_dense"), hw.htod_time(dense_bytes), Resource::HtoD);
+        chain(&mut g, &mut prev_htod, f_dense);
+
+        // Projections + causal attention mechanism (quadratic in prompt).
+        let attn_flops = tokens * m.attn_proj_flops_per_token()
+            + (tokens / sp) * m.attn_mech_flops(sp as usize) * sp / 2.0;
+        let attn = g.add(
+            format!("L{l}/attention"),
+            hw.gpu_time(attn_flops, dense_bytes.max(1.0), tokens),
+            Resource::GpuCompute,
+        );
+        chain(&mut g, &mut prev_gpu, attn);
+        g.edge(f_dense, attn);
+
+        let e_act = if k.fetch_all_experts {
+            m.num_experts
+        } else {
+            m.num_experts
+                .min(m.experts_activated(s.b).round().max(1.0) as usize)
+        };
+        let tpe = (tokens * m.top_k as f64 / e_act as f64).max(1.0);
+        let launches = (tpe / s.b_e as f64).ceil().max(1.0);
+        let exp_bytes = m.expert_bytes() as f64 * (1.0 - cached) / k.reuse;
+        for e in 0..e_act {
+            let f_e = g.add(format!("L{l}/fetch_e{e}"), hw.htod_time(exp_bytes), Resource::HtoD);
+            chain(&mut g, &mut prev_htod, f_e);
+            let x_e = g.add(
+                format!("L{l}/exec_e{e}"),
+                launches
+                    * hw.gpu_time(
+                        (tpe / launches) * m.expert_flops_per_token(),
+                        m.expert_bytes() as f64,
+                        tpe / launches,
+                    ),
+                Resource::GpuCompute,
+            );
+            chain(&mut g, &mut prev_gpu, x_e);
+            g.edge(f_e, x_e);
+            g.edge(attn, x_e);
+        }
+        if m.shared_experts > 0 {
+            let sh = g.add(
+                format!("L{l}/shared"),
+                hw.gpu_time(tokens * m.shared_flops_per_token(), m.shared_expert_bytes() as f64, tokens),
+                Resource::GpuCompute,
+            );
+            chain(&mut g, &mut prev_gpu, sh);
+            g.edge(attn, sh);
+        }
+        // Prefill KV writeback (DtoH) — full offload writes prompt KV out.
+        let wb = g.add(
+            format!("L{l}/kv_writeback"),
+            hw.dtoh_time(tokens * m.kv_bytes_token_layer() as f64),
+            Resource::DtoH,
+        );
+        chain(&mut g, &mut prev_dtoh, wb);
+        g.edge(attn, wb);
+    }
+    g
+}
+
+pub fn prefill_wave_time(scn: &Scenario, s: &Strategy, k: &Knobs) -> f64 {
+    let t1 = score_dag(&build_prefill_dag(scn, s, k, 1), k);
+    let t3 = score_dag(&build_prefill_dag(scn, s, k, 3), k);
+    let per_layer = ((t3 - t1) / 2.0).max(1e-12);
+    t1 + per_layer * (scn.model.num_layers as f64 - 1.0)
+}
+
+// ---------------------------------------------------------------------------
+// Search (paper §4.4)
+// ---------------------------------------------------------------------------
+
+/// Search result: chosen strategy + predicted throughput (tokens/s).
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub strategy: Strategy,
+    pub throughput: f64,
+    pub candidates_evaluated: usize,
+}
+
+/// Enumerate candidates, apply Eqs. 2–3, score by DAG DP, keep the best
+/// (decode phase: throughput = B / step time).
+pub fn search_decode(scn: &Scenario, knobs: &Knobs) -> SearchResult {
+    let b_max = max_host_batch(scn);
+    let mut best: Option<(Strategy, f64)> = None;
+    let mut evaluated = 0;
+
+    // B grid: paper sets decode B to the host-memory max; include smaller
+    // points so constrained configs still find a feasible answer.
+    let mut b_grid: Vec<usize> = vec![b_max, b_max / 2, b_max / 4, 256, 64]
+        .into_iter()
+        .filter(|&b| b >= 1)
+        .collect();
+    b_grid.dedup();
+    // MLA-compressed caches must be up-projected (~71× for DeepSeek-V2) at
+    // attention time; doing that on the CPU — or copying projected KV DtoH —
+    // erases the bandwidth saving, so the paper pins ω = 0 for such models
+    // (§5.3 "Decoding throughput", Table 10). Gate the grid accordingly.
+    let cpu_attn_viable = knobs.cpu_attention && scn.model.kv_upproj_factor <= 4.0;
+    let omega_grid: Vec<f64> = if cpu_attn_viable {
+        (0..=10).map(|i| i as f64 / 10.0).collect()
+    } else {
+        vec![0.0]
+    };
+    let gpu_free = scn.hw.gpu_mem_bytes as f64 * 0.92
+        - scn.model.dense_bytes_per_layer() as f64;
+
+    for &b in &b_grid {
+        for ba_exp in [64usize, 256, 1024, 4096] {
+            let b_a = ba_exp.min(b.max(1));
+            for be_exp in [512usize, 2048, 8192, 32768] {
+                let b_e = be_exp;
+                for &omega in &omega_grid {
+                    for s_expert_mult in [2usize, 4] {
+                        let s_expert = s_expert_mult * scn.model.expert_bytes();
+                        // Remaining GPU space can cache params.
+                        for params_frac in [0.0, 0.5] {
+                            let s = Strategy {
+                                b,
+                                b_a,
+                                b_e,
+                                omega,
+                                s_expert,
+                                s_params: ((gpu_free
+                                    - s_expert as f64
+                                    - intermediate_bytes(
+                                        scn,
+                                        &Strategy {
+                                            b, b_a, b_e, omega,
+                                            s_expert,
+                                            s_params: 0,
+                                        },
+                                        true,
+                                    ))
+                                .max(0.0)
+                                    * params_frac)
+                                    as usize,
+                            };
+                            if !host_feasible(scn, s.b) || !gpu_feasible(scn, &s, true) {
+                                continue;
+                            }
+                            evaluated += 1;
+                            let t = decode_step_time(scn, &s, knobs);
+                            let tp = s.b as f64 / t;
+                            if best.as_ref().map(|(_, b_tp)| tp > *b_tp).unwrap_or(true) {
+                                best = Some((s, tp));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let (strategy, throughput) = best.unwrap_or((
+        Strategy { b: 1, b_a: 1, b_e: 1, omega: 0.0, s_expert: 0, s_params: 0 },
+        0.0,
+    ));
+    SearchResult { strategy, throughput, candidates_evaluated: evaluated }
+}
+
+/// Prefill-phase search: B counts accumulated tokens; ω is not used (the
+/// paper's prefill runs entirely on GPU — Table 7 note).
+pub fn search_prefill(scn: &Scenario, knobs: &Knobs) -> SearchResult {
+    let mut best: Option<(Strategy, f64)> = None;
+    let mut evaluated = 0;
+    let gpu_free = scn.hw.gpu_mem_bytes as f64 * 0.92
+        - scn.model.dense_bytes_per_layer() as f64;
+    for tokens_exp in [2048usize, 8192, 32768, 131072] {
+        let b = tokens_exp;
+        let seqs = (b / scn.prompt_len.max(1)).max(1);
+        if !host_feasible(scn, seqs) {
+            continue;
+        }
+        for b_a in [1usize, 4, 16, 64] {
+            for b_e in [2048usize, 8192, 32768] {
+                let s = Strategy {
+                    b,
+                    b_a,
+                    b_e,
+                    omega: 0.0,
+                    s_expert: 2 * scn.model.expert_bytes(),
+                    s_params: 0,
+                };
+                if !gpu_feasible(scn, &s, false) {
+                    continue;
+                }
+                let _ = gpu_free;
+                evaluated += 1;
+                let t = prefill_wave_time(scn, &s, knobs);
+                let tp = s.b as f64 / t;
+                if best.as_ref().map(|(_, b_tp)| tp > *b_tp).unwrap_or(true) {
+                    best = Some((s, tp));
+                }
+            }
+        }
+    }
+    let (strategy, throughput) = best.unwrap_or((
+        Strategy { b: 1, b_a: 1, b_e: 1, omega: 0.0, s_expert: 0, s_params: 0 },
+        0.0,
+    ));
+    SearchResult { strategy, throughput, candidates_evaluated: evaluated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw;
+    use crate::model;
+
+    fn scn_8x7b() -> Scenario {
+        Scenario::new(model::mixtral_8x7b(), hw::c2(), 512, 256)
+    }
+
+    fn scn_dsv2() -> Scenario {
+        Scenario::new(model::deepseek_v2(), hw::c2(), 512, 256)
+    }
+
+    #[test]
+    fn host_constraint_binds_batch() {
+        let scn = scn_8x7b();
+        let bmax = max_host_batch(&scn);
+        assert!(bmax > 500, "512GB host should hold thousands of seqs: {bmax}");
+        assert!(host_feasible(&scn, bmax));
+        assert!(!host_feasible(&scn, bmax * 2 + 10));
+    }
+
+    #[test]
+    fn c1_cannot_hold_8x22b() {
+        // Paper Table 10: C1 (256 GB) can't hold Mixtral-8x22B (+KV).
+        let scn = Scenario::new(model::mixtral_8x22b(), hw::c1(), 512, 256);
+        assert_eq!(max_host_batch(&scn), 0);
+    }
+
+    #[test]
+    fn gpu_constraint_rejects_oversized_windows() {
+        let scn = scn_dsv2();
+        // Huge attention micro-batch on DeepSeek: the ×71 up-projection
+        // blows past 24 GB.
+        let s = Strategy { b: 1024, b_a: 4096, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0 };
+        assert!(!gpu_feasible(&scn, &s, true));
+        let small = Strategy { b: 1024, b_a: 64, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0 };
+        assert!(gpu_feasible(&scn, &small, true));
+    }
+
+    #[test]
+    fn decode_dag_has_expected_structure() {
+        let scn = scn_8x7b();
+        let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0 };
+        let g = build_decode_dag(&scn, &s, &Knobs::moe_gen(), 1);
+        assert!(g.topo_order().is_some(), "DAG must be acyclic");
+        // 8 experts activated at B=1024 on Mixtral.
+        let fetches = g.nodes.iter().filter(|n| n.name.contains("fetch_e")).count();
+        assert_eq!(fetches, 8);
+        assert!(g.critical_path() > 0.0);
+    }
+
+    #[test]
+    fn prefetch_beats_on_demand() {
+        // Isolate the prefetch flag: identical knobs otherwise.
+        let scn = scn_8x7b();
+        let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0 };
+        let with = Knobs {
+            prefetch: true, reuse: 1.0, kv_on_gpu: true,
+            cpu_attention: false, fetch_all_experts: true,
+        };
+        let without = Knobs { prefetch: false, ..with };
+        let t_pre = decode_step_time(&scn, &s, &with);
+        let t_ond = decode_step_time(&scn, &s, &without);
+        assert!(
+            t_pre < t_ond,
+            "prefetch {t_pre} must beat on-demand {t_ond}"
+        );
+    }
+
+    #[test]
+    fn larger_batch_raises_decode_throughput() {
+        let scn = scn_8x7b();
+        let k = Knobs::moe_gen_gpu_only();
+        let mk = |b: usize| Strategy {
+            b, b_a: 256, b_e: 8192, omega: 0.0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+        };
+        let tp = |b: usize| b as f64 / decode_step_time(&scn, &mk(b), &k);
+        assert!(tp(64) < tp(512));
+        assert!(tp(512) < tp(2048));
+    }
+
+    #[test]
+    fn cpu_attention_helps_when_memory_bound() {
+        // Mixtral decode at large B is PCIe-bound on KV: ω > 0 must help
+        // (paper Fig. 7, left side of the breakeven).
+        let scn = scn_8x7b();
+        let k = Knobs::moe_gen();
+        let mk = |omega: f64| Strategy {
+            b: 2048, b_a: 256, b_e: 8192, omega,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+        };
+        let t0 = decode_step_time(&scn, &mk(0.0), &k);
+        let t6 = decode_step_time(&scn, &mk(0.6), &k);
+        assert!(t6 < t0, "omega=0.6 ({t6}) must beat omega=0 ({t0})");
+    }
+
+    #[test]
+    fn deepseek_prefers_omega_zero() {
+        // The ×71 MLA up-projection makes CPU attention unprofitable
+        // (paper Table 10: DeepSeek ω = 0).
+        let scn = scn_dsv2();
+        let res = search_decode(&scn, &Knobs::moe_gen());
+        assert_eq!(res.strategy.omega, 0.0, "{:?}", res.strategy);
+        assert!(res.throughput > 0.0);
+    }
+
+    #[test]
+    fn mixtral_search_picks_interior_omega() {
+        // Paper Table 10: Mixtral-8x7B on C2 picks ~0.6 CPU share.
+        let scn = scn_8x7b();
+        let res = search_decode(&scn, &Knobs::moe_gen());
+        assert!(
+            res.strategy.omega > 0.2 && res.strategy.omega < 1.0,
+            "expected interior omega, got {:?}",
+            res.strategy
+        );
+        assert!(res.candidates_evaluated > 50);
+    }
+
+    #[test]
+    fn search_respects_constraints() {
+        let scn = scn_dsv2();
+        for knobs in [Knobs::moe_gen(), Knobs::deepspeed(), Knobs::flexgen()] {
+            let res = search_decode(&scn, &knobs);
+            assert!(host_feasible(&scn, res.strategy.b));
+            assert!(gpu_feasible(&scn, &res.strategy, true));
+        }
+    }
+
+    #[test]
+    fn prefill_search_finds_feasible_config() {
+        let scn = scn_8x7b();
+        let res = search_prefill(&scn, &Knobs::moe_gen_gpu_only());
+        assert!(res.throughput > 0.0);
+        assert!(gpu_feasible(&scn, &res.strategy, false));
+    }
+
+    #[test]
+    fn prefill_dag_acyclic_and_positive() {
+        let scn = scn_dsv2();
+        let s = Strategy { b: 8192, b_a: 8, b_e: 8192, omega: 0.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0 };
+        let g = build_prefill_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 2);
+        assert!(g.topo_order().is_some());
+        assert!(g.critical_path() > 0.0);
+    }
+}

@@ -1,0 +1,467 @@
+//! Render every evaluation table and figure of the paper, with the
+//! paper's published numbers alongside our simulator's (marked `sim`).
+//!
+//! Absolute values are not expected to match — the substrate is a
+//! calibrated analytic model, not the authors' A5000 testbed — but the
+//! *shape* must hold: who wins, by roughly what factor, where crossovers
+//! fall (DESIGN.md §4). EXPERIMENTS.md records the comparison.
+
+use super::{
+    cost_table, dataset_hours, decode_tp, fetch_traffic_bytes, prefill_tp, table1_row,
+    MoeGenVariant, System,
+};
+use crate::sched::{self, decode_step_time, Knobs, Scenario, Strategy};
+use crate::workload;
+use crate::{hw, model};
+
+fn fmt_tp(v: Option<f64>) -> String {
+    match v {
+        None => "Fail".into(),
+        Some(x) if x < 0.1 => "<0.1".into(),
+        Some(x) if x < 10.0 => format!("{x:.1}"),
+        Some(x) => format!("{x:.0}"),
+    }
+}
+
+/// Table 1: offloading throughput breakdown, DeepSeek-V2 236B on C2.
+pub fn table1() -> String {
+    let scn = Scenario::new(model::deepseek_v2(), hw::c2(), 512, 256);
+    let mut s = String::from(
+        "Table 1 — DeepSeek-V2 236B on A5000/512GB (prompt 512, decode 256)\n\
+         paper numbers in [brackets]\n\
+         system           | prefill bsz/util/tp            | decode bsz/util/tp\n",
+    );
+    let paper: &[(&str, System, [&str; 6])] = &[
+        ("DeepSpeed", System::DeepSpeed, ["153", "52%", "109", "0.3", "0.1%", "1"]),
+        ("FlexGen*", System::FlexGen, ["115", "49%", "77", "0.3", "0.1%", "1"]),
+        ("MoE-Lightning*", System::MoeLightning, ["134", "50%", "98", "0.4", "0.1%", "1"]),
+        ("MoE-GEN", System::MoeGen(MoeGenVariant::G), ["8192", "100%", "841", "75", "41%", "31"]),
+    ];
+    for (name, sys, p) in paper {
+        let pre = table1_row(&scn, *sys, true);
+        let dec = table1_row(&scn, *sys, false);
+        let f = |r: Option<(f64, f64, f64)>| match r {
+            Some((b, u, t)) => format!("{b:.1}/{:.1}%/{t:.0}", u * 100.0),
+            None => "Fail".into(),
+        };
+        s.push_str(&format!(
+            "{name:<16} | sim {:<22} [{}/{}/{}] | sim {:<18} [{}/{}/{}]\n",
+            f(pre), p[0], p[1], p[2], f(dec), p[3], p[4], p[5]
+        ));
+    }
+    s
+}
+
+/// Figure 3: (left) achieved FLOPs vs tokens/expert; (right) GPU idle %.
+pub fn fig3() -> String {
+    let p = hw::c2();
+    let m = model::mixtral_8x7b();
+    let mut s = String::from(
+        "Figure 3 — expert-module saturation on A5000 (Mixtral-8x7B expert)\n\
+         tokens/expert | achieved TFLOPs (util) | GPU idle % (prefetch overlap)\n",
+    );
+    for e in 0..=14u32 {
+        let t = (1u64 << e) as f64;
+        let util = p.gpu_utilization(t);
+        let idle = p.expert_idle_fraction(&m, t);
+        s.push_str(&format!(
+            "{:>12} | {:>7.1} ({:>5.1}%)       | {:>5.1}%\n",
+            1u64 << e,
+            p.gpu_peak_flops * util / 1e12,
+            util * 100.0,
+            idle * 100.0
+        ));
+    }
+    s.push_str("paper: saturation needs >=2^10 tokens; zero idle needs >=2^11.\n");
+    s
+}
+
+/// Figure 4: fetch traffic vs dataset size, full vs partial KV offload.
+pub fn fig4() -> String {
+    let scn = Scenario::new(model::mixtral_8x7b(), hw::c2(), 512, 256);
+    let mut s = String::from(
+        "Figure 4 — HtoD fetch traffic over a dataset (Mixtral-8x7B, C2)\n\
+         dataset seqs | full KV offload | partial (KV on GPU) | ratio\n",
+    );
+    for &n in &[16usize, 64, 256, 1024, 4096, 16384, 65536] {
+        let full = fetch_traffic_bytes(&scn, n, true);
+        let part = fetch_traffic_bytes(&scn, n, false);
+        s.push_str(&format!(
+            "{:>12} | {:>15} | {:>19} | {:>5.1}x\n",
+            n,
+            crate::util::fmt_bytes(full),
+            crate::util::fmt_bytes(part),
+            part / full
+        ));
+    }
+    s.push_str("paper: full offload saves up to ~20x at dataset scale; partial wins only tiny sets.\n");
+    s
+}
+
+/// Table 4: time to complete offline datasets, Mixtral-8x22B on C2.
+pub fn table4() -> String {
+    let scn = Scenario::new(model::mixtral_8x22b(), hw::c2(), 512, 256);
+    let datasets = workload::all_offline();
+    let paper: &[(&str, System, [&str; 3])] = &[
+        ("Llama.cpp", System::LlamaCpp, ["149", "374", "6423"]),
+        ("vLLM", System::Vllm, ["112", "303", "5205"]),
+        ("DeepSpeed", System::DeepSpeed, ["23", "115", "1710"]),
+        ("FlexGen*", System::FlexGen, ["25", "122", "5132"]),
+        ("MoE-Lightning*", System::MoeLightning, ["23", "68", "5123"]),
+        ("MoE-Gen(G)", System::MoeGen(MoeGenVariant::G), ["18", "12", "124"]),
+        ("MoE-Gen(H)", System::MoeGen(MoeGenVariant::H), ["18", "8", "82"]),
+    ];
+    let mut s = String::from(
+        "Table 4 — hours to complete dataset, Mixtral-8x22B on C2 (incl. load)\n\
+         system           |   MMLU 116K (paper) |  GSM8K 8.5K (paper) | ChatArena 36K (paper)\n",
+    );
+    for (name, sys, p) in paper {
+        let mut row = format!("{name:<16} |");
+        for (i, ds) in datasets.iter().enumerate() {
+            let h = dataset_hours(&scn, *sys, ds);
+            row.push_str(&format!(
+                " {:>10}hr ({:>5}) |",
+                h.map(|x| format!("{x:.1}")).unwrap_or_else(|| "Fail".into()),
+                p[i]
+            ));
+        }
+        row.pop();
+        s.push_str(&row);
+        s.push('\n');
+    }
+    s
+}
+
+/// Table 5: server cost/power comparison, Mixtral-8x22B.
+pub fn table5() -> String {
+    let scn = Scenario::new(model::mixtral_8x22b(), hw::c2(), 512, 256);
+    let (vllm, mg) = cost_table(&scn);
+    let mut s = String::from("Table 5 — cost/power to serve Mixtral-8x22B (paper: 140 tok/s @22.3K$/1780W vs 143 tok/s @4.8K$/380W)\n");
+    for c in [&vllm, &mg] {
+        let watts: f64 = c.parts.iter().map(|p| p.1).sum();
+        let cost: f64 = c.parts.iter().map(|p| p.2).sum();
+        s.push_str(&format!("{:<18} ", c.label));
+        for (n, w, k) in &c.parts {
+            s.push_str(&format!("[{n}: {w:.0}W ${k:.1}K] "));
+        }
+        s.push_str(&format!(
+            "=> {watts:.0}W ${cost:.1}K @ {:.0} tok/s\n",
+            c.throughput
+        ));
+    }
+    s
+}
+
+/// Table 6: decoding throughput, 4 models × decode {256, 1024}, C2.
+pub fn table6() -> String {
+    let models = [
+        ("Mixtral 8x7B", model::mixtral_8x7b()),
+        ("Mixtral 8x22B", model::mixtral_8x22b()),
+        ("DeepSeek-V2 236B", model::deepseek_v2()),
+        ("DeepSeek-R1 671B", model::deepseek_r1()),
+    ];
+    let paper: &[(&str, [&str; 8])] = &[
+        ("Llama.cpp", ["4", "3", "2", "0.8", "1", "0.3", "0.9", "<0.1"]),
+        ("vLLM", ["31", "14", "2", "1", "0.8", "<0.1", "Fail", "Fail"]),
+        ("DeepSpeed", ["27", "26", "4", "3", "1", "1", "Fail", "Fail"]),
+        ("FlexGen*", ["33", "30", "5", "4", "1", "1", "Fail", "Fail"]),
+        ("MoE-Lightning*", ["89", "78", "9", "6", "1", "1", "Fail", "Fail"]),
+        ("MoE-GEN(G)", ["195", "93", "54", "27", "31", "16", "17", "9"]),
+        ("MoE-Gen(H)", ["469", "283", "91", "57", "31", "16", "17", "9"]),
+    ];
+    let mut s = String::from(
+        "Table 6 — decode throughput (tok/s) on C2, prompt 512; sim (paper)\n\
+         system           |",
+    );
+    for (n, _) in &models {
+        s.push_str(&format!(" {n} 256 | {n} 1024 |"));
+    }
+    s.pop();
+    s.push('\n');
+    for (i, sys) in System::table_order().iter().enumerate() {
+        let mut row = format!("{:<16} |", paper[i].0);
+        for (j, (_, m)) in models.iter().enumerate() {
+            for (k, dl) in [256usize, 1024].iter().enumerate() {
+                let scn = Scenario::new(m.clone(), hw::c2(), 512, *dl);
+                let tp = decode_tp(&scn, *sys);
+                row.push_str(&format!(
+                    " {:>8} ({:>4}) |",
+                    fmt_tp(tp),
+                    paper[i].1[j * 2 + k]
+                ));
+            }
+        }
+        row.pop();
+        s.push_str(&row);
+        s.push('\n');
+    }
+    s
+}
+
+/// Table 7: prefill throughput, 4 models, C2, prompt 512.
+pub fn table7() -> String {
+    let models = [
+        ("Mixtral 8x7B", model::mixtral_8x7b()),
+        ("Mixtral 8x22B", model::mixtral_8x22b()),
+        ("DeepSeekV2 236B", model::deepseek_v2()),
+        ("DeepSeekR1 671B", model::deepseek_r1()),
+    ];
+    let paper: &[(&str, System, [&str; 4])] = &[
+        ("Llama.cpp", System::LlamaCpp, ["328", "110", "23", "6"]),
+        ("vLLM", System::Vllm, ["1347", "147", "97", "Fail"]),
+        ("DeepSpeed", System::DeepSpeed, ["2621", "710", "109", "Fail"]),
+        ("FlexGen*", System::FlexGen, ["2199", "655", "77", "Fail"]),
+        ("MoE-Lightning*", System::MoeLightning, ["2237", "702", "98", "Fail"]),
+        ("MoE-GEN", System::MoeGen(MoeGenVariant::G), ["2790", "907", "787", "204"]),
+    ];
+    let mut s = String::from(
+        "Table 7 — prefill throughput (tok/s) on C2, prompt 512; sim (paper)\n\
+         system           |",
+    );
+    for (n, _) in &models {
+        s.push_str(&format!(" {n:>16} |"));
+    }
+    s.pop();
+    s.push('\n');
+    for (name, sys, p) in paper {
+        let mut row = format!("{name:<16} |");
+        for (j, (_, m)) in models.iter().enumerate() {
+            let scn = Scenario::new(m.clone(), hw::c2(), 512, 1);
+            let tp = prefill_tp(&scn, *sys);
+            row.push_str(&format!(" {:>8} ({:>5}) |", fmt_tp(tp), p[j]));
+        }
+        row.pop();
+        s.push_str(&row);
+        s.push('\n');
+    }
+    s
+}
+
+/// Table 8: long-context generation on C1, Mixtral-8x7B.
+pub fn table8() -> String {
+    // (prompt_k, decode_k, batch, paper P/D per system)
+    let configs = [(16usize, 8usize, 50usize), (8, 16, 50), (8, 4, 100), (4, 2, 200)];
+    let paper: &[(&str, System, [[&str; 2]; 4])] = &[
+        ("vLLM", System::Vllm,
+         [["1182", "1"], ["1329", "1"], ["1325", "1"], ["1359", "1"]]),
+        ("DeepSpeed", System::DeepSpeed,
+         [["2617", "1"], ["2621", "1"], ["2621", "2"], ["2653", "3"]]),
+        ("FlexGen*", System::FlexGen,
+         [["2173", "2"], ["2187", "2"], ["2187", "3"], ["2192", "5"]]),
+        ("MoE-Lightning*", System::MoeLightning,
+         [["2218", "2"], ["2221", "2"], ["2221", "4"], ["2232", "6"]]),
+        ("MoE-GEN (H)", System::MoeGen(MoeGenVariant::H),
+         [["2662", "13"], ["2684", "13"], ["2686", "20"], ["2667", "50"]]),
+    ];
+    let mut s = String::from(
+        "Table 8 — long-context P/D throughput (tok/s), Mixtral-8x7B on C1; sim (paper)\n\
+         system           | 16K-8K B=50 | 8K-16K B=50 | 8K-4K B=100 | 4K-2K B=200\n",
+    );
+    for (name, sys, p) in paper {
+        let mut row = format!("{name:<16} |");
+        for (j, (pk, dk, _b)) in configs.iter().enumerate() {
+            let scn = Scenario::new(
+                model::mixtral_8x7b(), hw::c1(), pk * 1024, dk * 1024,
+            );
+            let ptp = prefill_tp(&scn, *sys);
+            let dtp = decode_tp(&scn, *sys);
+            row.push_str(&format!(
+                " {}/{} ({}/{}) |",
+                fmt_tp(ptp), fmt_tp(dtp), p[j][0], p[j][1]
+            ));
+        }
+        row.pop();
+        s.push_str(&row);
+        s.push('\n');
+    }
+    s
+}
+
+/// Decode throughput at a *forced* batch size (Table 9's insufficient-
+/// batch study).
+pub fn decode_tp_at_batch(scn: &Scenario, sys: System, b: usize) -> Option<f64> {
+    if !super::feasible(scn, sys) {
+        return None;
+    }
+    let knobs = match sys {
+        System::LlamaCpp => return decode_tp(scn, sys).map(|t| t.min(b as f64 * 2.0)),
+        System::Vllm => Knobs::vllm(),
+        System::DeepSpeed => Knobs::deepspeed(),
+        System::FlexGen => Knobs::flexgen(),
+        System::MoeLightning => Knobs::moe_lightning(),
+        System::MoeGen(MoeGenVariant::G) => Knobs::moe_gen_gpu_only(),
+        System::MoeGen(MoeGenVariant::H) => Knobs::moe_gen(),
+    };
+    let st = Strategy {
+        b, b_a: b, b_e: 8192, omega: 0.0,
+        s_expert: 2 * scn.model.expert_bytes(),
+        s_params: 0,
+    };
+    Some(b as f64 / decode_step_time(scn, &st, &knobs))
+}
+
+/// Table 9: decoding throughput at small forced batches (1 and 32), C1.
+pub fn table9() -> String {
+    let models = [
+        ("DeepSeek-V2-Lite", model::deepseek_v2_lite()),
+        ("Mixtral-8x7B", model::mixtral_8x7b()),
+    ];
+    let paper: &[(&str, System, [&str; 4])] = &[
+        ("vLLM", System::Vllm, ["2.1", "28", "0.5", "5"]),
+        ("Llama.cpp", System::LlamaCpp, ["0.4", "30", "0.2", "1.1"]),
+        ("DeepSpeed", System::DeepSpeed, ["1.3", "41", "0.4", "7.7"]),
+        ("FlexGen*", System::FlexGen, ["0.9", "35", "0.3", "5.2"]),
+        ("MoE-Lightning(p)*", System::MoeLightning, ["1.0", "37", "0.4", "6.1"]),
+        ("MoE-GEN(G)", System::MoeGen(MoeGenVariant::G), ["5.0", "35", "1.0", "33.6"]),
+    ];
+    let mut s = String::from(
+        "Table 9 — decode throughput at forced small batch (prompt 512, decode 32, C1); sim (paper)\n\
+         system             | DSv2-Lite b=1 | DSv2-Lite b=32 | 8x7B b=1 | 8x7B b=32\n",
+    );
+    for (name, sys, p) in paper {
+        let mut row = format!("{name:<18} |");
+        let mut col = 0;
+        for (_, m) in &models {
+            for b in [1usize, 32] {
+                let scn = Scenario::new(m.clone(), hw::c1(), 512, 32);
+                let tp = decode_tp_at_batch(&scn, *sys, b);
+                row.push_str(&format!(" {:>6} ({:>4}) |", fmt_tp(tp), p[col]));
+                col += 1;
+            }
+        }
+        row.pop();
+        s.push_str(&row);
+        s.push('\n');
+    }
+    s
+}
+
+/// Table 10: chosen attention split ratio ω (CPU:GPU) per testbed.
+pub fn table10() -> String {
+    let models = [
+        ("Mixtral-8x7B", model::mixtral_8x7b()),
+        ("Mixtral-8x22B", model::mixtral_8x22b()),
+        ("DeepSeekV2-236B", model::deepseek_v2()),
+    ];
+    let testbeds = [("C1", hw::c1()), ("C2", hw::c2()), ("C3", hw::c3())];
+    let paper = [["6:4", "6:4", "3:7"], ["N/A", "7:3", "2:8"], ["N/A", "0:10", "0:10"]];
+    let mut s = String::from(
+        "Table 10 — attention split CPU:GPU (prompt 512, decode 256); sim (paper)\n\
+         model            |     C1      |     C2      |     C3\n",
+    );
+    for (i, (name, m)) in models.iter().enumerate() {
+        let mut row = format!("{name:<16} |");
+        for (j, (_, h)) in testbeds.iter().enumerate() {
+            let scn = Scenario::new(m.clone(), h.clone(), 512, 256);
+            let cell = if sched::max_host_batch(&scn) == 0 {
+                "N/A".to_string()
+            } else {
+                let r = sched::search_decode(&scn, &Knobs::moe_gen());
+                let cpu = (r.strategy.omega * 10.0).round() as usize;
+                format!("{}:{}", cpu, 10 - cpu)
+            };
+            row.push_str(&format!(" {:>4} ({:>4}) |", cell, paper[i][j]));
+        }
+        row.pop();
+        s.push_str(&row);
+        s.push('\n');
+    }
+    s
+}
+
+/// Figure 7: decode throughput vs ω (Mixtral-8x7B, C1, B=3640).
+pub fn fig7() -> String {
+    let scn = Scenario::new(model::mixtral_8x7b(), hw::c1(), 256, 32);
+    let b = sched::max_host_batch(&scn).min(3640);
+    let mut s = format!(
+        "Figure 7 — decode throughput vs ω (Mixtral-8x7B, C1, B={b}, prompt 256, decode 32)\n\
+         omega | tok/s\n"
+    );
+    let mut best = (0.0f64, 0.0f64);
+    for i in 0..=10 {
+        let omega = i as f64 / 10.0;
+        let st = Strategy {
+            b, b_a: 256, b_e: 8192, omega,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+        };
+        let tp = b as f64 / decode_step_time(&scn, &st, &Knobs::moe_gen());
+        if tp > best.1 {
+            best = (omega, tp);
+        }
+        s.push_str(&format!("  {omega:.1} | {tp:.0}\n"));
+    }
+    s.push_str(&format!(
+        "sim breakeven ω ≈ {:.1}; paper reports ~0.6 with degradation past it.\n",
+        best.0
+    ));
+    s
+}
+
+/// Render one table/figure (or all) by id.
+pub fn render(which: &str) -> String {
+    let all: Vec<(&str, fn() -> String)> = vec![
+        ("1", table1),
+        ("fig3", fig3),
+        ("fig4", fig4),
+        ("4", table4),
+        ("5", table5),
+        ("6", table6),
+        ("7", table7),
+        ("8", table8),
+        ("9", table9),
+        ("10", table10),
+        ("fig7", fig7),
+    ];
+    if which == "all" {
+        let mut s = String::new();
+        for (_, f) in &all {
+            s.push_str(&f());
+            s.push('\n');
+        }
+        s
+    } else {
+        all.iter()
+            .find(|(id, _)| *id == which)
+            .map(|(_, f)| f())
+            .unwrap_or_else(|| format!("unknown table '{which}'\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_table_renders_nonempty() {
+        for id in ["1", "4", "5", "6", "7", "8", "9", "10", "fig3", "fig4", "fig7"] {
+            let out = render(id);
+            assert!(out.len() > 80, "table {id} too short:\n{out}");
+            assert!(!out.contains("NaN"), "table {id} contains NaN:\n{out}");
+        }
+    }
+
+    #[test]
+    fn render_all_concatenates() {
+        let all = render("all");
+        for marker in ["Table 1", "Table 4", "Table 5", "Table 6", "Table 7",
+                       "Table 8", "Table 9", "Table 10", "Figure 3", "Figure 4",
+                       "Figure 7"] {
+            assert!(all.contains(marker), "missing {marker}");
+        }
+    }
+
+    #[test]
+    fn unknown_table_is_graceful() {
+        assert!(render("99").contains("unknown"));
+    }
+
+    #[test]
+    fn table9_small_batch_moe_gen_wins_batch_one() {
+        // Paper Table 9: at batch 1 MoE-Gen's on-demand activated-expert
+        // fetch beats baselines that stream every expert.
+        let scn = Scenario::new(model::mixtral_8x7b(), hw::c1(), 512, 32);
+        let mg = decode_tp_at_batch(&scn, System::MoeGen(MoeGenVariant::G), 1).unwrap();
+        let ds = decode_tp_at_batch(&scn, System::DeepSpeed, 1).unwrap();
+        assert!(mg > 1.5 * ds, "MoE-Gen {mg} vs DeepSpeed {ds} at b=1");
+    }
+}

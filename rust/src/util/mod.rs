@@ -1,0 +1,99 @@
+//! Small self-contained substrates: JSON parsing, deterministic RNG,
+//! property-testing helpers, timing.
+//!
+//! The build environment has no network registry access, so these are
+//! implemented in-repo rather than pulled from crates.io (serde_json,
+//! proptest, criterion equivalents).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch returning seconds.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Smallest bucket >= `n` from a sorted bucket list (the padding contract
+/// shared with `python/compile/engine_ref.py::pick_bucket`).
+pub fn pick_bucket(n: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().find(|&b| n <= b)
+}
+
+/// Round a float to bf16 precision and back (round-to-nearest-even on the
+/// top 16 bits), the paper's "BF16-consistency" contract for CPU attention:
+/// FP32 accumulation with BF16 rounding after each dot-product.
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // round-to-nearest-even on bit 16
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1}{}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_picks_smallest_geq() {
+        let b = [8, 32, 128];
+        assert_eq!(pick_bucket(1, &b), Some(8));
+        assert_eq!(pick_bucket(8, &b), Some(8));
+        assert_eq!(pick_bucket(9, &b), Some(32));
+        assert_eq!(pick_bucket(128, &b), Some(128));
+        assert_eq!(pick_bucket(129, &b), None);
+    }
+
+    #[test]
+    fn bf16_round_idempotent() {
+        for x in [0.0f32, 1.0, -1.5, 3.14159, 1e-8, 1e8, -2.7e-3] {
+            let r = round_bf16(x);
+            assert_eq!(round_bf16(r), r, "x={x}");
+            // Rounded value is within one bf16 ulp.
+            let rel = ((r - x) / x.abs().max(1e-30)).abs();
+            assert!(x == 0.0 || rel < 1.0 / 128.0, "x={x} r={r}");
+        }
+    }
+
+    #[test]
+    fn bf16_round_matches_truncation_bracket() {
+        // bf16(x) lies between the two adjacent f32-truncated values.
+        let x = 1.23456789f32;
+        let r = round_bf16(x);
+        let lo = f32::from_bits(x.to_bits() & 0xFFFF_0000);
+        let hi = f32::from_bits((x.to_bits() & 0xFFFF_0000).wrapping_add(0x1_0000));
+        assert!(r == lo || r == hi);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512.0), "512.0B");
+        assert_eq!(fmt_bytes(2048.0), "2.0KB");
+        assert_eq!(fmt_bytes(3.5 * 1024.0 * 1024.0 * 1024.0), "3.5GB");
+    }
+}

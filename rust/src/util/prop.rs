@@ -1,0 +1,54 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `prop_check` runs a property over `n` seeded random cases and reports
+//! the failing seed on panic, so failures are reproducible:
+//!
+//! ```ignore
+//! prop_check(100, |rng| {
+//!     let xs = rng.normal_vec(rng.range(1, 64));
+//!     assert!(invariant(&xs));
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `f` over `cases` deterministic seeds; on panic, re-raise with the
+/// seed that failed embedded in the message.
+pub fn prop_check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, f: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case seed={seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check(50, |rng| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case seed=")]
+    fn reports_failing_seed() {
+        prop_check(50, |rng| {
+            assert!(rng.below(10) < 9, "hit the 1-in-10 case");
+        });
+    }
+}

@@ -1,0 +1,103 @@
+//! Synthetic workloads matching the paper's evaluation datasets (§5.1).
+//!
+//! Only (sequence count, prompt length, decode length) enter the batching
+//! and scheduling problem, so each dataset is represented by its length
+//! statistics (paper Table 4 header) plus a deterministic token-level
+//! generator for live runs on the tiny model.
+
+use crate::util::rng::Rng;
+
+/// A dataset's shape statistics (paper Table 4 / §5.1).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub num_sequences: usize,
+    pub prompt_len: usize,
+    pub decode_len: usize,
+}
+
+/// MMLU: 116K multiple-choice prompts, answer = first token (prefill-only).
+pub fn mmlu() -> DatasetSpec {
+    DatasetSpec { name: "MMLU", num_sequences: 116_000, prompt_len: 512, decode_len: 1 }
+}
+
+/// GSM8K: 8.5K math problems, multi-step answers.
+pub fn gsm8k() -> DatasetSpec {
+    DatasetSpec { name: "GSM8K", num_sequences: 8_500, prompt_len: 512, decode_len: 256 }
+}
+
+/// ChatBot-Arena: 36K multi-round chats, long outputs.
+pub fn chatbot_arena() -> DatasetSpec {
+    DatasetSpec { name: "ChatBotArena", num_sequences: 36_000, prompt_len: 256, decode_len: 512 }
+}
+
+/// LongBench-style long-context tasks (paper Table 8 columns).
+pub fn longbench(prompt_k: usize, decode_k: usize, batch: usize) -> DatasetSpec {
+    DatasetSpec {
+        name: "LongBench",
+        num_sequences: batch,
+        prompt_len: prompt_k * 1024,
+        decode_len: decode_k * 1024,
+    }
+}
+
+pub fn all_offline() -> Vec<DatasetSpec> {
+    vec![mmlu(), gsm8k(), chatbot_arena()]
+}
+
+/// Token-level workload for the live tiny-model engine: `n` prompts with
+/// lengths log-normally spread around `mean_len`, vocabulary `[1, vocab)`.
+/// Deterministic in `seed`.
+pub fn generate_prompts(
+    n: usize,
+    mean_len: usize,
+    max_len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.length(mean_len, 1, max_len);
+            (0..len).map(|_| rng.range(1, vocab - 1) as i32).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_specs_match_paper() {
+        assert_eq!(mmlu().num_sequences, 116_000);
+        assert_eq!(mmlu().decode_len, 1);
+        assert_eq!(gsm8k().prompt_len, 512);
+        assert_eq!(chatbot_arena().decode_len, 512);
+        assert_eq!(longbench(16, 8, 50).prompt_len, 16384);
+    }
+
+    #[test]
+    fn prompts_deterministic_and_bounded() {
+        let a = generate_prompts(20, 16, 64, 512, 7);
+        let b = generate_prompts(20, 16, 64, 512, 7);
+        assert_eq!(a, b);
+        for p in &a {
+            assert!(!p.is_empty() && p.len() <= 64);
+            assert!(p.iter().all(|&t| t >= 1 && t < 511));
+        }
+        let c = generate_prompts(20, 16, 64, 512, 8);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn lengths_spread_around_mean() {
+        let prompts = generate_prompts(500, 24, 64, 512, 1);
+        let mean: f64 =
+            prompts.iter().map(|p| p.len() as f64).sum::<f64>() / prompts.len() as f64;
+        assert!((mean - 24.0).abs() < 6.0, "mean={mean}");
+        let distinct: std::collections::HashSet<usize> =
+            prompts.iter().map(|p| p.len()).collect();
+        assert!(distinct.len() > 5, "length distribution collapsed");
+    }
+}

@@ -1,0 +1,169 @@
+//! Integration: the live rust engine end-to-end against the python golden
+//! trace, plus cross-policy agreement (greedy decode must be invariant to
+//! batching policy) and the ω-split numerical-consistency contract.
+
+use xla::FromRawBytes;
+
+use moe_gen::config::EngineConfig;
+use moe_gen::engine::Engine;
+
+fn art_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine(omega: f64) -> Engine {
+    let cfg = EngineConfig {
+        artifacts_dir: art_dir(),
+        omega,
+        ..EngineConfig::default()
+    };
+    Engine::new(cfg).expect("artifacts missing — run `make artifacts`")
+}
+
+/// Golden trace from artifacts/golden.npz: (prompts, steps-tokens matrix).
+fn golden_trace() -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+    let g: std::collections::HashMap<String, xla::Literal> =
+        xla::Literal::read_npz(art_dir().join("golden.npz"), &())
+            .expect("golden.npz missing")
+            .into_iter()
+            .collect();
+    let lens: Vec<i32> = g["trace.lens"].to_vec().unwrap();
+    let pmat: Vec<i32> = g["trace.prompts"].to_vec().unwrap();
+    let maxlen = pmat.len() / lens.len();
+    let prompts: Vec<Vec<i32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| pmat[i * maxlen..i * maxlen + l as usize].to_vec())
+        .collect();
+    let tmat: Vec<i32> = g["trace.tokens"].to_vec().unwrap();
+    let steps = tmat.len() / lens.len();
+    let tokens: Vec<Vec<i32>> = (0..lens.len())
+        .map(|i| tmat[i * steps..(i + 1) * steps].to_vec())
+        .collect();
+    (prompts, tokens)
+}
+
+#[test]
+fn engine_reproduces_python_golden_trace() {
+    // The core e2e correctness claim: the rust coordinator, running the
+    // same XLA module programs with the same padding and combine rules,
+    // generates the exact token stream the python reference engine did.
+    let (prompts, want) = golden_trace();
+    let steps = want[0].len();
+    let mut eng = engine(0.0);
+    let got = eng.generate(&prompts, steps).unwrap();
+    assert_eq!(got, want, "token streams diverged from golden trace");
+}
+
+#[test]
+fn batch_composition_does_not_change_tokens() {
+    // A sequence decoded alongside different companions must produce the
+    // same greedy tokens (padding isolation across the whole stack).
+    let (prompts, _) = golden_trace();
+    let mut eng = engine(0.0);
+    let solo = eng.generate(&prompts[..1], 6).unwrap();
+    let all = eng.generate(&prompts, 6).unwrap();
+    assert_eq!(solo[0], all[0]);
+}
+
+#[test]
+fn omega_split_token_agreement() {
+    // The paper's numerical-consistency contract (App. B): running part of
+    // the batch's attention on the CPU kernel (bf16-consistent) must not
+    // change greedy tokens on a well-separated vocab.
+    let (prompts, _) = golden_trace();
+    let steps = 8;
+    let mut g0 = engine(0.0);
+    let t0 = g0.generate(&prompts, steps).unwrap();
+    let mut g5 = engine(0.5);
+    let t5 = g5.generate(&prompts, steps).unwrap();
+    let mut g10 = engine(1.0);
+    let t10 = g10.generate(&prompts, steps).unwrap();
+    assert_eq!(t0, t5, "omega=0.5 diverged");
+    assert_eq!(t0, t10, "omega=1.0 diverged");
+    // And the CPU path was actually used.
+    assert!(g5.metrics.cpu_attn_seqs > 0);
+    assert!(g5.metrics.gpu_attn_seqs > 0);
+    assert!(g10.metrics.gpu_attn_seqs == 0);
+}
+
+#[test]
+fn metrics_account_tokens_and_traffic() {
+    let (prompts, _) = golden_trace();
+    let mut eng = engine(0.0);
+    let steps = 4;
+    let _ = eng.generate(&prompts, steps).unwrap();
+    let m = &eng.metrics;
+    let prompt_tokens: usize = prompts.iter().map(|p| p.len()).sum();
+    assert_eq!(m.prefill_tokens as usize, prompt_tokens);
+    assert_eq!(m.decode_tokens as usize, prompts.len() * (steps - 1));
+    assert!(m.htod_bytes > 0, "weight/activation traffic not metered");
+    assert!(m.dtoh_bytes > 0, "KV writeback traffic not metered");
+    // Module-based batching signature: experts saw accumulated tokens.
+    assert!(m.modules.contains_key("expert_ffn"));
+    assert!(m.avg_batch("expert_ffn") > 0.0);
+}
+
+#[test]
+fn expert_batch_grows_with_accumulated_batch() {
+    // Module-based batching's defining effect (paper Table 1): the average
+    // per-expert batch grows with the accumulated batch B while
+    // model-based batching (small chunks) keeps it tiny.
+    let (prompts, _) = golden_trace();
+    // Module-based over all 4 sequences at once:
+    let mut big = engine(0.0);
+    let _ = big.generate(&prompts, 6).unwrap();
+    let avg_big = big.metrics.avg_batch("expert_ffn");
+    // "Model-based" here: max_batch=1 forces per-sequence forward passes.
+    let mut small = Engine::new(EngineConfig {
+        artifacts_dir: art_dir(),
+        max_batch: 1,
+        ..EngineConfig::default()
+    })
+    .unwrap();
+    let _ = small.generate(&prompts, 6).unwrap();
+    let avg_small = small.metrics.avg_batch("expert_ffn");
+    assert!(
+        avg_big > 1.5 * avg_small,
+        "accumulation must raise expert batch: {avg_big} vs {avg_small}"
+    );
+    // ... while producing identical tokens (already checked above).
+}
+
+#[test]
+fn kv_memory_accounted_and_released() {
+    let (prompts, _) = golden_trace();
+    let mut eng = engine(0.0);
+    let used_before = eng.host_pool.used();
+    let _ = eng.generate(&prompts, 3).unwrap();
+    assert_eq!(
+        eng.host_pool.used(),
+        used_before,
+        "KV host memory must be released after a batch completes"
+    );
+    assert!(eng.host_pool.peak() > used_before, "KV was never charged");
+}
+
+#[test]
+fn rejects_oversized_and_empty_prompts() {
+    let mut eng = engine(0.0);
+    let too_long = vec![vec![1i32; 65]];
+    assert!(eng.generate(&too_long, 2).is_err());
+    let empty = vec![vec![]];
+    assert!(eng.generate(&empty, 2).is_err());
+}
+
+#[test]
+fn profile_modules_covers_buckets() {
+    let mut eng = engine(0.0);
+    let prof = eng.profile_modules().unwrap();
+    let experts: Vec<usize> = prof
+        .iter()
+        .filter(|(n, _, _)| n == "expert_ffn")
+        .map(|&(_, b, _)| b)
+        .collect();
+    assert_eq!(experts, vec![8, 32, 128, 512]);
+    for (_, _, secs) in &prof {
+        assert!(*secs > 0.0);
+    }
+}

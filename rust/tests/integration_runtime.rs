@@ -1,0 +1,219 @@
+//! Integration: AOT HLO artifacts execute correctly on the PJRT runtime.
+//!
+//! Every module's golden input/output pair (produced by python in
+//! `artifacts/golden.npz` with `jax.jit` on the same XLA CPU backend) must
+//! reproduce through the rust loader bit-for-bit (tolerance covers only
+//! run-to-run nondeterminism, which XLA CPU does not exhibit).
+//!
+//! Requires `make artifacts`; tests panic with a clear message otherwise.
+
+use std::collections::HashMap;
+
+use xla::FromRawBytes;
+
+use moe_gen::runtime::{to_f32, to_i32, Artifacts, Runtime};
+
+fn art_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_golden() -> HashMap<String, xla::Literal> {
+    let path = art_dir().join("golden.npz");
+    xla::Literal::read_npz(&path, &())
+        .expect("golden.npz missing — run `make artifacts`")
+        .into_iter()
+        .collect()
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(art_dir()).expect("artifacts missing — run `make artifacts`")
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        let d = (a - b).abs();
+        assert!(
+            d <= tol * (1.0 + b.abs()),
+            "{what}[{i}]: {a} vs {b} (|d|={d})"
+        );
+    }
+}
+
+/// Run one module's golden pair through the rust runtime.
+fn check_module(rt: &Runtime, golden: &HashMap<String, xla::Literal>, name: &str) {
+    // Collect g.<name>.in0..inN in order.
+    let mut args: Vec<&xla::Literal> = Vec::new();
+    for i in 0.. {
+        match golden.get(&format!("g.{name}.in{i}")) {
+            Some(l) => args.push(l),
+            None => break,
+        }
+    }
+    assert!(!args.is_empty(), "no golden inputs for {name}");
+    // Goldens were generated at each module's smallest bucket; find the
+    // variant whose parameter shapes match the golden input shapes.
+    let spec = {
+        let arts = &rt.artifacts;
+        let shapes: Vec<Vec<usize>> = args
+            .iter()
+            .map(|l| {
+                l.array_shape()
+                    .unwrap()
+                    .dims()
+                    .iter()
+                    .map(|&d| d as usize)
+                    .collect()
+            })
+            .collect();
+        arts.buckets(name)
+            .iter()
+            .map(|&b| arts.variant(name, b).unwrap().clone())
+            .find(|s| s.param_shapes == shapes)
+            .unwrap_or_else(|| panic!("{name}: no variant matches golden shapes {shapes:?}"))
+    };
+    let outs = rt.execute(&spec, &args).unwrap_or_else(|e| panic!("{name}: {e}"));
+    for (i, out) in outs.iter().enumerate() {
+        let want = &golden[&format!("g.{name}.out{i}")];
+        match out.ty().unwrap() {
+            xla::ElementType::S32 => {
+                assert_eq!(
+                    to_i32(out).unwrap(),
+                    to_i32(want).unwrap(),
+                    "{name} out{i} (i32)"
+                );
+            }
+            _ => {
+                assert_close(
+                    &to_f32(out).unwrap(),
+                    &to_f32(want).unwrap(),
+                    1e-5,
+                    &format!("{name} out{i}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn manifest_loads_with_all_modules() {
+    let arts = Artifacts::load(art_dir()).unwrap();
+    let mut names = arts.module_names();
+    names.sort();
+    for m in [
+        "attn_decode", "attn_prefill", "embed", "expert_ffn", "lm_head",
+        "post_attention", "pre_attention", "router",
+    ] {
+        assert!(names.contains(&m), "manifest missing {m}");
+    }
+    assert_eq!(arts.cfg.hidden_size, 64);
+    // Bucket resolution: smallest >= rows.
+    assert_eq!(arts.variant("expert_ffn", 1).unwrap().bucket, 8);
+    assert_eq!(arts.variant("expert_ffn", 9).unwrap().bucket, 32);
+    assert!(arts.variant("expert_ffn", 100_000).is_err());
+}
+
+#[test]
+fn weights_load_and_have_expected_sizes() {
+    let rt = runtime();
+    let c = rt.cfg().clone();
+    let emb = rt.weights.get("emb").unwrap();
+    assert_eq!(emb.element_count(), c.vocab_size * c.hidden_size);
+    for layer in 0..c.num_layers {
+        for e in 0..c.num_experts {
+            let wg = rt.weights.get(&format!("l{layer}.e{e}.wg")).unwrap();
+            assert_eq!(wg.element_count(), c.hidden_size * c.ffn_inter);
+        }
+    }
+    assert!(rt.weights.total_bytes > 0);
+}
+
+#[test]
+fn golden_embed() {
+    check_module(&runtime(), &load_golden(), "embed");
+}
+
+#[test]
+fn golden_pre_attention() {
+    check_module(&runtime(), &load_golden(), "pre_attention");
+}
+
+#[test]
+fn golden_attn_prefill() {
+    check_module(&runtime(), &load_golden(), "attn_prefill");
+}
+
+#[test]
+fn golden_attn_decode() {
+    check_module(&runtime(), &load_golden(), "attn_decode");
+}
+
+#[test]
+fn golden_post_attention() {
+    check_module(&runtime(), &load_golden(), "post_attention");
+}
+
+#[test]
+fn golden_router() {
+    check_module(&runtime(), &load_golden(), "router");
+}
+
+#[test]
+fn golden_expert_ffn() {
+    check_module(&runtime(), &load_golden(), "expert_ffn");
+}
+
+#[test]
+fn golden_lm_head() {
+    check_module(&runtime(), &load_golden(), "lm_head");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let rt = runtime();
+    let spec = rt.artifacts.variant("expert_ffn", 8).unwrap().clone();
+    let _ = rt.executable(&spec).unwrap();
+    let t_first = *rt.compile_secs.borrow();
+    let _ = rt.executable(&spec).unwrap();
+    assert_eq!(
+        *rt.compile_secs.borrow(),
+        t_first,
+        "second lookup must hit the cache"
+    );
+}
+
+#[test]
+fn warmup_compiles_all_buckets() {
+    let rt = runtime();
+    rt.warmup(&["expert_ffn", "attn_decode"]).unwrap();
+    assert!(*rt.compile_secs.borrow() > 0.0);
+}
+
+#[test]
+fn expert_ffn_all_buckets_row_consistent() {
+    // The same token row must produce the same output at every bucket
+    // size (padding must not leak into valid rows).
+    let rt = runtime();
+    let c = rt.cfg().clone();
+    let h = c.hidden_size;
+    let row: Vec<f32> = (0..h).map(|i| (i as f32 * 0.17).sin()).collect();
+    let wg = rt.weights.get("l0.e0.wg").unwrap();
+    let wu = rt.weights.get("l0.e0.wu").unwrap();
+    let wd = rt.weights.get("l0.e0.wd").unwrap();
+    let mut ref_out: Option<Vec<f32>> = None;
+    for &b in &c.expert_buckets {
+        let mut x = vec![0.0f32; b * h];
+        x[..h].copy_from_slice(&row);
+        let x_l = moe_gen::runtime::lit_f32(&x, &[b, h]).unwrap();
+        let spec = rt.artifacts.variant("expert_ffn", b).unwrap().clone();
+        let outs = rt
+            .execute(&spec, &[wg.as_ref(), wu.as_ref(), wd.as_ref(), &x_l])
+            .unwrap();
+        let y = to_f32(&outs[0]).unwrap()[..h].to_vec();
+        if let Some(r) = &ref_out {
+            assert_close(&y, r, 1e-5, &format!("bucket {b}"));
+        } else {
+            ref_out = Some(y);
+        }
+    }
+}

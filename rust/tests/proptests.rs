@@ -1,0 +1,210 @@
+//! Cross-module property tests: invariants that must hold over randomized
+//! scenarios, wiring the coordinator's pieces together (the per-module
+//! properties live next to each module in rust/src/*/mod.rs).
+
+use moe_gen::batching::{gather_rows, group_by_expert, micro_batches, scatter_add};
+use moe_gen::dag::{Dag, Resource};
+use moe_gen::hw;
+use moe_gen::model;
+use moe_gen::sched::{self, Knobs, Scenario, Strategy};
+use moe_gen::util::prop::prop_check;
+use moe_gen::util::rng::Rng;
+
+fn random_scenario(rng: &mut Rng) -> Scenario {
+    let m = match rng.below(5) {
+        0 => model::mixtral_8x7b(),
+        1 => model::mixtral_8x22b(),
+        2 => model::deepseek_v2(),
+        3 => model::deepseek_v2_lite(),
+        _ => model::deepseek_r1(),
+    };
+    let h = match rng.below(3) {
+        0 => hw::c1(),
+        1 => hw::c2(),
+        _ => hw::c3(),
+    };
+    let prompt = [128usize, 256, 512, 1024][rng.below(4)];
+    let decode = [32usize, 256, 1024][rng.below(3)];
+    Scenario::new(m, h, prompt, decode)
+}
+
+#[test]
+fn prop_search_results_always_feasible() {
+    // Whatever the search returns must satisfy Eqs. 2–3.
+    prop_check(30, |rng| {
+        let scn = random_scenario(rng);
+        if sched::max_host_batch(&scn) == 0 {
+            return;
+        }
+        for knobs in [Knobs::moe_gen(), Knobs::moe_gen_gpu_only()] {
+            let r = sched::search_decode(&scn, &knobs);
+            assert!(sched::host_feasible(&scn, r.strategy.b), "{:?}", r.strategy);
+            assert!(sched::gpu_feasible(&scn, &r.strategy, true), "{:?}", r.strategy);
+            assert!(r.throughput.is_finite() && r.throughput >= 0.0);
+            assert!(r.strategy.omega >= 0.0 && r.strategy.omega <= 1.0);
+        }
+    });
+}
+
+#[test]
+fn prop_decode_time_monotone_in_batch_work() {
+    // A strictly larger accumulated batch cannot take *less* total work:
+    // step time is non-decreasing in B (throughput may still rise).
+    prop_check(20, |rng| {
+        let scn = random_scenario(rng);
+        let bmax = sched::max_host_batch(&scn);
+        if bmax < 8 {
+            return;
+        }
+        let b1 = rng.range(1, bmax / 2);
+        let b2 = rng.range(b1, bmax);
+        let mk = |b: usize| Strategy {
+            b, b_a: 64, b_e: 8192, omega: 0.0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+        };
+        let t1 = sched::decode_step_time(&scn, &mk(b1), &Knobs::moe_gen_gpu_only());
+        let t2 = sched::decode_step_time(&scn, &mk(b2), &Knobs::moe_gen_gpu_only());
+        assert!(
+            t2 >= t1 * 0.999,
+            "step time must not shrink with batch: B={b1}->{t1}, B={b2}->{t2}"
+        );
+    });
+}
+
+#[test]
+fn prop_weight_reuse_never_hurts() {
+    prop_check(20, |rng| {
+        let scn = random_scenario(rng);
+        if sched::max_host_batch(&scn) == 0 {
+            return;
+        }
+        let s = Strategy {
+            b: sched::max_host_batch(&scn).min(1024).max(1),
+            b_a: 64, b_e: 8192, omega: 0.0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+        };
+        let base = Knobs::moe_gen_gpu_only();
+        let reused = Knobs { reuse: 4.0, ..base };
+        let t_base = sched::decode_step_time(&scn, &s, &base);
+        let t_reuse = sched::decode_step_time(&scn, &s, &reused);
+        assert!(t_reuse <= t_base * 1.001, "reuse must not slow: {t_reuse} vs {t_base}");
+    });
+}
+
+#[test]
+fn prop_sim_traffic_monotone_in_dataset() {
+    prop_check(20, |rng| {
+        let scn = random_scenario(rng);
+        if sched::max_host_batch(&scn) == 0 {
+            return;
+        }
+        let n1 = rng.range(1, 10_000);
+        let n2 = rng.range(n1, 20_000);
+        for full in [true, false] {
+            let t1 = moe_gen::sim::fetch_traffic_bytes(&scn, n1, full);
+            let t2 = moe_gen::sim::fetch_traffic_bytes(&scn, n2, full);
+            assert!(t2 >= t1, "traffic must grow with dataset ({full}): {t1} vs {t2}");
+        }
+    });
+}
+
+#[test]
+fn prop_moe_combine_idempotent_under_micro_batching() {
+    // Splitting an accumulated batch into arbitrary expert micro-batches
+    // must not change the combined output (the b_e knob is throughput-
+    // only). This is the algebraic heart of module-based batching.
+    prop_check(60, |rng| {
+        let n = rng.range(4, 120);
+        let k = 2;
+        let e = 8;
+        let dim = 16;
+        let x = rng.normal_vec(n * dim);
+        let mut idx = Vec::new();
+        let mut w = Vec::new();
+        for _ in 0..n {
+            let a = rng.below(e);
+            let mut b = rng.below(e);
+            if b == a {
+                b = (b + 1) % e;
+            }
+            idx.extend([a as i32, b as i32]);
+            let wa = rng.f64() as f32 + 0.1;
+            w.extend([wa, 1.0 - wa]);
+        }
+        let run = |chunk: usize| {
+            let mut acc = vec![0.0f32; n * dim];
+            for g in group_by_expert(&idx, &w, n, k, e) {
+                for r in micro_batches(g.rows.len(), chunk) {
+                    let rows = &g.rows[r.clone()];
+                    let ws = &g.weights[r];
+                    let bucket = rows.len().next_power_of_two();
+                    let gathered = gather_rows(&x, dim, rows, bucket);
+                    scatter_add(&mut acc, dim, rows, ws, &gathered);
+                }
+            }
+            acc
+        };
+        let a = run(usize::MAX);
+        let b = run(rng.range(1, 16));
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-5, "{u} vs {v}");
+        }
+    });
+}
+
+#[test]
+fn prop_dag_edges_scale_linearly_with_layers() {
+    // Builder sanity: nodes/edges per layer constant, no cross-layer leaks.
+    prop_check(15, |rng| {
+        let scn = random_scenario(rng);
+        if sched::max_host_batch(&scn) == 0 {
+            return;
+        }
+        let s = Strategy {
+            b: 256, b_a: 64, b_e: 8192, omega: 0.3,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+        };
+        let g1 = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen(), 1);
+        let g2 = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen(), 2);
+        let g3 = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen(), 3);
+        assert_eq!(g2.len() - g1.len(), g3.len() - g2.len());
+        assert!(g3.topo_order().is_some());
+        // Critical path grows with depth.
+        assert!(g3.critical_path() > g2.critical_path());
+        assert!(g2.critical_path() > g1.critical_path());
+    });
+}
+
+#[test]
+fn prop_dag_simulate_upper_bounds_dp_everywhere() {
+    // Resource-aware greedy schedule can never beat the DP lower bound.
+    prop_check(50, |rng| {
+        let n = rng.range(2, 60);
+        let mut g = Dag::new();
+        for i in 0..n {
+            let r = [Resource::GpuCompute, Resource::CpuCompute, Resource::HtoD, Resource::DtoH]
+                [rng.below(4)];
+            g.add(format!("n{i}"), rng.f64() * 5.0, r);
+        }
+        for v in 1..n {
+            for _ in 0..rng.below(4) {
+                g.edge(rng.below(v), v);
+            }
+        }
+        assert!(g.critical_path() <= g.simulate() + 1e-9);
+    });
+}
+
+#[test]
+fn prop_feasibility_is_monotone_in_host_memory() {
+    // Adding host memory can only help feasibility / max batch.
+    prop_check(20, |rng| {
+        let base = random_scenario(rng);
+        let mut bigger = base.clone();
+        bigger.hw.host_mem_bytes = base.hw.host_mem_bytes * 2;
+        assert!(
+            sched::max_host_batch(&bigger) >= sched::max_host_batch(&base),
+            "more host memory must not shrink the feasible batch"
+        );
+    });
+}
