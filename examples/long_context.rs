@@ -19,8 +19,8 @@ fn main() -> Result<()> {
     let cfg = EngineConfig { artifacts_dir: "artifacts".into(), ..EngineConfig::default() };
     let mut eng = Engine::new(cfg)?;
     eng.warmup()?;
-    let cap = eng.rt.cfg().max_context;
-    let pre = eng.rt.cfg().prefill_seq;
+    let cap = eng.model_cfg().max_context;
+    let pre = eng.model_cfg().prefill_seq;
     let steps = cap - pre; // decode to capacity
 
     for &(n, plen) in &[(32usize, 16usize), (32, 60)] {

@@ -21,10 +21,10 @@ fn main() -> Result<()> {
     eng.warmup()?;
     println!(
         "loaded tiny MoE: {} layers, {} experts (top-{}), {} weights",
-        eng.rt.cfg().num_layers,
-        eng.rt.cfg().num_experts,
-        eng.rt.cfg().top_k,
-        moe_gen::util::fmt_bytes(eng.rt.weights.total_bytes as f64),
+        eng.model_cfg().num_layers,
+        eng.model_cfg().num_experts,
+        eng.model_cfg().top_k,
+        moe_gen::util::fmt_bytes(eng.weights_total_bytes() as f64),
     );
 
     // 2. A batch of prompts (synthetic token ids; vocabulary is 512).

@@ -44,12 +44,12 @@ fn main() -> Result<()> {
         }
     }
 
-    println!("\n=== live module profile (tiny MoE on PJRT-CPU) ===\n");
     let cfg = EngineConfig { artifacts_dir: "artifacts".into(), ..EngineConfig::default() };
     match Engine::new(cfg) {
         Ok(mut eng) => {
+            println!("\n=== live pipeline-stage profile (tiny MoE, {} backend) ===\n", eng.backend_name());
             eng.warmup()?;
-            println!("{:<14} {:>8} {:>14}", "module", "bucket", "latency (ms)");
+            println!("{:<14} {:>8} {:>14}", "stage", "bucket", "latency (ms)");
             for (name, bucket, secs) in eng.profile_modules()? {
                 println!("{name:<14} {bucket:>8} {:>14.3}", secs * 1e3);
             }

@@ -129,7 +129,9 @@ fn main() {
         });
     }
 
-    // -- live module exec (PJRT), if artifacts are present ----------------
+    // -- live module exec (PJRT), if compiled in and artifacts present ----
+    #[cfg(feature = "pjrt")]
+    {
     if std::path::Path::new("artifacts/manifest.json").exists() {
         use moe_gen::runtime::{lit_f32, Runtime};
         let rt = Runtime::new("artifacts").expect("artifacts");
@@ -164,4 +166,7 @@ fn main() {
     } else {
         println!("(pjrt module benches skipped: run `make artifacts`)");
     }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt module benches skipped: build with --features pjrt)");
 }

@@ -1,13 +1,18 @@
 //! `cargo bench --bench paper_tables` — regenerates every table and
 //! figure of the paper's evaluation (the workload is the simulator +
-//! strategy search itself) and reports how long each takes.
+//! strategy search itself), reports how long each takes, and writes a
+//! machine-readable `BENCH_paper_tables.json` at the repo root so later
+//! changes have a throughput trajectory to compare against.
 //!
 //! Criterion is unavailable offline; this is a hand-rolled harness with
 //! the same contract: timed, repeatable, machine-parseable lines.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
-use moe_gen::sim::tables;
+use moe_gen::sched::Scenario;
+use moe_gen::sim::{self, tables, System};
+use moe_gen::{hw, model};
 
 fn bench_table(id: &str) -> (String, f64) {
     // Warm-up + 3 timed repetitions; report the minimum (least noise).
@@ -22,15 +27,88 @@ fn bench_table(id: &str) -> (String, f64) {
     (out, best)
 }
 
+fn json_num(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x:.3}"),
+        _ => "null".to_string(),
+    }
+}
+
+/// Modeled throughput (tokens/s) per system for every paper scenario —
+/// the perf-trajectory payload.
+fn scenarios_json() -> String {
+    let models = [
+        model::mixtral_8x7b(),
+        model::mixtral_8x22b(),
+        model::deepseek_v2(),
+        model::deepseek_r1(),
+    ];
+    let testbeds = [hw::c1(), hw::c2(), hw::c3()];
+    let mut s = String::from("[");
+    let mut first_scn = true;
+    for m in &models {
+        for h in &testbeds {
+            let scn = Scenario::new(m.clone(), h.clone(), 512, 256);
+            if !first_scn {
+                s.push(',');
+            }
+            first_scn = false;
+            let _ = write!(
+                s,
+                "\n    {{\"model\": \"{}\", \"testbed\": \"{}\", \"prompt\": 512, \"decode\": 256, \"systems\": {{",
+                m.name,
+                h.name.split(' ').next().unwrap_or(h.name.as_str())
+            );
+            let mut first_sys = true;
+            for sys in System::table_order() {
+                if !first_sys {
+                    s.push_str(", ");
+                }
+                first_sys = false;
+                let _ = write!(
+                    s,
+                    "\"{}\": {{\"decode_tps\": {}, \"prefill_tps\": {}}}",
+                    sys.name(),
+                    json_num(sim::decode_tp(&scn, sys)),
+                    json_num(sim::prefill_tp(&scn, sys))
+                );
+            }
+            s.push_str("}}");
+        }
+    }
+    s.push_str("\n  ]");
+    s
+}
+
 fn main() {
     let ids = ["1", "fig3", "fig4", "4", "5", "6", "7", "8", "9", "10", "fig7"];
     println!("== paper_tables bench: regenerating all evaluation tables ==\n");
     let mut total = 0.0;
-    for id in ids {
+    let mut render_ms = String::from("{");
+    for (i, id) in ids.iter().enumerate() {
         let (out, secs) = bench_table(id);
         total += secs;
         println!("{out}");
         println!("bench: table_{id:<5} {:>10.3} ms\n", secs * 1e3);
+        if i > 0 {
+            render_ms.push_str(", ");
+        }
+        let _ = write!(render_ms, "\"{id}\": {:.3}", secs * 1e3);
     }
+    render_ms.push('}');
     println!("bench: all_tables  {:>10.3} ms", total * 1e3);
+
+    let json = format!(
+        "{{\n  \"bench\": \"paper_tables\",\n  \"units\": {{\"decode_tps\": \"tokens/s\", \
+         \"prefill_tps\": \"tokens/s\", \"table_render_ms\": \"ms\"}},\n  \
+         \"scenarios\": {},\n  \"table_render_ms\": {render_ms},\n  \
+         \"all_tables_ms\": {:.3}\n}}\n",
+        scenarios_json(),
+        total * 1e3
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_paper_tables.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

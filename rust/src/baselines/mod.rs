@@ -60,7 +60,7 @@ impl ContinuousRunner {
         prompts: &[Vec<i32>],
         steps: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        let c = eng.rt.cfg().clone();
+        let c = eng.model_cfg().clone();
         let kv = KvCache::new(
             c.num_layers,
             c.num_kv_heads,

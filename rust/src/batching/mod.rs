@@ -13,6 +13,12 @@
 //! The gather/scatter pair is the module-batching boundary itself, so its
 //! invariants are heavily tested: grouping is a partition of the (token,
 //! rank) assignment set, and scatter is the exact adjoint of gather.
+//!
+//! These are the slice-level kernels; the typed layer lives in
+//! [`crate::exec::tensor`] — `HostTensor::gather`/`scatter_add` wrap them,
+//! and the host-memory token accumulator the paper's Fig. 2 describes is
+//! [`crate::exec::tensor::Accumulator`] (owned per module boundary by the
+//! pipeline, drained at the strategy's micro-batch sizes).
 
 /// Tokens routed to one expert: parallel arrays of flat-token rows and
 /// their routing weights (one entry per (token, rank) assignment).
@@ -91,50 +97,6 @@ pub fn add_assign(acc: &mut [f32], y: &[f32]) {
     assert!(y.len() >= acc.len());
     for (a, b) in acc.iter_mut().zip(y) {
         *a += b;
-    }
-}
-
-/// Host-memory token accumulator: collects attention micro-batch outputs
-/// until the accumulated batch reaches the target `B`, then releases one
-/// large batch for the sparse-MoE phase (paper Fig. 2, right).
-#[derive(Debug)]
-pub struct Accumulator {
-    dim: usize,
-    target_rows: usize,
-    data: Vec<f32>,
-    rows: usize,
-}
-
-impl Accumulator {
-    pub fn new(dim: usize, target_rows: usize) -> Self {
-        Accumulator {
-            dim,
-            target_rows,
-            data: Vec::with_capacity(dim * target_rows),
-            rows: 0,
-        }
-    }
-
-    /// Append a micro-batch of `rows × dim` values.
-    pub fn push(&mut self, x: &[f32]) {
-        assert_eq!(x.len() % self.dim, 0);
-        self.data.extend_from_slice(x);
-        self.rows += x.len() / self.dim;
-    }
-
-    pub fn rows(&self) -> usize {
-        self.rows
-    }
-
-    pub fn is_ready(&self) -> bool {
-        self.rows >= self.target_rows
-    }
-
-    /// Take the accumulated batch (resets the accumulator).
-    pub fn take(&mut self) -> (Vec<f32>, usize) {
-        let rows = self.rows;
-        self.rows = 0;
-        (std::mem::take(&mut self.data), rows)
     }
 }
 
@@ -277,17 +239,46 @@ mod tests {
     }
 
     #[test]
-    fn accumulator_reaches_target_and_resets() {
-        let mut acc = Accumulator::new(4, 10);
-        acc.push(&vec![1.0; 4 * 6]);
-        assert!(!acc.is_ready());
-        acc.push(&vec![2.0; 4 * 5]);
-        assert!(acc.is_ready());
-        let (data, rows) = acc.take();
-        assert_eq!(rows, 11);
-        assert_eq!(data.len(), 44);
-        assert_eq!(acc.rows(), 0);
-        assert!(!acc.is_ready());
+    fn prop_gather_expert_scatter_roundtrips_token_order() {
+        // The module-batching boundary end-to-end: for an arbitrary
+        // routing permutation, gather → (order-sensitive) expert compute →
+        // scatter_add must deliver every token's contribution back to the
+        // token's own row — i.e. the result is independent of how tokens
+        // were shuffled into expert groups. The "expert" scales each row
+        // by (expert id + 1), so any row/order mix-up changes the answer.
+        prop_check(100, |rng| {
+            let n = rng.range(1, 60);
+            let k = rng.range(1, 3);
+            let e = rng.range(k, 9);
+            let dim = rng.range(1, 8);
+            let (idx, w) = random_routing(rng, n, k, e);
+            let x = rng.normal_vec(n * dim);
+            let mut acc = vec![0.0f32; n * dim];
+            for g in group_by_expert(&idx, &w, n, k, e) {
+                let bucket = g.rows.len().next_power_of_two();
+                let mut y = gather_rows(&x, dim, &g.rows, bucket);
+                for v in y.iter_mut() {
+                    *v *= (g.expert + 1) as f32;
+                }
+                scatter_add(&mut acc, dim, &g.rows, &g.weights, &y);
+            }
+            // Oracle: per-token weighted sum over its own (expert, weight)
+            // assignments, in rank order.
+            for t in 0..n {
+                let mut scale = 0.0f32;
+                for r in 0..k {
+                    scale += w[t * k + r] * (idx[t * k + r] + 1) as f32;
+                }
+                for d in 0..dim {
+                    let got = acc[t * dim + d];
+                    let want = scale * x[t * dim + d];
+                    assert!(
+                        (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                        "t={t} d={d}: {got} vs {want}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

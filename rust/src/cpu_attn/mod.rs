@@ -17,6 +17,7 @@
 //! Parallelism: sequences × query-heads are sharded across a scoped thread
 //! pool (std threads; rayon unavailable offline).
 
+use crate::exec::tensor::HostTensor;
 use crate::util::round_bf16;
 
 /// Numerics mode for the CPU kernel.
@@ -92,6 +93,26 @@ pub fn decode_attention(
             });
         }
     });
+}
+
+/// Typed wrapper over [`decode_attention`]: returns the batch's contexts
+/// as one `[b, num_heads*head_dim]` tensor in sequence order (what the
+/// pipeline's attention accumulator consumes).
+pub fn decode_attention_t(
+    seqs: &[SeqAttn<'_>],
+    num_heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    numerics: Numerics,
+    threads: usize,
+) -> HostTensor {
+    let mut out = vec![Vec::new(); seqs.len()];
+    decode_attention(seqs, num_heads, kv_heads, head_dim, numerics, &mut out, threads);
+    let mut t = HostTensor::empty(num_heads * head_dim);
+    for o in &out {
+        t.push_rows(o);
+    }
+    t
 }
 
 /// Attention for one sequence, all query heads.
@@ -249,6 +270,31 @@ mod tests {
         decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut a, 1);
         decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut b, 6);
         assert_eq!(a, b, "thread count must not change results");
+    }
+
+    #[test]
+    fn typed_wrapper_matches_vec_api() {
+        let mut rng = Rng::new(9);
+        let (nh, nkv, hd) = (4, 2, 8);
+        let data: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, usize)> = (0..5)
+            .map(|_| {
+                let len = rng.range(1, 32);
+                let (q, k, v) = rand_seq(&mut rng, len, nh, nkv, hd);
+                (q, k, v, len)
+            })
+            .collect();
+        let seqs: Vec<SeqAttn<'_>> = data
+            .iter()
+            .map(|(q, k, v, len)| SeqAttn { q, k, v, len: *len })
+            .collect();
+        let mut out = vec![Vec::new(); seqs.len()];
+        decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut out, 1);
+        let t = decode_attention_t(&seqs, nh, nkv, hd, Numerics::F32, 1);
+        assert_eq!(t.rows, seqs.len());
+        assert_eq!(t.dim, nh * hd);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(t.row(i), &o[..]);
+        }
     }
 
     #[test]

@@ -1,52 +1,46 @@
-//! The MoE-Gen engine: live module-based-batching inference over the AOT
-//! PJRT runtime (paper §4.2, Fig. 5).
+//! The MoE-Gen engine — a thin facade over the strategy-driven module
+//! pipeline (paper §4.2, Fig. 5).
+//!
+//! Everything batching-related lives in [`crate::exec`]: the engine owns
+//! the long-lived resources (execution backend, metrics, transfer
+//! engines, host memory pool) and a [`Plan`] — the executable projection
+//! of a searched [`crate::sched::Strategy`]. Each phase call constructs a
+//! [`Pipeline`] from that plan and drives it with an [`ExecCtx`] borrowing
+//! the engine's resources; no batch sizes are hard-coded here.
 //!
 //! Request path (python-free): prompts → prefill pipeline → greedy decode
-//! loop. Each phase launches *modules*, not the model:
+//! loop, per-module micro-batching per the plan:
 //!
-//! * attention runs in micro-batches of `b_a` sequences (static-shape
-//!   buckets, padded),
+//! * attention runs in micro-batches of `b_a` sequences,
 //! * hidden states accumulate in host memory across micro-batches,
-//! * the router runs over the full accumulated batch, and each expert
-//!   executes once over all tokens routed to it (gather → kernel →
-//!   weighted scatter) — the per-expert batch the paper's Table 1 reports,
-//! * the KV-cache lives fully in host memory ([`crate::kv::KvCache`]); the
-//!   accelerator path stages padded windows through the HtoD engine thread
+//! * each expert executes over all tokens routed to it, micro-batched at
+//!   `b_e` (gather → kernel → weighted scatter),
+//! * the KV-cache lives fully in host memory ([`crate::kv::KvCache`]);
+//!   the device path stages padded windows through the HtoD engine thread
 //!   while the ω fraction of sequences runs attention on the rust CPU
-//!   kernel reading the cache in place (paper §4.2 "CPU for
-//!   self-attention").
+//!   kernel reading the cache in place.
 //!
-//! Numerical contract: with ω = 0 this engine reproduces the golden trace
-//! from `python/compile/engine_ref.py` token-for-token (same XLA programs,
-//! same padding rules, same combine order — see integration_engine.rs).
+//! Numerical contract: with ω = 0 and the `pjrt` backend this engine
+//! reproduces the golden trace from `python/compile/engine_ref.py`
+//! token-for-token (see tests/integration_engine.rs); with any backend,
+//! greedy tokens are invariant to the plan (tests/integration_pipeline.rs).
 
-use std::rc::Rc;
 use std::sync::{Arc, RwLock};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::batching::{add_assign, gather_rows, group_by_expert, micro_batches, scatter_add};
 use crate::config::EngineConfig;
-use crate::cpu_attn::{decode_attention, Numerics, SeqAttn};
+use crate::exec::{ExecCtx, Pipeline, Plan};
 use crate::kv::KvCache;
-use crate::memory::{MemoryPool, TransferEngine};
+use crate::memory::{MemoryPool, TransferEngine, TransferHandle};
 use crate::metrics::Metrics;
-use crate::runtime::{lit_f32, lit_i32, to_f32, to_i32, Runtime};
-use crate::util::pick_bucket;
+use crate::runtime::{default_backend, Backend, RtConfig};
+use crate::sched::Strategy;
 
-/// Decoding state for a batch of sequences.
-pub struct BatchState {
-    pub kv: Arc<RwLock<KvCache>>,
-    /// KV slot per sequence, in batch order.
-    pub slots: Vec<usize>,
-    /// Tokens in cache per sequence (prompt + generated so far).
-    pub lens: Vec<usize>,
-    /// Most recent token per sequence (input to the next decode step).
-    pub last: Vec<i32>,
-}
+pub use crate::exec::BatchState;
 
 pub struct Engine {
-    pub rt: Runtime,
+    backend: Box<dyn Backend>,
     pub cfg: EngineConfig,
     pub metrics: Metrics,
     pub htod: TransferEngine,
@@ -54,12 +48,22 @@ pub struct Engine {
     pub host_pool: MemoryPool,
     cpu_threads: usize,
     /// Outstanding prefetched weight transfers (drained at phase ends).
-    pending_fetch: Vec<crate::memory::TransferHandle>,
+    pending_fetch: Vec<TransferHandle>,
+    plan: Plan,
 }
 
 impl Engine {
+    /// Engine over the default backend: the PJRT artifact runtime when
+    /// compiled in (`--features pjrt`) and `cfg.artifacts_dir` holds a
+    /// manifest, the hermetic reference backend otherwise.
     pub fn new(cfg: EngineConfig) -> Result<Self> {
-        let rt = Runtime::new(&cfg.artifacts_dir)?;
+        let backend = default_backend(&cfg.artifacts_dir)?;
+        Self::with_backend(cfg, backend)
+    }
+
+    /// Engine over an explicit backend (tests inject the reference
+    /// backend directly).
+    pub fn with_backend(cfg: EngineConfig, backend: Box<dyn Backend>) -> Result<Self> {
         let htod = TransferEngine::new("HtoD", cfg.throttle_htod);
         let dtoh = TransferEngine::new("DtoH", None);
         // Host pool sized generously; KV caches charge against it.
@@ -67,307 +71,83 @@ impl Engine {
         let cpu_threads = std::thread::available_parallelism()
             .map(|n| n.get().saturating_sub(2).max(1))
             .unwrap_or(1);
+        let plan = Plan::from_strategy(
+            &Strategy {
+                b: cfg.max_batch,
+                b_a: cfg.attn_micro,
+                b_e: *backend.cfg().expert_buckets.last().unwrap(),
+                omega: cfg.omega,
+                s_expert: 0,
+                s_params: 0,
+            },
+            None,
+            backend.cfg(),
+            cfg.max_batch,
+        );
         Ok(Engine {
-            rt, cfg, metrics: Metrics::new(), htod, dtoh, host_pool,
-            cpu_threads, pending_fetch: Vec::new(),
+            backend,
+            cfg,
+            metrics: Metrics::new(),
+            htod,
+            dtoh,
+            host_pool,
+            cpu_threads,
+            pending_fetch: Vec::new(),
+            plan,
         })
     }
 
+    /// The model/bucket configuration the backend serves.
+    pub fn model_cfg(&self) -> &RtConfig {
+        self.backend.cfg()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The currently active micro-batch plan.
+    pub fn plan(&self) -> Plan {
+        self.plan
+    }
+
+    pub fn set_plan(&mut self, plan: Plan) {
+        self.plan = plan;
+    }
+
+    /// Adopt a searched batching strategy: every module's micro-batch size
+    /// is re-derived from `(B, b_a, b_e, ω)` (clamped to this model's
+    /// bucket grid at launch time).
+    pub fn set_strategy(&mut self, decode: &Strategy, prefill: Option<&Strategy>) {
+        self.plan =
+            Plan::from_strategy(decode, prefill, self.backend.cfg(), self.cfg.max_batch);
+    }
+
     /// Pre-compile every module variant so serving never compile-stalls.
-    pub fn warmup(&self) -> Result<()> {
-        let names: Vec<&str> = vec![
-            "embed", "pre_attention", "attn_prefill", "attn_decode",
-            "post_attention", "router", "expert_ffn", "lm_head",
-        ];
-        self.rt.warmup(&names)
+    pub fn warmup(&mut self) -> Result<()> {
+        self.backend.warmup()
     }
 
-    // -- module wrappers (chunked over buckets) -----------------------------
-
-    fn max_token_bucket(&self) -> usize {
-        *self.rt.cfg().token_buckets.last().unwrap()
+    /// Cumulative artifact→executable compile time (0 off-PJRT).
+    pub fn compile_secs(&self) -> f64 {
+        self.backend.compile_secs()
     }
 
-    fn max_expert_bucket(&self) -> usize {
-        *self.rt.cfg().expert_buckets.last().unwrap()
+    /// Total host-resident weight bytes.
+    pub fn weights_total_bytes(&self) -> usize {
+        self.backend.weights_total_bytes()
     }
 
-    fn token_bucket(&self, n: usize) -> usize {
-        pick_bucket(n, &self.rt.cfg().token_buckets).unwrap_or_else(|| self.max_token_bucket())
-    }
-
-    /// Pad `rows × dim` data to `bucket × dim`.
-    fn pad_rows(x: &[f32], dim: usize, rows: usize, bucket: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; bucket * dim];
-        out[..rows * dim].copy_from_slice(&x[..rows * dim]);
-        out
-    }
-
-    fn pad_i32(x: &[i32], bucket: usize) -> Vec<i32> {
-        let mut out = vec![0i32; bucket];
-        out[..x.len()].copy_from_slice(x);
-        out
-    }
-
-    /// Meter one module execution's traffic and model its weight fetch on
-    /// the HtoD link: prefetch mode queues the transfer (overlaps with
-    /// compute; drained at phase ends), on-demand mode stalls here until
-    /// the (possibly throttled) link delivers — the baselines' behaviour.
-    fn account_exec(&mut self, weight_bytes: usize, in_bytes: usize, out_bytes: usize) {
-        self.metrics.htod_bytes += (weight_bytes + in_bytes) as u64;
-        self.metrics.dtoh_bytes += out_bytes as u64;
-        let h = self.htod.account(weight_bytes + in_bytes);
-        if self.cfg.prefetch {
-            self.pending_fetch.push(h);
-        } else {
-            h.wait();
+    fn exec_ctx(&mut self) -> ExecCtx<'_> {
+        ExecCtx {
+            backend: self.backend.as_mut(),
+            metrics: &mut self.metrics,
+            htod: &self.htod,
+            dtoh: &self.dtoh,
+            pending: &mut self.pending_fetch,
+            prefetch: self.cfg.prefetch,
+            cpu_threads: self.cpu_threads,
         }
-    }
-
-    /// Synchronize all outstanding prefetched transfers (phase boundary).
-    fn drain_fetches(&mut self) {
-        for h in self.pending_fetch.drain(..) {
-            h.wait();
-        }
-    }
-
-    /// Fetch weights as device-resident buffers (`S_Params` cache); the
-    /// returned byte count is the traffic of *this* call (first upload
-    /// only — cached weights cost nothing, the whole point of the cache).
-    fn weight_bufs(&self, names: &[String]) -> Result<(Vec<Rc<xla::PjRtBuffer>>, usize)> {
-        let mut bufs = Vec::with_capacity(names.len());
-        let mut bytes = 0usize;
-        for n in names {
-            let (b, uploaded) = self.rt.weight_buffer(n)?;
-            if uploaded {
-                bytes += self.rt.weights.bytes(n);
-            }
-            bufs.push(b);
-        }
-        Ok((bufs, bytes))
-    }
-
-    /// Token embedding over a flat id list (chunked at the token buckets).
-    pub fn embed(&mut self, ids: &[i32]) -> Result<Vec<f32>> {
-        let h = self.rt.cfg().hidden_size;
-        let (w, mut wb) = self.weight_bufs(&["emb".into()])?;
-        let mut out = Vec::with_capacity(ids.len() * h);
-        for r in micro_batches(ids.len(), self.max_token_bucket()) {
-            let n = r.len();
-            let bucket = self.token_bucket(n);
-            let ids_b = self
-                .rt
-                .upload_i32(&Self::pad_i32(&ids[r], bucket), &[bucket])?;
-            let spec = self.rt.artifacts.variant("embed", bucket)?.clone();
-            let outs = self.metrics.time_module("embed", n, bucket, || {
-                self.rt.execute_b(&spec, &[w[0].as_ref(), &ids_b])
-            })?;
-            self.account_exec(wb, bucket * 4, bucket * h * 4);
-            wb = 0; // upload charged once
-            out.extend_from_slice(&to_f32(&outs[0])?[..n * h]);
-        }
-        Ok(out)
-    }
-
-    /// RMSNorm + QKV + RoPE over flat tokens; returns (q, k, v) flats.
-    pub fn pre_attention(
-        &mut self,
-        layer: usize,
-        x: &[f32],
-        pos: &[i32],
-    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let c = self.rt.cfg();
-        let (h, qd, kvd) = (c.hidden_size, c.q_dim(), c.kv_dim());
-        let n_total = pos.len();
-        let p = format!("l{layer}.");
-        let names: Vec<String> =
-            ["ln1", "wq", "wk", "wv"].iter().map(|s| format!("{p}{s}")).collect();
-        let (w, mut wb) = self.weight_bufs(&names)?;
-
-        let (mut q, mut k, mut v) = (
-            Vec::with_capacity(n_total * qd),
-            Vec::with_capacity(n_total * kvd),
-            Vec::with_capacity(n_total * kvd),
-        );
-        for r in micro_batches(n_total, self.max_token_bucket()) {
-            let n = r.len();
-            let bucket = self.token_bucket(n);
-            let x_b = self.rt.upload_f32(
-                &Self::pad_rows(&x[r.start * h..r.end * h], h, n, bucket),
-                &[bucket, h],
-            )?;
-            let pos_b = self
-                .rt
-                .upload_i32(&Self::pad_i32(&pos[r], bucket), &[bucket])?;
-            let spec = self.rt.artifacts.variant("pre_attention", bucket)?.clone();
-            let args: Vec<&xla::PjRtBuffer> =
-                w.iter().map(|l| l.as_ref()).chain([&x_b, &pos_b]).collect();
-            let outs = self
-                .metrics
-                .time_module("pre_attention", n, bucket, || self.rt.execute_b(&spec, &args))?;
-            self.account_exec(wb, bucket * (h + 1) * 4, bucket * (qd + 2 * kvd) * 4);
-            wb = 0;
-            q.extend_from_slice(&to_f32(&outs[0])?[..n * qd]);
-            k.extend_from_slice(&to_f32(&outs[1])?[..n * kvd]);
-            v.extend_from_slice(&to_f32(&outs[2])?[..n * kvd]);
-        }
-        Ok((q, k, v))
-    }
-
-    /// Output projection + residual over flat tokens.
-    pub fn post_attention(&mut self, layer: usize, ctx: &[f32], resid: &[f32]) -> Result<Vec<f32>> {
-        let c = self.rt.cfg();
-        let (h, qd) = (c.hidden_size, c.q_dim());
-        let n_total = resid.len() / h;
-        let (w, mut wb) = self.weight_bufs(&[format!("l{layer}.wo")])?;
-        let mut out = Vec::with_capacity(n_total * h);
-        for r in micro_batches(n_total, self.max_token_bucket()) {
-            let n = r.len();
-            let bucket = self.token_bucket(n);
-            let ctx_b = self.rt.upload_f32(
-                &Self::pad_rows(&ctx[r.start * qd..r.end * qd], qd, n, bucket),
-                &[bucket, qd],
-            )?;
-            let res_b = self.rt.upload_f32(
-                &Self::pad_rows(&resid[r.start * h..r.end * h], h, n, bucket),
-                &[bucket, h],
-            )?;
-            let spec = self.rt.artifacts.variant("post_attention", bucket)?.clone();
-            let outs = self.metrics.time_module("post_attention", n, bucket, || {
-                self.rt.execute_b(&spec, &[w[0].as_ref(), &ctx_b, &res_b])
-            })?;
-            self.account_exec(wb, bucket * (qd + h) * 4, bucket * h * 4);
-            wb = 0;
-            out.extend_from_slice(&to_f32(&outs[0])?[..n * h]);
-        }
-        Ok(out)
-    }
-
-    /// Pre-MoE norm + top-k router. Returns (xn, idx, weights).
-    pub fn router(&mut self, layer: usize, x: &[f32]) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)> {
-        let c = self.rt.cfg();
-        let (h, k) = (c.hidden_size, c.top_k);
-        let n_total = x.len() / h;
-        let p = format!("l{layer}.");
-        let (w, mut wb) = self.weight_bufs(&[format!("{p}ln2"), format!("{p}wr")])?;
-        let (mut xn, mut idx, mut wts) = (
-            Vec::with_capacity(n_total * h),
-            Vec::with_capacity(n_total * k),
-            Vec::with_capacity(n_total * k),
-        );
-        for r in micro_batches(n_total, self.max_token_bucket()) {
-            let n = r.len();
-            let bucket = self.token_bucket(n);
-            let x_b = self.rt.upload_f32(
-                &Self::pad_rows(&x[r.start * h..r.end * h], h, n, bucket),
-                &[bucket, h],
-            )?;
-            let spec = self.rt.artifacts.variant("router", bucket)?.clone();
-            let outs = self.metrics.time_module("router", n, bucket, || {
-                self.rt
-                    .execute_b(&spec, &[w[0].as_ref(), w[1].as_ref(), &x_b])
-            })?;
-            self.account_exec(wb, bucket * h * 4, bucket * (h + 2 * k) * 4);
-            wb = 0;
-            xn.extend_from_slice(&to_f32(&outs[0])?[..n * h]);
-            idx.extend_from_slice(&to_i32(&outs[1])?[..n * k]);
-            wts.extend_from_slice(&to_f32(&outs[2])?[..n * k]);
-        }
-        Ok((xn, idx, wts))
-    }
-
-    /// One expert's FFN over a pre-gathered, bucket-padded input.
-    fn expert_exec(
-        &mut self,
-        layer: usize,
-        which: ExpertSel,
-        x_padded: &[f32],
-        rows: usize,
-        bucket: usize,
-    ) -> Result<Vec<f32>> {
-        let h = self.rt.cfg().hidden_size;
-        let p = match which {
-            ExpertSel::Routed(e) => format!("l{layer}.e{e}."),
-            ExpertSel::Shared => format!("l{layer}.se."),
-        };
-        let (w, wb) = self.weight_bufs(&[
-            format!("{p}wg"), format!("{p}wu"), format!("{p}wd"),
-        ])?;
-        let x_b = self.rt.upload_f32(x_padded, &[bucket, h])?;
-        let spec = self.rt.artifacts.variant("expert_ffn", bucket)?.clone();
-        let name = match which {
-            ExpertSel::Routed(_) => "expert_ffn",
-            ExpertSel::Shared => "shared_expert",
-        };
-        let outs = self.metrics.time_module(name, rows, bucket, || {
-            self.rt
-                .execute_b(&spec, &[w[0].as_ref(), w[1].as_ref(), w[2].as_ref(), &x_b])
-        })?;
-        self.account_exec(wb, bucket * h * 4, bucket * h * 4);
-        to_f32(&outs[0])
-    }
-
-    /// Sparse-MoE layer over the full accumulated batch: router →
-    /// per-expert gather/kernel/scatter → shared expert → residual.
-    /// This is module-based batching's expert phase (paper Fig. 2).
-    pub fn moe_layer(&mut self, layer: usize, x: Vec<f32>, n: usize) -> Result<Vec<f32>> {
-        let c = self.rt.cfg();
-        let (h, k, ne) = (c.hidden_size, c.top_k, c.num_experts);
-        let shared = c.use_shared_expert;
-        let (xn, idx, wts) = self.router(layer, &x)?;
-
-        let mut acc = vec![0.0f32; n * h];
-        for g in group_by_expert(&idx, &wts, n, k, ne) {
-            // Large groups split at the biggest expert bucket — each chunk
-            // is still orders of magnitude above per-micro-batch routing.
-            let max_b = self.max_expert_bucket();
-            for r in micro_batches(g.rows.len(), max_b) {
-                let rows = &g.rows[r.clone()];
-                let w = &g.weights[r];
-                let bucket = pick_bucket(rows.len(), &self.rt.cfg().expert_buckets).unwrap();
-                let gathered = gather_rows(&xn, h, rows, bucket);
-                let y = self.expert_exec(layer, ExpertSel::Routed(g.expert), &gathered, rows.len(), bucket)?;
-                scatter_add(&mut acc, h, rows, w, &y);
-            }
-        }
-        if shared {
-            let max_b = self.max_expert_bucket();
-            for r in micro_batches(n, max_b) {
-                let rows = r.len();
-                let bucket = pick_bucket(rows, &self.rt.cfg().expert_buckets).unwrap();
-                let xp = Self::pad_rows(&xn[r.start * h..r.end * h], h, rows, bucket);
-                let ys = self.expert_exec(layer, ExpertSel::Shared, &xp, rows, bucket)?;
-                add_assign(&mut acc[r.start * h..r.end * h], &ys[..rows * h]);
-            }
-        }
-        let mut out = x;
-        add_assign(&mut out, &acc); // residual: out = x + acc
-        Ok(out)
-    }
-
-    /// Greedy next-token over `n` final hidden rows.
-    pub fn lm_head(&mut self, x: &[f32], n: usize) -> Result<Vec<i32>> {
-        let c = self.rt.cfg();
-        let h = c.hidden_size;
-        let (w, mut wb) = self.weight_bufs(&["lnf".into(), "lm_head".into()])?;
-        let mut out = Vec::with_capacity(n);
-        for r in micro_batches(n, self.max_token_bucket()) {
-            let m = r.len();
-            let bucket = self.token_bucket(m);
-            let x_b = self.rt.upload_f32(
-                &Self::pad_rows(&x[r.start * h..r.end * h], h, m, bucket),
-                &[bucket, h],
-            )?;
-            let spec = self.rt.artifacts.variant("lm_head", bucket)?.clone();
-            let outs = self.metrics.time_module("lm_head", m, bucket, || {
-                self.rt
-                    .execute_b(&spec, &[w[0].as_ref(), w[1].as_ref(), &x_b])
-            })?;
-            self.account_exec(wb, bucket * h * 4, bucket * 4);
-            wb = 0;
-            out.extend_from_slice(&to_i32(&outs[0])?[..m]);
-        }
-        Ok(out)
     }
 
     // -- phases --------------------------------------------------------------
@@ -375,13 +155,22 @@ impl Engine {
     /// Prefill a batch of prompts; returns the decode state and the first
     /// generated token per sequence.
     pub fn prefill(&mut self, prompts: &[Vec<i32>]) -> Result<(BatchState, Vec<i32>)> {
-        let c = self.rt.cfg().clone();
+        let c = self.backend.cfg().clone();
         let kv = KvCache::new(
             c.num_layers, c.num_kv_heads, c.head_dim, c.max_context, prompts.len(),
         );
         self.host_pool.alloc(kv.host_bytes()).map_err(anyhow::Error::msg)?;
         let kv = Arc::new(RwLock::new(kv));
-        let (slots, lens, first) = self.prefill_into(&kv, prompts)?;
+        let (slots, lens, first) = match self.prefill_into(&kv, prompts) {
+            Ok(v) => v,
+            Err(e) => {
+                // Release the pool charge: a rejected request must not
+                // permanently shrink the host budget.
+                let bytes = kv.read().unwrap().host_bytes();
+                self.host_pool.free(bytes);
+                return Err(e);
+            }
+        };
         Ok((
             BatchState { kv, slots, lens, last: first.clone() },
             first,
@@ -396,312 +185,115 @@ impl Engine {
         kv: &Arc<RwLock<KvCache>>,
         prompts: &[Vec<i32>],
     ) -> Result<(Vec<usize>, Vec<usize>, Vec<i32>)> {
-        let t0 = std::time::Instant::now();
-        let c = self.rt.cfg().clone();
-        let (b, s, h) = (prompts.len(), c.prefill_seq, c.hidden_size);
-        let (nh, nkv, hd) = (c.num_heads, c.num_kv_heads, c.head_dim);
-        let (qd, kvd) = (c.q_dim(), c.kv_dim());
-        for p in prompts {
-            if p.len() > s {
-                bail!("prompt length {} exceeds prefill_seq {s}", p.len());
-            }
-            if p.is_empty() {
-                bail!("empty prompt");
-            }
-        }
-
-        let kv = Arc::clone(kv);
-        let mut slots = Vec::with_capacity(b);
-        {
-            let mut kvw = kv.write().unwrap();
-            for _ in 0..b {
-                slots.push(
-                    kvw.alloc_slot()
-                        .ok_or_else(|| anyhow::anyhow!("KV slot pool exhausted"))?,
-                );
-            }
-        }
-        let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
-
-        // Flat padded token/position streams (pads: token 0 at pos 0).
-        let n = b * s;
-        let mut ids = vec![0i32; n];
-        let mut pos = vec![0i32; n];
-        for (i, p) in prompts.iter().enumerate() {
-            for (j, &t) in p.iter().enumerate() {
-                ids[i * s + j] = t;
-                pos[i * s + j] = j as i32;
-            }
-        }
-
-        let mut x = self.embed(&ids)?;
-        let ab_buckets = c.prefill_batch_buckets.clone();
-        let max_ab = *ab_buckets.last().unwrap();
-
-        for layer in 0..c.num_layers {
-            let (q, k, v) = self.pre_attention(layer, &x, &pos)?;
-            // Attention micro-batches over sequences.
-            let mut ctx = vec![0.0f32; n * qd];
-            for r in micro_batches(b, max_ab) {
-                let nb = r.len();
-                let bucket = pick_bucket(nb, &ab_buckets).unwrap();
-                // Pack [bucket, s, heads, hd] from flat [n, heads*hd].
-                let pack = |src: &[f32], dim: usize| {
-                    let mut out = vec![0.0f32; bucket * s * dim];
-                    let start = r.start * s * dim;
-                    let len = nb * s * dim;
-                    out[..len].copy_from_slice(&src[start..start + len]);
-                    out
-                };
-                let q_l = lit_f32(&pack(&q, qd), &[bucket, s, nh, hd])?;
-                let k_l = lit_f32(&pack(&k, kvd), &[bucket, s, nkv, hd])?;
-                let v_l = lit_f32(&pack(&v, kvd), &[bucket, s, nkv, hd])?;
-                let mut lens_i: Vec<i32> = vec![0; bucket];
-                for (i, bi) in r.clone().enumerate() {
-                    lens_i[i] = lens[bi] as i32;
-                }
-                let lens_l = lit_i32(&lens_i, &[bucket])?;
-                let spec = self.rt.artifacts.variant("attn_prefill", bucket)?.clone();
-                let outs = self.metrics.time_module("attn_prefill", nb, bucket, || {
-                    self.rt.execute(&spec, &[&q_l, &k_l, &v_l, &lens_l])
-                })?;
-                self.account_exec(0, bucket * s * (qd + 2 * kvd + 1) * 4, bucket * s * qd * 4);
-                let ctx_out = to_f32(&outs[0])?;
-                ctx[r.start * s * qd..r.end * s * qd]
-                    .copy_from_slice(&ctx_out[..nb * s * qd]);
-            }
-            // Write prompt K/V to the host cache (DtoH writeback).
-            {
-                let kvh = Arc::clone(&kv);
-                let mut bytes = 0usize;
-                let mut kvw = kvh.write().unwrap();
-                for (i, &slot) in slots.iter().enumerate() {
-                    let l = lens[i];
-                    kvw.write_prefill(
-                        layer,
-                        slot,
-                        &k[i * s * kvd..(i * s + l) * kvd],
-                        &v[i * s * kvd..(i * s + l) * kvd],
-                    );
-                    bytes += 2 * l * kvd * 4;
-                }
-                self.metrics.dtoh_bytes += bytes as u64;
-                self.dtoh.account(bytes).wait();
-            }
-            x = self.post_attention(layer, &ctx, &x)?;
-            x = self.moe_layer(layer, x, n)?;
-        }
-        {
-            let mut kvw = kv.write().unwrap();
-            for (i, &slot) in slots.iter().enumerate() {
-                kvw.set_len(slot, lens[i]);
-            }
-        }
-
-        // Last valid token of each sequence → first generated token.
-        let mut last_rows = vec![0.0f32; b * h];
-        for i in 0..b {
-            let row = i * s + lens[i] - 1;
-            last_rows[i * h..(i + 1) * h].copy_from_slice(&x[row * h..(row + 1) * h]);
-        }
-        let first = self.lm_head(&last_rows, b)?;
-        self.drain_fetches();
-
-        self.metrics.prefill_tokens += lens.iter().sum::<usize>() as u64;
-        self.metrics.prefill_secs += t0.elapsed().as_secs_f64();
-        Ok((slots, lens, first))
+        let pipeline = Pipeline::new(self.plan);
+        let mut cx = self.exec_ctx();
+        pipeline.prefill_into(&mut cx, kv, prompts)
     }
 
     /// One decode step for all sequences in `state`; returns next tokens.
     pub fn decode_step(&mut self, state: &mut BatchState) -> Result<Vec<i32>> {
-        let t0 = std::time::Instant::now();
-        let c = self.rt.cfg().clone();
-        let b = state.slots.len();
-        let (qd, kvd) = (c.q_dim(), c.kv_dim());
-        let (nh, nkv, hd) = (c.num_heads, c.num_kv_heads, c.head_dim);
-        let cap = c.max_context;
-
-        let pos: Vec<i32> = state.lens.iter().map(|&l| l as i32).collect();
-        let mut x = self.embed(&state.last)?;
-
-        // ω split: first `n_cpu` sequences take the CPU-attention path.
-        let n_cpu = ((self.cfg.omega * b as f64).floor() as usize).min(b);
-        let db_buckets = c.decode_batch_buckets.clone();
-        // Attention micro-batch b_a: the paper's module asymmetry — keep
-        // attention launches small (their staged KV window is the memory
-        // hog) while experts pool the whole accumulated batch below.
-        let max_db = self.cfg.attn_micro.clamp(1, *db_buckets.last().unwrap());
-
-        for layer in 0..c.num_layers {
-            let (q, k, v) = self.pre_attention(layer, &x, &pos)?;
-            // Append this step's K/V (per sequence) before attention.
-            {
-                let mut kvw = state.kv.write().unwrap();
-                for (i, &slot) in state.slots.iter().enumerate() {
-                    kvw.append(layer, slot, &k[i * kvd..(i + 1) * kvd], &v[i * kvd..(i + 1) * kvd]);
-                }
-                self.metrics.dtoh_bytes += (2 * b * kvd * 4) as u64;
-            }
-            let lens_now: Vec<usize> = state.lens.iter().map(|&l| l + 1).collect();
-
-            let mut ctx = vec![0.0f32; b * qd];
-            // ---- GPU share: staged-window attention micro-batches -------
-            let gpu_range = n_cpu..b;
-            let mut handles = Vec::new();
-            for r in micro_batches(gpu_range.len(), max_db) {
-                let abs = gpu_range.start + r.start..gpu_range.start + r.end;
-                let nb = abs.len();
-                let bucket = pick_bucket(nb, &db_buckets).unwrap();
-                let sl: Vec<usize> = abs.clone().map(|i| state.slots[i]).collect();
-                let ln: Vec<usize> = abs.clone().map(|i| lens_now[i]).collect();
-                let bytes: usize = ln.iter().map(|&l| l * kvd * 4).sum();
-                let kv_k = Arc::clone(&state.kv);
-                let kv_v = Arc::clone(&state.kv);
-                let (sl2, ln2) = (sl.clone(), ln.clone());
-                let hk = self.htod.submit(bytes, move || {
-                    kv_k.read().unwrap().gather_side(layer, &sl2, &ln2, bucket, true)
-                });
-                let (sl3, ln3) = (sl.clone(), ln.clone());
-                let hv = self.htod.submit(bytes, move || {
-                    kv_v.read().unwrap().gather_side(layer, &sl3, &ln3, bucket, false)
-                });
-                self.metrics.htod_bytes += (2 * bytes) as u64;
-                handles.push((abs, nb, bucket, ln, hk, hv));
-            }
-
-            // ---- CPU share: rust kernel over in-place cache slices ------
-            // Runs on worker threads while the engine thread executes the
-            // staged accelerator micro-batches below.
-            let cpu_out: Vec<Vec<f32>> = if n_cpu > 0 {
-                let kvr = state.kv.read().unwrap();
-                let seqs: Vec<SeqAttn<'_>> = (0..n_cpu)
-                    .map(|i| {
-                        let (ks, vs) =
-                            kvr.slices_n(layer, state.slots[i], lens_now[i]);
-                        SeqAttn { q: &q[i * qd..(i + 1) * qd], k: ks, v: vs, len: lens_now[i] }
-                    })
-                    .collect();
-                let mut out = vec![Vec::new(); n_cpu];
-                let threads = self.cpu_threads;
-                let tcpu = std::time::Instant::now();
-                decode_attention(&seqs, nh, nkv, hd, Numerics::Bf16Consistent, &mut out, threads);
-                self.metrics
-                    .record_module("cpu_attn", tcpu.elapsed().as_secs_f64(), n_cpu, n_cpu);
-                self.metrics.cpu_attn_seqs += n_cpu as u64;
-                out
-            } else {
-                Vec::new()
-            };
-            for (i, o) in cpu_out.iter().enumerate() {
-                ctx[i * qd..(i + 1) * qd].copy_from_slice(o);
-            }
-
-            // Execute the staged accelerator micro-batches.
-            for (abs, nb, bucket, ln, hk, hv) in handles {
-                let ks = hk.wait();
-                let vs = hv.wait();
-                let mut q_b = vec![0.0f32; bucket * qd];
-                for (j, i) in abs.clone().enumerate() {
-                    q_b[j * qd..(j + 1) * qd].copy_from_slice(&q[i * qd..(i + 1) * qd]);
-                }
-                let mut lens_i = vec![0i32; bucket];
-                for (j, &l) in ln.iter().enumerate() {
-                    lens_i[j] = l as i32;
-                }
-                let q_l = lit_f32(&q_b, &[bucket, nh, hd])?;
-                let k_l = lit_f32(&ks, &[bucket, cap, nkv, hd])?;
-                let v_l = lit_f32(&vs, &[bucket, cap, nkv, hd])?;
-                let lens_l = lit_i32(&lens_i, &[bucket])?;
-                let spec = self.rt.artifacts.variant("attn_decode", bucket)?.clone();
-                let outs = self.metrics.time_module("attn_decode", nb, bucket, || {
-                    self.rt.execute(&spec, &[&q_l, &k_l, &v_l, &lens_l])
-                })?;
-                self.account_exec(0, bucket * (qd + 2 * cap * kvd + 1) * 4, bucket * qd * 4);
-                let ctx_out = to_f32(&outs[0])?;
-                for (j, i) in abs.enumerate() {
-                    ctx[i * qd..(i + 1) * qd].copy_from_slice(&ctx_out[j * qd..(j + 1) * qd]);
-                }
-                self.metrics.gpu_attn_seqs += nb as u64;
-            }
-
-            x = self.post_attention(layer, &ctx, &x)?;
-            x = self.moe_layer(layer, x, b)?;
-        }
-
-        let next = self.lm_head(&x, b)?;
-        self.drain_fetches();
-        {
-            let mut kvw = state.kv.write().unwrap();
-            for (i, &slot) in state.slots.iter().enumerate() {
-                kvw.advance(slot);
-                state.lens[i] += 1;
-            }
-        }
-        state.last = next.clone();
-        self.metrics.decode_tokens += b as u64;
-        self.metrics.decode_secs += t0.elapsed().as_secs_f64();
-        Ok(next)
+        let pipeline = Pipeline::new(self.plan);
+        let mut cx = self.exec_ctx();
+        pipeline.decode_step(&mut cx, state)
     }
 
-    /// Greedy-decode `steps` tokens for a batch of prompts. Returns, per
-    /// sequence, the generated tokens (the first comes from prefill).
+    /// Greedy-decode `steps` tokens for a batch of prompts, waving through
+    /// the plan's accumulated batch `B`. Returns, per sequence, the
+    /// generated tokens (the first comes from prefill).
     pub fn generate(&mut self, prompts: &[Vec<i32>], steps: usize) -> Result<Vec<Vec<i32>>> {
         assert!(steps >= 1);
+        let wave = self.plan.accum_batch.max(1);
         let mut results: Vec<Vec<i32>> = Vec::with_capacity(prompts.len());
-        for chunk in prompts.chunks(self.cfg.max_batch.max(1)) {
+        for chunk in prompts.chunks(wave) {
             let (mut state, first) = self.prefill(chunk)?;
             let mut toks: Vec<Vec<i32>> = first.iter().map(|&t| vec![t]).collect();
+            let mut failed = None;
             for _ in 0..steps - 1 {
-                let next = self.decode_step(&mut state)?;
-                for (i, &t) in next.iter().enumerate() {
-                    toks[i].push(t);
+                match self.decode_step(&mut state) {
+                    Ok(next) => {
+                        for (i, &t) in next.iter().enumerate() {
+                            toks[i].push(t);
+                        }
+                    }
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
                 }
             }
-            // Release KV host memory for this batch.
+            // Release KV host memory for this batch (also on error).
             let bytes = state.kv.read().unwrap().host_bytes();
             self.host_pool.free(bytes);
+            if let Some(e) = failed {
+                return Err(e);
+            }
             results.extend(toks);
         }
         Ok(results)
     }
 
-    /// Measure live per-module latency at every bucket (the paper's
-    /// offline workload profiling, App. B) — feeds the strategy search.
+    /// Live per-stage latency at every bucket (the paper's offline
+    /// workload profiling, App. B) — feeds the strategy search. One row
+    /// per pipeline stage × bucket.
     pub fn profile_modules(&mut self) -> Result<Vec<(String, usize, f64)>> {
-        let c = self.rt.cfg().clone();
-        let mut out = Vec::new();
-        let reps = 3;
-        // expert_ffn across its buckets.
-        for &b in &c.expert_buckets.clone() {
-            let x = vec![0.1f32; b * c.hidden_size];
-            let t0 = std::time::Instant::now();
-            for _ in 0..reps {
-                self.expert_exec(0, ExpertSel::Routed(0), &x, b, b)?;
-            }
-            out.push(("expert_ffn".into(), b, t0.elapsed().as_secs_f64() / reps as f64));
-        }
-        // attn_decode across its buckets.
-        for &b in &c.decode_batch_buckets.clone() {
-            let q = vec![0.1f32; b * c.q_dim()];
-            let ks = vec![0.1f32; b * c.max_context * c.kv_dim()];
-            let lens = vec![c.max_context as i32 / 2; b];
-            let q_l = lit_f32(&q, &[b, c.num_heads, c.head_dim])?;
-            let k_l = lit_f32(&ks, &[b, c.max_context, c.num_kv_heads, c.head_dim])?;
-            let v_l = lit_f32(&ks, &[b, c.max_context, c.num_kv_heads, c.head_dim])?;
-            let l_l = lit_i32(&lens, &[b])?;
-            let spec = self.rt.artifacts.variant("attn_decode", b)?.clone();
-            let t0 = std::time::Instant::now();
-            for _ in 0..reps {
-                self.rt.execute(&spec, &[&q_l, &k_l, &v_l, &l_l])?;
-            }
-            out.push(("attn_decode".into(), b, t0.elapsed().as_secs_f64() / reps as f64));
-        }
-        Ok(out)
+        let pipeline = Pipeline::new(self.plan);
+        let mut cx = self.exec_ctx();
+        pipeline.profile_modules(&mut cx)
     }
 }
 
-#[derive(Debug, Clone, Copy)]
-enum ExpertSel {
-    Routed(usize),
-    Shared,
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+
+    fn engine() -> Engine {
+        // No artifacts dir in the test environment → reference backend.
+        Engine::new(EngineConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn default_plan_sources_from_config_strategy() {
+        let eng = engine();
+        let p = eng.plan();
+        assert_eq!(p.accum_batch, 128);
+        assert_eq!(p.attn_micro, 8);
+        assert_eq!(p.expert_micro, 512, "defaults to largest expert bucket");
+        assert_eq!(p.omega, 0.0);
+    }
+
+    #[test]
+    fn set_strategy_rederives_plan() {
+        let mut eng = engine();
+        let dec = Strategy { b: 64, b_a: 16, b_e: 32, omega: 0.5, s_expert: 0, s_params: 0 };
+        eng.set_strategy(&dec, None);
+        let p = eng.plan();
+        assert_eq!(p.accum_batch, 64);
+        assert_eq!(p.attn_micro, 16);
+        assert_eq!(p.expert_micro, 32);
+        assert!((p.omega - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generate_short_batch_produces_tokens() {
+        let mut eng = engine();
+        let prompts = vec![vec![1, 2, 3], vec![4, 5]];
+        let toks = eng.generate(&prompts, 3).unwrap();
+        assert_eq!(toks.len(), 2);
+        for t in &toks {
+            assert_eq!(t.len(), 3);
+            assert!(t.iter().all(|&x| x >= 0 && (x as usize) < 512));
+        }
+        assert_eq!(eng.metrics.prefill_tokens, 5);
+        assert_eq!(eng.metrics.decode_tokens, 4);
+    }
+
+    #[test]
+    fn rejects_oversized_and_empty_prompts() {
+        let mut eng = engine();
+        let too_long = vec![vec![1i32; 65]];
+        assert!(eng.generate(&too_long, 2).is_err());
+        let empty = vec![vec![]];
+        assert!(eng.generate(&empty, 2).is_err());
+    }
 }

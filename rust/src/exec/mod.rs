@@ -1,0 +1,27 @@
+//! The `exec` subsystem: strategy-driven module pipeline.
+//!
+//! This is where the paper's contribution is *executable*:
+//!
+//! * [`tensor`] — typed host tensors ([`HostTensor`]) and the per-module
+//!   host-memory accumulators ([`Accumulator`]) that replace the old raw
+//!   `Vec<f32>` plumbing;
+//! * [`modules`] — the [`Module`] trait plus one concrete unit per stage
+//!   (embed, pre/post-attention, prefill/decode attention, router,
+//!   experts, lm-head), each wrapping bucket selection, padding, metering
+//!   and the backend launch;
+//! * [`pipeline`] — [`Plan`] (the runnable projection of a searched
+//!   [`crate::sched::Strategy`]) and [`Pipeline`], which sequences the
+//!   modules for a prefill wave or a decode step and overlaps KV staging
+//!   with CPU attention and device compute.
+//!
+//! The `Engine` is a facade over this subsystem; the simulator's DAG
+//! builders label their nodes with the same [`ModuleKind`] vocabulary, so
+//! the modeled graph and the executed graph are one.
+
+pub mod modules;
+pub mod pipeline;
+pub mod tensor;
+
+pub use modules::{ExpertSel, Module, ModuleKind};
+pub use pipeline::{BatchState, ExecCtx, Pipeline, Plan};
+pub use tensor::{Accumulator, HostTensor};

@@ -1,0 +1,683 @@
+//! The module layer: each stage of the MoE forward pass as an
+//! independently batched unit (paper §4.1 "module-based batching").
+//!
+//! [`ModuleKind`] is the canonical module vocabulary — the *same* names
+//! the metrics tables report, the profiling rows use, and the simulator's
+//! offloading DAG builders ([`crate::sched`]) label their nodes with, so
+//! the simulated graph and the live pipeline describe one module graph.
+//!
+//! Each concrete module (e.g. [`Experts`]) implements two things:
+//!
+//! * the [`Module`] trait — name, strategy-driven micro-batch size and an
+//!   order-of-magnitude flop/byte footprint (what the cost model sees);
+//! * an inherent `run` method — the live execution: pick the bucket, pad,
+//!   launch on the [`crate::runtime::Backend`], meter time and link
+//!   traffic, unpad. These wrap what used to be inline `Engine` methods.
+
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::batching::{add_assign, group_by_expert, micro_batches};
+use crate::cpu_attn::{decode_attention_t, SeqAttn};
+use crate::exec::pipeline::{ExecCtx, Plan};
+use crate::exec::tensor::{Accumulator, HostTensor};
+use crate::kv::KvCache;
+use crate::runtime::RtConfig;
+use crate::util::pick_bucket;
+
+/// Which expert a launch targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpertSel {
+    Routed(usize),
+    Shared,
+}
+
+/// Canonical module vocabulary (live pipeline ≡ simulator DAG ≡ metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModuleKind {
+    Embed,
+    PreAttention,
+    AttnPrefill,
+    AttnDecode,
+    CpuAttn,
+    PostAttention,
+    Router,
+    ExpertFfn,
+    SharedExpert,
+    LmHead,
+}
+
+impl ModuleKind {
+    pub const ALL: [ModuleKind; 10] = [
+        ModuleKind::Embed,
+        ModuleKind::PreAttention,
+        ModuleKind::AttnPrefill,
+        ModuleKind::AttnDecode,
+        ModuleKind::CpuAttn,
+        ModuleKind::PostAttention,
+        ModuleKind::Router,
+        ModuleKind::ExpertFfn,
+        ModuleKind::SharedExpert,
+        ModuleKind::LmHead,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModuleKind::Embed => "embed",
+            ModuleKind::PreAttention => "pre_attention",
+            ModuleKind::AttnPrefill => "attn_prefill",
+            ModuleKind::AttnDecode => "attn_decode",
+            ModuleKind::CpuAttn => "cpu_attn",
+            ModuleKind::PostAttention => "post_attention",
+            ModuleKind::Router => "router",
+            ModuleKind::ExpertFfn => "expert_ffn",
+            ModuleKind::SharedExpert => "shared_expert",
+            ModuleKind::LmHead => "lm_head",
+        }
+    }
+
+    /// Per-layer module order of one decode step — the module graph the
+    /// simulator's decode DAG mirrors node-for-node.
+    pub fn decode_layer_order() -> [ModuleKind; 6] {
+        [
+            ModuleKind::PreAttention,
+            ModuleKind::AttnDecode,
+            ModuleKind::CpuAttn,
+            ModuleKind::PostAttention,
+            ModuleKind::Router,
+            ModuleKind::ExpertFfn,
+        ]
+    }
+}
+
+/// Strategy-facing metadata of a pipeline module.
+pub trait Module {
+    fn kind(&self) -> ModuleKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Rows per launch under `plan` — where the searched
+    /// `(B, b_a, b_e, ω)` lands on this module.
+    fn micro_batch(&self, plan: &Plan, cfg: &RtConfig) -> usize;
+
+    /// Order-of-magnitude flops per row (cost-model/profiling hook).
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64;
+}
+
+fn max_bucket(buckets: &[usize]) -> usize {
+    *buckets.last().expect("bucket list empty")
+}
+
+fn pad_i32(x: &[i32], bucket: usize) -> Vec<i32> {
+    let mut out = vec![0i32; bucket];
+    out[..x.len()].copy_from_slice(x);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Embed
+// ---------------------------------------------------------------------------
+
+pub struct Embed;
+
+impl Module for Embed {
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Embed
+    }
+    fn micro_batch(&self, _plan: &Plan, cfg: &RtConfig) -> usize {
+        max_bucket(&cfg.token_buckets)
+    }
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64 {
+        cfg.hidden_size as f64 // a row copy
+    }
+}
+
+impl Embed {
+    /// Token embedding over a flat id list (chunked at the token buckets).
+    pub fn run(&self, cx: &mut ExecCtx<'_>, ids: &[i32]) -> Result<HostTensor> {
+        let c = cx.backend.cfg().clone();
+        let h = c.hidden_size;
+        let mut out = HostTensor::empty(h);
+        for r in micro_batches(ids.len(), max_bucket(&c.token_buckets)) {
+            let n = r.len();
+            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+            let ids_b = pad_i32(&ids[r], bucket);
+            let t0 = Instant::now();
+            let y = cx.backend.embed(&ids_b)?;
+            cx.metrics
+                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+            let wb = cx.backend.take_uploaded_bytes();
+            cx.account(wb, bucket * 4, bucket * h * 4);
+            out.push_rows(&y.data[..n * h]);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PreAttention
+// ---------------------------------------------------------------------------
+
+pub struct PreAttention;
+
+impl Module for PreAttention {
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::PreAttention
+    }
+    fn micro_batch(&self, _plan: &Plan, cfg: &RtConfig) -> usize {
+        max_bucket(&cfg.token_buckets)
+    }
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64 {
+        2.0 * cfg.hidden_size as f64 * (cfg.q_dim() + 2 * cfg.kv_dim()) as f64
+    }
+}
+
+impl PreAttention {
+    /// RMSNorm + QKV + RoPE over flat tokens; returns (q, k, v).
+    pub fn run(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        layer: usize,
+        x: &HostTensor,
+        pos: &[i32],
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let c = cx.backend.cfg().clone();
+        let (h, qd, kvd) = (c.hidden_size, c.q_dim(), c.kv_dim());
+        let (mut q, mut k, mut v) =
+            (HostTensor::empty(qd), HostTensor::empty(kvd), HostTensor::empty(kvd));
+        for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
+            let n = r.len();
+            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+            let x_b = x.padded(r.clone(), bucket);
+            let pos_b = pad_i32(&pos[r], bucket);
+            let t0 = Instant::now();
+            let (qb, kb, vb) = cx.backend.pre_attention(layer, &x_b, &pos_b)?;
+            cx.metrics
+                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+            let wb = cx.backend.take_uploaded_bytes();
+            cx.account(wb, bucket * (h + 1) * 4, bucket * (qd + 2 * kvd) * 4);
+            q.push_rows(&qb.data[..n * qd]);
+            k.push_rows(&kb.data[..n * kvd]);
+            v.push_rows(&vb.data[..n * kvd]);
+        }
+        Ok((q, k, v))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AttentionPrefill
+// ---------------------------------------------------------------------------
+
+pub struct AttentionPrefill;
+
+impl Module for AttentionPrefill {
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::AttnPrefill
+    }
+    fn micro_batch(&self, plan: &Plan, cfg: &RtConfig) -> usize {
+        plan.prefill_attn_micro
+            .clamp(1, max_bucket(&cfg.prefill_batch_buckets))
+    }
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64 {
+        // One padded prompt: quadratic attention over prefill_seq.
+        2.0 * (cfg.prefill_seq * cfg.prefill_seq) as f64 * cfg.q_dim() as f64
+    }
+}
+
+impl AttentionPrefill {
+    /// Causal attention over `b` prompts padded to `seq`, micro-batched at
+    /// the strategy's prefill `b_a`. `q`/`k`/`v` are flat per-token
+    /// tensors (`b*seq` rows); returns ctx as flat `[b*seq, q_dim]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        plan: &Plan,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        lens: &[usize],
+        seq: usize,
+    ) -> Result<HostTensor> {
+        let c = cx.backend.cfg().clone();
+        let (qd, kvd) = (c.q_dim(), c.kv_dim());
+        let b = lens.len();
+        assert_eq!(q.rows, b * seq);
+        let micro = self.micro_batch(plan, &c);
+        // Attention outputs accumulate in host memory until the wave's
+        // full batch is assembled (paper Fig. 2).
+        let mut acc = Accumulator::new(seq * qd, b);
+        for r in micro_batches(b, micro) {
+            let nb = r.len();
+            let bucket = pick_bucket(nb, &c.prefill_batch_buckets).unwrap();
+            let pack = |src: &HostTensor, dim: usize| -> HostTensor {
+                let mut out = HostTensor::zeros(bucket, seq * dim);
+                out.data[..nb * seq * dim]
+                    .copy_from_slice(src.rows_slice(r.start * seq..r.end * seq));
+                out
+            };
+            let q_b = pack(q, qd);
+            let k_b = pack(k, kvd);
+            let v_b = pack(v, kvd);
+            let mut lens_i = vec![0i32; bucket];
+            for (i, bi) in r.clone().enumerate() {
+                lens_i[i] = lens[bi] as i32;
+            }
+            let t0 = Instant::now();
+            let ctx = cx.backend.attn_prefill(&q_b, &k_b, &v_b, &lens_i, seq)?;
+            cx.metrics
+                .record_module(self.name(), t0.elapsed().as_secs_f64(), nb, bucket);
+            let wb = cx.backend.take_uploaded_bytes();
+            cx.account(
+                wb,
+                bucket * seq * (qd + 2 * kvd + 1) * 4,
+                bucket * seq * qd * 4,
+            );
+            acc.push_rows(&ctx.data[..nb * seq * qd]);
+        }
+        debug_assert!(acc.is_ready());
+        Ok(HostTensor::from_vec(acc.take().data, qd))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AttentionDecode (ω split + staged KV windows)
+// ---------------------------------------------------------------------------
+
+pub struct AttentionDecode;
+
+impl Module for AttentionDecode {
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::AttnDecode
+    }
+    fn micro_batch(&self, plan: &Plan, cfg: &RtConfig) -> usize {
+        plan.attn_micro.clamp(1, max_bucket(&cfg.decode_batch_buckets))
+    }
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64 {
+        2.0 * cfg.max_context as f64 * cfg.q_dim() as f64
+    }
+}
+
+impl AttentionDecode {
+    /// One decode step's attention for `b` sequences under the ω split:
+    /// the first `⌊ωb⌋` sequences run on the CPU kernel reading the host
+    /// cache in place; the rest go through HtoD-staged KV windows in
+    /// `b_a`-sized micro-batches, overlapping the window gather (HtoD
+    /// engine thread) with the CPU share. Outputs accumulate in batch
+    /// order; returns ctx `[b, q_dim]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        plan: &Plan,
+        layer: usize,
+        q: &HostTensor,
+        kv: &Arc<RwLock<KvCache>>,
+        slots: &[usize],
+        lens_now: &[usize],
+    ) -> Result<HostTensor> {
+        let c = cx.backend.cfg().clone();
+        let (qd, kvd) = (c.q_dim(), c.kv_dim());
+        let cap = c.max_context;
+        let b = slots.len();
+        assert_eq!(q.rows, b);
+        let n_cpu = ((plan.omega * b as f64).floor() as usize).min(b);
+        let micro = self.micro_batch(plan, &c);
+
+        let mut acc = Accumulator::new(qd, b);
+
+        // -- GPU share: submit staged-window gathers to the HtoD engine --
+        let mut handles = Vec::new();
+        for r in micro_batches(b - n_cpu, micro) {
+            let abs = n_cpu + r.start..n_cpu + r.end;
+            let nb = abs.len();
+            let bucket = pick_bucket(nb, &c.decode_batch_buckets).unwrap();
+            let sl: Vec<usize> = abs.clone().map(|i| slots[i]).collect();
+            let ln: Vec<usize> = abs.clone().map(|i| lens_now[i]).collect();
+            let bytes: usize = ln.iter().map(|&l| l * kvd * 4).sum();
+            let kv_k = Arc::clone(kv);
+            let (sl2, ln2) = (sl.clone(), ln.clone());
+            let hk = cx.htod.submit(bytes, move || {
+                kv_k.read().unwrap().gather_side(layer, &sl2, &ln2, bucket, true)
+            });
+            let kv_v = Arc::clone(kv);
+            let ln3 = ln.clone();
+            let hv = cx.htod.submit(bytes, move || {
+                kv_v.read().unwrap().gather_side(layer, &sl, &ln3, bucket, false)
+            });
+            cx.metrics.htod_bytes += (2 * bytes) as u64;
+            handles.push((abs, nb, bucket, ln, hk, hv));
+        }
+
+        // -- CPU share: kernel over in-place cache slices (overlaps with
+        //    the staging jobs above) -----------------------------------
+        if n_cpu > 0 {
+            let numerics = cx.backend.cpu_attn_numerics();
+            let cpu_ctx = {
+                let kvr = kv.read().unwrap();
+                let seqs: Vec<SeqAttn<'_>> = (0..n_cpu)
+                    .map(|i| {
+                        let (ks, vs) = kvr.slices_n(layer, slots[i], lens_now[i]);
+                        SeqAttn { q: q.row(i), k: ks, v: vs, len: lens_now[i] }
+                    })
+                    .collect();
+                let t0 = Instant::now();
+                let ctx = decode_attention_t(
+                    &seqs,
+                    c.num_heads,
+                    c.num_kv_heads,
+                    c.head_dim,
+                    numerics,
+                    cx.cpu_threads,
+                );
+                cx.metrics.record_module(
+                    ModuleKind::CpuAttn.name(),
+                    t0.elapsed().as_secs_f64(),
+                    n_cpu,
+                    n_cpu,
+                );
+                cx.metrics.cpu_attn_seqs += n_cpu as u64;
+                ctx
+            };
+            acc.push(&cpu_ctx);
+        }
+
+        // -- GPU share: execute the staged micro-batches -----------------
+        for (abs, nb, bucket, ln, hk, hv) in handles {
+            let ks = HostTensor::from_vec(hk.wait(), cap * kvd);
+            let vs = HostTensor::from_vec(hv.wait(), cap * kvd);
+            let q_b = q.padded(abs, bucket);
+            let mut lens_i = vec![0i32; bucket];
+            for (j, &l) in ln.iter().enumerate() {
+                lens_i[j] = l as i32;
+            }
+            let t0 = Instant::now();
+            let ctx = cx.backend.attn_decode(&q_b, &ks, &vs, &lens_i)?;
+            cx.metrics
+                .record_module(self.name(), t0.elapsed().as_secs_f64(), nb, bucket);
+            let wb = cx.backend.take_uploaded_bytes();
+            cx.account(wb, bucket * (qd + 2 * cap * kvd + 1) * 4, bucket * qd * 4);
+            cx.metrics.gpu_attn_seqs += nb as u64;
+            acc.push_rows(&ctx.data[..nb * qd]);
+        }
+        debug_assert!(acc.is_ready());
+        Ok(acc.take())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PostAttention
+// ---------------------------------------------------------------------------
+
+pub struct PostAttention;
+
+impl Module for PostAttention {
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::PostAttention
+    }
+    fn micro_batch(&self, _plan: &Plan, cfg: &RtConfig) -> usize {
+        max_bucket(&cfg.token_buckets)
+    }
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64 {
+        2.0 * cfg.q_dim() as f64 * cfg.hidden_size as f64
+    }
+}
+
+impl PostAttention {
+    /// Output projection + residual over flat tokens.
+    pub fn run(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        layer: usize,
+        ctx_t: &HostTensor,
+        resid: &HostTensor,
+    ) -> Result<HostTensor> {
+        let c = cx.backend.cfg().clone();
+        let (h, qd) = (c.hidden_size, c.q_dim());
+        let mut out = HostTensor::empty(h);
+        for r in micro_batches(resid.rows, max_bucket(&c.token_buckets)) {
+            let n = r.len();
+            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+            let ctx_b = ctx_t.padded(r.clone(), bucket);
+            let res_b = resid.padded(r, bucket);
+            let t0 = Instant::now();
+            let y = cx.backend.post_attention(layer, &ctx_b, &res_b)?;
+            cx.metrics
+                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+            let wb = cx.backend.take_uploaded_bytes();
+            cx.account(wb, bucket * (qd + h) * 4, bucket * h * 4);
+            out.push_rows(&y.data[..n * h]);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+pub struct Router;
+
+impl Module for Router {
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::Router
+    }
+    fn micro_batch(&self, _plan: &Plan, cfg: &RtConfig) -> usize {
+        max_bucket(&cfg.token_buckets)
+    }
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64 {
+        2.0 * cfg.hidden_size as f64 * cfg.num_experts as f64
+    }
+}
+
+impl Router {
+    /// Pre-MoE norm + top-k router over the full accumulated batch.
+    /// Returns (xn, idx `n*k`, weights `[n, k]`).
+    pub fn run(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        layer: usize,
+        x: &HostTensor,
+    ) -> Result<(HostTensor, Vec<i32>, HostTensor)> {
+        let c = cx.backend.cfg().clone();
+        let (h, k) = (c.hidden_size, c.top_k);
+        let mut xn = HostTensor::empty(h);
+        let mut idx = Vec::with_capacity(x.rows * k);
+        let mut wts = HostTensor::empty(k);
+        for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
+            let n = r.len();
+            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+            let x_b = x.padded(r, bucket);
+            let t0 = Instant::now();
+            let (xn_b, idx_b, wts_b) = cx.backend.router(layer, &x_b)?;
+            cx.metrics
+                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+            let wb = cx.backend.take_uploaded_bytes();
+            cx.account(wb, bucket * h * 4, bucket * (h + 2 * k) * 4);
+            xn.push_rows(&xn_b.data[..n * h]);
+            idx.extend_from_slice(&idx_b[..n * k]);
+            wts.push_rows(&wts_b.data[..n * k]);
+        }
+        Ok((xn, idx, wts))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Experts (gather → expert kernel → weighted scatter, + shared expert)
+// ---------------------------------------------------------------------------
+
+pub struct Experts;
+
+impl Module for Experts {
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::ExpertFfn
+    }
+    fn micro_batch(&self, plan: &Plan, cfg: &RtConfig) -> usize {
+        plan.expert_micro.clamp(1, max_bucket(&cfg.expert_buckets))
+    }
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64 {
+        6.0 * cfg.hidden_size as f64 * cfg.ffn_inter as f64
+    }
+}
+
+impl Experts {
+    /// Sparse-MoE phase over the full accumulated batch: router →
+    /// per-expert gather/kernel/scatter (micro-batched at the strategy's
+    /// `b_e`) → shared expert → residual. This is module-based batching's
+    /// expert phase (paper Fig. 2): every expert sees the tokens of the
+    /// *whole* accumulated batch, not of one attention micro-batch.
+    pub fn run(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        plan: &Plan,
+        layer: usize,
+        x: HostTensor,
+    ) -> Result<HostTensor> {
+        let c = cx.backend.cfg().clone();
+        let (h, k, ne) = (c.hidden_size, c.top_k, c.num_experts);
+        let n = x.rows;
+        let (xn, idx, wts) = Router.run(cx, layer, &x)?;
+        let micro = self.micro_batch(plan, &c);
+
+        let mut acc = HostTensor::zeros(n, h);
+        for g in group_by_expert(&idx, &wts.data, n, k, ne) {
+            for r in micro_batches(g.rows.len(), micro) {
+                let rows = &g.rows[r.clone()];
+                let w = &g.weights[r];
+                let bucket = pick_bucket(rows.len(), &c.expert_buckets).unwrap();
+                let gathered = xn.gather(rows, bucket);
+                let t0 = Instant::now();
+                let y = cx
+                    .backend
+                    .expert_ffn(layer, ExpertSel::Routed(g.expert), &gathered)?;
+                cx.metrics.record_module(
+                    self.name(),
+                    t0.elapsed().as_secs_f64(),
+                    rows.len(),
+                    bucket,
+                );
+                let wb = cx.backend.take_uploaded_bytes();
+                cx.account(wb, bucket * h * 4, bucket * h * 4);
+                acc.scatter_add(rows, w, &y);
+            }
+        }
+        if c.use_shared_expert {
+            for r in micro_batches(n, micro) {
+                let rows = r.len();
+                let bucket = pick_bucket(rows, &c.expert_buckets).unwrap();
+                let x_b = xn.padded(r.clone(), bucket);
+                let t0 = Instant::now();
+                let ys = cx.backend.expert_ffn(layer, ExpertSel::Shared, &x_b)?;
+                cx.metrics.record_module(
+                    ModuleKind::SharedExpert.name(),
+                    t0.elapsed().as_secs_f64(),
+                    rows,
+                    bucket,
+                );
+                let wb = cx.backend.take_uploaded_bytes();
+                cx.account(wb, bucket * h * 4, bucket * h * 4);
+                add_assign(acc.rows_slice_mut(r), &ys.data[..rows * h]);
+            }
+        }
+        let mut out = x;
+        out.add_assign(&acc); // residual: out = x + acc
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LmHead
+// ---------------------------------------------------------------------------
+
+pub struct LmHead;
+
+impl Module for LmHead {
+    fn kind(&self) -> ModuleKind {
+        ModuleKind::LmHead
+    }
+    fn micro_batch(&self, _plan: &Plan, cfg: &RtConfig) -> usize {
+        max_bucket(&cfg.token_buckets)
+    }
+    fn flops_per_row(&self, cfg: &RtConfig) -> f64 {
+        2.0 * cfg.hidden_size as f64 * cfg.vocab_size as f64
+    }
+}
+
+impl LmHead {
+    /// Greedy next-token over `x.rows` final hidden rows.
+    pub fn run(&self, cx: &mut ExecCtx<'_>, x: &HostTensor) -> Result<Vec<i32>> {
+        let c = cx.backend.cfg().clone();
+        let h = c.hidden_size;
+        let mut out = Vec::with_capacity(x.rows);
+        for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
+            let n = r.len();
+            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+            let x_b = x.padded(r, bucket);
+            let t0 = Instant::now();
+            let ids = cx.backend.lm_head(&x_b)?;
+            cx.metrics
+                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+            let wb = cx.backend.take_uploaded_bytes();
+            cx.account(wb, bucket * h * 4, bucket * 4);
+            out.extend_from_slice(&ids[..n]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_names_are_canonical() {
+        let names: Vec<&str> = ModuleKind::ALL.iter().map(|m| m.name()).collect();
+        assert!(names.contains(&"expert_ffn"));
+        assert!(names.contains(&"attn_decode"));
+        // No duplicates.
+        let set: std::collections::HashSet<&str> = names.iter().copied().collect();
+        assert_eq!(set.len(), names.len());
+    }
+
+    #[test]
+    fn micro_batches_follow_strategy() {
+        let cfg = RtConfig::tiny();
+        let plan = Plan {
+            accum_batch: 64,
+            attn_micro: 7,
+            prefill_attn_micro: 100,
+            expert_micro: 3,
+            omega: 0.0,
+        };
+        // Strategy-driven modules clamp the searched value to the bucket
+        // range; flat-token modules pool at the largest bucket.
+        assert_eq!(AttentionDecode.micro_batch(&plan, &cfg), 7);
+        assert_eq!(AttentionPrefill.micro_batch(&plan, &cfg), 16);
+        assert_eq!(Experts.micro_batch(&plan, &cfg), 3);
+        assert_eq!(Embed.micro_batch(&plan, &cfg), 512);
+        let plan2 = Plan { attn_micro: 9999, ..plan };
+        assert_eq!(AttentionDecode.micro_batch(&plan2, &cfg), 128);
+    }
+
+    #[test]
+    fn flops_positive_for_all_modules() {
+        let cfg = RtConfig::tiny();
+        let mods: Vec<Box<dyn Module>> = vec![
+            Box::new(Embed),
+            Box::new(PreAttention),
+            Box::new(AttentionPrefill),
+            Box::new(AttentionDecode),
+            Box::new(PostAttention),
+            Box::new(Router),
+            Box::new(Experts),
+            Box::new(LmHead),
+        ];
+        for m in &mods {
+            assert!(m.flops_per_row(&cfg) > 0.0, "{}", m.name());
+        }
+    }
+}

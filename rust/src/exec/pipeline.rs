@@ -1,0 +1,432 @@
+//! The strategy-driven module pipeline (paper §4.2, Fig. 5).
+//!
+//! [`Plan`] is the executable projection of a searched
+//! [`crate::sched::Strategy`]: the accumulated batch `B`, the attention
+//! micro-batch `b_a` (prefill and decode), the expert micro-batch `b_e`
+//! and the CPU-attention split ω. [`Pipeline`] drives one prefill wave or
+//! one decode step through the module layer ([`crate::exec::modules`]),
+//! draining each module's host-side accumulator at the plan's micro-batch
+//! sizes and overlapping KV staging (HtoD engine) with CPU attention and
+//! device compute.
+//!
+//! The `Engine` is a thin facade over this type; the batching schedule
+//! lives *here*, sourced from the strategy — nowhere else.
+
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::exec::modules::{
+    AttentionDecode, AttentionPrefill, Embed, Experts, ExpertSel, LmHead, ModuleKind,
+    PostAttention, PreAttention,
+};
+use crate::exec::tensor::HostTensor;
+use crate::kv::KvCache;
+use crate::memory::{TransferEngine, TransferHandle};
+use crate::metrics::Metrics;
+use crate::runtime::{Backend, RtConfig};
+use crate::sched::Strategy;
+
+/// Executable micro-batch plan — the live projection of a searched
+/// strategy onto one model's bucket grid. Raw strategy values are kept;
+/// each module clamps to its own bucket range at launch time
+/// ([`crate::exec::modules::Module::micro_batch`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Plan {
+    /// Accumulated batch `B`: sequences decoded (and prefilled) together.
+    pub accum_batch: usize,
+    /// Decode attention micro-batch `b_a` (sequences per staged window).
+    pub attn_micro: usize,
+    /// Prefill attention micro-batch (sequences per causal-attention launch).
+    pub prefill_attn_micro: usize,
+    /// Expert micro-batch cap `b_e` (tokens per expert launch).
+    pub expert_micro: usize,
+    /// CPU-attention split ratio ω ∈ [0, 1].
+    pub omega: f64,
+}
+
+impl Plan {
+    /// Project a decode strategy (plus optionally a prefill strategy for
+    /// its `b_a`) onto a runnable plan. `max_batch_cap` bounds `B` by the
+    /// engine's configured host budget.
+    pub fn from_strategy(
+        dec: &Strategy,
+        pre: Option<&Strategy>,
+        cfg: &RtConfig,
+        max_batch_cap: usize,
+    ) -> Plan {
+        Plan {
+            accum_batch: dec.b.min(max_batch_cap).max(1),
+            attn_micro: dec.b_a.max(1),
+            prefill_attn_micro: pre
+                .map(|p| p.b_a)
+                .unwrap_or_else(|| *cfg.prefill_batch_buckets.last().unwrap())
+                .max(1),
+            expert_micro: dec.b_e.max(1),
+            omega: dec.omega.clamp(0.0, 1.0),
+        }
+    }
+}
+
+/// Decoding state for a batch of sequences.
+pub struct BatchState {
+    pub kv: Arc<RwLock<KvCache>>,
+    /// KV slot per sequence, in batch order.
+    pub slots: Vec<usize>,
+    /// Tokens in cache per sequence (prompt + generated so far).
+    pub lens: Vec<usize>,
+    /// Most recent token per sequence (input to the next decode step).
+    pub last: Vec<i32>,
+}
+
+/// Everything a module launch needs, borrowed from the engine: the
+/// execution backend, the metrics sink, the two link engines and the
+/// outstanding-prefetch list.
+pub struct ExecCtx<'a> {
+    pub backend: &'a mut dyn Backend,
+    pub metrics: &'a mut Metrics,
+    pub htod: &'a TransferEngine,
+    pub dtoh: &'a TransferEngine,
+    pub pending: &'a mut Vec<TransferHandle>,
+    /// `true`: weight fetches queue on the HtoD engine and overlap with
+    /// compute (MoE-Gen prefetch); `false`: every launch stalls until its
+    /// weights crossed the link (on-demand, the baselines' behaviour).
+    pub prefetch: bool,
+    pub cpu_threads: usize,
+}
+
+impl ExecCtx<'_> {
+    /// Meter one module execution's traffic and model its weight fetch on
+    /// the HtoD link (see field `prefetch`).
+    pub fn account(&mut self, weight_bytes: usize, in_bytes: usize, out_bytes: usize) {
+        self.metrics.htod_bytes += (weight_bytes + in_bytes) as u64;
+        self.metrics.dtoh_bytes += out_bytes as u64;
+        let h = self.htod.account(weight_bytes + in_bytes);
+        if self.prefetch {
+            self.pending.push(h);
+        } else {
+            h.wait();
+        }
+    }
+
+    /// Synchronize all outstanding prefetched transfers (phase boundary).
+    pub fn drain_fetches(&mut self) {
+        for h in self.pending.drain(..) {
+            h.wait();
+        }
+    }
+}
+
+/// One prefill wave / decode step driver over the module layer.
+pub struct Pipeline {
+    pub plan: Plan,
+}
+
+impl Pipeline {
+    pub fn new(plan: Plan) -> Self {
+        Pipeline { plan }
+    }
+
+    /// The modules a decode step launches, in order — kept in sync with
+    /// the simulator's DAG builders by construction (same [`ModuleKind`]s).
+    pub fn decode_module_graph() -> Vec<ModuleKind> {
+        let mut g = vec![ModuleKind::Embed];
+        g.extend(ModuleKind::decode_layer_order());
+        g.push(ModuleKind::LmHead);
+        g
+    }
+
+    /// Prefill prompts into an existing KV pool. Returns
+    /// (slots, lens, first generated token per sequence).
+    pub fn prefill_into(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        kv: &Arc<RwLock<KvCache>>,
+        prompts: &[Vec<i32>],
+    ) -> Result<(Vec<usize>, Vec<usize>, Vec<i32>)> {
+        let t0 = Instant::now();
+        let c = cx.backend.cfg().clone();
+        let (b, s, h) = (prompts.len(), c.prefill_seq, c.hidden_size);
+        let kvd = c.kv_dim();
+        for p in prompts {
+            if p.len() > s {
+                bail!("prompt length {} exceeds prefill_seq {s}", p.len());
+            }
+            if p.is_empty() {
+                bail!("empty prompt");
+            }
+        }
+
+        let mut slots = Vec::with_capacity(b);
+        {
+            let mut kvw = kv.write().unwrap();
+            for _ in 0..b {
+                slots.push(
+                    kvw.alloc_slot()
+                        .ok_or_else(|| anyhow!("KV slot pool exhausted"))?,
+                );
+            }
+        }
+        let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+
+        // Flat padded token/position streams (pads: token 0 at pos 0).
+        let n = b * s;
+        let mut ids = vec![0i32; n];
+        let mut pos = vec![0i32; n];
+        for (i, p) in prompts.iter().enumerate() {
+            for (j, &t) in p.iter().enumerate() {
+                ids[i * s + j] = t;
+                pos[i * s + j] = j as i32;
+            }
+        }
+
+        let mut x = Embed.run(cx, &ids)?;
+        for layer in 0..c.num_layers {
+            let (q, k, v) = PreAttention.run(cx, layer, &x, &pos)?;
+            let ctx_t = AttentionPrefill.run(cx, &self.plan, &q, &k, &v, &lens, s)?;
+            // Write prompt K/V to the host cache (DtoH writeback).
+            {
+                let mut bytes = 0usize;
+                let mut kvw = kv.write().unwrap();
+                for (i, &slot) in slots.iter().enumerate() {
+                    let l = lens[i];
+                    kvw.write_prefill_t(layer, slot, &k, &v, i * s..i * s + l);
+                    bytes += 2 * l * kvd * 4;
+                }
+                cx.metrics.dtoh_bytes += bytes as u64;
+                cx.dtoh.account(bytes).wait();
+            }
+            x = PostAttention.run(cx, layer, &ctx_t, &x)?;
+            x = Experts.run(cx, &self.plan, layer, x)?;
+        }
+        {
+            let mut kvw = kv.write().unwrap();
+            for (i, &slot) in slots.iter().enumerate() {
+                kvw.set_len(slot, lens[i]);
+            }
+        }
+
+        // Last valid token of each sequence → first generated token.
+        let mut last_rows = HostTensor::zeros(b, h);
+        for i in 0..b {
+            let row = i * s + lens[i] - 1;
+            last_rows.row_mut(i).copy_from_slice(x.row(row));
+        }
+        let first = LmHead.run(cx, &last_rows)?;
+        cx.drain_fetches();
+
+        cx.metrics.prefill_tokens += lens.iter().sum::<usize>() as u64;
+        cx.metrics.prefill_secs += t0.elapsed().as_secs_f64();
+        Ok((slots, lens, first))
+    }
+
+    /// One decode step for all sequences in `state`; returns next tokens.
+    pub fn decode_step(&self, cx: &mut ExecCtx<'_>, state: &mut BatchState) -> Result<Vec<i32>> {
+        let t0 = Instant::now();
+        let c = cx.backend.cfg().clone();
+        let b = state.slots.len();
+        let kvd = c.kv_dim();
+
+        let pos: Vec<i32> = state.lens.iter().map(|&l| l as i32).collect();
+        let mut x = Embed.run(cx, &state.last)?;
+
+        for layer in 0..c.num_layers {
+            let (q, k, v) = PreAttention.run(cx, layer, &x, &pos)?;
+            // Append this step's K/V (per sequence) before attention.
+            {
+                let mut kvw = state.kv.write().unwrap();
+                for (i, &slot) in state.slots.iter().enumerate() {
+                    kvw.append_t(layer, slot, &k, &v, i);
+                }
+                cx.metrics.dtoh_bytes += (2 * b * kvd * 4) as u64;
+            }
+            let lens_now: Vec<usize> = state.lens.iter().map(|&l| l + 1).collect();
+
+            let ctx_t = AttentionDecode.run(
+                cx,
+                &self.plan,
+                layer,
+                &q,
+                &state.kv,
+                &state.slots,
+                &lens_now,
+            )?;
+            x = PostAttention.run(cx, layer, &ctx_t, &x)?;
+            x = Experts.run(cx, &self.plan, layer, x)?;
+        }
+
+        let next = LmHead.run(cx, &x)?;
+        cx.drain_fetches();
+        {
+            let mut kvw = state.kv.write().unwrap();
+            for (i, &slot) in state.slots.iter().enumerate() {
+                kvw.advance(slot);
+                state.lens[i] += 1;
+            }
+        }
+        state.last = next.clone();
+        cx.metrics.decode_tokens += b as u64;
+        cx.metrics.decode_secs += t0.elapsed().as_secs_f64();
+        Ok(next)
+    }
+
+    /// Measure live per-stage latency at every bucket (the paper's offline
+    /// workload profiling, App. B) — one row per pipeline stage × bucket,
+    /// recorded through the same metrics sink the live pipeline uses.
+    pub fn profile_modules(&self, cx: &mut ExecCtx<'_>) -> Result<Vec<(String, usize, f64)>> {
+        let c = cx.backend.cfg().clone();
+        let (h, qd, kvd, cap) = (c.hidden_size, c.q_dim(), c.kv_dim(), c.max_context);
+        let reps = 3;
+        let mut out: Vec<(String, usize, f64)> = Vec::new();
+        let push = |cx: &mut ExecCtx<'_>,
+                        out: &mut Vec<(String, usize, f64)>,
+                        kind: ModuleKind,
+                        bucket: usize,
+                        secs: f64| {
+            cx.metrics.record_module(kind.name(), secs, bucket, bucket);
+            // Meter (and reset) any weight uploads this probe triggered so
+            // they are not misattributed to the next real module launch.
+            let wb = cx.backend.take_uploaded_bytes();
+            cx.account(wb, 0, 0);
+            out.push((kind.name().to_string(), bucket, secs));
+        };
+
+        // Flat-token stages across the token buckets.
+        for &bkt in &c.token_buckets {
+            let x = HostTensor::from_vec(vec![0.1f32; bkt * h], h);
+            let ids = vec![1i32; bkt];
+            let pos = vec![0i32; bkt];
+            let ctx_t = HostTensor::from_vec(vec![0.1f32; bkt * qd], qd);
+
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                cx.backend.embed(&ids)?;
+            }
+            push(cx, &mut out, ModuleKind::Embed, bkt, t0.elapsed().as_secs_f64() / reps as f64);
+
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                cx.backend.pre_attention(0, &x, &pos)?;
+            }
+            push(
+                cx,
+                &mut out,
+                ModuleKind::PreAttention,
+                bkt,
+                t0.elapsed().as_secs_f64() / reps as f64,
+            );
+
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                cx.backend.post_attention(0, &ctx_t, &x)?;
+            }
+            push(
+                cx,
+                &mut out,
+                ModuleKind::PostAttention,
+                bkt,
+                t0.elapsed().as_secs_f64() / reps as f64,
+            );
+
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                cx.backend.router(0, &x)?;
+            }
+            push(cx, &mut out, ModuleKind::Router, bkt, t0.elapsed().as_secs_f64() / reps as f64);
+
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                cx.backend.lm_head(&x)?;
+            }
+            push(cx, &mut out, ModuleKind::LmHead, bkt, t0.elapsed().as_secs_f64() / reps as f64);
+        }
+
+        // Expert FFN across its buckets.
+        for &bkt in &c.expert_buckets {
+            let x = HostTensor::from_vec(vec![0.1f32; bkt * h], h);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                cx.backend.expert_ffn(0, ExpertSel::Routed(0), &x)?;
+            }
+            push(
+                cx,
+                &mut out,
+                ModuleKind::ExpertFfn,
+                bkt,
+                t0.elapsed().as_secs_f64() / reps as f64,
+            );
+        }
+
+        // Decode attention across its batch buckets.
+        for &bkt in &c.decode_batch_buckets {
+            let q = HostTensor::from_vec(vec![0.1f32; bkt * qd], qd);
+            let kw = HostTensor::from_vec(vec![0.1f32; bkt * cap * kvd], cap * kvd);
+            let vw = kw.clone();
+            let lens = vec![(cap / 2) as i32; bkt];
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                cx.backend.attn_decode(&q, &kw, &vw, &lens)?;
+            }
+            push(
+                cx,
+                &mut out,
+                ModuleKind::AttnDecode,
+                bkt,
+                t0.elapsed().as_secs_f64() / reps as f64,
+            );
+        }
+
+        // Prefill attention across its batch buckets.
+        for &bkt in &c.prefill_batch_buckets {
+            let s = c.prefill_seq;
+            let q = HostTensor::from_vec(vec![0.1f32; bkt * s * qd], s * qd);
+            let k = HostTensor::from_vec(vec![0.1f32; bkt * s * kvd], s * kvd);
+            let v = k.clone();
+            let lens = vec![s as i32; bkt];
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                cx.backend.attn_prefill(&q, &k, &v, &lens, s)?;
+            }
+            push(
+                cx,
+                &mut out,
+                ModuleKind::AttnPrefill,
+                bkt,
+                t0.elapsed().as_secs_f64() / reps as f64,
+            );
+        }
+        cx.drain_fetches();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_from_strategy_projects_and_caps() {
+        let cfg = RtConfig::tiny();
+        let dec = Strategy { b: 28_000, b_a: 256, b_e: 8192, omega: 0.6, s_expert: 0, s_params: 0 };
+        let pre = Strategy { b: 8192, b_a: 4, b_e: 2048, omega: 0.0, s_expert: 0, s_params: 0 };
+        let p = Plan::from_strategy(&dec, Some(&pre), &cfg, 128);
+        assert_eq!(p.accum_batch, 128, "B capped by engine budget");
+        assert_eq!(p.attn_micro, 256, "raw b_a kept (modules clamp at launch)");
+        assert_eq!(p.prefill_attn_micro, 4);
+        assert_eq!(p.expert_micro, 8192);
+        assert!((p.omega - 0.6).abs() < 1e-12);
+
+        let p2 = Plan::from_strategy(&dec, None, &cfg, 128);
+        assert_eq!(p2.prefill_attn_micro, 16, "defaults to largest prefill bucket");
+    }
+
+    #[test]
+    fn decode_module_graph_matches_canonical_order() {
+        let g = Pipeline::decode_module_graph();
+        assert_eq!(g.first(), Some(&ModuleKind::Embed));
+        assert_eq!(g.last(), Some(&ModuleKind::LmHead));
+        assert!(g.contains(&ModuleKind::AttnDecode));
+        assert!(g.contains(&ModuleKind::ExpertFfn));
+    }
+}

@@ -1,0 +1,228 @@
+//! Typed host-memory tensors for the module pipeline.
+//!
+//! The paper's module-based batching lives in *host* memory: attention
+//! outputs, routed hidden states and KV staging windows are all
+//! `rows × dim` f32 matrices shuttled between modules. [`HostTensor`]
+//! replaces the raw `Vec<f32>` + implicit-dim plumbing the monolithic
+//! engine used, and [`Accumulator`] generalizes the old
+//! `batching::Accumulator` into the per-module accumulators the
+//! [`crate::exec::Pipeline`] owns (one per module boundary, drained at the
+//! strategy's micro-batch sizes).
+
+use std::ops::Range;
+
+use crate::batching::{gather_rows, scatter_add};
+
+/// A `rows × dim` row-major f32 matrix in host memory.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub dim: usize,
+}
+
+impl HostTensor {
+    pub fn zeros(rows: usize, dim: usize) -> Self {
+        HostTensor { data: vec![0.0; rows * dim], rows, dim }
+    }
+
+    /// Empty tensor of width `dim` (for appending rows).
+    pub fn empty(dim: usize) -> Self {
+        HostTensor { data: Vec::new(), rows: 0, dim }
+    }
+
+    /// Wrap an existing flat buffer; `data.len()` must divide by `dim`.
+    pub fn from_vec(data: Vec<f32>, dim: usize) -> Self {
+        assert!(dim > 0);
+        assert_eq!(data.len() % dim, 0, "flat length {} not divisible by dim {dim}", data.len());
+        let rows = data.len() / dim;
+        HostTensor { data, rows, dim }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Contiguous view of a row range.
+    pub fn rows_slice(&self, r: Range<usize>) -> &[f32] {
+        &self.data[r.start * self.dim..r.end * self.dim]
+    }
+
+    pub fn rows_slice_mut(&mut self, r: Range<usize>) -> &mut [f32] {
+        &mut self.data[r.start * self.dim..r.end * self.dim]
+    }
+
+    /// Append `k` rows given as a flat slice of `k * dim` floats.
+    pub fn push_rows(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len() % self.dim, 0);
+        self.data.extend_from_slice(flat);
+        self.rows += flat.len() / self.dim;
+    }
+
+    /// Append all rows of another tensor of the same width.
+    pub fn extend(&mut self, other: &HostTensor) {
+        assert_eq!(self.dim, other.dim, "width mismatch {} vs {}", self.dim, other.dim);
+        self.push_rows(&other.data);
+    }
+
+    /// Copy of rows `r`, zero-padded to `bucket` rows (module launch input).
+    pub fn padded(&self, r: Range<usize>, bucket: usize) -> HostTensor {
+        assert!(r.len() <= bucket, "{} rows > bucket {bucket}", r.len());
+        let mut out = HostTensor::zeros(bucket, self.dim);
+        out.data[..r.len() * self.dim].copy_from_slice(self.rows_slice(r));
+        out
+    }
+
+    /// Gather `rows` into a fresh `bucket × dim` tensor (expert input).
+    pub fn gather(&self, rows: &[usize], bucket: usize) -> HostTensor {
+        HostTensor {
+            data: gather_rows(&self.data, self.dim, rows, bucket),
+            rows: bucket,
+            dim: self.dim,
+        }
+    }
+
+    /// `self[rows[i]] += weights[i] * y[i]` — the adjoint of [`gather`].
+    ///
+    /// [`gather`]: HostTensor::gather
+    pub fn scatter_add(&mut self, rows: &[usize], weights: &[f32], y: &HostTensor) {
+        assert_eq!(self.dim, y.dim);
+        scatter_add(&mut self.data, self.dim, rows, weights, &y.data);
+    }
+
+    /// Element-wise `self += other` over `self.rows` rows (`other` may be
+    /// bucket-padded longer).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.dim, other.dim);
+        assert!(other.rows >= self.rows);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Drop padding rows past `rows` (module launch output → valid rows).
+    pub fn truncated(mut self, rows: usize) -> HostTensor {
+        assert!(rows <= self.rows);
+        self.data.truncate(rows * self.dim);
+        self.rows = rows;
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+}
+
+/// Host-side token accumulator for one module boundary (paper Fig. 2,
+/// right): micro-batch outputs append in arrival order until the
+/// accumulated batch reaches the strategy's target `B`, then the next
+/// module drains one large batch.
+#[derive(Debug)]
+pub struct Accumulator {
+    t: HostTensor,
+    target_rows: usize,
+}
+
+impl Accumulator {
+    pub fn new(dim: usize, target_rows: usize) -> Self {
+        Accumulator { t: HostTensor::empty(dim), target_rows }
+    }
+
+    /// Append a micro-batch of `k * dim` values.
+    pub fn push_rows(&mut self, flat: &[f32]) {
+        self.t.push_rows(flat);
+    }
+
+    /// Append all rows of a tensor.
+    pub fn push(&mut self, x: &HostTensor) {
+        self.t.extend(x);
+    }
+
+    pub fn rows(&self) -> usize {
+        self.t.rows
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.t.rows >= self.target_rows
+    }
+
+    /// Take the accumulated batch (resets the accumulator).
+    pub fn take(&mut self) -> HostTensor {
+        let dim = self.t.dim;
+        std::mem::replace(&mut self.t, HostTensor::empty(dim))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_rows_dims() {
+        let t = HostTensor::zeros(3, 4);
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.dim, 4);
+        assert_eq!(t.data.len(), 12);
+    }
+
+    #[test]
+    fn from_vec_and_row_access() {
+        let t = HostTensor::from_vec((0..6).map(|i| i as f32).collect(), 3);
+        assert_eq!(t.rows, 2);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.rows_slice(0..2).len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn from_vec_rejects_ragged() {
+        HostTensor::from_vec(vec![0.0; 5], 3);
+    }
+
+    #[test]
+    fn padded_zero_fills() {
+        let t = HostTensor::from_vec(vec![1.0; 6], 3);
+        let p = t.padded(1..2, 4);
+        assert_eq!(p.rows, 4);
+        assert_eq!(p.row(0), &[1.0, 1.0, 1.0]);
+        assert!(p.data[3..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let x = HostTensor::from_vec((0..12).map(|i| i as f32).collect(), 3);
+        let g = x.gather(&[2, 0], 8);
+        assert_eq!(g.row(0), x.row(2));
+        assert_eq!(g.row(1), x.row(0));
+        let mut acc = HostTensor::zeros(4, 3);
+        acc.scatter_add(&[2, 0], &[1.0, 1.0], &g);
+        assert_eq!(acc.row(2), x.row(2));
+        assert_eq!(acc.row(0), x.row(0));
+        assert!(acc.row(1).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn truncated_drops_padding() {
+        let t = HostTensor::zeros(8, 2).truncated(3);
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.data.len(), 6);
+    }
+
+    #[test]
+    fn accumulator_reaches_target_and_resets() {
+        let mut acc = Accumulator::new(4, 10);
+        acc.push_rows(&vec![1.0; 4 * 6]);
+        assert!(!acc.is_ready());
+        acc.push(&HostTensor::from_vec(vec![2.0; 4 * 5], 4));
+        assert!(acc.is_ready());
+        let t = acc.take();
+        assert_eq!(t.rows, 11);
+        assert_eq!(t.data.len(), 44);
+        assert_eq!(acc.rows(), 0);
+        assert!(!acc.is_ready());
+    }
+}

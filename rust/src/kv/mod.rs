@@ -17,6 +17,8 @@
 //! The CPU-attention path (ω split) reads slices in place — zero copies,
 //! which is exactly why the paper runs the attention *mechanism* on CPU.
 
+use crate::exec::tensor::HostTensor;
+
 /// Per-layer K/V slabs for a fixed population of sequence slots.
 pub struct KvCache {
     pub num_layers: usize,
@@ -105,6 +107,27 @@ impl KvCache {
         self.v[layer][o..o + self.kvd].copy_from_slice(v_tok);
     }
 
+    /// Typed variant of [`KvCache::append`]: append row `row` of the
+    /// pipeline's flat K/V tensors (`[n, kv_dim]`).
+    pub fn append_t(&mut self, layer: usize, slot: usize, k: &HostTensor, v: &HostTensor, row: usize) {
+        assert_eq!(k.dim, self.kvd);
+        self.append(layer, slot, k.row(row), v.row(row));
+    }
+
+    /// Typed variant of [`KvCache::write_prefill`]: write the token rows
+    /// `rows` of the pipeline's flat K/V tensors as one prompt.
+    pub fn write_prefill_t(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        rows: std::ops::Range<usize>,
+    ) {
+        assert_eq!(k.dim, self.kvd);
+        self.write_prefill(layer, slot, k.rows_slice(rows.clone()), v.rows_slice(rows));
+    }
+
     /// Advance a sequence's length by one token (after all layers appended).
     pub fn advance(&mut self, slot: usize) {
         assert!(self.lens[slot] < self.capacity);
@@ -157,6 +180,22 @@ impl KvCache {
             out[i * row..i * row + n].copy_from_slice(&src[o..o + n]);
         }
         out
+    }
+
+    /// Typed variant of [`KvCache::gather_side`]: one staged window as a
+    /// `[bucket, capacity*kv_dim]` tensor (one row per sequence).
+    pub fn gather_side_t(
+        &self,
+        layer: usize,
+        seq_slots: &[usize],
+        lens: &[usize],
+        bucket: usize,
+        side_k: bool,
+    ) -> HostTensor {
+        HostTensor::from_vec(
+            self.gather_side(layer, seq_slots, lens, bucket, side_k),
+            self.capacity * self.kvd,
+        )
     }
 
     /// Pack the padded staging window `[bucket][capacity][kvd]` for the
@@ -276,6 +315,28 @@ mod tests {
             kv.append(0, s, &[0.0, 0.0], &[0.0, 0.0]);
             kv.advance(s);
         }
+    }
+
+    #[test]
+    fn typed_apis_match_slice_apis() {
+        let mut kv = mk();
+        let s = kv.alloc_slot().unwrap();
+        let kvd = kv.kvd;
+        let k = HostTensor::from_vec((0..3 * kvd).map(|i| i as f32).collect(), kvd);
+        let v = HostTensor::from_vec((0..3 * kvd).map(|i| -(i as f32)).collect(), kvd);
+        kv.write_prefill_t(0, s, &k, &v, 0..2);
+        kv.set_len(s, 2);
+        kv.append_t(0, s, &k, &v, 2);
+        kv.advance(s);
+        let (ks, vs, len) = kv.slices(0, s);
+        assert_eq!(len, 3);
+        assert_eq!(ks, &k.data[..]);
+        assert_eq!(vs, &v.data[..]);
+        let w = kv.gather_side_t(0, &[s], &[3], 2, true);
+        assert_eq!(w.rows, 2);
+        assert_eq!(w.dim, kv.capacity * kvd);
+        assert_eq!(&w.row(0)[..3 * kvd], &k.data[..]);
+        assert!(w.row(1).iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -3,21 +3,29 @@
 //! Rust reproduction of *MoE-Gen: High-Throughput MoE Inference on a Single
 //! GPU with Module-Based Batching* (Xu, Xue, Lu, Jackson, Mai — 2025).
 //!
-//! Three-layer architecture (see `DESIGN.md`):
+//! Three-layer architecture (see `DESIGN.md` at the repo root):
 //!
-//! * **Layer 3 (this crate)** — the coordinator: module-based batching
-//!   engine, host/device memory substrate with explicit HtoD/DtoH transfer
-//!   engines, full KV-cache offloading, the offloading-DAG critical-path
-//!   cost model (paper Eq. 4) and the batching-strategy search over
-//!   `(B, b_a, b_e, ω, S_Expert, S_Params)` (paper §4.3–4.4).
+//! * **Layer 3 (this crate)** — the coordinator: the strategy-driven
+//!   module pipeline ([`exec`]: `Module` trait, typed `HostTensor`
+//!   plumbing, per-module host accumulators), pluggable execution
+//!   backends ([`runtime`]: hermetic reference interpreter by default,
+//!   PJRT artifact runtime behind the `pjrt` feature), host/device memory
+//!   substrate with explicit HtoD/DtoH transfer engines, full KV-cache
+//!   offloading, the offloading-DAG critical-path cost model (paper
+//!   Eq. 4) and the batching-strategy search over
+//!   `(B, b_a, b_e, ω, S_Expert, S_Params)` (paper §4.3–4.4). The
+//!   simulator's DAG and the live pipeline share one module vocabulary
+//!   ([`exec::ModuleKind`]), so a searched strategy is directly
+//!   executable by `engine::Engine::generate`.
 //! * **Layer 2** — the MoE model, written in JAX as *separately lowered
 //!   modules* (`python/compile/model.py`), AOT-compiled to HLO text.
 //! * **Layer 1** — Pallas kernels for the expert FFN and flash attention
 //!   (`python/compile/kernels/`), embedded in the L2 HLO.
 //!
-//! Python never runs on the request path: the coordinator loads
-//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) once and
-//! serves everything from rust.
+//! Python never runs on the request path: with `--features pjrt` the
+//! coordinator loads `artifacts/*.hlo.txt` through the PJRT C API once
+//! and serves everything from rust; without it, the reference backend
+//! serves the same module graph hermetically.
 
 pub mod baselines;
 pub mod batching;
@@ -25,6 +33,7 @@ pub mod config;
 pub mod cpu_attn;
 pub mod dag;
 pub mod engine;
+pub mod exec;
 pub mod hw;
 pub mod kv;
 pub mod memory;

@@ -144,7 +144,7 @@ fn main() -> Result<()> {
             }
             println!(
                 "compile time total: {:.2}s",
-                *eng.rt.compile_secs.borrow()
+                eng.compile_secs()
             );
         }
         _ => {

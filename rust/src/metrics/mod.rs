@@ -90,6 +90,25 @@ impl Metrics {
             .unwrap_or(0.0)
     }
 
+    /// Per-module stats ordered by the canonical pipeline stage order
+    /// ([`crate::exec::ModuleKind::ALL`]), then any extra recorded names.
+    /// This is the "pipeline stages" view: the same vocabulary the
+    /// simulator's DAG and the live module layer share.
+    pub fn pipeline_stages(&self) -> Vec<(&str, &ModuleStat)> {
+        let mut out: Vec<(&str, &ModuleStat)> = Vec::new();
+        for kind in crate::exec::ModuleKind::ALL {
+            if let Some(s) = self.modules.get(kind.name()) {
+                out.push((kind.name(), s));
+            }
+        }
+        for (name, s) in &self.modules {
+            if crate::exec::ModuleKind::ALL.iter().all(|k| k.name() != name) {
+                out.push((name.as_str(), s));
+            }
+        }
+        out
+    }
+
     pub fn report(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
@@ -115,8 +134,8 @@ impl Metrics {
                 self.cpu_attn_seqs, self.gpu_attn_seqs
             ));
         }
-        s.push_str("module                 calls   avg-rows  pad%   total-s\n");
-        for (name, m) in &self.modules {
+        s.push_str("stage                  calls   avg-rows  pad%   total-s\n");
+        for (name, m) in self.pipeline_stages() {
             s.push_str(&format!(
                 "{name:<22} {:>6} {:>9.1} {:>5.1}  {:>8.3}\n",
                 m.calls,
@@ -170,5 +189,19 @@ mod tests {
         let r = m.report();
         assert!(r.contains("router"));
         assert!(r.contains("tok/s"));
+    }
+
+    #[test]
+    fn pipeline_stages_follow_canonical_order() {
+        let mut m = Metrics::new();
+        // Recorded out of order; the stage view re-orders by pipeline
+        // position (embed before attention before experts before lm_head).
+        m.record_module("lm_head", 0.1, 1, 1);
+        m.record_module("expert_ffn", 0.1, 1, 1);
+        m.record_module("embed", 0.1, 1, 1);
+        m.record_module("attn_decode", 0.1, 1, 1);
+        m.record_module("custom_probe", 0.1, 1, 1);
+        let names: Vec<&str> = m.pipeline_stages().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["embed", "attn_decode", "expert_ffn", "lm_head", "custom_probe"]);
     }
 }

@@ -1,26 +1,40 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them from rust.
+//! Execution backends for the module pipeline.
 //!
-//! The bridge follows /opt/xla-example/load_hlo: HLO **text** is the
-//! interchange format (jax >= 0.5 emits HloModuleProto with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids). Every module from `artifacts/manifest.json` is compiled
-//! once on first use and cached; python is never on the request path.
+//! The coordinator (`exec::Pipeline`) launches *modules* — embed,
+//! pre/post-attention, attention, router, expert FFN, lm-head — against
+//! the [`Backend`] trait. Two implementations:
 //!
-//! PJRT handles are `Rc`-based (not `Send`) — the whole runtime lives on
-//! the engine thread by construction.
+//! * [`RefBackend`] (default): a pure-rust reference interpreter of each
+//!   module's math (the rust analog of `python/compile/kernels/ref.py`),
+//!   with deterministically generated weights. Hermetic: no artifacts, no
+//!   XLA toolchain — this is what `cargo test` exercises.
+//! * `pjrt::PjRtBackend` (feature `pjrt`): the live path — loads AOT HLO
+//!   artifacts through the PJRT C API and executes the same module
+//!   programs the python reference engine ran (`artifacts/*.hlo.txt`).
+//!
+//! Both backends receive **bucket-padded** inputs: the pipeline owns the
+//! padding contract (smallest configured bucket ≥ rows, zero pads), so a
+//! backend sees only static shapes — exactly the deal the AOT artifacts
+//! demand, applied uniformly so the reference path cannot drift.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use anyhow::{anyhow, Result};
 
-use anyhow::{anyhow, bail, Context, Result};
-use xla::FromRawBytes;
-
+use crate::cpu_attn::Numerics;
+use crate::exec::modules::ExpertSel;
+use crate::exec::tensor::HostTensor;
 use crate::util::json::Json;
 
-/// Model + bucket configuration parsed from the manifest (mirrors
-/// `python/compile/config.py::TinyMoEConfig`).
+pub mod refback;
+pub use refback::RefBackend;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{lit_f32, lit_i32, to_f32, to_i32, Artifacts, ModuleSpec, PjRtBackend, Runtime, WeightStore};
+
+/// Model + bucket configuration (mirrors
+/// `python/compile/config.py::TinyMoEConfig`; parsed from the artifact
+/// manifest on the PJRT path, built by [`RtConfig::tiny`] otherwise).
 #[derive(Debug, Clone)]
 pub struct RtConfig {
     pub vocab_size: usize,
@@ -34,6 +48,8 @@ pub struct RtConfig {
     pub top_k: usize,
     pub use_shared_expert: bool,
     pub shared_inter: usize,
+    pub rope_theta: f32,
+    pub rms_eps: f32,
     pub max_context: usize,
     pub token_buckets: Vec<usize>,
     pub expert_buckets: Vec<usize>,
@@ -46,11 +62,38 @@ impl RtConfig {
     pub fn q_dim(&self) -> usize {
         self.num_heads * self.head_dim
     }
+
     pub fn kv_dim(&self) -> usize {
         self.num_kv_heads * self.head_dim
     }
 
-    fn from_json(c: &Json) -> Result<Self> {
+    /// The tiny live MoE (same topology class as the paper's models: GQA
+    /// attention + top-k router + SwiGLU experts + shared expert).
+    pub fn tiny() -> Self {
+        RtConfig {
+            vocab_size: 512,
+            hidden_size: 64,
+            num_layers: 2,
+            num_heads: 4,
+            num_kv_heads: 2,
+            head_dim: 16,
+            ffn_inter: 128,
+            num_experts: 8,
+            top_k: 2,
+            use_shared_expert: true,
+            shared_inter: 128,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+            max_context: 128,
+            token_buckets: vec![8, 32, 128, 512],
+            expert_buckets: vec![8, 32, 128, 512],
+            prefill_batch_buckets: vec![1, 4, 16],
+            prefill_seq: 64,
+            decode_batch_buckets: vec![8, 32, 128],
+        }
+    }
+
+    pub fn from_json(c: &Json) -> Result<Self> {
         let u = |k: &str| -> Result<usize> {
             c.get(k)
                 .and_then(Json::as_usize)
@@ -71,6 +114,8 @@ impl RtConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
             shared_inter: u("shared_inter")?,
+            rope_theta: c.get("rope_theta").and_then(Json::as_f64).unwrap_or(10000.0) as f32,
+            rms_eps: c.get("rms_eps").and_then(Json::as_f64).unwrap_or(1e-5) as f32,
             max_context: u("max_context")?,
             token_buckets: c.req("token_buckets").usize_arr(),
             expert_buckets: c.req("expert_buckets").usize_arr(),
@@ -81,335 +126,112 @@ impl RtConfig {
     }
 }
 
-/// One lowered module variant (a module × bucket).
-#[derive(Debug, Clone)]
-pub struct ModuleSpec {
-    pub name: String,
-    pub file: String,
-    /// Primary bucket size: token/expert rows, or batch for attention.
-    pub bucket: usize,
-    pub param_names: Vec<String>,
-    pub param_shapes: Vec<Vec<usize>>,
-    pub num_outputs: usize,
-}
+/// A module-execution backend. All tensor arguments arrive bucket-padded
+/// (static shapes); outputs are bucket-sized and the caller truncates to
+/// valid rows. Weight residency is the backend's job (the `S_Params`
+/// device cache on the PJRT path); [`Backend::take_uploaded_bytes`]
+/// reports the weight bytes that crossed the host→device link since the
+/// last call so the pipeline can meter traffic.
+pub trait Backend {
+    fn name(&self) -> &'static str;
 
-/// Parsed artifact registry.
-pub struct Artifacts {
-    pub dir: PathBuf,
-    pub cfg: RtConfig,
-    /// name -> variants sorted by ascending bucket.
-    by_name: HashMap<String, Vec<ModuleSpec>>,
-    pub weights_file: PathBuf,
-    pub golden_file: PathBuf,
-}
+    fn cfg(&self) -> &RtConfig;
 
-impl Artifacts {
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| {
-                format!(
-                    "reading {}/manifest.json (run `make artifacts`)",
-                    dir.display()
-                )
-            })?;
-        let m = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
-        let cfg = RtConfig::from_json(m.req("config"))?;
+    /// Token embedding: `ids` (bucket) → `[bucket, hidden]`.
+    fn embed(&mut self, ids: &[i32]) -> Result<HostTensor>;
 
-        let mut by_name: HashMap<String, Vec<ModuleSpec>> = HashMap::new();
-        for e in m.req("modules").as_arr().unwrap_or_default() {
-            let name = e.req("name").as_str().unwrap_or_default().to_string();
-            let meta = e.req("meta");
-            let bucket = meta
-                .get("tokens")
-                .or_else(|| meta.get("batch"))
-                .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("module {name}: no bucket in meta"))?;
-            let params = e.req("params").as_arr().unwrap_or_default();
-            let spec = ModuleSpec {
-                name: name.clone(),
-                file: e.req("file").as_str().unwrap_or_default().to_string(),
-                bucket,
-                param_names: params
-                    .iter()
-                    .map(|p| p.req("name").as_str().unwrap_or_default().to_string())
-                    .collect(),
-                param_shapes: params.iter().map(|p| p.req("shape").usize_arr()).collect(),
-                num_outputs: e.req("outputs").as_arr().map(|a| a.len()).unwrap_or(1),
-            };
-            by_name.entry(name).or_default().push(spec);
-        }
-        for v in by_name.values_mut() {
-            v.sort_by_key(|s| s.bucket);
-        }
-        let weights_file = dir.join(
-            m.get("weights_file")
-                .and_then(Json::as_str)
-                .unwrap_or("weights.npz"),
-        );
-        let golden_file = dir.join(
-            m.get("golden_file")
-                .and_then(Json::as_str)
-                .unwrap_or("golden.npz"),
-        );
-        Ok(Artifacts { dir, cfg, by_name, weights_file, golden_file })
-    }
+    /// RMSNorm + QKV projection + RoPE: `x [bucket, hidden]`, `pos`
+    /// (bucket) → `(q [bucket, q_dim], k, v [bucket, kv_dim])`.
+    fn pre_attention(
+        &mut self,
+        layer: usize,
+        x: &HostTensor,
+        pos: &[i32],
+    ) -> Result<(HostTensor, HostTensor, HostTensor)>;
 
-    /// Smallest variant of `name` whose bucket >= `rows`.
-    pub fn variant(&self, name: &str, rows: usize) -> Result<&ModuleSpec> {
-        let vs = self
-            .by_name
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown module {name}"))?;
-        vs.iter().find(|s| s.bucket >= rows).ok_or_else(|| {
-            anyhow!(
-                "{name}: no bucket fits {rows} rows (max {})",
-                vs.last().map(|s| s.bucket).unwrap_or(0)
-            )
-        })
-    }
+    /// Causal prefill attention over `seq`-padded prompts, packed per
+    /// sequence: `q [bucket, seq*q_dim]`, `k`/`v [bucket, seq*kv_dim]`,
+    /// `lens` (bucket) → ctx `[bucket, seq*q_dim]`.
+    fn attn_prefill(
+        &mut self,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        lens: &[i32],
+        seq: usize,
+    ) -> Result<HostTensor>;
 
-    pub fn buckets(&self, name: &str) -> Vec<usize> {
-        self.by_name
-            .get(name)
-            .map(|v| v.iter().map(|s| s.bucket).collect())
-            .unwrap_or_default()
-    }
+    /// Single-position attention against staged KV windows:
+    /// `q [bucket, q_dim]`, `k_win`/`v_win [bucket, capacity*kv_dim]`,
+    /// `lens` (bucket, current token included) → ctx `[bucket, q_dim]`.
+    fn attn_decode(
+        &mut self,
+        q: &HostTensor,
+        k_win: &HostTensor,
+        v_win: &HostTensor,
+        lens: &[i32],
+    ) -> Result<HostTensor>;
 
-    pub fn module_names(&self) -> Vec<&str> {
-        self.by_name.keys().map(|s| s.as_str()).collect()
-    }
-}
+    /// Output projection + residual: ctx `[bucket, q_dim]`, resid
+    /// `[bucket, hidden]` → `[bucket, hidden]`.
+    fn post_attention(
+        &mut self,
+        layer: usize,
+        ctx: &HostTensor,
+        resid: &HostTensor,
+    ) -> Result<HostTensor>;
 
-/// Host-resident weight store (the paper's "model weights in host
-/// memory"): name -> Literal, loaded once from weights.npz.
-pub struct WeightStore {
-    weights: HashMap<String, Rc<xla::Literal>>,
-    pub total_bytes: usize,
-}
+    /// Pre-MoE norm + top-k router: `x [bucket, hidden]` →
+    /// `(xn [bucket, hidden], idx bucket*k, weights [bucket, k])`.
+    fn router(&mut self, layer: usize, x: &HostTensor)
+        -> Result<(HostTensor, Vec<i32>, HostTensor)>;
 
-impl WeightStore {
-    pub fn load(path: &Path) -> Result<Self> {
-        let pairs = xla::Literal::read_npz(path, &())
-            .with_context(|| format!("reading {}", path.display()))?;
-        let mut total = 0usize;
-        let mut weights = HashMap::new();
-        for (name, lit) in pairs {
-            total += lit.size_bytes();
-            weights.insert(name, Rc::new(lit));
-        }
-        Ok(WeightStore { weights, total_bytes: total })
-    }
+    /// One expert's SwiGLU FFN over its gathered micro-batch.
+    fn expert_ffn(&mut self, layer: usize, sel: ExpertSel, x: &HostTensor) -> Result<HostTensor>;
 
-    pub fn get(&self, name: &str) -> Result<Rc<xla::Literal>> {
-        self.weights
-            .get(name)
-            .cloned()
-            .ok_or_else(|| anyhow!("missing weight {name}"))
-    }
+    /// Final norm + greedy argmax: `x [bucket, hidden]` → ids (bucket).
+    fn lm_head(&mut self, x: &HostTensor) -> Result<Vec<i32>>;
 
-    /// Bytes of one named weight.
-    pub fn bytes(&self, name: &str) -> usize {
-        self.weights.get(name).map(|l| l.size_bytes()).unwrap_or(0)
-    }
+    /// Weight bytes uploaded host→device since the last call (`S_Params`
+    /// cache misses); resets the counter.
+    fn take_uploaded_bytes(&mut self) -> usize;
 
-    pub fn names(&self) -> Vec<&str> {
-        self.weights.keys().map(|s| s.as_str()).collect()
-    }
-}
+    /// Total host-resident weight bytes.
+    fn weights_total_bytes(&self) -> usize;
 
-/// The PJRT runtime: device client + compiled-executable cache.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub artifacts: Artifacts,
-    pub weights: WeightStore,
-    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// Device-resident weight buffers (the live analog of the paper's
-    /// `S_Params` GPU parameter cache): uploaded once on first use so hot
-    /// modules stop re-copying weights host→device on every launch.
-    weight_bufs: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
-    /// Cumulative compile time (artifact -> executable), for reporting.
-    pub compile_secs: RefCell<f64>,
-}
+    /// Numerics contract for the ω-split CPU attention kernel: the CPU
+    /// path must reproduce this backend's attention arithmetic so greedy
+    /// tokens do not depend on where attention ran (paper App. B).
+    fn cpu_attn_numerics(&self) -> Numerics;
 
-impl Runtime {
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let artifacts = Artifacts::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let weights = WeightStore::load(&artifacts.weights_file)?;
-        Ok(Runtime {
-            client,
-            artifacts,
-            weights,
-            execs: RefCell::new(HashMap::new()),
-            weight_bufs: RefCell::new(HashMap::new()),
-            compile_secs: RefCell::new(0.0),
-        })
-    }
-
-    /// Device-resident buffer for a named weight (uploaded on first use,
-    /// cached — the `S_Params` cache). Returns the buffer plus whether
-    /// this call performed the upload (for traffic accounting).
-    pub fn weight_buffer(&self, name: &str) -> Result<(Rc<xla::PjRtBuffer>, bool)> {
-        if let Some(b) = self.weight_bufs.borrow().get(name) {
-            return Ok((Rc::clone(b), false));
-        }
-        let lit = self.weights.get(name)?;
-        let buf = Rc::new(self.upload(&lit)?);
-        self.weight_bufs
-            .borrow_mut()
-            .insert(name.to_string(), Rc::clone(&buf));
-        Ok((buf, true))
-    }
-
-    /// Upload a literal to the device as a fresh buffer.
-    ///
-    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall — data is
-    /// copied *during* the call), NOT `buffer_from_host_literal`: the TFRT
-    /// CPU client's BufferFromHostLiteral copies asynchronously and would
-    /// read freed memory once a temporary literal is dropped.
-    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let buf = match lit.ty()? {
-            xla::ElementType::S32 => self
-                .client
-                .buffer_from_host_buffer(&lit.to_vec::<i32>()?, &dims, None)?,
-            xla::ElementType::F32 => self
-                .client
-                .buffer_from_host_buffer(&lit.to_vec::<f32>()?, &dims, None)?,
-            other => bail!("upload: unsupported element type {other:?}"),
-        };
-        Ok(buf)
-    }
-
-    /// Direct host-slice → device-buffer upload (skips the intermediate
-    /// Literal copy — see EXPERIMENTS.md §Perf).
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
-    /// Direct i32 upload (token ids, lengths, positions).
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
-    /// Execute a module variant with device buffers as arguments (weights
-    /// from the `S_Params` cache + freshly uploaded activations).
-    pub fn execute_b(
-        &self,
-        spec: &ModuleSpec,
-        args: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<xla::Literal>> {
-        if args.len() != spec.param_names.len() {
-            bail!(
-                "{}: expected {} args, got {}",
-                spec.name,
-                spec.param_names.len(),
-                args.len()
-            );
-        }
-        let exe = self.executable(spec)?;
-        let bufs = exe.execute_b::<&xla::PjRtBuffer>(args)?;
-        let result = bufs[0][0].to_literal_sync()?;
-        Ok(result.to_tuple()?)
-    }
-
-    pub fn cfg(&self) -> &RtConfig {
-        &self.artifacts.cfg
-    }
-
-    /// Compile (or fetch cached) the executable for a module variant.
-    pub fn executable(&self, spec: &ModuleSpec) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.execs.borrow().get(&spec.file) {
-            return Ok(Rc::clone(e));
-        }
-        let t0 = std::time::Instant::now();
-        let path = self.artifacts.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
-        self.execs
-            .borrow_mut()
-            .insert(spec.file.clone(), Rc::clone(&exe));
-        Ok(exe)
-    }
-
-    /// Eagerly compile every variant of the given modules (warm-up, so the
-    /// serving loop never hits a compile stall).
-    pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for name in names {
-            for b in self.artifacts.buckets(name) {
-                let spec = self.artifacts.variant(name, b)?.clone();
-                self.executable(&spec)?;
-            }
-        }
+    /// Pre-compile / pre-touch every module variant (no-op off-PJRT).
+    fn warmup(&mut self) -> Result<()> {
         Ok(())
     }
 
-    /// Execute a module variant with the given argument literals. Returns
-    /// the decomposed output tuple.
-    pub fn execute(&self, spec: &ModuleSpec, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if args.len() != spec.param_names.len() {
-            bail!(
-                "{}: expected {} args, got {}",
-                spec.name,
-                spec.param_names.len(),
-                args.len()
-            );
+    /// Cumulative artifact→executable compile time.
+    fn compile_secs(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Build the default backend for an engine config: the PJRT path when it
+/// is compiled in *and* the artifacts exist, the reference interpreter
+/// otherwise.
+pub fn default_backend(artifacts_dir: &std::path::Path) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if artifacts_dir.join("manifest.json").exists() {
+            return Ok(Box::new(PjRtBackend::new(artifacts_dir)?));
         }
-        let exe = self.executable(spec)?;
-        let bufs = exe.execute::<&xla::Literal>(args)?;
-        let result = bufs[0][0].to_literal_sync()?;
-        // Modules are lowered with return_tuple=True.
-        Ok(result.to_tuple()?)
     }
-
-    /// Convenience: resolve variant by rows then execute.
-    pub fn run(&self, name: &str, rows: usize, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let spec = self.artifacts.variant(name, rows)?.clone();
-        self.execute(&spec, args)
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Literal helpers
-// ---------------------------------------------------------------------------
-
-/// f32 literal with shape `dims`.
-pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    assert_eq!(data.len(), n, "lit_f32 shape mismatch");
-    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&d)?)
-}
-
-/// i32 literal with shape `dims`.
-pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    assert_eq!(data.len(), n, "lit_i32 shape mismatch");
-    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&d)?)
-}
-
-/// Extract f32 data from a literal.
-pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-/// Extract i32 data from a literal.
-pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
-    Ok(lit.to_vec::<i32>()?)
+    let _ = artifacts_dir;
+    Ok(Box::new(RefBackend::new(RtConfig::tiny(), RefBackend::WEIGHT_SEED)))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    // Unit tests that don't require artifacts; integration tests that load
-    // the real manifest live in rust/tests/integration_runtime.rs.
 
     #[test]
     fn rtconfig_from_json() {
@@ -429,11 +251,28 @@ mod tests {
         assert_eq!(c.kv_dim(), 32);
         assert_eq!(c.token_buckets, vec![8, 32]);
         assert!(c.use_shared_expert);
+        assert_eq!(c.rope_theta, 10000.0);
     }
 
     #[test]
     fn rtconfig_missing_key_errors() {
         let j = Json::parse(r#"{"vocab_size": 512}"#).unwrap();
         assert!(RtConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn tiny_config_matches_python_reference() {
+        let c = RtConfig::tiny();
+        assert_eq!(c.q_dim(), 64);
+        assert_eq!(c.kv_dim(), 32);
+        assert_eq!(c.prefill_seq, 64);
+        assert_eq!(*c.token_buckets.last().unwrap(), 512);
+    }
+
+    #[test]
+    fn default_backend_falls_back_to_reference() {
+        let b = default_backend(std::path::Path::new("definitely-missing-artifacts")).unwrap();
+        assert_eq!(b.name(), "ref-cpu");
+        assert_eq!(b.cfg().hidden_size, 64);
     }
 }

@@ -1,0 +1,564 @@
+//! PJRT runtime (feature `pjrt`): loads AOT HLO-text artifacts and
+//! executes them from rust.
+//!
+//! The bridge follows /opt/xla-example/load_hlo: HLO **text** is the
+//! interchange format (jax >= 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). Every module from `artifacts/manifest.json` is compiled
+//! once on first use and cached; python is never on the request path.
+//!
+//! PJRT handles are `Rc`-based (not `Send`) — the whole runtime lives on
+//! the engine thread by construction. [`PjRtBackend`] adapts the runtime
+//! to the backend trait the pipeline drives; inputs arrive bucket-padded
+//! (the pipeline owns the padding contract), so every launch is a static
+//! shape the AOT artifacts were lowered at.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::FromRawBytes;
+
+use crate::cpu_attn::Numerics;
+use crate::exec::modules::ExpertSel;
+use crate::exec::tensor::HostTensor;
+use crate::runtime::{Backend, RtConfig};
+use crate::util::json::Json;
+
+/// One lowered module variant (a module × bucket).
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub file: String,
+    /// Primary bucket size: token/expert rows, or batch for attention.
+    pub bucket: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+}
+
+/// Parsed artifact registry.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub cfg: RtConfig,
+    /// name -> variants sorted by ascending bucket.
+    by_name: HashMap<String, Vec<ModuleSpec>>,
+    pub weights_file: PathBuf,
+    pub golden_file: PathBuf,
+}
+
+impl Artifacts {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json (run `make artifacts`)",
+                    dir.display()
+                )
+            })?;
+        let m = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let cfg = RtConfig::from_json(m.req("config"))?;
+
+        let mut by_name: HashMap<String, Vec<ModuleSpec>> = HashMap::new();
+        for e in m.req("modules").as_arr().unwrap_or_default() {
+            let name = e.req("name").as_str().unwrap_or_default().to_string();
+            let meta = e.req("meta");
+            let bucket = meta
+                .get("tokens")
+                .or_else(|| meta.get("batch"))
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("module {name}: no bucket in meta"))?;
+            let params = e.req("params").as_arr().unwrap_or_default();
+            let spec = ModuleSpec {
+                name: name.clone(),
+                file: e.req("file").as_str().unwrap_or_default().to_string(),
+                bucket,
+                param_names: params
+                    .iter()
+                    .map(|p| p.req("name").as_str().unwrap_or_default().to_string())
+                    .collect(),
+                param_shapes: params.iter().map(|p| p.req("shape").usize_arr()).collect(),
+                num_outputs: e.req("outputs").as_arr().map(|a| a.len()).unwrap_or(1),
+            };
+            by_name.entry(name).or_default().push(spec);
+        }
+        for v in by_name.values_mut() {
+            v.sort_by_key(|s| s.bucket);
+        }
+        let weights_file = dir.join(
+            m.get("weights_file")
+                .and_then(Json::as_str)
+                .unwrap_or("weights.npz"),
+        );
+        let golden_file = dir.join(
+            m.get("golden_file")
+                .and_then(Json::as_str)
+                .unwrap_or("golden.npz"),
+        );
+        Ok(Artifacts { dir, cfg, by_name, weights_file, golden_file })
+    }
+
+    /// Smallest variant of `name` whose bucket >= `rows`.
+    pub fn variant(&self, name: &str, rows: usize) -> Result<&ModuleSpec> {
+        let vs = self
+            .by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown module {name}"))?;
+        vs.iter().find(|s| s.bucket >= rows).ok_or_else(|| {
+            anyhow!(
+                "{name}: no bucket fits {rows} rows (max {})",
+                vs.last().map(|s| s.bucket).unwrap_or(0)
+            )
+        })
+    }
+
+    pub fn buckets(&self, name: &str) -> Vec<usize> {
+        self.by_name
+            .get(name)
+            .map(|v| v.iter().map(|s| s.bucket).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn module_names(&self) -> Vec<&str> {
+        self.by_name.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Host-resident weight store (the paper's "model weights in host
+/// memory"): name -> Literal, loaded once from weights.npz.
+pub struct WeightStore {
+    weights: HashMap<String, Rc<xla::Literal>>,
+    pub total_bytes: usize,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<Self> {
+        let pairs = xla::Literal::read_npz(path, &())
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut total = 0usize;
+        let mut weights = HashMap::new();
+        for (name, lit) in pairs {
+            total += lit.size_bytes();
+            weights.insert(name, Rc::new(lit));
+        }
+        Ok(WeightStore { weights, total_bytes: total })
+    }
+
+    pub fn get(&self, name: &str) -> Result<Rc<xla::Literal>> {
+        self.weights
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing weight {name}"))
+    }
+
+    /// Bytes of one named weight.
+    pub fn bytes(&self, name: &str) -> usize {
+        self.weights.get(name).map(|l| l.size_bytes()).unwrap_or(0)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.weights.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// The PJRT runtime: device client + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts: Artifacts,
+    pub weights: WeightStore,
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Device-resident weight buffers (the live analog of the paper's
+    /// `S_Params` GPU parameter cache): uploaded once on first use so hot
+    /// modules stop re-copying weights host→device on every launch.
+    weight_bufs: RefCell<HashMap<String, Rc<xla::PjRtBuffer>>>,
+    /// Cumulative compile time (artifact -> executable), for reporting.
+    pub compile_secs: RefCell<f64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts = Artifacts::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let weights = WeightStore::load(&artifacts.weights_file)?;
+        Ok(Runtime {
+            client,
+            artifacts,
+            weights,
+            execs: RefCell::new(HashMap::new()),
+            weight_bufs: RefCell::new(HashMap::new()),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    /// Device-resident buffer for a named weight (uploaded on first use,
+    /// cached — the `S_Params` cache). Returns the buffer plus whether
+    /// this call performed the upload (for traffic accounting).
+    pub fn weight_buffer(&self, name: &str) -> Result<(Rc<xla::PjRtBuffer>, bool)> {
+        if let Some(b) = self.weight_bufs.borrow().get(name) {
+            return Ok((Rc::clone(b), false));
+        }
+        let lit = self.weights.get(name)?;
+        let buf = Rc::new(self.upload(&lit)?);
+        self.weight_bufs
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&buf));
+        Ok((buf, true))
+    }
+
+    /// Upload a literal to the device as a fresh buffer.
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall — data is
+    /// copied *during* the call), NOT `buffer_from_host_literal`: the TFRT
+    /// CPU client's BufferFromHostLiteral copies asynchronously and would
+    /// read freed memory once a temporary literal is dropped.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        #[allow(unreachable_patterns)] // real bindings have more dtypes
+        let buf = match lit.ty()? {
+            xla::ElementType::S32 => self
+                .client
+                .buffer_from_host_buffer(&lit.to_vec::<i32>()?, &dims, None)?,
+            xla::ElementType::F32 => self
+                .client
+                .buffer_from_host_buffer(&lit.to_vec::<f32>()?, &dims, None)?,
+            other => bail!("upload: unsupported element type {other:?}"),
+        };
+        Ok(buf)
+    }
+
+    /// Direct host-slice → device-buffer upload (skips the intermediate
+    /// Literal copy — see EXPERIMENTS.md §Perf).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Direct i32 upload (token ids, lengths, positions).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute a module variant with device buffers as arguments (weights
+    /// from the `S_Params` cache + freshly uploaded activations).
+    pub fn execute_b(
+        &self,
+        spec: &ModuleSpec,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != spec.param_names.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                spec.name,
+                spec.param_names.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(spec)?;
+        let bufs = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    pub fn cfg(&self) -> &RtConfig {
+        &self.artifacts.cfg
+    }
+
+    /// Compile (or fetch cached) the executable for a module variant.
+    pub fn executable(&self, spec: &ModuleSpec) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(&spec.file) {
+            return Ok(Rc::clone(e));
+        }
+        let t0 = std::time::Instant::now();
+        let path = self.artifacts.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        self.execs
+            .borrow_mut()
+            .insert(spec.file.clone(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Eagerly compile every variant of the given modules (warm-up, so the
+    /// serving loop never hits a compile stall).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for name in names {
+            for b in self.artifacts.buckets(name) {
+                let spec = self.artifacts.variant(name, b)?.clone();
+                self.executable(&spec)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a module variant with the given argument literals. Returns
+    /// the decomposed output tuple.
+    pub fn execute(&self, spec: &ModuleSpec, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != spec.param_names.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                spec.name,
+                spec.param_names.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(spec)?;
+        let bufs = exe.execute::<&xla::Literal>(args)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        // Modules are lowered with return_tuple=True.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Convenience: resolve variant by rows then execute.
+    pub fn run(&self, name: &str, rows: usize, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.artifacts.variant(name, rows)?.clone();
+        self.execute(&spec, args)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal with shape `dims`.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n, "lit_f32 shape mismatch");
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d)?)
+}
+
+/// i32 literal with shape `dims`.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n, "lit_i32 shape mismatch");
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d)?)
+}
+
+/// Extract f32 data from a literal.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract i32 data from a literal.
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+// ---------------------------------------------------------------------------
+// Backend adapter
+// ---------------------------------------------------------------------------
+
+/// The live PJRT execution backend: bucket-padded host tensors in,
+/// bucket-sized host tensors out, AOT HLO module programs in between.
+pub struct PjRtBackend {
+    pub rt: Runtime,
+    uploaded_bytes: usize,
+}
+
+impl PjRtBackend {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(PjRtBackend { rt: Runtime::new(artifacts_dir)?, uploaded_bytes: 0 })
+    }
+
+    /// Fetch weights as device-resident buffers (`S_Params` cache),
+    /// charging first-upload traffic to the backend's upload counter.
+    fn weight_bufs(&mut self, names: &[String]) -> Result<Vec<Rc<xla::PjRtBuffer>>> {
+        let mut bufs = Vec::with_capacity(names.len());
+        for n in names {
+            let (b, uploaded) = self.rt.weight_buffer(n)?;
+            if uploaded {
+                self.uploaded_bytes += self.rt.weights.bytes(n);
+            }
+            bufs.push(b);
+        }
+        Ok(bufs)
+    }
+}
+
+impl Backend for PjRtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn cfg(&self) -> &RtConfig {
+        self.rt.cfg()
+    }
+
+    fn embed(&mut self, ids: &[i32]) -> Result<HostTensor> {
+        let h = self.rt.cfg().hidden_size;
+        let bucket = ids.len();
+        let w = self.weight_bufs(&["emb".into()])?;
+        let ids_b = self.rt.upload_i32(ids, &[bucket])?;
+        let spec = self.rt.artifacts.variant("embed", bucket)?.clone();
+        let outs = self.rt.execute_b(&spec, &[w[0].as_ref(), &ids_b])?;
+        Ok(HostTensor::from_vec(to_f32(&outs[0])?, h))
+    }
+
+    fn pre_attention(
+        &mut self,
+        layer: usize,
+        x: &HostTensor,
+        pos: &[i32],
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let c = self.rt.cfg().clone();
+        let (h, qd, kvd) = (c.hidden_size, c.q_dim(), c.kv_dim());
+        let bucket = x.rows;
+        let p = format!("l{layer}.");
+        let names: Vec<String> =
+            ["ln1", "wq", "wk", "wv"].iter().map(|s| format!("{p}{s}")).collect();
+        let w = self.weight_bufs(&names)?;
+        let x_b = self.rt.upload_f32(&x.data, &[bucket, h])?;
+        let pos_b = self.rt.upload_i32(pos, &[bucket])?;
+        let spec = self.rt.artifacts.variant("pre_attention", bucket)?.clone();
+        let args: Vec<&xla::PjRtBuffer> =
+            w.iter().map(|l| l.as_ref()).chain([&x_b, &pos_b]).collect();
+        let outs = self.rt.execute_b(&spec, &args)?;
+        Ok((
+            HostTensor::from_vec(to_f32(&outs[0])?, qd),
+            HostTensor::from_vec(to_f32(&outs[1])?, kvd),
+            HostTensor::from_vec(to_f32(&outs[2])?, kvd),
+        ))
+    }
+
+    fn attn_prefill(
+        &mut self,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        lens: &[i32],
+        seq: usize,
+    ) -> Result<HostTensor> {
+        let c = self.rt.cfg().clone();
+        let (nh, nkv, hd) = (c.num_heads, c.num_kv_heads, c.head_dim);
+        let bucket = q.rows;
+        let q_l = lit_f32(&q.data, &[bucket, seq, nh, hd])?;
+        let k_l = lit_f32(&k.data, &[bucket, seq, nkv, hd])?;
+        let v_l = lit_f32(&v.data, &[bucket, seq, nkv, hd])?;
+        let lens_l = lit_i32(lens, &[bucket])?;
+        let spec = self.rt.artifacts.variant("attn_prefill", bucket)?.clone();
+        let outs = self.rt.execute(&spec, &[&q_l, &k_l, &v_l, &lens_l])?;
+        Ok(HostTensor::from_vec(to_f32(&outs[0])?, seq * c.q_dim()))
+    }
+
+    fn attn_decode(
+        &mut self,
+        q: &HostTensor,
+        k_win: &HostTensor,
+        v_win: &HostTensor,
+        lens: &[i32],
+    ) -> Result<HostTensor> {
+        let c = self.rt.cfg().clone();
+        let (nh, nkv, hd) = (c.num_heads, c.num_kv_heads, c.head_dim);
+        let cap = c.max_context;
+        let bucket = q.rows;
+        let q_l = lit_f32(&q.data, &[bucket, nh, hd])?;
+        let k_l = lit_f32(&k_win.data, &[bucket, cap, nkv, hd])?;
+        let v_l = lit_f32(&v_win.data, &[bucket, cap, nkv, hd])?;
+        let lens_l = lit_i32(lens, &[bucket])?;
+        let spec = self.rt.artifacts.variant("attn_decode", bucket)?.clone();
+        let outs = self.rt.execute(&spec, &[&q_l, &k_l, &v_l, &lens_l])?;
+        Ok(HostTensor::from_vec(to_f32(&outs[0])?, c.q_dim()))
+    }
+
+    fn post_attention(
+        &mut self,
+        layer: usize,
+        ctx: &HostTensor,
+        resid: &HostTensor,
+    ) -> Result<HostTensor> {
+        let c = self.rt.cfg().clone();
+        let (h, qd) = (c.hidden_size, c.q_dim());
+        let bucket = resid.rows;
+        let w = self.weight_bufs(&[format!("l{layer}.wo")])?;
+        let ctx_b = self.rt.upload_f32(&ctx.data, &[bucket, qd])?;
+        let res_b = self.rt.upload_f32(&resid.data, &[bucket, h])?;
+        let spec = self.rt.artifacts.variant("post_attention", bucket)?.clone();
+        let outs = self
+            .rt
+            .execute_b(&spec, &[w[0].as_ref(), &ctx_b, &res_b])?;
+        Ok(HostTensor::from_vec(to_f32(&outs[0])?, h))
+    }
+
+    fn router(
+        &mut self,
+        layer: usize,
+        x: &HostTensor,
+    ) -> Result<(HostTensor, Vec<i32>, HostTensor)> {
+        let c = self.rt.cfg().clone();
+        let (h, k) = (c.hidden_size, c.top_k);
+        let bucket = x.rows;
+        let p = format!("l{layer}.");
+        let w = self.weight_bufs(&[format!("{p}ln2"), format!("{p}wr")])?;
+        let x_b = self.rt.upload_f32(&x.data, &[bucket, h])?;
+        let spec = self.rt.artifacts.variant("router", bucket)?.clone();
+        let outs = self
+            .rt
+            .execute_b(&spec, &[w[0].as_ref(), w[1].as_ref(), &x_b])?;
+        Ok((
+            HostTensor::from_vec(to_f32(&outs[0])?, h),
+            to_i32(&outs[1])?,
+            HostTensor::from_vec(to_f32(&outs[2])?, k),
+        ))
+    }
+
+    fn expert_ffn(&mut self, layer: usize, sel: ExpertSel, x: &HostTensor) -> Result<HostTensor> {
+        let h = self.rt.cfg().hidden_size;
+        let bucket = x.rows;
+        let p = match sel {
+            ExpertSel::Routed(e) => format!("l{layer}.e{e}."),
+            ExpertSel::Shared => format!("l{layer}.se."),
+        };
+        let w = self.weight_bufs(&[format!("{p}wg"), format!("{p}wu"), format!("{p}wd")])?;
+        let x_b = self.rt.upload_f32(&x.data, &[bucket, h])?;
+        let spec = self.rt.artifacts.variant("expert_ffn", bucket)?.clone();
+        let outs = self
+            .rt
+            .execute_b(&spec, &[w[0].as_ref(), w[1].as_ref(), w[2].as_ref(), &x_b])?;
+        Ok(HostTensor::from_vec(to_f32(&outs[0])?, h))
+    }
+
+    fn lm_head(&mut self, x: &HostTensor) -> Result<Vec<i32>> {
+        let h = self.rt.cfg().hidden_size;
+        let bucket = x.rows;
+        let w = self.weight_bufs(&["lnf".into(), "lm_head".into()])?;
+        let x_b = self.rt.upload_f32(&x.data, &[bucket, h])?;
+        let spec = self.rt.artifacts.variant("lm_head", bucket)?.clone();
+        let outs = self
+            .rt
+            .execute_b(&spec, &[w[0].as_ref(), w[1].as_ref(), &x_b])?;
+        to_i32(&outs[0])
+    }
+
+    fn take_uploaded_bytes(&mut self) -> usize {
+        std::mem::take(&mut self.uploaded_bytes)
+    }
+
+    fn weights_total_bytes(&self) -> usize {
+        self.rt.weights.total_bytes
+    }
+
+    fn cpu_attn_numerics(&self) -> Numerics {
+        // The XLA artifacts accumulate in bf16-rounded steps; the paper's
+        // App. B consistency contract applies (see crate::cpu_attn).
+        Numerics::Bf16Consistent
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        let names: Vec<&str> = vec![
+            "embed", "pre_attention", "attn_prefill", "attn_decode",
+            "post_attention", "router", "expert_ffn", "lm_head",
+        ];
+        self.rt.warmup(&names)
+    }
+
+    fn compile_secs(&self) -> f64 {
+        *self.rt.compile_secs.borrow()
+    }
+}

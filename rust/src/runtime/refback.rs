@@ -1,0 +1,581 @@
+//! Reference backend: a pure-rust interpreter of every module's math.
+//!
+//! This is the rust analog of `python/compile/kernels/ref.py` — straight
+//! loops, f32 accumulation, no blocking — serving two jobs:
+//!
+//! 1. **Hermetic execution**: `cargo test` and the examples run the whole
+//!    engine/pipeline stack with no artifacts and no XLA toolchain.
+//! 2. **Numerical ground truth**: decode attention is literally the
+//!    ω-split CPU kernel ([`crate::cpu_attn`]) in `F32` mode, so the CPU
+//!    and "device" attention paths agree bit-for-bit and greedy tokens
+//!    cannot depend on where attention ran.
+//!
+//! Weights are generated deterministically (xorshift RNG, fixed seed) with
+//! the same shapes/scales as `python/compile/model.py::init_weights`.
+//! Weight-fetch traffic is modeled like the PJRT `S_Params` cache: the
+//! first time a module touches a weight it "uploads" it (bytes reported
+//! through [`Backend::take_uploaded_bytes`]), afterwards it is resident.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cpu_attn::{decode_attention, Numerics, SeqAttn};
+use crate::exec::modules::ExpertSel;
+use crate::exec::tensor::HostTensor;
+use crate::runtime::{Backend, RtConfig};
+use crate::util::rng::Rng;
+
+pub struct RefBackend {
+    cfg: RtConfig,
+    weights: HashMap<String, Vec<f32>>,
+    resident: HashSet<String>,
+    uploaded_bytes: usize,
+    total_bytes: usize,
+}
+
+impl RefBackend {
+    /// Fixed weight seed: the reference model is one model, not one per
+    /// engine config (golden traces must be stable across runs).
+    pub const WEIGHT_SEED: u64 = 0;
+
+    pub fn new(cfg: RtConfig, seed: u64) -> Self {
+        let weights = gen_weights(&cfg, seed);
+        let total_bytes = weights.values().map(|w| w.len() * 4).sum();
+        RefBackend { cfg, weights, resident: HashSet::new(), uploaded_bytes: 0, total_bytes }
+    }
+
+    fn weight(&self, name: &str) -> Result<&[f32]> {
+        self.weights
+            .get(name)
+            .map(Vec::as_slice)
+            .ok_or_else(|| anyhow!("missing weight {name}"))
+    }
+
+    /// Model the `S_Params` upload: first touch of a weight costs its bytes.
+    fn touch(&mut self, names: &[String]) {
+        for n in names {
+            if self.resident.insert(n.clone()) {
+                self.uploaded_bytes += self.weights.get(n).map(|w| w.len() * 4).unwrap_or(0);
+            }
+        }
+    }
+
+    fn expert_prefix(&self, layer: usize, sel: ExpertSel) -> String {
+        match sel {
+            ExpertSel::Routed(e) => format!("l{layer}.e{e}."),
+            ExpertSel::Shared => format!("l{layer}.se."),
+        }
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref-cpu"
+    }
+
+    fn cfg(&self) -> &RtConfig {
+        &self.cfg
+    }
+
+    fn embed(&mut self, ids: &[i32]) -> Result<HostTensor> {
+        self.touch(&["emb".to_string()]);
+        let h = self.cfg.hidden_size;
+        let emb = self.weight("emb")?;
+        let mut out = HostTensor::zeros(ids.len(), h);
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            if id >= self.cfg.vocab_size {
+                bail!("token id {id} out of vocabulary");
+            }
+            out.row_mut(i).copy_from_slice(&emb[id * h..(id + 1) * h]);
+        }
+        Ok(out)
+    }
+
+    fn pre_attention(
+        &mut self,
+        layer: usize,
+        x: &HostTensor,
+        pos: &[i32],
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let c = self.cfg.clone();
+        let (h, qd, kvd, hd) = (c.hidden_size, c.q_dim(), c.kv_dim(), c.head_dim);
+        assert_eq!(x.dim, h);
+        assert_eq!(x.rows, pos.len());
+        let p = format!("l{layer}.");
+        let names: Vec<String> =
+            ["ln1", "wq", "wk", "wv"].iter().map(|s| format!("{p}{s}")).collect();
+        self.touch(&names);
+
+        let xn = rmsnorm(x, self.weight(&names[0])?, c.rms_eps);
+        let mut q = matmul(&xn, self.weight(&names[1])?, qd);
+        let mut k = matmul(&xn, self.weight(&names[2])?, kvd);
+        let v = matmul(&xn, self.weight(&names[3])?, kvd);
+        rope(&mut q, pos, hd, c.rope_theta);
+        rope(&mut k, pos, hd, c.rope_theta);
+        Ok((q, k, v))
+    }
+
+    fn attn_prefill(
+        &mut self,
+        q: &HostTensor,
+        k: &HostTensor,
+        v: &HostTensor,
+        lens: &[i32],
+        seq: usize,
+    ) -> Result<HostTensor> {
+        let c = &self.cfg;
+        let (nh, nkv, hd) = (c.num_heads, c.num_kv_heads, c.head_dim);
+        let (qd, kvd) = (c.q_dim(), c.kv_dim());
+        let b = q.rows;
+        assert_eq!(q.dim, seq * qd);
+        assert_eq!(k.dim, seq * kvd);
+        assert_eq!(lens.len(), b);
+        let group = nh / nkv;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut ctx = HostTensor::zeros(b, seq * qd);
+        for bi in 0..b {
+            let len = lens[bi] as usize;
+            let kr = k.row(bi);
+            let vr = v.row(bi);
+            let qr = q.row(bi);
+            let out = ctx.row_mut(bi);
+            for i in 0..len.min(seq) {
+                for hq in 0..nh {
+                    let kvh = hq / group;
+                    let qv = &qr[i * qd + hq * hd..i * qd + (hq + 1) * hd];
+                    // Causal + length mask: keys j <= i (and j < len).
+                    let mut scores = Vec::with_capacity(i + 1);
+                    let mut max = f32::NEG_INFINITY;
+                    for j in 0..=i {
+                        let kv = &kr[j * kvd + kvh * hd..j * kvd + (kvh + 1) * hd];
+                        let mut acc = 0.0f32;
+                        for d in 0..hd {
+                            acc += qv[d] * kv[d];
+                        }
+                        let s = acc * scale;
+                        scores.push(s);
+                        max = max.max(s);
+                    }
+                    let mut denom = 0.0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max).exp();
+                        denom += *s;
+                    }
+                    let inv = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+                    let o = &mut out[i * qd + hq * hd..i * qd + (hq + 1) * hd];
+                    for (j, p) in scores.iter().enumerate() {
+                        let w = p * inv;
+                        let vv = &vr[j * kvd + kvh * hd..j * kvd + (kvh + 1) * hd];
+                        for d in 0..hd {
+                            o[d] += w * vv[d];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(ctx)
+    }
+
+    fn attn_decode(
+        &mut self,
+        q: &HostTensor,
+        k_win: &HostTensor,
+        v_win: &HostTensor,
+        lens: &[i32],
+    ) -> Result<HostTensor> {
+        let c = &self.cfg;
+        let (nh, nkv, hd) = (c.num_heads, c.num_kv_heads, c.head_dim);
+        let (qd, kvd) = (c.q_dim(), c.kv_dim());
+        let b = q.rows;
+        assert_eq!(q.dim, qd);
+        assert_eq!(k_win.dim, c.max_context * kvd);
+        assert_eq!(lens.len(), b);
+
+        // Literally the ω-split CPU kernel in F32 mode: device and CPU
+        // attention share one arithmetic path on this backend.
+        let seqs: Vec<SeqAttn<'_>> = (0..b)
+            .map(|i| {
+                let len = (lens[i] as usize).min(c.max_context);
+                SeqAttn {
+                    q: q.row(i),
+                    k: &k_win.row(i)[..len * kvd],
+                    v: &v_win.row(i)[..len * kvd],
+                    len,
+                }
+            })
+            .collect();
+        let mut out = vec![Vec::new(); b];
+        decode_attention(&seqs, nh, nkv, hd, Numerics::F32, &mut out, 1);
+        let mut ctx = HostTensor::zeros(b, qd);
+        for (i, o) in out.iter().enumerate() {
+            ctx.row_mut(i).copy_from_slice(o);
+        }
+        Ok(ctx)
+    }
+
+    fn post_attention(
+        &mut self,
+        layer: usize,
+        ctx: &HostTensor,
+        resid: &HostTensor,
+    ) -> Result<HostTensor> {
+        let name = format!("l{layer}.wo");
+        self.touch(std::slice::from_ref(&name));
+        assert_eq!(ctx.rows, resid.rows);
+        let mut out = matmul(ctx, self.weight(&name)?, self.cfg.hidden_size);
+        for (o, r) in out.data.iter_mut().zip(&resid.data) {
+            *o += r;
+        }
+        Ok(out)
+    }
+
+    fn router(
+        &mut self,
+        layer: usize,
+        x: &HostTensor,
+    ) -> Result<(HostTensor, Vec<i32>, HostTensor)> {
+        let c = self.cfg.clone();
+        let (e, k) = (c.num_experts, c.top_k);
+        let p = format!("l{layer}.");
+        let names = vec![format!("{p}ln2"), format!("{p}wr")];
+        self.touch(&names);
+
+        let xn = rmsnorm(x, self.weight(&names[0])?, c.rms_eps);
+        let logits = matmul(&xn, self.weight(&names[1])?, e);
+        let n = x.rows;
+        let mut idx = Vec::with_capacity(n * k);
+        let mut wts = HostTensor::zeros(n, k);
+        for t in 0..n {
+            // softmax over experts
+            let row = logits.row(t);
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut probs: Vec<f32> = row.iter().map(|&l| (l - max).exp()).collect();
+            let denom: f32 = probs.iter().sum();
+            for pv in probs.iter_mut() {
+                *pv /= denom;
+            }
+            // top-k by iterative argmax (stable first-max tie break, the
+            // same contract as python's topk_by_argmax).
+            let mut picked = Vec::with_capacity(k);
+            for _ in 0..k {
+                let mut best = 0usize;
+                for j in 1..e {
+                    if probs[j] > probs[best] {
+                        best = j;
+                    }
+                }
+                picked.push((best, probs[best]));
+                probs[best] = f32::NEG_INFINITY;
+            }
+            let sum: f32 = picked.iter().map(|&(_, w)| w).sum();
+            for (r, (j, w)) in picked.into_iter().enumerate() {
+                idx.push(j as i32);
+                wts.row_mut(t)[r] = w / sum;
+            }
+        }
+        Ok((xn, idx, wts))
+    }
+
+    fn expert_ffn(&mut self, layer: usize, sel: ExpertSel, x: &HostTensor) -> Result<HostTensor> {
+        let p = self.expert_prefix(layer, sel);
+        let names = vec![format!("{p}wg"), format!("{p}wu"), format!("{p}wd")];
+        self.touch(&names);
+        let inter = match sel {
+            ExpertSel::Routed(_) => self.cfg.ffn_inter,
+            ExpertSel::Shared => self.cfg.shared_inter,
+        };
+        let g = matmul(x, self.weight(&names[0])?, inter);
+        let u = matmul(x, self.weight(&names[1])?, inter);
+        let mut hmid = HostTensor::zeros(x.rows, inter);
+        for i in 0..g.data.len() {
+            hmid.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        Ok(matmul(&hmid, self.weight(&names[2])?, self.cfg.hidden_size))
+    }
+
+    fn lm_head(&mut self, x: &HostTensor) -> Result<Vec<i32>> {
+        let names = vec!["lnf".to_string(), "lm_head".to_string()];
+        self.touch(&names);
+        let xn = rmsnorm(x, self.weight("lnf")?, self.cfg.rms_eps);
+        let logits = matmul(&xn, self.weight("lm_head")?, self.cfg.vocab_size);
+        let mut out = Vec::with_capacity(x.rows);
+        for t in 0..x.rows {
+            let row = logits.row(t);
+            let mut best = 0usize;
+            for j in 1..row.len() {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            out.push(best as i32);
+        }
+        Ok(out)
+    }
+
+    fn take_uploaded_bytes(&mut self) -> usize {
+        std::mem::take(&mut self.uploaded_bytes)
+    }
+
+    fn weights_total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    fn cpu_attn_numerics(&self) -> Numerics {
+        // The reference device path is plain f32 (see attn_decode), so the
+        // consistent CPU mode is plain f32 too.
+        Numerics::F32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Module math (mirrors python/compile/kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+/// RMSNorm per row: `x * rsqrt(mean(x^2) + eps) * g`.
+fn rmsnorm(x: &HostTensor, g: &[f32], eps: f32) -> HostTensor {
+    assert_eq!(x.dim, g.len());
+    let mut out = HostTensor::zeros(x.rows, x.dim);
+    for t in 0..x.rows {
+        let row = x.row(t);
+        let mut ss = 0.0f32;
+        for &v in row {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / x.dim as f32 + eps).sqrt();
+        let o = out.row_mut(t);
+        for d in 0..row.len() {
+            o[d] = row[d] * inv * g[d];
+        }
+    }
+    out
+}
+
+/// Row-major matmul: `x [n, a] @ w [a, m] -> [n, m]`.
+fn matmul(x: &HostTensor, w: &[f32], m: usize) -> HostTensor {
+    let a = x.dim;
+    assert_eq!(w.len(), a * m, "weight shape mismatch: {} vs {a}x{m}", w.len());
+    let mut out = HostTensor::zeros(x.rows, m);
+    for t in 0..x.rows {
+        let row = x.row(t);
+        let o = out.row_mut(t);
+        for (i, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * m..(i + 1) * m];
+            for j in 0..m {
+                o[j] += xv * wrow[j];
+            }
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Rotary embedding, rotate-half convention, applied in place per head.
+/// `x` is `[n, heads*hd]`, `pos` the absolute position per row.
+fn rope(x: &mut HostTensor, pos: &[i32], hd: usize, theta: f32) {
+    let heads = x.dim / hd;
+    let half = hd / 2;
+    for t in 0..x.rows {
+        let p = pos[t] as f32;
+        let row = x.row_mut(t);
+        for h in 0..heads {
+            let o = &mut row[h * hd..(h + 1) * hd];
+            for i in 0..half {
+                let inv_freq = 1.0 / theta.powf(i as f32 / half as f32);
+                let ang = p * inv_freq;
+                let (sin, cos) = ang.sin_cos();
+                let x1 = o[i];
+                let x2 = o[i + half];
+                o[i] = x1 * cos - x2 * sin;
+                o[i + half] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+/// Deterministic weight init with the same shapes and scales as
+/// `python/compile/model.py::init_weights` (values differ — different
+/// RNG — but the *model* is fixed per seed).
+fn gen_weights(cfg: &RtConfig, seed: u64) -> HashMap<String, Vec<f32>> {
+    let mut rng = Rng::new(seed ^ 0x5EED_Fu64);
+    let mut w = HashMap::new();
+    fn nrm(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * scale).collect()
+    }
+    let (h, qd, kvd) = (cfg.hidden_size, cfg.q_dim(), cfg.kv_dim());
+    w.insert("emb".into(), nrm(&mut rng, cfg.vocab_size * h, 0.1));
+    for l in 0..cfg.num_layers {
+        let p = format!("l{l}.");
+        w.insert(format!("{p}ln1"), vec![1.0; h]);
+        w.insert(format!("{p}wq"), nrm(&mut rng, h * qd, 0.05));
+        w.insert(format!("{p}wk"), nrm(&mut rng, h * kvd, 0.05));
+        w.insert(format!("{p}wv"), nrm(&mut rng, h * kvd, 0.05));
+        w.insert(format!("{p}wo"), nrm(&mut rng, qd * h, 0.05));
+        w.insert(format!("{p}ln2"), vec![1.0; h]);
+        w.insert(format!("{p}wr"), nrm(&mut rng, h * cfg.num_experts, 0.5));
+        for e in 0..cfg.num_experts {
+            let q = format!("{p}e{e}.");
+            w.insert(format!("{q}wg"), nrm(&mut rng, h * cfg.ffn_inter, 0.05));
+            w.insert(format!("{q}wu"), nrm(&mut rng, h * cfg.ffn_inter, 0.05));
+            w.insert(format!("{q}wd"), nrm(&mut rng, cfg.ffn_inter * h, 0.05));
+        }
+        if cfg.use_shared_expert {
+            w.insert(format!("{p}se.wg"), nrm(&mut rng, h * cfg.shared_inter, 0.05));
+            w.insert(format!("{p}se.wu"), nrm(&mut rng, h * cfg.shared_inter, 0.05));
+            w.insert(format!("{p}se.wd"), nrm(&mut rng, cfg.shared_inter * h, 0.05));
+        }
+    }
+    w.insert("lnf".into(), vec![1.0; h]);
+    w.insert("lm_head".into(), nrm(&mut rng, h * cfg.vocab_size, 0.1));
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> RefBackend {
+        RefBackend::new(RtConfig::tiny(), RefBackend::WEIGHT_SEED)
+    }
+
+    #[test]
+    fn weights_deterministic_per_seed() {
+        let a = backend();
+        let b = backend();
+        assert_eq!(a.weights["emb"], b.weights["emb"]);
+        let c = RefBackend::new(RtConfig::tiny(), 7);
+        assert_ne!(a.weights["emb"], c.weights["emb"]);
+        assert!(a.total_bytes > 0);
+    }
+
+    #[test]
+    fn embed_looks_up_rows() {
+        let mut b = backend();
+        let out = b.embed(&[3, 3, 5]).unwrap();
+        assert_eq!(out.rows, 3);
+        assert_eq!(out.row(0), out.row(1));
+        assert_ne!(out.row(0), out.row(2));
+        assert!(b.embed(&[512]).is_err(), "out-of-vocab id must error");
+    }
+
+    #[test]
+    fn upload_accounting_charges_once() {
+        let mut b = backend();
+        let _ = b.embed(&[1]).unwrap();
+        let first = b.take_uploaded_bytes();
+        assert_eq!(first, 512 * 64 * 4, "emb upload = vocab*hidden*4");
+        let _ = b.embed(&[2]).unwrap();
+        assert_eq!(b.take_uploaded_bytes(), 0, "second touch is cached");
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let x = HostTensor::from_vec(vec![2.0; 8], 8);
+        let g = vec![1.0; 8];
+        let y = rmsnorm(&x, &g, 0.0);
+        for &v in &y.data {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_identity() {
+        let mut x = HostTensor::from_vec((0..32).map(|i| (i as f32 * 0.3).sin()).collect(), 32);
+        let orig = x.clone();
+        rope(&mut x, &[0], 16, 10000.0);
+        // pos 0: angle 0 -> identity.
+        assert_eq!(x.data, orig.data);
+        rope(&mut x, &[5], 16, 10000.0);
+        let n0: f32 = orig.data.iter().map(|v| v * v).sum();
+        let n1: f32 = x.data.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3, "rotation must preserve norm");
+    }
+
+    #[test]
+    fn router_topk_distinct_normalized() {
+        let mut b = backend();
+        let x = HostTensor::from_vec(
+            (0..3 * 64).map(|i| (i as f32 * 0.11).cos()).collect(),
+            64,
+        );
+        let (xn, idx, wts) = b.router(0, &x).unwrap();
+        assert_eq!(xn.rows, 3);
+        assert_eq!(idx.len(), 6);
+        for t in 0..3 {
+            assert_ne!(idx[t * 2], idx[t * 2 + 1], "top-k must be distinct");
+            let s: f32 = wts.row(t).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "weights renormalize to 1");
+            assert!(wts.row(t)[0] >= wts.row(t)[1], "descending weights");
+        }
+    }
+
+    #[test]
+    fn attn_decode_single_token_returns_v() {
+        let mut b = backend();
+        let c = b.cfg().clone();
+        let (qd, kvd, cap) = (c.q_dim(), c.kv_dim(), c.max_context);
+        let q = HostTensor::from_vec(vec![0.3; qd], qd);
+        let mut kw = HostTensor::zeros(1, cap * kvd);
+        let mut vw = HostTensor::zeros(1, cap * kvd);
+        for d in 0..kvd {
+            kw.data[d] = 0.1;
+            vw.data[d] = (d as f32) * 0.01;
+        }
+        let ctx = b.attn_decode(&q, &kw, &vw, &[1]).unwrap();
+        // One key -> softmax weight 1 -> ctx head h = v row kv-head h/group.
+        let group = c.num_heads / c.num_kv_heads;
+        for h in 0..c.num_heads {
+            let kvh = h / group;
+            for d in 0..c.head_dim {
+                let got = ctx.row(0)[h * c.head_dim + d];
+                let want = vw.data[kvh * c.head_dim + d];
+                assert!((got - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn attn_decode_len0_rows_are_zero() {
+        let mut b = backend();
+        let c = b.cfg().clone();
+        let q = HostTensor::from_vec(vec![0.5; 2 * c.q_dim()], c.q_dim());
+        let kw = HostTensor::zeros(2, c.max_context * c.kv_dim());
+        let vw = kw.clone();
+        let ctx = b.attn_decode(&q, &kw, &vw, &[0, 0]).unwrap();
+        assert!(ctx.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn expert_ffn_row_independent() {
+        // Padding rows must not change valid rows' outputs.
+        let mut b = backend();
+        let h = b.cfg().hidden_size;
+        let row: Vec<f32> = (0..h).map(|i| (i as f32 * 0.17).sin()).collect();
+        let x1 = HostTensor::from_vec(row.clone(), h);
+        let mut padded = HostTensor::zeros(8, h);
+        padded.row_mut(0).copy_from_slice(&row);
+        let y1 = b.expert_ffn(0, ExpertSel::Routed(0), &x1).unwrap();
+        let y8 = b.expert_ffn(0, ExpertSel::Routed(0), &padded).unwrap();
+        assert_eq!(y1.row(0), y8.row(0));
+        assert!(y8.row(3).iter().all(|&v| v == 0.0), "zero rows stay zero");
+    }
+
+    #[test]
+    fn lm_head_is_deterministic_argmax() {
+        let mut b = backend();
+        let h = b.cfg().hidden_size;
+        let x = HostTensor::from_vec((0..h).map(|i| (i as f32 * 0.07).sin()).collect(), h);
+        let t1 = b.lm_head(&x).unwrap();
+        let t2 = b.lm_head(&x).unwrap();
+        assert_eq!(t1, t2);
+        assert!(t1[0] >= 0 && (t1[0] as usize) < b.cfg().vocab_size);
+    }
+}

@@ -21,6 +21,7 @@
 //! offload), so every policy is scored by the *same* cost machinery.
 
 use crate::dag::{Dag, Resource};
+use crate::exec::ModuleKind;
 use crate::hw::HwProfile;
 use crate::model::ModelDesc;
 
@@ -212,7 +213,7 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
 
         // -- pre-attention (QKV projections) over B tokens ----------------
         let pre = g.add(
-            format!("L{l}/pre_attn"),
+            format!("L{l}/{}", ModuleKind::PreAttention.name()),
             hw.gpu_time(
                 b * m.attn_proj_flops_per_token() * 0.75,
                 dense_bytes.max(1.0),
@@ -240,7 +241,7 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
         let gpu_seqs = (1.0 - omega) * b;
         let kv_stream = gpu_seqs * ctx * m.kv_bytes_token_layer() as f64 * m.kv_upproj_factor;
         let a_gpu = g.add(
-            format!("L{l}/attn_gpu"),
+            format!("L{l}/{}", ModuleKind::AttnDecode.name()),
             hw.gpu_time(gpu_seqs * m.attn_mech_flops(ctx as usize), kv_stream, gpu_seqs),
             Resource::GpuCompute,
         );
@@ -251,7 +252,7 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
         // -- attention mechanism: CPU share (reads host KV in place) ------
         let cpu_kv = omega * b * ctx * m.kv_bytes_token_layer() as f64;
         let a_cpu = g.add(
-            format!("L{l}/attn_cpu"),
+            format!("L{l}/{}", ModuleKind::CpuAttn.name()),
             if omega > 0.0 {
                 hw.cpu_attn_time(
                     cpu_kv / CPU_ATTN_BW_EFF,
@@ -268,7 +269,7 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
 
         // -- post-attention + router --------------------------------------
         let post = g.add(
-            format!("L{l}/post_attn"),
+            format!("L{l}/{}+{}", ModuleKind::PostAttention.name(), ModuleKind::Router.name()),
             hw.gpu_time(b * m.attn_proj_flops_per_token() * 0.25, 1.0, s.b_a as f64),
             Resource::GpuCompute,
         );
@@ -297,7 +298,7 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
                 g.edge(last_exec, f_e);
             }
             let x_e = g.add(
-                format!("L{l}/exec_e{e}"),
+                format!("L{l}/{}_e{e}", ModuleKind::ExpertFfn.name()),
                 launches_per_expert
                     * hw.gpu_time(
                         tpe * m.expert_flops_per_token(),
@@ -315,7 +316,7 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
         // -- shared experts (dense path, weights in the dense buffer) -----
         if m.shared_experts > 0 {
             let sh = g.add(
-                format!("L{l}/shared"),
+                format!("L{l}/{}", ModuleKind::SharedExpert.name()),
                 hw.gpu_time(b * m.shared_flops_per_token(), m.shared_expert_bytes() as f64, b),
                 Resource::GpuCompute,
             );
@@ -399,7 +400,7 @@ pub fn build_prefill_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize)
         let attn_flops = tokens * m.attn_proj_flops_per_token()
             + (tokens / sp) * m.attn_mech_flops(sp as usize) * sp / 2.0;
         let attn = g.add(
-            format!("L{l}/attention"),
+            format!("L{l}/{}", ModuleKind::AttnPrefill.name()),
             hw.gpu_time(attn_flops, dense_bytes.max(1.0), tokens),
             Resource::GpuCompute,
         );
@@ -419,7 +420,7 @@ pub fn build_prefill_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize)
             let f_e = g.add(format!("L{l}/fetch_e{e}"), hw.htod_time(exp_bytes), Resource::HtoD);
             chain(&mut g, &mut prev_htod, f_e);
             let x_e = g.add(
-                format!("L{l}/exec_e{e}"),
+                format!("L{l}/{}_e{e}", ModuleKind::ExpertFfn.name()),
                 launches
                     * hw.gpu_time(
                         (tpe / launches) * m.expert_flops_per_token(),
@@ -434,7 +435,7 @@ pub fn build_prefill_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize)
         }
         if m.shared_experts > 0 {
             let sh = g.add(
-                format!("L{l}/shared"),
+                format!("L{l}/{}", ModuleKind::SharedExpert.name()),
                 hw.gpu_time(tokens * m.shared_flops_per_token(), m.shared_expert_bytes() as f64, tokens),
                 Resource::GpuCompute,
             );
@@ -634,6 +635,32 @@ mod tests {
         assert!(!gpu_feasible(&scn, &s, true));
         let small = Strategy { b: 1024, b_a: 64, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0 };
         assert!(gpu_feasible(&scn, &small, true));
+    }
+
+    #[test]
+    fn dag_nodes_use_exec_module_vocabulary() {
+        // The simulator's DAG and the live pipeline must describe the same
+        // module graph: every compute node's label carries a ModuleKind
+        // name, and the per-layer order matches the pipeline's.
+        let scn = scn_8x7b();
+        let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.3,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0 };
+        let g = build_decode_dag(&scn, &s, &Knobs::moe_gen(), 1);
+        for kind in crate::exec::ModuleKind::decode_layer_order() {
+            if kind == crate::exec::ModuleKind::Embed {
+                continue;
+            }
+            assert!(
+                g.nodes.iter().any(|n| n.name.contains(kind.name())),
+                "decode DAG missing module {}",
+                kind.name()
+            );
+        }
+        let gp = build_prefill_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 1);
+        assert!(gp
+            .nodes
+            .iter()
+            .any(|n| n.name.contains(crate::exec::ModuleKind::AttnPrefill.name())));
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Minimal offline subset of the `anyhow` crate.
+//!
+//! Provides the `Error` type, the `Result` alias, the `anyhow!` / `bail!`
+//! macros and the `Context` extension trait — the API surface this
+//! repository actually uses. Errors carry a formatted message chain only
+//! (no backtraces, no downcasting).
+//!
+//! Mirrors real `anyhow` in one load-bearing way: `Error` deliberately
+//! does NOT implement `std::error::Error`, which is what makes the
+//! blanket `From<E: std::error::Error>` conversion (the `?` operator on
+//! `io::Error` etc.) coherent.
+
+use std::fmt;
+
+/// A formatted, chainable error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context line (most recent context first, like anyhow).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>`: `Result<T, anyhow::Error>` by default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+/// Marker so the `Option` impl does not overlap the `Result` impl.
+pub struct NoneContext;
+
+impl<T> Context<T, NoneContext> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_err().with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: gone");
+        let e2: Result<()> = None::<()>.context("missing key");
+        assert_eq!(e2.unwrap_err().to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad bucket {} of {}", 3, 7);
+        assert_eq!(e.to_string(), "bad bucket 3 of 7");
+        fn f() -> Result<()> {
+            bail!("nope");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope");
+    }
+}

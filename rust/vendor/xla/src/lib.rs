@@ -1,0 +1,199 @@
+//! Offline **API stub** of the PJRT `xla` bindings.
+//!
+//! The optional `pjrt` feature of `moe_gen` compiles against this crate so
+//! the live-hardware code path stays buildable in environments with no
+//! crates registry and no XLA toolchain. Every entry point that would
+//! touch a real PJRT client fails at runtime with [`Error::Stub`];
+//! deployments with hardware replace this directory with the real
+//! bindings (identical surface, cf. `/opt/xla-example/load_hlo`).
+
+use std::path::Path;
+use std::rc::Rc;
+
+/// Stub error: always signals that the real bindings are absent.
+#[derive(Debug)]
+pub enum Error {
+    Stub(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Stub(what) => write!(
+                f,
+                "xla stub: {what} requires the real PJRT bindings (see rust/vendor/README.md)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>(what: &'static str) -> Result<T> {
+    Err(Error::Stub(what))
+}
+
+/// Element types the engine traffics in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Native host types that map onto [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub("Literal::reshape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub("Literal::array_shape")
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        stub("Literal::ty")
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        0
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+}
+
+/// Loading literals from serialized containers (.npz).
+pub trait FromRawBytes: Sized {
+    type Context;
+    fn read_npz(path: impl AsRef<Path>, ctx: &Self::Context) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+    fn read_npz(_path: impl AsRef<Path>, _ctx: &()) -> Result<Vec<(String, Literal)>> {
+        stub("Literal::read_npz")
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation ready for PJRT compilation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer handle (`Rc`-based, not `Send`).
+pub struct PjRtBuffer {
+    _not_send: Rc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT device client.
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        stub("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+}
