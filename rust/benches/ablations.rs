@@ -95,5 +95,21 @@ fn main() {
         );
     }
 
+    println!("\n== ablation: weight cache on/off (300 MB/s link) ==");
+    for cache in [true, false] {
+        let cfg = EngineConfig {
+            weight_cache_bytes: if cache { 256 << 20 } else { 0 },
+            throttle_htod: Some(300e6),
+            max_batch: 48,
+            ..base.clone()
+        };
+        let (wall, dtp, toks) = run(cfg, &prompts, steps);
+        check(&mut reference, "weight_cache", &toks);
+        println!(
+            "bench: ablate_wcache_{:<5} wall {wall:>7.2}s decode {dtp:>8.1} tok/s",
+            cache
+        );
+    }
+
     println!("\ntoken invariance across all ablations ✓");
 }

@@ -101,7 +101,7 @@ fn main() {
         let scn = Scenario::new(model::deepseek_v2(), hw::c2(), 512, 256);
         let s = Strategy {
             b: 1024, b_a: 64, b_e: 8192, omega: 0.0,
-            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
         };
         let g = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 3);
         println!("(dag nodes: {})", g.len());

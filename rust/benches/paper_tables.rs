@@ -10,9 +10,10 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
+use moe_gen::config::EngineConfig;
 use moe_gen::sched::Scenario;
 use moe_gen::sim::{self, tables, System};
-use moe_gen::{hw, model};
+use moe_gen::{hw, model, server, workload};
 
 fn bench_table(id: &str) -> (String, f64) {
     // Warm-up + 3 timed repetitions; report the minimum (least noise).
@@ -80,6 +81,27 @@ fn scenarios_json() -> String {
     s
 }
 
+/// One small live run on the reference backend: the weight-residency
+/// subsystem's hit-rate and overlap land in the bench trajectory.
+fn live_json() -> String {
+    let prompts = workload::generate_prompts(12, 16, 48, 512, 7);
+    let t0 = Instant::now();
+    let rep = server::run_offline(EngineConfig::default(), &prompts, 6)
+        .expect("live run on the reference backend");
+    format!(
+        "{{\"backend\": \"ref-cpu\", \"sequences\": {}, \"steps\": 6, \
+         \"decode_tps\": {:.3}, \"weight_cache_hit_rate\": {:.4}, \
+         \"htod_overlap_fraction\": {:.4}, \"weight_evictions\": {}, \
+         \"wall_ms\": {:.3}}}",
+        rep.sequences,
+        rep.decode_tp,
+        rep.weight_hit_rate,
+        rep.htod_overlap_fraction,
+        rep.weight_evictions,
+        t0.elapsed().as_secs_f64() * 1e3,
+    )
+}
+
 fn main() {
     let ids = ["1", "fig3", "fig4", "4", "5", "6", "7", "8", "9", "10", "fig7"];
     println!("== paper_tables bench: regenerating all evaluation tables ==\n");
@@ -101,9 +123,10 @@ fn main() {
     let json = format!(
         "{{\n  \"bench\": \"paper_tables\",\n  \"units\": {{\"decode_tps\": \"tokens/s\", \
          \"prefill_tps\": \"tokens/s\", \"table_render_ms\": \"ms\"}},\n  \
-         \"scenarios\": {},\n  \"table_render_ms\": {render_ms},\n  \
+         \"scenarios\": {},\n  \"live\": {},\n  \"table_render_ms\": {render_ms},\n  \
          \"all_tables_ms\": {:.3}\n}}\n",
         scenarios_json(),
+        live_json(),
         total * 1e3
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_paper_tables.json");

@@ -80,6 +80,16 @@ pub struct EngineConfig {
     /// (possibly throttled) link — on-demand fetching, the model-based
     /// baselines' behaviour.
     pub prefetch: bool,
+    /// GPU weight-cache budget in bytes for the residency layer
+    /// ([`crate::weights`]). 0 disables caching entirely: every launch
+    /// streams its weights across the link (the stall-per-launch path the
+    /// on-demand baselines model). A searched strategy's `S_Params`
+    /// overrides this at `Engine::set_strategy` time.
+    pub weight_cache_bytes: usize,
+    /// Weight-fetch reuse factor: one fetch is held resident for this
+    /// many module launches before becoming LRU-evictable
+    /// (FlexGen/MoE-Lightning-style multi-round reuse; 1.0 = plain LRU).
+    pub weight_reuse: f64,
     pub seed: u64,
     /// Print per-phase diagnostics.
     pub verbose: bool,
@@ -95,6 +105,8 @@ impl Default for EngineConfig {
             attn_micro: 8,
             throttle_htod: None,
             prefetch: true,
+            weight_cache_bytes: 256 << 20,
+            weight_reuse: 1.0,
             seed: 0,
             verbose: false,
         }
@@ -132,5 +144,7 @@ mod tests {
         assert_eq!(c.policy, Policy::ModuleBased);
         assert!(c.omega >= 0.0 && c.omega <= 1.0);
         assert!(c.max_batch > 0);
+        assert!(c.weight_cache_bytes > 0, "caching on by default");
+        assert!(c.weight_reuse >= 1.0);
     }
 }

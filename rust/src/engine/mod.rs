@@ -36,6 +36,7 @@ use crate::memory::{MemoryPool, TransferEngine, TransferHandle};
 use crate::metrics::Metrics;
 use crate::runtime::{default_backend, Backend, RtConfig};
 use crate::sched::Strategy;
+use crate::weights::{WeightResidency, WeightSizes};
 
 pub use crate::exec::BatchState;
 
@@ -46,8 +47,13 @@ pub struct Engine {
     pub htod: TransferEngine,
     pub dtoh: TransferEngine,
     pub host_pool: MemoryPool,
+    /// GPU weight residency: byte-budgeted cache + prefetch scheduler.
+    /// The engine owns the cache budget (`cfg.weight_cache_bytes`, or a
+    /// searched strategy's `S_Params` via [`Engine::set_strategy`]).
+    pub weights: WeightResidency,
     cpu_threads: usize,
-    /// Outstanding prefetched weight transfers (drained at phase ends).
+    /// Outstanding overlapped transfers not owned by the weight cache
+    /// (drained at phase ends).
     pending_fetch: Vec<TransferHandle>,
     plan: Plan,
 }
@@ -71,7 +77,7 @@ impl Engine {
         let cpu_threads = std::thread::available_parallelism()
             .map(|n| n.get().saturating_sub(2).max(1))
             .unwrap_or(1);
-        let plan = Plan::from_strategy(
+        let mut plan = Plan::from_strategy(
             &Strategy {
                 b: cfg.max_batch,
                 b_a: cfg.attn_micro,
@@ -79,11 +85,20 @@ impl Engine {
                 omega: cfg.omega,
                 s_expert: 0,
                 s_params: 0,
+                reuse: cfg.weight_reuse,
             },
             None,
             backend.cfg(),
             cfg.max_batch,
         );
+        // This synthetic plan is not a searched strategy: leave the
+        // residency fields unset so the engine's configured defaults
+        // (cfg.weight_cache_bytes, default prefetch depth) stay live and
+        // the plan round-trips through set_plan unchanged.
+        plan.prefetch_bytes = None;
+        plan.cache_bytes = None;
+        let weights =
+            WeightResidency::new(WeightSizes::from_cfg(backend.cfg()), cfg.weight_cache_bytes);
         Ok(Engine {
             backend,
             cfg,
@@ -91,6 +106,7 @@ impl Engine {
             htod,
             dtoh,
             host_pool,
+            weights,
             cpu_threads,
             pending_fetch: Vec::new(),
             plan,
@@ -113,14 +129,33 @@ impl Engine {
 
     pub fn set_plan(&mut self, plan: Plan) {
         self.plan = plan;
+        self.apply_plan_residency();
     }
 
     /// Adopt a searched batching strategy: every module's micro-batch size
     /// is re-derived from `(B, b_a, b_e, ω)` (clamped to this model's
-    /// bucket grid at launch time).
+    /// bucket grid at launch time), and the strategy's residency fields
+    /// become live — `S_Params` re-budgets the GPU weight cache and
+    /// `S_Expert` sizes the predictive expert-prefetch buffer.
     pub fn set_strategy(&mut self, decode: &Strategy, prefill: Option<&Strategy>) {
         self.plan =
             Plan::from_strategy(decode, prefill, self.backend.cfg(), self.cfg.max_batch);
+        self.apply_plan_residency();
+    }
+
+    /// Project the active plan's residency fields onto the live weight
+    /// subsystem. Searched strategies are explicit (`Some`), zeros
+    /// included — a strategy scored with `S_Params = 0` really executes
+    /// with the cache disabled; `None` (a plan not sourced from a
+    /// search) keeps the engine's current settings, so any plan
+    /// round-trips through `set_plan` without changing behaviour.
+    fn apply_plan_residency(&mut self) {
+        if let Some(budget) = self.plan.cache_bytes {
+            self.weights.cache.set_budget(budget);
+        }
+        if let Some(buffer) = self.plan.prefetch_bytes {
+            self.weights.sched.buffer_bytes = Some(buffer);
+        }
     }
 
     /// Pre-compile every module variant so serving never compile-stalls.
@@ -145,7 +180,9 @@ impl Engine {
             htod: &self.htod,
             dtoh: &self.dtoh,
             pending: &mut self.pending_fetch,
+            weights: &mut self.weights,
             prefetch: self.cfg.prefetch,
+            reuse_rounds: (self.plan.reuse.max(1.0).round() as u32).saturating_sub(1),
             cpu_threads: self.cpu_threads,
         }
     }
@@ -265,13 +302,20 @@ mod tests {
     #[test]
     fn set_strategy_rederives_plan() {
         let mut eng = engine();
-        let dec = Strategy { b: 64, b_a: 16, b_e: 32, omega: 0.5, s_expert: 0, s_params: 0 };
+        let dec = Strategy {
+            b: 64, b_a: 16, b_e: 32, omega: 0.5,
+            s_expert: 500_000, s_params: 1_000_000, reuse: 2.0,
+        };
         eng.set_strategy(&dec, None);
         let p = eng.plan();
         assert_eq!(p.accum_batch, 64);
         assert_eq!(p.attn_micro, 16);
         assert_eq!(p.expert_micro, 32);
         assert!((p.omega - 0.5).abs() < 1e-12);
+        // Residency fields go live: S_Params re-budgets the cache,
+        // S_Expert sizes the predictive-prefetch buffer.
+        assert_eq!(eng.weights.cache.budget(), 1_000_000);
+        assert_eq!(eng.weights.sched.buffer_bytes, Some(500_000));
     }
 
     #[test]

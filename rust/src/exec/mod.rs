@@ -10,9 +10,15 @@
 //!   experts, lm-head), each wrapping bucket selection, padding, metering
 //!   and the backend launch;
 //! * [`pipeline`] — [`Plan`] (the runnable projection of a searched
-//!   [`crate::sched::Strategy`]) and [`Pipeline`], which sequences the
-//!   modules for a prefill wave or a decode step and overlaps KV staging
-//!   with CPU attention and device compute.
+//!   [`crate::sched::Strategy`], weight-residency fields included) and
+//!   [`Pipeline`], which sequences the modules for a prefill wave or a
+//!   decode step and overlaps KV staging, weight prefetch and CPU
+//!   attention with device compute. [`ExecCtx`] carries the
+//!   weight-residency layer ([`crate::weights`]): module launches
+//!   acquire/release their weight keys through the byte-budgeted GPU
+//!   cache, the pipeline streams the next layer's dense weights during
+//!   attention, and the router's output predictively prefetches the next
+//!   layer's hot experts.
 //!
 //! The `Engine` is a facade over this subsystem; the simulator's DAG
 //! builders label their nodes with the same [`ModuleKind`] vocabulary, so

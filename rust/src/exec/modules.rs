@@ -26,6 +26,7 @@ use crate::exec::tensor::{Accumulator, HostTensor};
 use crate::kv::KvCache;
 use crate::runtime::RtConfig;
 use crate::util::pick_bucket;
+use crate::weights::WeightKey;
 
 /// Which expert a launch targets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -142,18 +143,22 @@ impl Embed {
         let c = cx.backend.cfg().clone();
         let h = c.hidden_size;
         let mut out = HostTensor::empty(h);
-        for r in micro_batches(ids.len(), max_bucket(&c.token_buckets)) {
-            let n = r.len();
-            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-            let ids_b = pad_i32(&ids[r], bucket);
-            let t0 = Instant::now();
-            let y = cx.backend.embed(&ids_b)?;
-            cx.metrics
-                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-            let wb = cx.backend.take_uploaded_bytes();
-            cx.account(wb, bucket * 4, bucket * h * 4);
-            out.push_rows(&y.data[..n * h]);
-        }
+        cx.with_weights(WeightKey::Embed, |cx| {
+            for r in micro_batches(ids.len(), max_bucket(&c.token_buckets)) {
+                let n = r.len();
+                let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+                let ids_b = pad_i32(&ids[r], bucket);
+                let t0 = Instant::now();
+                let y = cx.backend.embed(&ids_b)?;
+                cx.metrics
+                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+                let wb = cx.backend.take_uploaded_bytes();
+                cx.note_backend_upload(wb);
+                cx.account(bucket * 4, bucket * h * 4);
+                out.push_rows(&y.data[..n * h]);
+            }
+            Ok(())
+        })?;
         Ok(out)
     }
 }
@@ -189,21 +194,25 @@ impl PreAttention {
         let (h, qd, kvd) = (c.hidden_size, c.q_dim(), c.kv_dim());
         let (mut q, mut k, mut v) =
             (HostTensor::empty(qd), HostTensor::empty(kvd), HostTensor::empty(kvd));
-        for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
-            let n = r.len();
-            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-            let x_b = x.padded(r.clone(), bucket);
-            let pos_b = pad_i32(&pos[r], bucket);
-            let t0 = Instant::now();
-            let (qb, kb, vb) = cx.backend.pre_attention(layer, &x_b, &pos_b)?;
-            cx.metrics
-                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-            let wb = cx.backend.take_uploaded_bytes();
-            cx.account(wb, bucket * (h + 1) * 4, bucket * (qd + 2 * kvd) * 4);
-            q.push_rows(&qb.data[..n * qd]);
-            k.push_rows(&kb.data[..n * kvd]);
-            v.push_rows(&vb.data[..n * kvd]);
-        }
+        cx.with_weights(WeightKey::Dense(layer), |cx| {
+            for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
+                let n = r.len();
+                let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+                let x_b = x.padded(r.clone(), bucket);
+                let pos_b = pad_i32(&pos[r], bucket);
+                let t0 = Instant::now();
+                let (qb, kb, vb) = cx.backend.pre_attention(layer, &x_b, &pos_b)?;
+                cx.metrics
+                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+                let wb = cx.backend.take_uploaded_bytes();
+                cx.note_backend_upload(wb);
+                cx.account(bucket * (h + 1) * 4, bucket * (qd + 2 * kvd) * 4);
+                q.push_rows(&qb.data[..n * qd]);
+                k.push_rows(&kb.data[..n * kvd]);
+                v.push_rows(&vb.data[..n * kvd]);
+            }
+            Ok(())
+        })?;
         Ok((q, k, v))
     }
 }
@@ -272,11 +281,8 @@ impl AttentionPrefill {
             cx.metrics
                 .record_module(self.name(), t0.elapsed().as_secs_f64(), nb, bucket);
             let wb = cx.backend.take_uploaded_bytes();
-            cx.account(
-                wb,
-                bucket * seq * (qd + 2 * kvd + 1) * 4,
-                bucket * seq * qd * 4,
-            );
+            cx.note_backend_upload(wb);
+            cx.account(bucket * seq * (qd + 2 * kvd + 1) * 4, bucket * seq * qd * 4);
             acc.push_rows(&ctx.data[..nb * seq * qd]);
         }
         debug_assert!(acc.is_ready());
@@ -349,7 +355,10 @@ impl AttentionDecode {
             let hv = cx.htod.submit(bytes, move || {
                 kv_v.read().unwrap().gather_side(layer, &sl, &ln3, bucket, false)
             });
+            // Staged-window gathers run on the HtoD engine thread,
+            // overlapping the CPU attention share below.
             cx.metrics.htod_bytes += (2 * bytes) as u64;
+            cx.metrics.htod_overlapped_bytes += (2 * bytes) as u64;
             handles.push((abs, nb, bucket, ln, hk, hv));
         }
 
@@ -400,7 +409,10 @@ impl AttentionDecode {
             cx.metrics
                 .record_module(self.name(), t0.elapsed().as_secs_f64(), nb, bucket);
             let wb = cx.backend.take_uploaded_bytes();
-            cx.account(wb, bucket * (qd + 2 * cap * kvd + 1) * 4, bucket * qd * 4);
+            cx.note_backend_upload(wb);
+            // The staged KV windows were metered at submit time above;
+            // only the queries and lengths stream here.
+            cx.account(bucket * (qd + 1) * 4, bucket * qd * 4);
             cx.metrics.gpu_attn_seqs += nb as u64;
             acc.push_rows(&ctx.data[..nb * qd]);
         }
@@ -439,19 +451,23 @@ impl PostAttention {
         let c = cx.backend.cfg().clone();
         let (h, qd) = (c.hidden_size, c.q_dim());
         let mut out = HostTensor::empty(h);
-        for r in micro_batches(resid.rows, max_bucket(&c.token_buckets)) {
-            let n = r.len();
-            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-            let ctx_b = ctx_t.padded(r.clone(), bucket);
-            let res_b = resid.padded(r, bucket);
-            let t0 = Instant::now();
-            let y = cx.backend.post_attention(layer, &ctx_b, &res_b)?;
-            cx.metrics
-                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-            let wb = cx.backend.take_uploaded_bytes();
-            cx.account(wb, bucket * (qd + h) * 4, bucket * h * 4);
-            out.push_rows(&y.data[..n * h]);
-        }
+        cx.with_weights(WeightKey::Dense(layer), |cx| {
+            for r in micro_batches(resid.rows, max_bucket(&c.token_buckets)) {
+                let n = r.len();
+                let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+                let ctx_b = ctx_t.padded(r.clone(), bucket);
+                let res_b = resid.padded(r, bucket);
+                let t0 = Instant::now();
+                let y = cx.backend.post_attention(layer, &ctx_b, &res_b)?;
+                cx.metrics
+                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+                let wb = cx.backend.take_uploaded_bytes();
+                cx.note_backend_upload(wb);
+                cx.account(bucket * (qd + h) * 4, bucket * h * 4);
+                out.push_rows(&y.data[..n * h]);
+            }
+            Ok(())
+        })?;
         Ok(out)
     }
 }
@@ -477,6 +493,11 @@ impl Module for Router {
 impl Router {
     /// Pre-MoE norm + top-k router over the full accumulated batch.
     /// Returns (xn, idx `n*k`, weights `[n, k]`).
+    ///
+    /// This layer's routing decisions also drive the *predictive* expert
+    /// prefetch for layer `layer + 1`: routed-token counts rank the
+    /// experts, and the hottest ones start crossing the link while this
+    /// layer's expert phase computes (router-locality heuristic).
     pub fn run(
         &self,
         cx: &mut ExecCtx<'_>,
@@ -488,20 +509,29 @@ impl Router {
         let mut xn = HostTensor::empty(h);
         let mut idx = Vec::with_capacity(x.rows * k);
         let mut wts = HostTensor::empty(k);
-        for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
-            let n = r.len();
-            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-            let x_b = x.padded(r, bucket);
-            let t0 = Instant::now();
-            let (xn_b, idx_b, wts_b) = cx.backend.router(layer, &x_b)?;
-            cx.metrics
-                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-            let wb = cx.backend.take_uploaded_bytes();
-            cx.account(wb, bucket * h * 4, bucket * (h + 2 * k) * 4);
-            xn.push_rows(&xn_b.data[..n * h]);
-            idx.extend_from_slice(&idx_b[..n * k]);
-            wts.push_rows(&wts_b.data[..n * k]);
+        cx.with_weights(WeightKey::Dense(layer), |cx| {
+            for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
+                let n = r.len();
+                let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+                let x_b = x.padded(r, bucket);
+                let t0 = Instant::now();
+                let (xn_b, idx_b, wts_b) = cx.backend.router(layer, &x_b)?;
+                cx.metrics
+                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+                let wb = cx.backend.take_uploaded_bytes();
+                cx.note_backend_upload(wb);
+                cx.account(bucket * h * 4, bucket * (h + 2 * k) * 4);
+                xn.push_rows(&xn_b.data[..n * h]);
+                idx.extend_from_slice(&idx_b[..n * k]);
+                wts.push_rows(&wts_b.data[..n * k]);
+            }
+            Ok(())
+        })?;
+        let mut counts = vec![0u64; c.num_experts];
+        for &e in &idx {
+            counts[e as usize] += 1;
         }
+        cx.prefetch_hot_experts(layer + 1, &counts);
         Ok((xn, idx, wts))
     }
 }
@@ -545,43 +575,51 @@ impl Experts {
 
         let mut acc = HostTensor::zeros(n, h);
         for g in group_by_expert(&idx, &wts.data, n, k, ne) {
-            for r in micro_batches(g.rows.len(), micro) {
-                let rows = &g.rows[r.clone()];
-                let w = &g.weights[r];
-                let bucket = pick_bucket(rows.len(), &c.expert_buckets).unwrap();
-                let gathered = xn.gather(rows, bucket);
-                let t0 = Instant::now();
-                let y = cx
-                    .backend
-                    .expert_ffn(layer, ExpertSel::Routed(g.expert), &gathered)?;
-                cx.metrics.record_module(
-                    self.name(),
-                    t0.elapsed().as_secs_f64(),
-                    rows.len(),
-                    bucket,
-                );
-                let wb = cx.backend.take_uploaded_bytes();
-                cx.account(wb, bucket * h * 4, bucket * h * 4);
-                acc.scatter_add(rows, w, &y);
-            }
+            cx.with_weights(WeightKey::Expert(layer, g.expert), |cx| {
+                for r in micro_batches(g.rows.len(), micro) {
+                    let rows = &g.rows[r.clone()];
+                    let w = &g.weights[r];
+                    let bucket = pick_bucket(rows.len(), &c.expert_buckets).unwrap();
+                    let gathered = xn.gather(rows, bucket);
+                    let t0 = Instant::now();
+                    let y = cx
+                        .backend
+                        .expert_ffn(layer, ExpertSel::Routed(g.expert), &gathered)?;
+                    cx.metrics.record_module(
+                        self.name(),
+                        t0.elapsed().as_secs_f64(),
+                        rows.len(),
+                        bucket,
+                    );
+                    let wb = cx.backend.take_uploaded_bytes();
+                    cx.note_backend_upload(wb);
+                    cx.account(bucket * h * 4, bucket * h * 4);
+                    acc.scatter_add(rows, w, &y);
+                }
+                Ok(())
+            })?;
         }
         if c.use_shared_expert {
-            for r in micro_batches(n, micro) {
-                let rows = r.len();
-                let bucket = pick_bucket(rows, &c.expert_buckets).unwrap();
-                let x_b = xn.padded(r.clone(), bucket);
-                let t0 = Instant::now();
-                let ys = cx.backend.expert_ffn(layer, ExpertSel::Shared, &x_b)?;
-                cx.metrics.record_module(
-                    ModuleKind::SharedExpert.name(),
-                    t0.elapsed().as_secs_f64(),
-                    rows,
-                    bucket,
-                );
-                let wb = cx.backend.take_uploaded_bytes();
-                cx.account(wb, bucket * h * 4, bucket * h * 4);
-                add_assign(acc.rows_slice_mut(r), &ys.data[..rows * h]);
-            }
+            cx.with_weights(WeightKey::Shared(layer), |cx| {
+                for r in micro_batches(n, micro) {
+                    let rows = r.len();
+                    let bucket = pick_bucket(rows, &c.expert_buckets).unwrap();
+                    let x_b = xn.padded(r.clone(), bucket);
+                    let t0 = Instant::now();
+                    let ys = cx.backend.expert_ffn(layer, ExpertSel::Shared, &x_b)?;
+                    cx.metrics.record_module(
+                        ModuleKind::SharedExpert.name(),
+                        t0.elapsed().as_secs_f64(),
+                        rows,
+                        bucket,
+                    );
+                    let wb = cx.backend.take_uploaded_bytes();
+                    cx.note_backend_upload(wb);
+                    cx.account(bucket * h * 4, bucket * h * 4);
+                    add_assign(acc.rows_slice_mut(r), &ys.data[..rows * h]);
+                }
+                Ok(())
+            })?;
         }
         let mut out = x;
         out.add_assign(&acc); // residual: out = x + acc
@@ -613,18 +651,22 @@ impl LmHead {
         let c = cx.backend.cfg().clone();
         let h = c.hidden_size;
         let mut out = Vec::with_capacity(x.rows);
-        for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
-            let n = r.len();
-            let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-            let x_b = x.padded(r, bucket);
-            let t0 = Instant::now();
-            let ids = cx.backend.lm_head(&x_b)?;
-            cx.metrics
-                .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-            let wb = cx.backend.take_uploaded_bytes();
-            cx.account(wb, bucket * h * 4, bucket * 4);
-            out.extend_from_slice(&ids[..n]);
-        }
+        cx.with_weights(WeightKey::LmHead, |cx| {
+            for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
+                let n = r.len();
+                let bucket = pick_bucket(n, &c.token_buckets).unwrap();
+                let x_b = x.padded(r, bucket);
+                let t0 = Instant::now();
+                let ids = cx.backend.lm_head(&x_b)?;
+                cx.metrics
+                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
+                let wb = cx.backend.take_uploaded_bytes();
+                cx.note_backend_upload(wb);
+                cx.account(bucket * h * 4, bucket * 4);
+                out.extend_from_slice(&ids[..n]);
+            }
+            Ok(())
+        })?;
         Ok(out)
     }
 }
@@ -652,6 +694,9 @@ mod tests {
             prefill_attn_micro: 100,
             expert_micro: 3,
             omega: 0.0,
+            prefetch_bytes: None,
+            cache_bytes: None,
+            reuse: 1.0,
         };
         // Strategy-driven modules clamp the searched value to the bucket
         // range; flat-token modules pool at the largest bucket.

@@ -27,6 +27,7 @@ use crate::memory::{TransferEngine, TransferHandle};
 use crate::metrics::Metrics;
 use crate::runtime::{Backend, RtConfig};
 use crate::sched::Strategy;
+use crate::weights::{Acquire, WeightKey, WeightResidency};
 
 /// Executable micro-batch plan — the live projection of a searched
 /// strategy onto one model's bucket grid. Raw strategy values are kept;
@@ -44,6 +45,21 @@ pub struct Plan {
     pub expert_micro: usize,
     /// CPU-attention split ratio ω ∈ [0, 1].
     pub omega: f64,
+    /// Reserved predictive expert-prefetch buffer in bytes — the
+    /// strategy's `S_Expert`, live (sizes the hot-expert prefetch
+    /// depth). Searched strategies are explicit, `Some(0)` included
+    /// (= no predictive prefetch); `None` — a plan not sourced from a
+    /// search — keeps the engine's current prefetch configuration.
+    pub prefetch_bytes: Option<usize>,
+    /// GPU weight-cache budget in bytes — the strategy's `S_Params`,
+    /// live. `Some(0)` executes the searched "no cached params" point
+    /// faithfully (every launch streams); `None` keeps the engine's
+    /// configured default budget.
+    pub cache_bytes: Option<usize>,
+    /// Weight-fetch reuse factor: one fetch is held resident for this
+    /// many launches before becoming LRU-evictable (FlexGen /
+    /// MoE-Lightning multi-round reuse; 1.0 = plain LRU).
+    pub reuse: f64,
 }
 
 impl Plan {
@@ -65,6 +81,9 @@ impl Plan {
                 .max(1),
             expert_micro: dec.b_e.max(1),
             omega: dec.omega.clamp(0.0, 1.0),
+            prefetch_bytes: Some(dec.s_expert),
+            cache_bytes: Some(dec.s_params),
+            reuse: dec.reuse.max(1.0),
         }
     }
 }
@@ -81,40 +100,147 @@ pub struct BatchState {
 }
 
 /// Everything a module launch needs, borrowed from the engine: the
-/// execution backend, the metrics sink, the two link engines and the
-/// outstanding-prefetch list.
+/// execution backend, the metrics sink, the two link engines, the
+/// weight-residency layer and the outstanding-transfer list.
 pub struct ExecCtx<'a> {
     pub backend: &'a mut dyn Backend,
     pub metrics: &'a mut Metrics,
     pub htod: &'a TransferEngine,
     pub dtoh: &'a TransferEngine,
+    /// Outstanding overlapped transfers not owned by the weight cache
+    /// (activation streams, bypassed weight fetches); drained at phase
+    /// ends. In-flight *cached* prefetches live inside
+    /// [`crate::weights::WeightCache`] — the outstanding-prefetch list
+    /// is cache-aware.
     pub pending: &'a mut Vec<TransferHandle>,
+    /// The GPU weight-residency layer: byte-budgeted cache + predictive
+    /// prefetch scheduler ([`crate::weights`]).
+    pub weights: &'a mut WeightResidency,
     /// `true`: weight fetches queue on the HtoD engine and overlap with
     /// compute (MoE-Gen prefetch); `false`: every launch stalls until its
     /// weights crossed the link (on-demand, the baselines' behaviour).
     pub prefetch: bool,
+    /// Extra launches each weight fetch stays resident for (the plan's
+    /// reuse factor minus one; 0 = plain LRU).
+    pub reuse_rounds: u32,
     pub cpu_threads: usize,
 }
 
 impl ExecCtx<'_> {
-    /// Meter one module execution's traffic and model its weight fetch on
-    /// the HtoD link (see field `prefetch`).
-    pub fn account(&mut self, weight_bytes: usize, in_bytes: usize, out_bytes: usize) {
-        self.metrics.htod_bytes += (weight_bytes + in_bytes) as u64;
-        self.metrics.dtoh_bytes += out_bytes as u64;
-        let h = self.htod.account(weight_bytes + in_bytes);
+    /// Meter non-weight module traffic: `htod_bytes` (activations in)
+    /// queue on the HtoD engine under prefetch overlap or stall the
+    /// launch on-demand; `dtoh_bytes` (outputs) are metered only.
+    pub fn account(&mut self, htod_bytes: usize, dtoh_bytes: usize) {
+        self.metrics.htod_bytes += htod_bytes as u64;
+        self.metrics.dtoh_bytes += dtoh_bytes as u64;
+        if htod_bytes == 0 {
+            return;
+        }
+        let h = self.htod.account(htod_bytes);
         if self.prefetch {
+            self.metrics.htod_overlapped_bytes += htod_bytes as u64;
             self.pending.push(h);
         } else {
+            self.metrics.htod_stalled_bytes += htod_bytes as u64;
             h.wait();
         }
     }
 
-    /// Synchronize all outstanding prefetched transfers (phase boundary).
+    /// Record weight bytes the backend itself moved to the device (PJRT
+    /// `S_Params` cache misses; first-touch on the reference backend).
+    pub fn note_backend_upload(&mut self, bytes: usize) {
+        self.metrics.backend_upload_bytes += bytes as u64;
+    }
+
+    /// Ensure `key`'s weights are device-resident for a launch: a cache
+    /// hit costs nothing, an in-flight prefetch is completed (its bytes
+    /// were metered, overlapped, at issue), and a miss streams the bytes
+    /// across the link (overlapped or stalling per `prefetch`). Pins the
+    /// entry until [`release_weights`](ExecCtx::release_weights).
+    pub fn acquire_weights(&mut self, key: WeightKey) {
+        let bytes = self.weights.sizes.bytes(key);
+        if bytes == 0 {
+            return;
+        }
+        let outcome = self.weights.cache.acquire(key, bytes, self.reuse_rounds);
+        // The cache's ledger is authoritative for evictions (it also
+        // counts set_budget shrinks); mirror it wholesale.
+        self.metrics.weight_evictions = self.weights.cache.stats().evictions;
+        match outcome {
+            Acquire::Hit => self.metrics.weight_hits += 1,
+            Acquire::HitInFlight(h) => {
+                h.wait();
+                self.metrics.weight_hits += 1;
+                self.metrics.prefetch_hits += 1;
+            }
+            Acquire::Miss | Acquire::Bypass => {
+                self.metrics.weight_misses += 1;
+                self.account(bytes, 0);
+            }
+        }
+    }
+
+    /// Unpin `key` after its launch (consumes one reuse round).
+    pub fn release_weights(&mut self, key: WeightKey) {
+        self.weights.cache.release(key);
+    }
+
+    /// Run `f` with `key`'s weights acquired; always releases the pin,
+    /// also on error.
+    pub fn with_weights<T>(
+        &mut self,
+        key: WeightKey,
+        f: impl FnOnce(&mut Self) -> Result<T>,
+    ) -> Result<T> {
+        self.acquire_weights(key);
+        let out = f(self);
+        self.release_weights(key);
+        out
+    }
+
+    /// Stream layer `layer`'s dense weights ahead of demand — issued
+    /// while the *previous* layer's attention computes, so the transfer
+    /// overlaps compute on the HtoD engine thread.
+    pub fn prefetch_dense(&mut self, layer: usize) {
+        if !self.prefetch || layer >= self.weights.sizes.num_layers {
+            return;
+        }
+        self.issue_prefetch(WeightKey::Dense(layer));
+    }
+
+    /// Predictively prefetch the hottest experts of layer `layer` from
+    /// the previous layer's router output (`counts[e]` = tokens routed to
+    /// expert `e`), bounded by the reserved prefetch buffer.
+    pub fn prefetch_hot_experts(&mut self, layer: usize, counts: &[u64]) {
+        if !self.prefetch || layer >= self.weights.sizes.num_layers {
+            return;
+        }
+        let depth = self.weights.sched.expert_depth(&self.weights.sizes);
+        for e in self.weights.sched.hot_experts(counts, depth) {
+            self.issue_prefetch(WeightKey::Expert(layer, e));
+        }
+    }
+
+    fn issue_prefetch(&mut self, key: WeightKey) {
+        let bytes = self.weights.sizes.bytes(key);
+        // Opportunistic: reserves idle budget only, never evicts.
+        if !self.weights.cache.reserve_prefetch(key, bytes) {
+            return;
+        }
+        self.metrics.prefetch_issued += 1;
+        self.metrics.htod_bytes += bytes as u64;
+        self.metrics.htod_overlapped_bytes += bytes as u64;
+        let h = self.htod.account(bytes);
+        self.weights.cache.fulfill_prefetch(key, h);
+    }
+
+    /// Synchronize all outstanding transfers — the pending list and the
+    /// cache's in-flight prefetches (phase boundary).
     pub fn drain_fetches(&mut self) {
         for h in self.pending.drain(..) {
             h.wait();
         }
+        self.weights.cache.drain_in_flight();
     }
 }
 
@@ -184,6 +310,9 @@ impl Pipeline {
         let mut x = Embed.run(cx, &ids)?;
         for layer in 0..c.num_layers {
             let (q, k, v) = PreAttention.run(cx, layer, &x, &pos)?;
+            // Stream the next layer's dense weights while this layer's
+            // attention computes (overlapped on the HtoD engine thread).
+            cx.prefetch_dense(layer + 1);
             let ctx_t = AttentionPrefill.run(cx, &self.plan, &q, &k, &v, &lens, s)?;
             // Write prompt K/V to the host cache (DtoH writeback).
             {
@@ -233,6 +362,10 @@ impl Pipeline {
 
         for layer in 0..c.num_layers {
             let (q, k, v) = PreAttention.run(cx, layer, &x, &pos)?;
+            // Stream the next layer's dense weights during this layer's
+            // attention (the staged-window gathers and the CPU share are
+            // the long pole; the HtoD engine thread carries the fetch).
+            cx.prefetch_dense(layer + 1);
             // Append this step's K/V (per sequence) before attention.
             {
                 let mut kvw = state.kv.write().unwrap();
@@ -285,26 +418,31 @@ impl Pipeline {
                         bucket: usize,
                         secs: f64| {
             cx.metrics.record_module(kind.name(), secs, bucket, bucket);
-            // Meter (and reset) any weight uploads this probe triggered so
+            // Reset (and record) any weight uploads this probe triggered so
             // they are not misattributed to the next real module launch.
             let wb = cx.backend.take_uploaded_bytes();
-            cx.account(wb, 0, 0);
+            cx.note_backend_upload(wb);
             out.push((kind.name().to_string(), bucket, secs));
         };
 
-        // Flat-token stages across the token buckets.
+        // Flat-token stages across the token buckets. Each probe acquires
+        // its weight key through the same residency layer the live
+        // pipeline uses, so profiling reports cache behaviour too.
         for &bkt in &c.token_buckets {
             let x = HostTensor::from_vec(vec![0.1f32; bkt * h], h);
             let ids = vec![1i32; bkt];
             let pos = vec![0i32; bkt];
             let ctx_t = HostTensor::from_vec(vec![0.1f32; bkt * qd], qd);
 
+            cx.acquire_weights(WeightKey::Embed);
             let t0 = Instant::now();
             for _ in 0..reps {
                 cx.backend.embed(&ids)?;
             }
             push(cx, &mut out, ModuleKind::Embed, bkt, t0.elapsed().as_secs_f64() / reps as f64);
+            cx.release_weights(WeightKey::Embed);
 
+            cx.acquire_weights(WeightKey::Dense(0));
             let t0 = Instant::now();
             for _ in 0..reps {
                 cx.backend.pre_attention(0, &x, &pos)?;
@@ -334,17 +472,21 @@ impl Pipeline {
                 cx.backend.router(0, &x)?;
             }
             push(cx, &mut out, ModuleKind::Router, bkt, t0.elapsed().as_secs_f64() / reps as f64);
+            cx.release_weights(WeightKey::Dense(0));
 
+            cx.acquire_weights(WeightKey::LmHead);
             let t0 = Instant::now();
             for _ in 0..reps {
                 cx.backend.lm_head(&x)?;
             }
             push(cx, &mut out, ModuleKind::LmHead, bkt, t0.elapsed().as_secs_f64() / reps as f64);
+            cx.release_weights(WeightKey::LmHead);
         }
 
         // Expert FFN across its buckets.
         for &bkt in &c.expert_buckets {
             let x = HostTensor::from_vec(vec![0.1f32; bkt * h], h);
+            cx.acquire_weights(WeightKey::Expert(0, 0));
             let t0 = Instant::now();
             for _ in 0..reps {
                 cx.backend.expert_ffn(0, ExpertSel::Routed(0), &x)?;
@@ -356,6 +498,7 @@ impl Pipeline {
                 bkt,
                 t0.elapsed().as_secs_f64() / reps as f64,
             );
+            cx.release_weights(WeightKey::Expert(0, 0));
         }
 
         // Decode attention across its batch buckets.
@@ -408,14 +551,23 @@ mod tests {
     #[test]
     fn plan_from_strategy_projects_and_caps() {
         let cfg = RtConfig::tiny();
-        let dec = Strategy { b: 28_000, b_a: 256, b_e: 8192, omega: 0.6, s_expert: 0, s_params: 0 };
-        let pre = Strategy { b: 8192, b_a: 4, b_e: 2048, omega: 0.0, s_expert: 0, s_params: 0 };
+        let dec = Strategy {
+            b: 28_000, b_a: 256, b_e: 8192, omega: 0.6,
+            s_expert: 123, s_params: 456, reuse: 4.0,
+        };
+        let pre = Strategy {
+            b: 8192, b_a: 4, b_e: 2048, omega: 0.0,
+            s_expert: 0, s_params: 0, reuse: 1.0,
+        };
         let p = Plan::from_strategy(&dec, Some(&pre), &cfg, 128);
         assert_eq!(p.accum_batch, 128, "B capped by engine budget");
         assert_eq!(p.attn_micro, 256, "raw b_a kept (modules clamp at launch)");
         assert_eq!(p.prefill_attn_micro, 4);
         assert_eq!(p.expert_micro, 8192);
         assert!((p.omega - 0.6).abs() < 1e-12);
+        assert_eq!(p.prefetch_bytes, Some(123), "S_Expert becomes the live prefetch buffer");
+        assert_eq!(p.cache_bytes, Some(456), "S_Params becomes the live cache budget");
+        assert!((p.reuse - 4.0).abs() < 1e-12, "reuse factor is executable");
 
         let p2 = Plan::from_strategy(&dec, None, &cfg, 128);
         assert_eq!(p2.prefill_attn_micro, 16, "defaults to largest prefill bucket");

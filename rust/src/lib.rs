@@ -10,13 +10,17 @@
 //!   plumbing, per-module host accumulators), pluggable execution
 //!   backends ([`runtime`]: hermetic reference interpreter by default,
 //!   PJRT artifact runtime behind the `pjrt` feature), host/device memory
-//!   substrate with explicit HtoD/DtoH transfer engines, full KV-cache
-//!   offloading, the offloading-DAG critical-path cost model (paper
-//!   Eq. 4) and the batching-strategy search over
-//!   `(B, b_a, b_e, ω, S_Expert, S_Params)` (paper §4.3–4.4). The
-//!   simulator's DAG and the live pipeline share one module vocabulary
-//!   ([`exec::ModuleKind`]), so a searched strategy is directly
-//!   executable by `engine::Engine::generate`.
+//!   substrate with explicit HtoD/DtoH transfer engines ([`memory`]),
+//!   full KV-cache offloading ([`kv`]), the GPU weight-residency layer
+//!   ([`weights`]: byte-budgeted cache + predictive prefetch scheduler),
+//!   the offloading-DAG critical-path cost model (paper Eq. 4, [`dag`])
+//!   and the batching-strategy search over
+//!   `(B, b_a, b_e, ω, S_Expert, S_Params)` ([`sched`], paper §4.3–4.4).
+//!   The simulator's DAG and the live pipeline share one module
+//!   vocabulary ([`exec::ModuleKind`]), so a searched strategy is
+//!   directly executable by [`engine::Engine::generate`] — including its
+//!   weight-residency fields (`S_Expert`, `S_Params`, reuse), which
+//!   configure the live cache, not just the simulator.
 //! * **Layer 2** — the MoE model, written in JAX as *separately lowered
 //!   modules* (`python/compile/model.py`), AOT-compiled to HLO text.
 //! * **Layer 1** — Pallas kernels for the expert FFN and flash attention
@@ -44,4 +48,5 @@ pub mod sched;
 pub mod server;
 pub mod sim;
 pub mod util;
+pub mod weights;
 pub mod workload;

@@ -146,6 +146,21 @@ fn main() -> Result<()> {
                 "compile time total: {:.2}s",
                 eng.compile_secs()
             );
+            let m = &eng.metrics;
+            println!(
+                "weight cache: budget {} | hit-rate {:.1}% ({} hits / {} misses, {} evictions)",
+                moe_gen::util::fmt_bytes(eng.weights.cache.budget() as f64),
+                100.0 * m.weight_hit_rate(),
+                m.weight_hits,
+                m.weight_misses,
+                m.weight_evictions,
+            );
+            println!(
+                "HtoD: {:.1}% overlapped ({} overlapped / {} stalled)",
+                100.0 * m.htod_overlap_fraction(),
+                moe_gen::util::fmt_bytes(m.htod_overlapped_bytes as f64),
+                moe_gen::util::fmt_bytes(m.htod_stalled_bytes as f64),
+            );
         }
         _ => {
             bail!("unknown command {cmd}; try `moe-gen` with no args for usage");

@@ -25,6 +25,26 @@ pub struct Metrics {
     pub decode_secs: f64,
     pub htod_bytes: u64,
     pub dtoh_bytes: u64,
+    /// HtoD bytes whose transfer overlapped compute (queued on the link
+    /// engine: prefetched weights, staged KV windows, streamed acts).
+    pub htod_overlapped_bytes: u64,
+    /// HtoD bytes the pipeline stalled on (on-demand weight fetches).
+    pub htod_stalled_bytes: u64,
+    /// Weight bytes the backend itself uploaded (PJRT `S_Params` cache
+    /// misses on the live path; first-touch on the reference backend).
+    pub backend_upload_bytes: u64,
+    /// Weight-cache accounting, mirrored from
+    /// [`crate::weights::WeightCache`]'s ledger by the pipeline. One
+    /// deliberate difference: `weight_misses` here counts cache
+    /// *bypasses* too — for hit-rate purposes a bypass is a missed
+    /// reuse opportunity (the cache's own stats keep them separate).
+    pub weight_hits: u64,
+    pub weight_misses: u64,
+    pub weight_evictions: u64,
+    /// Overlapped weight prefetches issued (dense streams + predicted
+    /// experts) and how many a later launch consumed while in flight.
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
     pub cpu_attn_seqs: u64,
     pub gpu_attn_seqs: u64,
 }
@@ -67,6 +87,27 @@ impl Metrics {
     pub fn decode_throughput(&self) -> f64 {
         if self.decode_secs > 0.0 {
             self.decode_tokens as f64 / self.decode_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of weight fetches served from the GPU weight cache.
+    pub fn weight_hit_rate(&self) -> f64 {
+        let total = self.weight_hits + self.weight_misses;
+        if total > 0 {
+            self.weight_hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of HtoD bytes that crossed the link overlapped with
+    /// compute rather than stalling a launch.
+    pub fn htod_overlap_fraction(&self) -> f64 {
+        let total = self.htod_overlapped_bytes + self.htod_stalled_bytes;
+        if total > 0 {
+            self.htod_overlapped_bytes as f64 / total as f64
         } else {
             0.0
         }
@@ -128,6 +169,26 @@ impl Metrics {
             crate::util::fmt_bytes(self.htod_bytes as f64),
             crate::util::fmt_bytes(self.dtoh_bytes as f64)
         ));
+        if self.weight_hits + self.weight_misses > 0 {
+            s.push_str(&format!(
+                "weights: cache hit-rate {:.1}% ({} hits / {} misses, {} evictions), \
+                 prefetch {} issued / {} consumed in flight\n",
+                100.0 * self.weight_hit_rate(),
+                self.weight_hits,
+                self.weight_misses,
+                self.weight_evictions,
+                self.prefetch_issued,
+                self.prefetch_hits,
+            ));
+        }
+        if self.htod_overlapped_bytes + self.htod_stalled_bytes > 0 {
+            s.push_str(&format!(
+                "HtoD overlap: {:.1}% overlapped ({} overlapped / {} stalled)\n",
+                100.0 * self.htod_overlap_fraction(),
+                crate::util::fmt_bytes(self.htod_overlapped_bytes as f64),
+                crate::util::fmt_bytes(self.htod_stalled_bytes as f64),
+            ));
+        }
         if self.cpu_attn_seqs + self.gpu_attn_seqs > 0 {
             s.push_str(&format!(
                 "attention split: cpu {} / gpu {} seq-steps\n",
@@ -180,6 +241,22 @@ mod tests {
         let v = m.time_module("x", 1, 1, || 42);
         assert_eq!(v, 42);
         assert_eq!(m.modules["x"].calls, 1);
+    }
+
+    #[test]
+    fn residency_ratios() {
+        let mut m = Metrics::new();
+        assert_eq!(m.weight_hit_rate(), 0.0, "no fetches -> rate 0");
+        assert_eq!(m.htod_overlap_fraction(), 0.0);
+        m.weight_hits = 3;
+        m.weight_misses = 1;
+        m.htod_overlapped_bytes = 900;
+        m.htod_stalled_bytes = 100;
+        assert!((m.weight_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.htod_overlap_fraction() - 0.9).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("hit-rate 75.0%"));
+        assert!(r.contains("90.0% overlapped"));
     }
 
     #[test]

@@ -16,9 +16,15 @@
 //! carry no HtoD KV copy; decode DAGs carry every node class.
 //!
 //! The same builders serve the baseline policies through [`Knobs`]
-//! (prefetch off = DeepSpeed-style on-demand fetch; `weight_reuse` > 1 =
+//! (prefetch off = DeepSpeed-style on-demand fetch; `reuse` > 1 =
 //! FlexGen-style multi-round reuse; `kv_on_gpu` = vLLM-style partial
 //! offload), so every policy is scored by the *same* cost machinery.
+//!
+//! A searched [`Strategy`] is *executable*, residency included: its
+//! `s_expert`/`s_params`/`reuse` fields configure the live
+//! [`crate::weights`] subsystem through `Engine::set_strategy` (cache
+//! budget, predictive-prefetch buffer, multi-round reuse), so the
+//! modeled reuse/overlap behaviour and the executed one are one policy.
 
 use crate::dag::{Dag, Resource};
 use crate::exec::ModuleKind;
@@ -61,10 +67,16 @@ pub struct Strategy {
     pub b_e: usize,
     /// CPU-attention split ratio.
     pub omega: f64,
-    /// Reserved GPU expert prefetch buffer (bytes).
+    /// Reserved GPU expert prefetch buffer (bytes) — live: sizes the
+    /// predictive expert-prefetch depth ([`crate::weights`]).
     pub s_expert: usize,
-    /// GPU-cached model parameters (bytes).
+    /// GPU-cached model parameters (bytes) — live: the weight-cache
+    /// budget ([`crate::weights::WeightCache`]).
     pub s_params: usize,
+    /// Weight-fetch reuse factor (one fetch serves this many launches;
+    /// FlexGen/MoE-Lightning multi-round reuse). Searches copy it from
+    /// the policy's [`Knobs::reuse`] so it executes live.
+    pub reuse: f64,
 }
 
 /// Policy-structure knobs: how the DAG is wired for each batching policy.
@@ -524,12 +536,14 @@ pub fn search_decode(scn: &Scenario, knobs: &Knobs) -> SearchResult {
                                             b, b_a, b_e, omega,
                                             s_expert,
                                             s_params: 0,
+                                            reuse: knobs.reuse,
                                         },
                                         true,
                                     ))
                                 .max(0.0)
                                     * params_frac)
                                     as usize,
+                                reuse: knobs.reuse,
                             };
                             if !host_feasible(scn, s.b) || !gpu_feasible(scn, &s, true) {
                                 continue;
@@ -547,7 +561,7 @@ pub fn search_decode(scn: &Scenario, knobs: &Knobs) -> SearchResult {
         }
     }
     let (strategy, throughput) = best.unwrap_or((
-        Strategy { b: 1, b_a: 1, b_e: 1, omega: 0.0, s_expert: 0, s_params: 0 },
+        Strategy { b: 1, b_a: 1, b_e: 1, omega: 0.0, s_expert: 0, s_params: 0, reuse: 1.0 },
         0.0,
     ));
     SearchResult { strategy, throughput, candidates_evaluated: evaluated }
@@ -575,6 +589,7 @@ pub fn search_prefill(scn: &Scenario, knobs: &Knobs) -> SearchResult {
                     omega: 0.0,
                     s_expert: 2 * scn.model.expert_bytes(),
                     s_params: 0,
+                    reuse: knobs.reuse,
                 };
                 if !gpu_feasible(scn, &s, false) {
                     continue;
@@ -590,7 +605,7 @@ pub fn search_prefill(scn: &Scenario, knobs: &Knobs) -> SearchResult {
         }
     }
     let (strategy, throughput) = best.unwrap_or((
-        Strategy { b: 1, b_a: 1, b_e: 1, omega: 0.0, s_expert: 0, s_params: 0 },
+        Strategy { b: 1, b_a: 1, b_e: 1, omega: 0.0, s_expert: 0, s_params: 0, reuse: 1.0 },
         0.0,
     ));
     SearchResult { strategy, throughput, candidates_evaluated: evaluated }
@@ -631,9 +646,11 @@ mod tests {
         let scn = scn_dsv2();
         // Huge attention micro-batch on DeepSeek: the ×71 up-projection
         // blows past 24 GB.
-        let s = Strategy { b: 1024, b_a: 4096, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0 };
+        let s = Strategy { b: 1024, b_a: 4096, b_e: 8192, omega: 0.0, s_expert: 0,
+                           s_params: 0, reuse: 1.0 };
         assert!(!gpu_feasible(&scn, &s, true));
-        let small = Strategy { b: 1024, b_a: 64, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0 };
+        let small = Strategy { b: 1024, b_a: 64, b_e: 8192, omega: 0.0, s_expert: 0,
+                               s_params: 0, reuse: 1.0 };
         assert!(gpu_feasible(&scn, &small, true));
     }
 
@@ -644,7 +661,7 @@ mod tests {
         // name, and the per-layer order matches the pipeline's.
         let scn = scn_8x7b();
         let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.3,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0 };
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0 };
         let g = build_decode_dag(&scn, &s, &Knobs::moe_gen(), 1);
         for kind in crate::exec::ModuleKind::decode_layer_order() {
             if kind == crate::exec::ModuleKind::Embed {
@@ -667,7 +684,7 @@ mod tests {
     fn decode_dag_has_expected_structure() {
         let scn = scn_8x7b();
         let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0 };
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0 };
         let g = build_decode_dag(&scn, &s, &Knobs::moe_gen(), 1);
         assert!(g.topo_order().is_some(), "DAG must be acyclic");
         // 8 experts activated at B=1024 on Mixtral.
@@ -681,7 +698,7 @@ mod tests {
         // Isolate the prefetch flag: identical knobs otherwise.
         let scn = scn_8x7b();
         let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0 };
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0 };
         let with = Knobs {
             prefetch: true, reuse: 1.0, kv_on_gpu: true,
             cpu_attention: false, fetch_all_experts: true,
@@ -701,7 +718,7 @@ mod tests {
         let k = Knobs::moe_gen_gpu_only();
         let mk = |b: usize| Strategy {
             b, b_a: 256, b_e: 8192, omega: 0.0,
-            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
         };
         let tp = |b: usize| b as f64 / decode_step_time(&scn, &mk(b), &k);
         assert!(tp(64) < tp(512));
@@ -716,7 +733,7 @@ mod tests {
         let k = Knobs::moe_gen();
         let mk = |omega: f64| Strategy {
             b: 2048, b_a: 256, b_e: 8192, omega,
-            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
         };
         let t0 = decode_step_time(&scn, &mk(0.0), &k);
         let t6 = decode_step_time(&scn, &mk(0.6), &k);
@@ -768,7 +785,7 @@ mod tests {
     fn prefill_dag_acyclic_and_positive() {
         let scn = scn_dsv2();
         let s = Strategy { b: 8192, b_a: 8, b_e: 8192, omega: 0.0,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0 };
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0 };
         let g = build_prefill_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 2);
         assert!(g.topo_order().is_some());
         assert!(g.critical_path() > 0.0);

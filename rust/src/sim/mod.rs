@@ -154,27 +154,35 @@ pub fn decode_tp(scn: &Scenario, sys: System) -> Option<f64> {
         System::Vllm => {
             let b = continuous_batch(scn);
             // Offloaded weights stream on demand each step; no reuse.
-            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0 };
-            let t = decode_step_time(scn, &s, &Knobs::vllm());
+            let k = Knobs::vllm();
+            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0,
+                               reuse: k.reuse };
+            let t = decode_step_time(scn, &s, &k);
             Some(b as f64 / t)
         }
         System::DeepSpeed => {
             let b = model_based_batch(scn);
-            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0 };
-            let t = decode_step_time(scn, &s, &Knobs::deepspeed());
+            let k = Knobs::deepspeed();
+            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0,
+                               reuse: k.reuse };
+            let t = decode_step_time(scn, &s, &k);
             Some(b as f64 / t)
         }
         System::FlexGen => {
             let b = model_based_batch(scn);
-            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0 };
-            let t = decode_step_time(scn, &s, &Knobs::flexgen());
+            let k = Knobs::flexgen();
+            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0,
+                               reuse: k.reuse };
+            let t = decode_step_time(scn, &s, &k);
             Some(b as f64 / t)
         }
         System::MoeLightning => {
             let b = model_based_batch(scn);
             let omega = if m.kv_upproj_factor > 4.0 { 0.0 } else { 0.3 };
-            let s = Strategy { b, b_a: b, b_e: 8192, omega, s_expert: 0, s_params: 0 };
-            let t = decode_step_time(scn, &s, &Knobs::moe_lightning());
+            let k = Knobs::moe_lightning();
+            let s = Strategy { b, b_a: b, b_e: 8192, omega, s_expert: 0, s_params: 0,
+                               reuse: k.reuse };
+            let t = decode_step_time(scn, &s, &k);
             Some(b as f64 / t)
         }
         System::MoeGen(v) => {
@@ -209,11 +217,12 @@ pub fn prefill_tp(scn: &Scenario, sys: System) -> Option<f64> {
         System::Vllm => {
             // Continuous batching prefills one request at a time (TTFT-
             // optimized): wave = one prompt.
+            let k = Knobs::vllm();
             let s = Strategy {
                 b: scn.prompt_len, b_a: 1, b_e: 8192, omega: 0.0,
-                s_expert: 0, s_params: 0,
+                s_expert: 0, s_params: 0, reuse: k.reuse,
             };
-            let t = prefill_wave_time(scn, &s, &Knobs::vllm());
+            let t = prefill_wave_time(scn, &s, &k);
             Some(scn.prompt_len as f64 / t)
         }
         System::DeepSpeed | System::FlexGen | System::MoeLightning => {
@@ -226,7 +235,7 @@ pub fn prefill_tp(scn: &Scenario, sys: System) -> Option<f64> {
             let tokens = b_seqs * scn.prompt_len;
             let s = Strategy {
                 b: tokens, b_a: b_seqs, b_e: 8192, omega: 0.0,
-                s_expert: 0, s_params: 0,
+                s_expert: 0, s_params: 0, reuse: knobs.reuse,
             };
             let t = prefill_wave_time(scn, &s, &knobs);
             Some(tokens as f64 / t)
@@ -528,7 +537,7 @@ mod tests {
         let tp = |omega: f64| {
             let st = Strategy {
                 b, b_a: 256, b_e: 8192, omega,
-                s_expert: 2 * s.model.expert_bytes(), s_params: 0,
+                s_expert: 2 * s.model.expert_bytes(), s_params: 0, reuse: 1.0,
             };
             b as f64 / decode_step_time(&s, &st, &Knobs::moe_gen())
         };

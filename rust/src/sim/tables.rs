@@ -296,6 +296,7 @@ pub fn decode_tp_at_batch(scn: &Scenario, sys: System, b: usize) -> Option<f64> 
         b, b_a: b, b_e: 8192, omega: 0.0,
         s_expert: 2 * scn.model.expert_bytes(),
         s_params: 0,
+        reuse: knobs.reuse,
     };
     Some(b as f64 / decode_step_time(scn, &st, &knobs))
 }
@@ -382,7 +383,7 @@ pub fn fig7() -> String {
         let omega = i as f64 / 10.0;
         let st = Strategy {
             b, b_a: 256, b_e: 8192, omega,
-            s_expert: 2 * scn.model.expert_bytes(), s_params: 0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
         };
         let tp = b as f64 / decode_step_time(&scn, &st, &Knobs::moe_gen());
         if tp > best.1 {

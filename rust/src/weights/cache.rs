@@ -1,0 +1,516 @@
+//! Byte-budgeted GPU weight cache with pin/LRU-evict semantics.
+//!
+//! [`WeightCache`] is the residency authority for module weights on the
+//! device: every module launch [`acquire`](WeightCache::acquire)s its
+//! weight key before executing and releases it afterwards. Entries are
+//!
+//! * **pinned** while a launch is using them (never evictable),
+//! * **sticky** for the fetch's remaining reuse rounds (FlexGen-style
+//!   multi-round weight reuse: one fetch serves `reuse` launches), and
+//! * otherwise plain LRU victims when a new fetch needs room.
+//!
+//! Capacity accounting rides on [`MemoryPool`], so the budget is a hard
+//! invariant: the cache never holds more bytes than its budget, and a
+//! fetch that cannot be admitted (budget full of pinned/sticky entries)
+//! is *bypassed* — streamed across the link without caching — rather
+//! than over-subscribing device memory.
+
+use std::collections::HashMap;
+
+use crate::memory::{MemoryPool, TransferHandle};
+use crate::runtime::RtConfig;
+
+/// Identity of one module's weight tensor group on the device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WeightKey {
+    /// Token embedding table.
+    Embed,
+    /// One layer's dense weights: attention norms/projections + router.
+    Dense(usize),
+    /// One routed expert's SwiGLU FFN: `(layer, expert)`.
+    Expert(usize, usize),
+    /// One layer's shared-expert FFN.
+    Shared(usize),
+    /// Final norm + output projection.
+    LmHead,
+}
+
+/// Per-key weight byte sizes for one model configuration — the byte
+/// inventory the cache and the prefetch scheduler plan against. Matches
+/// the reference backend's weight shapes exactly (asserted in tests).
+#[derive(Debug, Clone)]
+pub struct WeightSizes {
+    pub embed: usize,
+    pub dense_layer: usize,
+    pub expert: usize,
+    pub shared: usize,
+    pub lm_head: usize,
+    pub num_layers: usize,
+    pub num_experts: usize,
+}
+
+impl WeightSizes {
+    /// Derive the byte inventory from a runtime model configuration
+    /// (f32 weights, the dtype both backends serve).
+    pub fn from_cfg(c: &RtConfig) -> Self {
+        let (h, qd, kvd) = (c.hidden_size, c.q_dim(), c.kv_dim());
+        let f = 4; // bytes per f32 weight element
+        WeightSizes {
+            embed: c.vocab_size * h * f,
+            // ln1 + wq + wk + wv + wo + ln2 + router
+            dense_layer: (h + h * qd + 2 * h * kvd + qd * h + h + h * c.num_experts) * f,
+            // wg + wu + wd
+            expert: 3 * h * c.ffn_inter * f,
+            shared: if c.use_shared_expert { 3 * h * c.shared_inter * f } else { 0 },
+            // lnf + lm_head
+            lm_head: (h + h * c.vocab_size) * f,
+            num_layers: c.num_layers,
+            num_experts: c.num_experts,
+        }
+    }
+
+    /// Bytes behind one key.
+    pub fn bytes(&self, key: WeightKey) -> usize {
+        match key {
+            WeightKey::Embed => self.embed,
+            WeightKey::Dense(_) => self.dense_layer,
+            WeightKey::Expert(..) => self.expert,
+            WeightKey::Shared(_) => self.shared,
+            WeightKey::LmHead => self.lm_head,
+        }
+    }
+
+    /// Total host-resident weight bytes of the model.
+    pub fn total(&self) -> usize {
+        self.embed
+            + self.num_layers * (self.dense_layer + self.num_experts * self.expert + self.shared)
+            + self.lm_head
+    }
+}
+
+/// Where a cached entry's bytes are relative to the link.
+enum Residency {
+    /// On the device, usable immediately.
+    Resident,
+    /// Space reserved; the transfer job is about to be attached.
+    Reserved,
+    /// An overlapped prefetch is crossing the link; the handle completes
+    /// it when the weight is first used (or at a phase drain).
+    InFlight(TransferHandle),
+}
+
+struct Entry {
+    bytes: usize,
+    state: Residency,
+    /// Launches currently using this weight (never evictable while > 0).
+    pins: u32,
+    /// Remaining reuse rounds this fetch is held resident for.
+    sticky: u32,
+    /// LRU clock stamp of the last touch.
+    stamp: u64,
+}
+
+/// Hit/miss/eviction accounting for the cache.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Fetches that could not be admitted (budget exhausted by pinned or
+    /// sticky entries) and were streamed without caching.
+    pub bypasses: u64,
+    /// Overlapped prefetches issued (dense streams + predictive experts).
+    pub prefetch_issued: u64,
+    /// Prefetches that a later launch actually consumed while in flight.
+    pub prefetch_useful: u64,
+}
+
+/// Outcome of [`WeightCache::acquire`].
+pub enum Acquire {
+    /// Resident — no link traffic needed.
+    Hit,
+    /// An overlapped prefetch was in flight for this key; the caller
+    /// completes it by waiting the handle (bytes were metered at issue).
+    HitInFlight(TransferHandle),
+    /// Not resident; space is reserved — the caller must transfer the
+    /// weight's bytes across the link.
+    Miss,
+    /// The cache cannot hold this weight right now (budget 0, or full of
+    /// pinned/sticky entries); the caller streams it without caching.
+    Bypass,
+}
+
+/// Byte-budgeted GPU weight cache (see module docs).
+pub struct WeightCache {
+    pool: MemoryPool,
+    entries: HashMap<WeightKey, Entry>,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl WeightCache {
+    /// A cache with `budget` bytes of device capacity. Budget 0 disables
+    /// caching: every acquire is a [`Acquire::Bypass`] (the on-demand
+    /// stall-per-launch baselines).
+    pub fn new(budget: usize) -> Self {
+        WeightCache {
+            pool: MemoryPool::new("gpu-weights", budget),
+            entries: HashMap::new(),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.pool.capacity() > 0
+    }
+
+    pub fn budget(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn used(&self) -> usize {
+        self.pool.used()
+    }
+
+    /// High-water mark of cached bytes (never exceeds the budget).
+    pub fn peak_bytes(&self) -> usize {
+        self.pool.peak()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: WeightKey) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Begin a launch that needs `key` (`bytes` wide). On success the
+    /// entry is pinned until [`release`](WeightCache::release); a miss
+    /// additionally holds the entry sticky for `sticky` further launches
+    /// (the reuse factor). The caller performs the link transfer on
+    /// [`Acquire::Miss`] / [`Acquire::Bypass`].
+    pub fn acquire(&mut self, key: WeightKey, bytes: usize, sticky: u32) -> Acquire {
+        if bytes == 0 {
+            return Acquire::Hit;
+        }
+        if !self.enabled() {
+            self.stats.bypasses += 1;
+            return Acquire::Bypass;
+        }
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.stamp = self.clock;
+            e.pins += 1;
+            self.stats.hits += 1;
+            return match std::mem::replace(&mut e.state, Residency::Resident) {
+                Residency::InFlight(h) => {
+                    self.stats.prefetch_useful += 1;
+                    Acquire::HitInFlight(h)
+                }
+                _ => Acquire::Hit,
+            };
+        }
+        if !self.make_room(bytes) {
+            self.stats.bypasses += 1;
+            return Acquire::Bypass;
+        }
+        self.pool.alloc(bytes).expect("make_room guarantees capacity");
+        self.entries.insert(
+            key,
+            Entry { bytes, state: Residency::Resident, pins: 1, sticky, stamp: self.clock },
+        );
+        self.stats.misses += 1;
+        Acquire::Miss
+    }
+
+    /// End of a launch using `key`: unpin and consume one reuse round.
+    pub fn release(&mut self, key: WeightKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.pins = e.pins.saturating_sub(1);
+            e.sticky = e.sticky.saturating_sub(1);
+        }
+    }
+
+    /// Reserve space for an overlapped prefetch of `key`. Prefetch is
+    /// opportunistic: it may only use *idle* budget — it never evicts
+    /// demand-cached weights, so speculation cannot crowd out the
+    /// current layer's working set under a tight budget. Returns `false`
+    /// (and reserves nothing) if the key is already cached/in flight or
+    /// there is no free room — the caller then skips the transfer.
+    pub fn reserve_prefetch(&mut self, key: WeightKey, bytes: usize) -> bool {
+        if bytes == 0 || !self.enabled() || self.entries.contains_key(&key) {
+            return false;
+        }
+        if self.pool.free_bytes() < bytes {
+            return false;
+        }
+        self.clock += 1;
+        self.pool.alloc(bytes).expect("make_room guarantees capacity");
+        self.entries.insert(
+            key,
+            Entry { bytes, state: Residency::Reserved, pins: 0, sticky: 0, stamp: self.clock },
+        );
+        self.stats.prefetch_issued += 1;
+        true
+    }
+
+    /// Attach the in-flight transfer handle to a reservation made by
+    /// [`reserve_prefetch`](WeightCache::reserve_prefetch).
+    pub fn fulfill_prefetch(&mut self, key: WeightKey, handle: TransferHandle) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            if matches!(e.state, Residency::Reserved) {
+                e.state = Residency::InFlight(handle);
+            }
+        }
+    }
+
+    /// Complete every outstanding in-flight prefetch (phase boundary).
+    /// Returns how many transfers were synchronized.
+    pub fn drain_in_flight(&mut self) -> usize {
+        let keys: Vec<WeightKey> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| matches!(e.state, Residency::InFlight(_)))
+            .map(|(k, _)| *k)
+            .collect();
+        let mut n = 0;
+        for k in keys {
+            if let Some(e) = self.entries.get_mut(&k) {
+                if let Residency::InFlight(h) =
+                    std::mem::replace(&mut e.state, Residency::Resident)
+                {
+                    h.wait();
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Adopt a new byte budget (e.g. a searched `S_Params`). LRU entries
+    /// — sticky and speculative ones included; only launch pins are
+    /// sacred — are shed until the surviving set fits. If pinned entries
+    /// alone exceed the new budget, capacity stays at their total (the
+    /// requested budget is *not* re-applied automatically) — the engine
+    /// only re-budgets between phases, when nothing is pinned.
+    pub fn set_budget(&mut self, budget: usize) {
+        while self.pool.used() > budget {
+            if !self.evict_lru(true) {
+                break;
+            }
+        }
+        let mut pool = MemoryPool::new("gpu-weights", budget.max(self.pool.used()));
+        for e in self.entries.values() {
+            pool.alloc(e.bytes).expect("capacity covers survivors");
+        }
+        self.pool = pool;
+    }
+
+    /// Make `bytes` of free room by LRU eviction, or report `false`
+    /// without evicting anything if that is impossible.
+    fn make_room(&mut self, bytes: usize) -> bool {
+        if bytes > self.pool.capacity() {
+            return false;
+        }
+        let evictable: usize = self
+            .entries
+            .values()
+            .filter(|e| e.pins == 0 && e.sticky == 0)
+            .map(|e| e.bytes)
+            .sum();
+        if self.pool.free_bytes() + evictable < bytes {
+            return false;
+        }
+        while self.pool.free_bytes() < bytes {
+            if !self.evict_lru(false) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Evict the least-recently-used victim. Victims are unpinned entries
+    /// past their reuse rounds — speculative entries (reserved/in-flight
+    /// prefetches) included, so demand always outranks speculation; their
+    /// fresh LRU stamps just make them the last resort. An in-flight
+    /// transfer is completed before its bytes are freed.
+    fn evict_lru(&mut self, allow_sticky: bool) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.pins == 0 && (allow_sticky || e.sticky == 0))
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(k, _)| *k);
+        match victim {
+            Some(k) => {
+                let e = self.entries.remove(&k).expect("victim exists");
+                if let Residency::InFlight(h) = e.state {
+                    h.wait();
+                }
+                self.pool.free(e.bytes);
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::TransferEngine;
+    use crate::runtime::{Backend, RefBackend};
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn sizes_match_reference_backend_inventory() {
+        let cfg = RtConfig::tiny();
+        let sizes = WeightSizes::from_cfg(&cfg);
+        let be = RefBackend::new(cfg, RefBackend::WEIGHT_SEED);
+        assert_eq!(sizes.total(), be.weights_total_bytes());
+        assert!(sizes.expert > 0 && sizes.dense_layer > 0 && sizes.shared > 0);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let e = 100;
+        let mut c = WeightCache::new(2 * e);
+        let (k0, k1, k2) =
+            (WeightKey::Expert(0, 0), WeightKey::Expert(0, 1), WeightKey::Expert(0, 2));
+        assert!(matches!(c.acquire(k0, e, 0), Acquire::Miss));
+        c.release(k0);
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Miss));
+        c.release(k1);
+        // Touch k0 so k1 becomes the LRU victim.
+        assert!(matches!(c.acquire(k0, e, 0), Acquire::Hit));
+        c.release(k0);
+        assert!(matches!(c.acquire(k2, e, 0), Acquire::Miss));
+        c.release(k2);
+        assert!(c.contains(k0) && c.contains(k2) && !c.contains(k1));
+        assert_eq!(c.stats().evictions, 1);
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Miss), "evicted entry re-fetches");
+        assert!(c.used() <= c.budget());
+    }
+
+    #[test]
+    fn pinned_entries_never_evicted() {
+        let e = 100;
+        let mut c = WeightCache::new(e);
+        let (k0, k1) = (WeightKey::Expert(0, 0), WeightKey::Expert(0, 1));
+        assert!(matches!(c.acquire(k0, e, 0), Acquire::Miss));
+        // k0 still pinned (launch in progress): k1 must bypass, not evict.
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Bypass));
+        assert!(c.contains(k0));
+        assert_eq!(c.used(), e);
+        c.release(k0);
+        // Unpinned: k1 can now evict k0.
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Miss));
+        assert!(!c.contains(k0) && c.contains(k1));
+    }
+
+    #[test]
+    fn reuse_rounds_hold_weights_resident() {
+        let e = 100;
+        let mut c = WeightCache::new(e);
+        let (k0, k1) = (WeightKey::Expert(0, 0), WeightKey::Expert(0, 1));
+        // Fetch with 2 extra reuse rounds: survives two more launches.
+        assert!(matches!(c.acquire(k0, e, 2), Acquire::Miss));
+        c.release(k0); // sticky 2 -> 1
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Bypass), "sticky entry not evictable");
+        assert!(matches!(c.acquire(k0, e, 0), Acquire::Hit));
+        c.release(k0); // sticky 1 -> 0
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Miss), "reuse exhausted -> evictable");
+    }
+
+    #[test]
+    fn prefetch_reserve_fulfill_consume() {
+        let eng = TransferEngine::new("wc-test", None);
+        let mut c = WeightCache::new(1000);
+        let k = WeightKey::Dense(1);
+        assert!(c.reserve_prefetch(k, 300));
+        assert!(!c.reserve_prefetch(k, 300), "double-issue suppressed");
+        c.fulfill_prefetch(k, eng.account(300));
+        match c.acquire(k, 300, 0) {
+            Acquire::HitInFlight(h) => {
+                h.wait();
+            }
+            _ => panic!("expected an in-flight hit"),
+        }
+        c.release(k);
+        assert_eq!(c.stats().prefetch_issued, 1);
+        assert_eq!(c.stats().prefetch_useful, 1);
+        assert_eq!(c.used(), 300);
+    }
+
+    #[test]
+    fn zero_budget_bypasses_everything() {
+        let mut c = WeightCache::new(0);
+        assert!(!c.enabled());
+        assert!(matches!(c.acquire(WeightKey::Embed, 64, 0), Acquire::Bypass));
+        assert!(!c.reserve_prefetch(WeightKey::Dense(0), 64));
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.stats().bypasses, 1);
+    }
+
+    #[test]
+    fn set_budget_shrinks_and_evicts_lru_first() {
+        let mut c = WeightCache::new(300);
+        for i in 0..3 {
+            let k = WeightKey::Expert(0, i);
+            assert!(matches!(c.acquire(k, 100, 0), Acquire::Miss));
+            c.release(k);
+        }
+        c.set_budget(100);
+        assert_eq!(c.budget(), 100);
+        assert_eq!(c.used(), 100);
+        assert!(c.contains(WeightKey::Expert(0, 2)), "MRU entry survives the shrink");
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn prop_budget_never_exceeded_and_pins_respected() {
+        prop_check(60, |rng| {
+            let unit = 64;
+            let budget = unit * rng.range(1, 9);
+            let mut c = WeightCache::new(budget);
+            let mut pinned: Vec<WeightKey> = Vec::new();
+            for _ in 0..rng.range(1, 60) {
+                match rng.below(3) {
+                    0 => {
+                        let key = WeightKey::Expert(0, rng.below(12));
+                        let sticky = rng.below(3) as u32;
+                        match c.acquire(key, unit, sticky) {
+                            Acquire::Bypass => {}
+                            _ => pinned.push(key),
+                        }
+                    }
+                    1 => {
+                        if !pinned.is_empty() {
+                            let i = rng.below(pinned.len());
+                            c.release(pinned.swap_remove(i));
+                        }
+                    }
+                    _ => {
+                        let _ = c.reserve_prefetch(WeightKey::Dense(rng.below(4)), unit);
+                    }
+                }
+                assert!(c.used() <= c.budget(), "budget exceeded");
+                assert!(c.peak_bytes() <= c.budget(), "budget peak exceeded");
+                for k in &pinned {
+                    assert!(c.contains(*k), "pinned entry evicted: {k:?}");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Expert weight residency: GPU weight cache + predictive prefetch.
+//!
+//! MoE offloading's throughput hinges on overlapping expert-weight HtoD
+//! traffic with GPU compute (paper §4.2; MoE-Lightning's weight-reuse
+//! paging and router-driven predictive prefetching are the related-work
+//! shapes). This subsystem makes weight residency a first-class, *live*
+//! policy layer instead of a stateless per-launch fetch:
+//!
+//! * [`WeightCache`] — a byte-budgeted device cache over
+//!   [`crate::memory::MemoryPool`] with per-key pin/LRU-evict semantics
+//!   and hit/miss/eviction accounting. Module launches acquire their
+//!   [`WeightKey`] before executing (pin), release it afterwards, and a
+//!   fetch that cannot be admitted is streamed without caching so the
+//!   budget is never exceeded.
+//! * [`PrefetchScheduler`] — decides what to move *ahead* of demand:
+//!   (a) the next layer's dense weights stream during the current
+//!   layer's attention compute, and (b) the hottest experts of layer
+//!   `l+1` are predictively fetched from layer `l`'s router output,
+//!   bounded by the strategy's reserved prefetch buffer (`S_Expert`).
+//! * [`WeightResidency`] — the bundle the engine owns and lends to
+//!   [`crate::exec::ExecCtx`]: cache + byte inventory
+//!   ([`WeightSizes`]) + scheduler. The executable knobs arrive through
+//!   [`crate::exec::Plan`]: `cache_bytes` (the searched `S_Params`),
+//!   `prefetch_bytes` (`S_Expert`) and `reuse` (FlexGen/MoE-Lightning
+//!   multi-round weight reuse), so a searched
+//!   [`crate::sched::Strategy`] configures the live residency layer.
+//!
+//! Residency is a transfer/placement policy only — it never touches
+//! module math, so greedy tokens are bit-identical with the cache on or
+//! off (asserted in `tests/integration_weights.rs`).
+
+pub mod cache;
+
+pub use cache::{Acquire, CacheStats, WeightCache, WeightKey, WeightSizes};
+
+/// Decides which weights to move ahead of demand (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchScheduler {
+    /// Reserved predictive-prefetch buffer in bytes — the strategy's
+    /// `S_Expert`, applied by `Engine::set_strategy` when nonzero.
+    /// `None` means no strategy configured it and
+    /// [`PrefetchScheduler::default_depth`] applies; `Some(0)` is an
+    /// explicit "no predictive expert prefetch".
+    pub buffer_bytes: Option<usize>,
+    /// Experts prefetched per upcoming layer when no buffer is reserved.
+    pub default_depth: usize,
+}
+
+impl Default for PrefetchScheduler {
+    fn default() -> Self {
+        PrefetchScheduler { buffer_bytes: None, default_depth: 2 }
+    }
+}
+
+impl PrefetchScheduler {
+    /// How many experts of the next layer to predictively prefetch: the
+    /// reserved buffer divided into expert-sized slots.
+    pub fn expert_depth(&self, sizes: &WeightSizes) -> usize {
+        match self.buffer_bytes {
+            Some(b) if sizes.expert > 0 => (b / sizes.expert).min(sizes.num_experts),
+            Some(_) => 0,
+            None => self.default_depth.min(sizes.num_experts),
+        }
+    }
+
+    /// Rank the upcoming layer's experts by the current router's routed
+    /// token counts; returns the hottest `depth` expert ids (ties break
+    /// toward the lower expert id, deterministically).
+    pub fn hot_experts(&self, counts: &[u64], depth: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..counts.len()).filter(|&e| counts[e] > 0).collect();
+        order.sort_by_key(|&e| std::cmp::Reverse(counts[e]));
+        order.truncate(depth);
+        order
+    }
+}
+
+/// The engine-owned residency bundle lent to [`crate::exec::ExecCtx`].
+pub struct WeightResidency {
+    pub cache: WeightCache,
+    pub sizes: WeightSizes,
+    pub sched: PrefetchScheduler,
+}
+
+impl WeightResidency {
+    pub fn new(sizes: WeightSizes, cache_budget: usize) -> Self {
+        WeightResidency {
+            cache: WeightCache::new(cache_budget),
+            sizes,
+            sched: PrefetchScheduler::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RtConfig;
+
+    #[test]
+    fn expert_depth_follows_reserved_buffer() {
+        let sizes = WeightSizes::from_cfg(&RtConfig::tiny());
+        let mut sched = PrefetchScheduler::default();
+        assert_eq!(sched.expert_depth(&sizes), 2, "default depth without a buffer");
+        sched.buffer_bytes = Some(3 * sizes.expert + sizes.expert / 2);
+        assert_eq!(sched.expert_depth(&sizes), 3, "buffer divides into expert slots");
+        sched.buffer_bytes = Some(100 * sizes.expert);
+        assert_eq!(sched.expert_depth(&sizes), sizes.num_experts, "capped at the expert count");
+        sched.buffer_bytes = Some(0);
+        assert_eq!(sched.expert_depth(&sizes), 0, "S_Expert = 0 disables predictive prefetch");
+    }
+
+    #[test]
+    fn hot_experts_rank_by_count_with_stable_ties() {
+        let sched = PrefetchScheduler::default();
+        let counts = [0u64, 5, 2, 5, 0, 1];
+        assert_eq!(sched.hot_experts(&counts, 3), vec![1, 3, 2]);
+        assert_eq!(sched.hot_experts(&counts, 10), vec![1, 3, 2, 5]);
+        assert!(sched.hot_experts(&[0, 0], 4).is_empty(), "cold experts never prefetch");
+    }
+}
