@@ -6,6 +6,8 @@
 //!   * attention micro-batch b_a (module asymmetry)
 //!   * ω CPU-attention split     (Fig. 7's axis, live)
 //!   * prefetch vs on-demand weight fetching (under a throttled link)
+//!   * baseline micro-batch size (the unified batch the model-based and
+//!     continuous baselines push through the whole model)
 //!
 //! Each row is a full offline run on the tiny MoE; token streams are
 //! checked for invariance across all ablations (greedy decode must not
@@ -108,6 +110,21 @@ fn main() {
         println!(
             "bench: ablate_wcache_{:<5} wall {wall:>7.2}s decode {dtp:>8.1} tok/s",
             cache
+        );
+    }
+
+    println!("\n== ablation: baseline micro-batch (continuous policy) ==");
+    for micro in [4usize, 8, 16] {
+        let cfg = EngineConfig {
+            policy: moe_gen::config::Policy::Continuous,
+            baseline_micro_batch: micro,
+            ..base.clone()
+        };
+        let rep = moe_gen::server::run_offline(cfg, &prompts, steps).unwrap();
+        check(&mut reference, "baseline_micro_batch", &rep.tokens);
+        println!(
+            "bench: ablate_micro_{micro:<4}     wall {:>7.2}s decode {:>8.1} tok/s",
+            rep.wall_secs, rep.decode_tp
         );
     }
 

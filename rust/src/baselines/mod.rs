@@ -9,12 +9,11 @@
 //! variable. Greedy decode is policy-invariant, so all runners must emit
 //! identical tokens (asserted in integration tests).
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::engine::{BatchState, Engine};
-use crate::kv::KvCache;
 
 /// Model-based batching: a unified micro-batch walks the entire model;
 /// experts see only that micro-batch's tokens (paper Fig. 2 left).
@@ -60,17 +59,7 @@ impl ContinuousRunner {
         prompts: &[Vec<i32>],
         steps: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        let c = eng.model_cfg().clone();
-        let kv = KvCache::new(
-            c.num_layers,
-            c.num_kv_heads,
-            c.head_dim,
-            c.max_context,
-            self.max_slots,
-        );
-        let kv_bytes = kv.host_bytes();
-        eng.host_pool.alloc(kv_bytes).map_err(anyhow::Error::msg)?;
-        let kv = Arc::new(RwLock::new(kv));
+        let kv = eng.alloc_kv_pool(self.max_slots)?;
 
         let mut results: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
         let mut next_prompt = 0usize;
@@ -117,7 +106,7 @@ impl ContinuousRunner {
             }
             active = still;
         }
-        eng.host_pool.free(kv_bytes);
+        eng.free_kv_pool(&kv);
         Ok(results)
     }
 }

@@ -90,6 +90,12 @@ pub struct EngineConfig {
     /// many module launches before becoming LRU-evictable
     /// (FlexGen/MoE-Lightning-style multi-round reuse; 1.0 = plain LRU).
     pub weight_reuse: f64,
+    /// Unified micro-batch size for the model-based baselines and the
+    /// slot-pool size for the continuous-batching baseline (the batch
+    /// those policies push through the *whole* model — the quantity the
+    /// paper's Fig. 2 contrasts with module-based accumulation). Sweeps
+    /// set it from the CLI (`--micro-batch`) and the ablations bench.
+    pub baseline_micro_batch: usize,
     pub seed: u64,
     /// Print per-phase diagnostics.
     pub verbose: bool,
@@ -107,6 +113,7 @@ impl Default for EngineConfig {
             prefetch: true,
             weight_cache_bytes: 256 << 20,
             weight_reuse: 1.0,
+            baseline_micro_batch: 8,
             seed: 0,
             verbose: false,
         }
@@ -146,5 +153,6 @@ mod tests {
         assert!(c.max_batch > 0);
         assert!(c.weight_cache_bytes > 0, "caching on by default");
         assert!(c.weight_reuse >= 1.0);
+        assert_eq!(c.baseline_micro_batch, 8, "paper-default baseline micro-batch");
     }
 }

@@ -214,6 +214,24 @@ impl Engine {
         ))
     }
 
+    /// Allocate a shared KV slot pool charged against the host memory
+    /// pool (the serving admission pool and the continuous-batching
+    /// baseline's live slot set). Release with
+    /// [`free_kv_pool`](Engine::free_kv_pool).
+    pub fn alloc_kv_pool(&mut self, slots: usize) -> Result<Arc<RwLock<KvCache>>> {
+        let c = self.backend.cfg();
+        let kv = KvCache::new(c.num_layers, c.num_kv_heads, c.head_dim, c.max_context, slots);
+        self.host_pool.alloc(kv.host_bytes()).map_err(anyhow::Error::msg)?;
+        Ok(Arc::new(RwLock::new(kv)))
+    }
+
+    /// Return a pool allocated by [`alloc_kv_pool`](Engine::alloc_kv_pool)
+    /// to the host memory budget.
+    pub fn free_kv_pool(&mut self, kv: &Arc<RwLock<KvCache>>) {
+        let bytes = kv.read().unwrap().host_bytes();
+        self.host_pool.free(bytes);
+    }
+
     /// Prefill prompts into an existing KV pool (used by the continuous-
     /// batching baseline which inserts prefills into a live slot pool).
     /// Returns (slots, lens, first tokens).
@@ -238,18 +256,53 @@ impl Engine {
     /// the plan's accumulated batch `B`. Returns, per sequence, the
     /// generated tokens (the first comes from prefill).
     pub fn generate(&mut self, prompts: &[Vec<i32>], steps: usize) -> Result<Vec<Vec<i32>>> {
-        assert!(steps >= 1);
+        self.generate_eos(prompts, steps, None)
+    }
+
+    /// EOS-aware greedy decode: each sequence runs until it emits `eos`
+    /// (recorded, then retired) or reaches `max_new` tokens. Finished
+    /// sequences leave the wave immediately (variable-membership decode,
+    /// [`BatchState::swap_remove`]) and their KV slots recycle, so a wave
+    /// ends as soon as its last sequence finishes rather than after a
+    /// fixed step count. With `eos = None` this is exactly
+    /// [`generate`](Engine::generate).
+    pub fn generate_eos(
+        &mut self,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+        eos: Option<i32>,
+    ) -> Result<Vec<Vec<i32>>> {
+        assert!(max_new >= 1);
         let wave = self.plan.accum_batch.max(1);
-        let mut results: Vec<Vec<i32>> = Vec::with_capacity(prompts.len());
-        for chunk in prompts.chunks(wave) {
+        let mut results: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        for (w, chunk) in prompts.chunks(wave).enumerate() {
+            let base = w * wave;
             let (mut state, first) = self.prefill(chunk)?;
-            let mut toks: Vec<Vec<i32>> = first.iter().map(|&t| vec![t]).collect();
+            // Original prompt index per batch position (mirrors the
+            // state's swap-remove order).
+            let mut idx: Vec<usize> = (base..base + chunk.len()).collect();
+            for (i, &t) in first.iter().enumerate() {
+                results[base + i].push(t);
+            }
             let mut failed = None;
-            for _ in 0..steps - 1 {
+            loop {
+                // Retire finished sequences (EOS emitted or budget hit).
+                for i in (0..state.len()).rev() {
+                    let done = results[idx[i]].len() >= max_new
+                        || eos == Some(*results[idx[i]].last().unwrap());
+                    if done {
+                        let slot = state.swap_remove(i);
+                        state.kv.write().unwrap().free_slot(slot);
+                        idx.swap_remove(i);
+                    }
+                }
+                if state.is_empty() {
+                    break;
+                }
                 match self.decode_step(&mut state) {
                     Ok(next) => {
                         for (i, &t) in next.iter().enumerate() {
-                            toks[i].push(t);
+                            results[idx[i]].push(t);
                         }
                     }
                     Err(e) => {
@@ -258,13 +311,12 @@ impl Engine {
                     }
                 }
             }
-            // Release KV host memory for this batch (also on error).
+            // Release KV host memory for this wave (also on error).
             let bytes = state.kv.read().unwrap().host_bytes();
             self.host_pool.free(bytes);
             if let Some(e) = failed {
                 return Err(e);
             }
-            results.extend(toks);
         }
         Ok(results)
     }
@@ -330,6 +382,40 @@ mod tests {
         }
         assert_eq!(eng.metrics.prefill_tokens, 5);
         assert_eq!(eng.metrics.decode_tokens, 4);
+    }
+
+    #[test]
+    fn generate_eos_early_exits_with_prefix_streams() {
+        let mut eng = engine();
+        let prompts = vec![vec![1, 2, 3], vec![4, 5], vec![7, 8, 9, 10]];
+        let full = eng.generate(&prompts, 6).unwrap();
+        // Use the first sequence's 3rd token as EOS: every stream must be
+        // cut (inclusively) at its first occurrence, membership changes
+        // notwithstanding.
+        let eos = full[0][2];
+        let mut eng2 = engine();
+        let cut = eng2.generate_eos(&prompts, 6, Some(eos)).unwrap();
+        for (f, c) in full.iter().zip(&cut) {
+            match f.iter().position(|&t| t == eos) {
+                Some(p) => assert_eq!(c, &f[..=p], "stream must stop at first EOS"),
+                None => assert_eq!(c, f, "EOS-free stream must be unchanged"),
+            }
+        }
+        let p0 = full[0].iter().position(|&t| t == eos).unwrap();
+        assert_eq!(cut[0].len(), p0 + 1, "sequence 0 retires at its first EOS");
+        assert!(cut[0].len() <= 3);
+        assert_eq!(eng2.host_pool.used(), 0, "wave KV released after early exit");
+    }
+
+    #[test]
+    fn kv_pool_alloc_free_roundtrip() {
+        let mut eng = engine();
+        let before = eng.host_pool.used();
+        let kv = eng.alloc_kv_pool(4).unwrap();
+        assert_eq!(kv.read().unwrap().total_slots(), 4);
+        assert!(eng.host_pool.used() > before, "pool charge missing");
+        eng.free_kv_pool(&kv);
+        assert_eq!(eng.host_pool.used(), before);
     }
 
     #[test]

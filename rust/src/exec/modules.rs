@@ -142,6 +142,11 @@ impl Embed {
     pub fn run(&self, cx: &mut ExecCtx<'_>, ids: &[i32]) -> Result<HostTensor> {
         let c = cx.backend.cfg().clone();
         let h = c.hidden_size;
+        if ids.is_empty() {
+            // Zero-membership wave (all sequences retired): no launch,
+            // and crucially no weight fetch to meter.
+            return Ok(HostTensor::empty(h));
+        }
         let mut out = HostTensor::empty(h);
         cx.with_weights(WeightKey::Embed, |cx| {
             for r in micro_batches(ids.len(), max_bucket(&c.token_buckets)) {
@@ -650,6 +655,9 @@ impl LmHead {
     pub fn run(&self, cx: &mut ExecCtx<'_>, x: &HostTensor) -> Result<Vec<i32>> {
         let c = cx.backend.cfg().clone();
         let h = c.hidden_size;
+        if x.rows == 0 {
+            return Ok(Vec::new());
+        }
         let mut out = Vec::with_capacity(x.rows);
         cx.with_weights(WeightKey::LmHead, |cx| {
             for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {

@@ -89,6 +89,12 @@ impl Plan {
 }
 
 /// Decoding state for a batch of sequences.
+///
+/// Membership is *variable*: the online server ([`crate::serve`]) and the
+/// EOS-aware decode loop retire finished sequences mid-run
+/// ([`BatchState::swap_remove`]) and backfill newly admitted ones
+/// ([`BatchState::push`]) between decode steps, so a wave's active-slot
+/// set shrinks and grows while the KV pool slots recycle underneath.
 pub struct BatchState {
     pub kv: Arc<RwLock<KvCache>>,
     /// KV slot per sequence, in batch order.
@@ -97,6 +103,39 @@ pub struct BatchState {
     pub lens: Vec<usize>,
     /// Most recent token per sequence (input to the next decode step).
     pub last: Vec<i32>,
+}
+
+impl BatchState {
+    /// Empty decode set over a shared KV slot pool.
+    pub fn new(kv: Arc<RwLock<KvCache>>) -> Self {
+        BatchState { kv, slots: Vec::new(), lens: Vec::new(), last: Vec::new() }
+    }
+
+    /// Sequences currently decoding.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Admit a freshly prefilled sequence into the decode set (backfill).
+    pub fn push(&mut self, slot: usize, len: usize, last: i32) {
+        self.slots.push(slot);
+        self.lens.push(len);
+        self.last.push(last);
+    }
+
+    /// Retire the sequence at batch index `i` (swap-remove: batch order
+    /// is not preserved — callers keeping a parallel id list must mirror
+    /// the swap). Returns the KV slot, which the caller owns: free it
+    /// back to the pool to recycle, or keep it to read the cache.
+    pub fn swap_remove(&mut self, i: usize) -> usize {
+        self.lens.swap_remove(i);
+        self.last.swap_remove(i);
+        self.slots.swap_remove(i)
+    }
 }
 
 /// Everything a module launch needs, borrowed from the engine: the
@@ -271,6 +310,11 @@ impl Pipeline {
         kv: &Arc<RwLock<KvCache>>,
         prompts: &[Vec<i32>],
     ) -> Result<(Vec<usize>, Vec<usize>, Vec<i32>)> {
+        if prompts.is_empty() {
+            // An empty prefill wave (serving tick with nothing admitted)
+            // launches nothing and fetches no weights.
+            return Ok((Vec::new(), Vec::new(), Vec::new()));
+        }
         let t0 = Instant::now();
         let c = cx.backend.cfg().clone();
         let (b, s, h) = (prompts.len(), c.prefill_seq, c.hidden_size);
@@ -350,8 +394,14 @@ impl Pipeline {
         Ok((slots, lens, first))
     }
 
-    /// One decode step for all sequences in `state`; returns next tokens.
+    /// One decode step for all sequences currently in `state` (the wave's
+    /// active-slot set — membership may differ step to step as finished
+    /// sequences retire and admissions backfill); returns next tokens.
     pub fn decode_step(&self, cx: &mut ExecCtx<'_>, state: &mut BatchState) -> Result<Vec<i32>> {
+        if state.is_empty() {
+            // Zero-membership wave: nothing to launch.
+            return Ok(Vec::new());
+        }
         let t0 = Instant::now();
         let c = cx.backend.cfg().clone();
         let b = state.slots.len();
@@ -571,6 +621,26 @@ mod tests {
 
         let p2 = Plan::from_strategy(&dec, None, &cfg, 128);
         assert_eq!(p2.prefill_attn_micro, 16, "defaults to largest prefill bucket");
+    }
+
+    #[test]
+    fn batch_state_membership_push_and_swap_remove() {
+        let kv = Arc::new(RwLock::new(KvCache::new(1, 1, 2, 8, 4)));
+        let mut st = BatchState::new(Arc::clone(&kv));
+        assert!(st.is_empty());
+        st.push(0, 3, 10);
+        st.push(1, 5, 11);
+        st.push(2, 4, 12);
+        assert_eq!(st.len(), 3);
+        // Retiring index 0 swaps the tail in; parallel arrays stay aligned.
+        let slot = st.swap_remove(0);
+        assert_eq!(slot, 0);
+        assert_eq!(st.slots, vec![2, 1]);
+        assert_eq!(st.lens, vec![4, 5]);
+        assert_eq!(st.last, vec![12, 11]);
+        st.swap_remove(1);
+        st.swap_remove(0);
+        assert!(st.is_empty());
     }
 
     #[test]

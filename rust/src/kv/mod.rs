@@ -49,9 +49,36 @@ impl KvCache {
         }
     }
 
+    /// Host bytes of one sequence slot (K and V, all layers) for a given
+    /// geometry — the per-request KV footprint the serving admission
+    /// controller charges against its byte budget (paper Eqs. 2–3).
+    pub fn slot_bytes_for(
+        num_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        capacity: usize,
+    ) -> usize {
+        2 * num_layers * capacity * kv_heads * head_dim * 4
+    }
+
+    /// Host bytes of one sequence slot of *this* cache.
+    pub fn slot_bytes(&self) -> usize {
+        2 * self.num_layers * self.capacity * self.kvd * 4
+    }
+
     /// Host bytes held by this cache (both K and V, all layers).
     pub fn host_bytes(&self) -> usize {
-        2 * self.num_layers * self.slots * self.capacity * self.kvd * 4
+        self.slots * self.slot_bytes()
+    }
+
+    /// Total slots this cache was built with (free + in use).
+    pub fn total_slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Slots currently allocated to sequences.
+    pub fn slots_in_use(&self) -> usize {
+        self.slots - self.free_slots.len()
     }
 
     pub fn alloc_slot(&mut self) -> Option<usize> {
@@ -344,6 +371,20 @@ mod tests {
         let kv = KvCache::new(2, 2, 4, 16, 4);
         // 2 (k+v) * 2 layers * 4 slots * 16 cap * 8 kvd * 4 B
         assert_eq!(kv.host_bytes(), 2 * 2 * 4 * 16 * 8 * 4);
+        assert_eq!(kv.slot_bytes(), kv.host_bytes() / 4);
+        assert_eq!(KvCache::slot_bytes_for(2, 2, 4, 16), kv.slot_bytes());
+    }
+
+    #[test]
+    fn slot_occupancy_tracks_alloc_and_free() {
+        let mut kv = mk();
+        assert_eq!(kv.total_slots(), 4);
+        assert_eq!(kv.slots_in_use(), 0);
+        let a = kv.alloc_slot().unwrap();
+        let _b = kv.alloc_slot().unwrap();
+        assert_eq!(kv.slots_in_use(), 2);
+        kv.free_slot(a);
+        assert_eq!(kv.slots_in_use(), 1);
     }
 
     #[test]

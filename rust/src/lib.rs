@@ -13,9 +13,12 @@
 //!   substrate with explicit HtoD/DtoH transfer engines ([`memory`]),
 //!   full KV-cache offloading ([`kv`]), the GPU weight-residency layer
 //!   ([`weights`]: byte-budgeted cache + predictive prefetch scheduler),
-//!   the offloading-DAG critical-path cost model (paper Eq. 4, [`dag`])
-//!   and the batching-strategy search over
-//!   `(B, b_a, b_e, ω, S_Expert, S_Params)` ([`sched`], paper §4.3–4.4).
+//!   the offloading-DAG critical-path cost model (paper Eq. 4, [`dag`]),
+//!   the batching-strategy search over
+//!   `(B, b_a, b_e, ω, S_Expert, S_Params)` ([`sched`], paper §4.3–4.4),
+//!   and the online serving subsystem ([`serve`]: deterministic arrival
+//!   traces, byte-budgeted KV-slot admission, EOS-aware wave scheduling
+//!   with backfill over the same module batches).
 //!   The simulator's DAG and the live pipeline share one module
 //!   vocabulary ([`exec::ModuleKind`]), so a searched strategy is
 //!   directly executable by [`engine::Engine::generate`] — including its
@@ -45,6 +48,7 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod server;
 pub mod sim;
 pub mod util;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run       live offline inference on the tiny MoE (real PJRT path)
+//!   serve     online serving under a deterministic arrival trace
 //!   tables    regenerate the paper's evaluation tables from the simulator
 //!   search    batching-strategy search for a paper model/testbed
 //!   simulate  per-system throughput for one scenario
@@ -14,7 +15,8 @@ use anyhow::{bail, Result};
 use moe_gen::config::{EngineConfig, Policy};
 use moe_gen::engine::Engine;
 use moe_gen::sim::tables;
-use moe_gen::{hw, model, sched, server, sim, workload};
+use moe_gen::workload::{ArrivalMode, ArrivalSpec};
+use moe_gen::{hw, model, sched, serve, server, sim, workload};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
@@ -43,7 +45,11 @@ fn usage() -> ! {
          \n\
          COMMANDS:\n\
            run       --policy module|model|continuous  --n 64  --steps 16\n\
-                     --omega 0.0  --artifacts artifacts  --seed 0\n\
+                     --omega 0.0  --micro-batch 8  --artifacts artifacts  --seed 0\n\
+           serve     --policy module|continuous  --n 64  --arrival t0|open|bursty|closed\n\
+                     --gap 1.0  --burst 8  --concurrency 16  --mean-decode 8\n\
+                     --max-decode 16  --eos <id>  --no-backfill  --kv-slots <n>\n\
+                     --micro-batch 8  --max-batch 128  --seed 0\n\
            tables    --table all|1|4|5|6|7|8|9|10|fig3|fig4|fig7\n\
            search    --model mixtral-8x7b --testbed c2 --prompt 512 --decode 256\n\
            simulate  --model deepseek-v2 --testbed c2 --prompt 512 --decode 256\n\
@@ -69,6 +75,7 @@ fn main() -> Result<()> {
                 policy,
                 omega: get("omega", "0").parse()?,
                 max_batch: get("max-batch", "128").parse()?,
+                baseline_micro_batch: get("micro-batch", "8").parse()?,
                 seed: get("seed", "0").parse()?,
                 ..EngineConfig::default()
             };
@@ -76,6 +83,63 @@ fn main() -> Result<()> {
             println!("[run] {} prompts, {steps} steps, policy={}", n, policy.name());
             let report = server::run_offline(cfg, &prompts, steps)?;
             println!("{}", report.summary());
+        }
+        "serve" => {
+            // No silent default here: a typo'd policy must not run the
+            // wrong side of the module-vs-continuous A/B experiment.
+            let policy_arg = get("policy", "module");
+            let Some(policy) = Policy::parse(&policy_arg) else {
+                bail!("unknown policy {policy_arg}; try module|continuous");
+            };
+            let seed: u64 = get("seed", "0").parse()?;
+            let mode = match get("arrival", "open").as_str() {
+                "t0" | "zero" | "offline" => ArrivalMode::AtTimeZero,
+                "open" => ArrivalMode::OpenLoop { mean_gap: get("gap", "1").parse()? },
+                "bursty" => ArrivalMode::Bursty {
+                    mean_gap: get("gap", "4").parse()?,
+                    burst: get("burst", "8").parse()?,
+                },
+                "closed" => ArrivalMode::ClosedLoop {
+                    concurrency: get("concurrency", "16").parse()?,
+                },
+                other => bail!("unknown arrival mode {other}; try t0|open|bursty|closed"),
+            };
+            let scfg = serve::ServeConfig {
+                eng: EngineConfig {
+                    artifacts_dir: get("artifacts", "artifacts").into(),
+                    policy,
+                    omega: get("omega", "0").parse()?,
+                    max_batch: get("max-batch", "128").parse()?,
+                    baseline_micro_batch: get("micro-batch", "8").parse()?,
+                    seed,
+                    ..EngineConfig::default()
+                },
+                arrival: ArrivalSpec { mode, seed },
+                num_requests: get("n", "64").parse()?,
+                mean_decode: get("mean-decode", "8").parse()?,
+                max_decode: get("max-decode", "16").parse()?,
+                eos: flags.get("eos").map(|s| s.parse()).transpose()?,
+                backfill: !flags.contains_key("no-backfill"),
+                kv_slots: flags.get("kv-slots").map(|s| s.parse()).transpose()?,
+                ..serve::ServeConfig::default()
+            };
+            println!(
+                "[serve] {} requests, policy={}, arrival={mode:?}, backfill={}",
+                scfg.num_requests,
+                policy.name(),
+                scfg.backfill
+            );
+            let report = serve::run_serve(&scfg)?;
+            println!("{}", report.summary());
+            println!(
+                "[serve] prefill {} tok, decode {} tok over {} waves; \
+                 weight cache hit-rate {:.1}%; leaked slots {}",
+                report.prefill_tokens,
+                report.decode_tokens,
+                report.decode_waves,
+                100.0 * report.weight_hit_rate,
+                report.leaked_slots,
+            );
         }
         "tables" => {
             let which = get("table", "all");

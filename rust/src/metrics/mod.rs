@@ -15,6 +15,46 @@ pub struct ModuleStat {
     pub padded_rows: u64,
 }
 
+/// Per-request latency accumulator for the online serving subsystem
+/// ([`crate::serve`]): collects TTFT / TPOT samples and answers the
+/// percentile queries a `ServeReport` publishes (p50/p99, SLO-style).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn push(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Nearest-rank percentile (`p` in `[0, 100]`); 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
+        xs[rank.clamp(1, xs.len()) - 1]
+    }
+}
+
 /// Engine-wide metrics sink.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -266,6 +306,23 @@ mod tests {
         let r = m.report();
         assert!(r.contains("router"));
         assert!(r.contains("tok/s"));
+    }
+
+    #[test]
+    fn latency_percentiles_nearest_rank() {
+        let mut l = LatencyStats::default();
+        assert_eq!(l.percentile(50.0), 0.0, "empty stats report zero");
+        assert_eq!(l.mean(), 0.0);
+        for v in [5.0, 1.0, 4.0, 2.0, 3.0] {
+            l.push(v);
+        }
+        assert_eq!(l.len(), 5);
+        assert!(!l.is_empty());
+        assert_eq!(l.percentile(50.0), 3.0);
+        assert_eq!(l.percentile(99.0), 5.0);
+        assert_eq!(l.percentile(0.0), 1.0);
+        assert_eq!(l.percentile(100.0), 5.0);
+        assert!((l.mean() - 3.0).abs() < 1e-12);
     }
 
     #[test]

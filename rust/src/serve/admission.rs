@@ -1,0 +1,209 @@
+//! Admission control: KV-slot lifecycle under the host-memory byte
+//! budget.
+//!
+//! The paper's feasibility constraints (Eqs. 2–3) bound how many
+//! sequences can be resident at once by the host memory their KV demands.
+//! The controller owns a shared [`KvCache`] slot pool sized from that
+//! budget — the pool's slab is charged against the engine's host
+//! [`crate::memory::MemoryPool`] at construction, so over-subscription is
+//! the same hard error the offline path gets — and tracks the slot
+//! lifecycle: a request is *admitted* when its prefill claims a slot and
+//! the slot is *recycled* when the request finishes (EOS or budget),
+//! making room for the next queued request (backfill).
+//!
+//! Invariants (property-tested below):
+//! * KV bytes in use never exceed the byte budget;
+//! * slots in use return to zero once every request finished (no leaks);
+//! * a recycled slot is indistinguishable from a fresh one (prefill
+//!   overwrites, lengths reset — token parity is asserted in
+//!   `tests/integration_serve.rs`).
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::engine::Engine;
+use crate::kv::KvCache;
+
+/// Byte-budgeted KV slot pool + lifecycle accounting.
+pub struct AdmissionController {
+    kv: Arc<RwLock<KvCache>>,
+    slot_bytes: usize,
+    total_slots: usize,
+    peak_in_use: usize,
+    admitted: u64,
+    recycled: u64,
+}
+
+impl AdmissionController {
+    /// Pool with an explicit slot count (bytes follow from the model's
+    /// KV geometry). Charges the engine's host pool; fails on OOM.
+    pub fn with_slots(eng: &mut Engine, slots: usize) -> Result<Self> {
+        if slots == 0 {
+            bail!("admission pool needs at least one KV slot");
+        }
+        let kv = eng.alloc_kv_pool(slots)?;
+        let slot_bytes = kv.read().unwrap().slot_bytes();
+        Ok(AdmissionController {
+            kv,
+            slot_bytes,
+            total_slots: slots,
+            peak_in_use: 0,
+            admitted: 0,
+            recycled: 0,
+        })
+    }
+
+    /// Pool sized from a byte budget: `slots = budget / slot_bytes`
+    /// (paper Eqs. 2–3 — the per-sequence KV footprint divides the
+    /// reserved host memory). Fails if the budget fits no slot.
+    pub fn with_budget(eng: &mut Engine, budget_bytes: usize) -> Result<Self> {
+        let c = eng.model_cfg();
+        let slot_bytes = KvCache::slot_bytes_for(
+            c.num_layers,
+            c.num_kv_heads,
+            c.head_dim,
+            c.max_context,
+        );
+        let slots = budget_bytes / slot_bytes;
+        if slots == 0 {
+            bail!(
+                "KV budget {budget_bytes} B fits no sequence (one slot needs {slot_bytes} B)"
+            );
+        }
+        Self::with_slots(eng, slots)
+    }
+
+    /// The shared slot pool (prefill waves allocate slots from it).
+    pub fn kv(&self) -> Arc<RwLock<KvCache>> {
+        Arc::clone(&self.kv)
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.total_slots
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.kv.read().unwrap().free_slot_count()
+    }
+
+    pub fn slots_in_use(&self) -> usize {
+        self.total_slots - self.free_slots()
+    }
+
+    /// Host bytes currently pinned by admitted sequences.
+    pub fn kv_bytes_in_use(&self) -> usize {
+        self.slots_in_use() * self.slot_bytes
+    }
+
+    /// The byte budget the pool was sized under.
+    pub fn budget_bytes(&self) -> usize {
+        self.total_slots * self.slot_bytes
+    }
+
+    pub fn peak_slots_in_use(&self) -> usize {
+        self.peak_in_use
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Record `n` sequences admitted (their prefill just claimed slots
+    /// from the pool).
+    pub fn note_admitted(&mut self, n: usize) {
+        self.admitted += n as u64;
+        self.peak_in_use = self.peak_in_use.max(self.slots_in_use());
+    }
+
+    /// Recycle a finished request's slot back into the pool.
+    pub fn recycle(&mut self, slot: usize) {
+        self.kv.write().unwrap().free_slot(slot);
+        self.recycled += 1;
+    }
+
+    /// Tear down: return the pool's bytes to the engine's host budget.
+    /// Call after the last request finished; leaked slots indicate a
+    /// scheduler bug and are reported by the caller.
+    pub fn shutdown(self, eng: &mut Engine) {
+        eng.free_kv_pool(&self.kv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::util::prop::prop_check;
+
+    fn engine() -> Engine {
+        Engine::new(EngineConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn budget_sizing_follows_eq2() {
+        let mut eng = engine();
+        let c = eng.model_cfg();
+        let slot = KvCache::slot_bytes_for(
+            c.num_layers,
+            c.num_kv_heads,
+            c.head_dim,
+            c.max_context,
+        );
+        let adm = AdmissionController::with_budget(&mut eng, 3 * slot + slot / 2).unwrap();
+        assert_eq!(adm.total_slots(), 3, "budget floors to whole slots");
+        assert!(adm.budget_bytes() <= 3 * slot + slot / 2);
+        adm.shutdown(&mut eng);
+        assert!(AdmissionController::with_budget(&mut eng, slot - 1).is_err());
+        assert!(AdmissionController::with_slots(&mut eng, 0).is_err());
+    }
+
+    #[test]
+    fn prop_admission_never_exceeds_budget_and_never_leaks() {
+        // Random admit/recycle interleavings: the byte budget is a hard
+        // ceiling throughout, and draining everything returns the pool
+        // to zero slots in use.
+        prop_check(15, |rng| {
+            let mut eng = engine();
+            let slots = rng.range(1, 6);
+            let mut adm = AdmissionController::with_slots(&mut eng, slots).unwrap();
+            let budget = adm.budget_bytes();
+            let mut held: Vec<usize> = Vec::new();
+            for _ in 0..rng.range(1, 40) {
+                if rng.f64() < 0.6 {
+                    // Admission path: prefill claims a slot if one is free.
+                    let got = adm.kv().write().unwrap().alloc_slot();
+                    if let Some(s) = got {
+                        held.push(s);
+                        adm.note_admitted(1);
+                    } else {
+                        assert_eq!(adm.free_slots(), 0, "alloc failed with free slots");
+                    }
+                } else if !held.is_empty() {
+                    let i = rng.below(held.len());
+                    adm.recycle(held.swap_remove(i));
+                }
+                assert!(adm.kv_bytes_in_use() <= budget, "KV budget exceeded");
+                assert_eq!(adm.slots_in_use(), held.len());
+                assert!(adm.peak_slots_in_use() <= adm.total_slots());
+            }
+            for s in held.drain(..) {
+                adm.recycle(s);
+            }
+            assert_eq!(adm.slots_in_use(), 0, "slots leaked after drain");
+            assert_eq!(adm.kv_bytes_in_use(), 0);
+            adm.shutdown(&mut eng);
+            assert_eq!(eng.host_pool.used(), 0, "host pool charge leaked");
+        });
+    }
+
+    #[test]
+    fn shutdown_returns_host_bytes() {
+        let mut eng = engine();
+        let before = eng.host_pool.used();
+        let adm = AdmissionController::with_slots(&mut eng, 4).unwrap();
+        assert_eq!(eng.host_pool.used(), before + adm.budget_bytes());
+        adm.shutdown(&mut eng);
+        assert_eq!(eng.host_pool.used(), before);
+    }
+}

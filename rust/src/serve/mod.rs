@@ -1,0 +1,479 @@
+//! Online serving subsystem: request admission, KV-slot lifecycle and
+//! wave scheduling over module-based batches (DESIGN.md §7).
+//!
+//! The offline driver ([`crate::server::run_offline`]) is a *closed*
+//! system: a fixed prompt set, a fixed step count. This module makes the
+//! engine an *open* one — requests arrive over virtual time from a
+//! deterministic trace ([`crate::workload::ArrivalSpec`]), are admitted
+//! into KV slots under the host-memory byte budget
+//! ([`AdmissionController`], paper Eqs. 2–3), decode until EOS or their
+//! per-request budget, and are **backfilled** so the strategy's module
+//! batch sizes (`B`, `b_a`, `b_e`) stay saturated while sequences drain
+//! ([`WaveScheduler`]). This is the throughput-under-load regime
+//! MoE-Lens (arXiv 2504.09345) analyzes, and where vLLM-style continuous
+//! batching (MoE-Lightning's baseline, arXiv 2411.11217) is the natural
+//! live comparison — `Policy::Continuous` runs the *identical* arrival
+//! trace through batch-1 prefill insertion, so module-based vs.
+//! continuous batching is an apples-to-apples serving experiment.
+//!
+//! One scheduler iteration = one virtual **tick**: release due arrivals →
+//! admit + prefill wave(s) → one decode wave → retire finished requests.
+//! Greedy tokens are batch-composition-invariant (the pipeline's core
+//! contract), so token streams are deterministic in (prompts, budgets,
+//! EOS) even though wave membership depends on the trace — under an
+//! everything-at-t0 trace with EOS disabled, `serve` is bit-identical to
+//! `run_offline` (`tests/integration_serve.rs`).
+
+pub mod admission;
+pub mod queue;
+pub mod request;
+pub mod wave;
+
+pub use admission::AdmissionController;
+pub use queue::RequestQueue;
+pub use request::{FinishReason, Request, RequestLog, RequestState};
+pub use wave::WaveScheduler;
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::config::{EngineConfig, Policy};
+use crate::engine::Engine;
+use crate::metrics::LatencyStats;
+use crate::server::apply_policy_residency;
+use crate::util::Stopwatch;
+use crate::workload::{self, ArrivalMode, ArrivalSpec};
+
+/// Configuration of one serving experiment.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub eng: EngineConfig,
+    /// Deterministic arrival process of the simulated client.
+    pub arrival: ArrivalSpec,
+    /// Requests synthesized by [`run_serve`] (ignored by [`serve`]).
+    pub num_requests: usize,
+    pub mean_prompt: usize,
+    pub max_prompt: usize,
+    /// Per-request decode budgets, log-normally spread (see
+    /// [`workload::decode_lengths`]).
+    pub mean_decode: usize,
+    pub max_decode: usize,
+    /// EOS token id; `None` disables early termination.
+    pub eos: Option<i32>,
+    /// Allow requests to join a live wave (module policy; continuous
+    /// batching backfills by definition).
+    pub backfill: bool,
+    /// Admission pool size override in slots (default: the plan's `B`
+    /// for module policy, `baseline_micro_batch` for continuous).
+    pub kv_slots: Option<usize>,
+    /// Admission pool size as a host-memory byte budget (overrides
+    /// `kv_slots`; paper Eqs. 2–3 sizing).
+    pub kv_budget_bytes: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            eng: EngineConfig::default(),
+            arrival: ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 1.0 }, seed: 0 },
+            num_requests: 64,
+            mean_prompt: 24,
+            max_prompt: 64,
+            mean_decode: 8,
+            max_decode: 16,
+            eos: None,
+            backfill: true,
+            kv_slots: None,
+            kv_budget_bytes: None,
+        }
+    }
+}
+
+/// One serving run's results: latency percentiles alongside the
+/// throughput the offline tables report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub policy: Policy,
+    pub requests: usize,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub wall_secs: f64,
+    pub total_tp: f64,
+    /// Time-to-first-token percentiles (seconds).
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    /// Time-per-output-token percentiles (seconds).
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+    pub expert_avg_batch: f64,
+    pub weight_hit_rate: f64,
+    pub finished_eos: usize,
+    pub finished_max: usize,
+    /// High-water mark of KV slots in use (admission pressure).
+    pub peak_slots: usize,
+    /// Slots still in use after the last request finished (must be 0).
+    pub leaked_slots: usize,
+    /// Requests admitted into a live wave (0 with backfill disabled and
+    /// a single arrival burst).
+    pub backfilled: u64,
+    pub decode_waves: u64,
+    /// Greedy token streams, indexed by request id.
+    pub tokens: Vec<Vec<i32>>,
+}
+
+impl ServeReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<14} reqs={:<5} wall={:>7.2}s total={:>8.1} tok/s \
+             ttft(p50/p99)={:>6.1}/{:<6.1}ms tpot(p50/p99)={:>5.2}/{:<5.2}ms \
+             expert-avg-bsz={:>6.1} eos={} max={} peak-slots={} backfilled={}",
+            self.policy.name(),
+            self.requests,
+            self.wall_secs,
+            self.total_tp,
+            1e3 * self.ttft_p50,
+            1e3 * self.ttft_p99,
+            1e3 * self.tpot_p50,
+            1e3 * self.tpot_p99,
+            self.expert_avg_batch,
+            self.finished_eos,
+            self.finished_max,
+            self.peak_slots,
+            self.backfilled,
+        )
+    }
+}
+
+/// Synthesize the deterministic request set a [`ServeConfig`] describes.
+pub fn synth_requests(cfg: &ServeConfig, vocab: usize) -> Vec<Request> {
+    let n = cfg.num_requests;
+    let prompts =
+        workload::generate_prompts(n, cfg.mean_prompt, cfg.max_prompt, vocab, cfg.eng.seed);
+    let budgets =
+        workload::decode_lengths(n, cfg.mean_decode, 1, cfg.max_decode.max(1), cfg.eng.seed);
+    let ticks = cfg.arrival.arrival_ticks(n);
+    prompts
+        .into_iter()
+        .zip(budgets)
+        .zip(ticks)
+        .enumerate()
+        .map(|(id, ((prompt, max_new), arrival))| Request { id, prompt, max_new, arrival })
+        .collect()
+}
+
+/// Serve a synthesized workload (the `moe-gen serve` entrypoint).
+pub fn run_serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    let mut eng = build_engine(&cfg.eng)?;
+    let requests = synth_requests(cfg, eng.model_cfg().vocab_size);
+    serve_on(&mut eng, cfg, requests)
+}
+
+/// Serve an explicit request set (integration tests pin prompts/budgets).
+pub fn serve(cfg: &ServeConfig, requests: Vec<Request>) -> Result<ServeReport> {
+    let mut eng = build_engine(&cfg.eng)?;
+    serve_on(&mut eng, cfg, requests)
+}
+
+fn build_engine(eng_cfg: &EngineConfig) -> Result<Engine> {
+    let mut ecfg = eng_cfg.clone();
+    apply_policy_residency(&mut ecfg);
+    let mut eng = Engine::new(ecfg)?;
+    eng.warmup()?;
+    Ok(eng)
+}
+
+/// What the scheduling loop accumulates (split out so the admission pool
+/// is torn down on both the Ok and the Err path).
+struct LoopOut {
+    logs: Vec<RequestLog>,
+    backfilled: u64,
+    decode_waves: u64,
+    wall_secs: f64,
+}
+
+fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Result<ServeReport> {
+    let policy = eng.cfg.policy;
+    let n = requests.len();
+    if n == 0 {
+        bail!("serve needs at least one request");
+    }
+    let seq_cap = eng.model_cfg().prefill_seq;
+    let mut seen = vec![false; n];
+    for r in &requests {
+        if r.prompt.is_empty() || r.prompt.len() > seq_cap {
+            bail!("request {}: prompt length {} not in 1..={seq_cap}", r.id, r.prompt.len());
+        }
+        if r.max_new == 0 {
+            bail!("request {}: zero decode budget", r.id);
+        }
+        if r.id >= n || seen[r.id] {
+            bail!("request ids must be unique and dense in 0..{n}, got {}", r.id);
+        }
+        seen[r.id] = true;
+    }
+
+    let plan = eng.plan();
+    // Per-policy wave shape: module batches prefills at B and backfills
+    // hysteretically; continuous inserts batch-1 prefills into a
+    // baseline-sized slot pool (the ContinuousRunner discipline, open).
+    let (default_slots, prefill_chunk, backfill) = match policy {
+        Policy::ModuleBased => {
+            let b = plan.accum_batch.max(1);
+            (b, b, cfg.backfill)
+        }
+        Policy::Continuous => (eng.cfg.baseline_micro_batch.max(1), 1, true),
+        p => bail!("serve supports policies module|continuous, got {}", p.name()),
+    };
+    let mut adm = match (cfg.kv_budget_bytes, cfg.kv_slots) {
+        (Some(budget), _) => AdmissionController::with_budget(eng, budget)?,
+        (None, Some(slots)) => AdmissionController::with_slots(eng, slots)?,
+        (None, None) => AdmissionController::with_slots(eng, default_slots)?,
+    };
+    let max_in_flight = default_slots.min(adm.total_slots());
+    // The hysteresis threshold derives from the *effective* in-flight
+    // cap, not the plan's B: a small slot pool or closed-loop
+    // concurrency must not silently disable backfill.
+    let min_backfill = match policy {
+        Policy::ModuleBased => (max_in_flight / 2).max(1),
+        _ => 1,
+    };
+    let mut sched =
+        WaveScheduler::new(adm.kv(), max_in_flight, prefill_chunk, min_backfill, backfill);
+
+    let out = serve_loop(eng, cfg, requests, &mut adm, &mut sched);
+    let leaked_slots = adm.slots_in_use();
+    let peak_slots = adm.peak_slots_in_use();
+    adm.shutdown(eng);
+    let out = out?;
+
+    let mut ttft = LatencyStats::default();
+    let mut tpot = LatencyStats::default();
+    let mut finished_eos = 0;
+    let mut finished_max = 0;
+    for log in &out.logs {
+        match log.state {
+            RequestState::Finished(FinishReason::Eos) => finished_eos += 1,
+            RequestState::Finished(FinishReason::MaxTokens) => finished_max += 1,
+            s => bail!("request left unfinished in state {s:?}"),
+        }
+        if let Some(t) = log.ttft() {
+            ttft.push(t);
+        }
+        if let Some(t) = log.tpot() {
+            tpot.push(t);
+        }
+    }
+    let m = &eng.metrics;
+    Ok(ServeReport {
+        policy,
+        requests: n,
+        prefill_tokens: m.prefill_tokens,
+        decode_tokens: m.decode_tokens,
+        wall_secs: out.wall_secs,
+        total_tp: (m.prefill_tokens + m.decode_tokens) as f64 / out.wall_secs.max(1e-9),
+        ttft_p50: ttft.percentile(50.0),
+        ttft_p99: ttft.percentile(99.0),
+        tpot_p50: tpot.percentile(50.0),
+        tpot_p99: tpot.percentile(99.0),
+        expert_avg_batch: m.avg_batch("expert_ffn"),
+        weight_hit_rate: m.weight_hit_rate(),
+        finished_eos,
+        finished_max,
+        peak_slots,
+        leaked_slots,
+        backfilled: out.backfilled,
+        decode_waves: out.decode_waves,
+        tokens: out.logs.into_iter().map(|l| l.tokens).collect(),
+    })
+}
+
+fn serve_loop(
+    eng: &mut Engine,
+    cfg: &ServeConfig,
+    requests: Vec<Request>,
+    adm: &mut AdmissionController,
+    sched: &mut WaveScheduler,
+) -> Result<LoopOut> {
+    let n = requests.len();
+    let mut max_new = vec![0usize; n];
+    for r in &requests {
+        max_new[r.id] = r.max_new;
+    }
+    let closed_concurrency = match cfg.arrival.mode {
+        ArrivalMode::ClosedLoop { concurrency } => Some(concurrency.max(1)),
+        _ => None,
+    };
+
+    let mut queue = RequestQueue::new(requests);
+    let mut pending: VecDeque<Request> = VecDeque::new();
+    let mut logs: Vec<RequestLog> = vec![RequestLog::default(); n];
+    let kv = adm.kv();
+    let mut finished = 0usize;
+    let mut now: u64 = 0;
+    let sw = Stopwatch::start();
+
+    while finished < n {
+        // 1. Arrival process → released requests (state: Queued).
+        let released = match closed_concurrency {
+            // Closed loop: the client tops the system back up to its
+            // concurrency whenever requests complete.
+            Some(c) => {
+                let in_system = pending.len() + sched.in_flight();
+                queue.release_n(c.saturating_sub(in_system))
+            }
+            None => queue.release_due(now),
+        };
+        for r in released {
+            logs[r.id].release();
+            pending.push_back(r);
+        }
+
+        // 2. Admission + prefill wave(s): claim KV slots, run the
+        //    batched prefill, emit first tokens, join the decode set.
+        loop {
+            let quota = sched.admit_quota(pending.len(), adm.free_slots(), !queue.is_empty());
+            if quota == 0 {
+                break;
+            }
+            let backfilling = !sched.state.is_empty();
+            let wave: Vec<Request> = pending.drain(..quota.min(sched.prefill_chunk)).collect();
+            let prompts: Vec<Vec<i32>> = wave.iter().map(|r| r.prompt.clone()).collect();
+            for r in &wave {
+                logs[r.id].transition(RequestState::Prefilling);
+            }
+            let (slots, lens, first) = eng.prefill_into(&kv, &prompts)?;
+            adm.note_admitted(slots.len());
+            for (i, r) in wave.iter().enumerate() {
+                let log = &mut logs[r.id];
+                log.note_first_token();
+                log.tokens.push(first[i]);
+                let eos_hit = cfg.eos == Some(first[i]);
+                if eos_hit || log.tokens.len() >= r.max_new {
+                    let reason =
+                        if eos_hit { FinishReason::Eos } else { FinishReason::MaxTokens };
+                    log.transition(RequestState::Finished(reason));
+                    adm.recycle(slots[i]);
+                    finished += 1;
+                } else {
+                    log.transition(RequestState::Decoding);
+                    sched.push(r.id, slots[i], lens[i], first[i]);
+                    if backfilling {
+                        // Counted per request actually joining a live
+                        // decode set (finish-at-prefill never joins).
+                        sched.backfilled += 1;
+                    }
+                }
+            }
+        }
+
+        // 3. One decode wave over the in-flight set; retire finishers
+        //    (descending index order keeps swap-remove positions valid).
+        if !sched.state.is_empty() {
+            let next = eng.decode_step(&mut sched.state)?;
+            sched.decode_waves += 1;
+            for i in (0..next.len()).rev() {
+                let id = sched.ids[i];
+                let log = &mut logs[id];
+                log.tokens.push(next[i]);
+                let eos_hit = cfg.eos == Some(next[i]);
+                if eos_hit || log.tokens.len() >= max_new[id] {
+                    let (rid, slot) = sched.retire(i);
+                    debug_assert_eq!(rid, id);
+                    let reason =
+                        if eos_hit { FinishReason::Eos } else { FinishReason::MaxTokens };
+                    log.transition(RequestState::Finished(reason));
+                    adm.recycle(slot);
+                    finished += 1;
+                }
+            }
+        }
+
+        // 4. Advance the virtual clock; fast-forward idle gaps in the
+        //    trace (nothing in flight, nothing pending).
+        now += 1;
+        if sched.state.is_empty() && pending.is_empty() && closed_concurrency.is_none() {
+            if let Some(t) = queue.next_arrival() {
+                now = now.max(t);
+            }
+        }
+    }
+
+    Ok(LoopOut {
+        logs,
+        backfilled: sched.backfilled,
+        decode_waves: sched.decode_waves,
+        wall_secs: sw.secs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_formats_latency_and_saturation() {
+        let r = ServeReport {
+            policy: Policy::ModuleBased,
+            requests: 12,
+            prefill_tokens: 100,
+            decode_tokens: 80,
+            wall_secs: 1.5,
+            total_tp: 120.0,
+            ttft_p50: 0.010,
+            ttft_p99: 0.040,
+            tpot_p50: 0.002,
+            tpot_p99: 0.0081,
+            expert_avg_batch: 9.5,
+            weight_hit_rate: 0.9,
+            finished_eos: 3,
+            finished_max: 9,
+            peak_slots: 16,
+            leaked_slots: 0,
+            backfilled: 4,
+            decode_waves: 20,
+            tokens: vec![],
+        };
+        let s = r.summary();
+        assert!(s.contains("MoE-Gen"));
+        assert!(s.contains("ttft(p50/p99)=  10.0/40.0"));
+        assert!(s.contains("tpot(p50/p99)= 2.00/8.10"));
+        assert!(s.contains("eos=3"));
+        assert!(s.contains("peak-slots=16"));
+        assert!(s.contains("backfilled=4"));
+    }
+
+    #[test]
+    fn synth_requests_are_deterministic_and_valid() {
+        let cfg = ServeConfig { num_requests: 16, ..ServeConfig::default() };
+        let a = synth_requests(&cfg, 512);
+        let b = synth_requests(&cfg, 512);
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+            assert_eq!(x.arrival, y.arrival);
+        }
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!(!r.prompt.is_empty() && r.prompt.len() <= cfg.max_prompt);
+            assert!((1..=cfg.max_decode).contains(&r.max_new));
+        }
+    }
+
+    #[test]
+    fn serve_rejects_bad_requests_and_policies() {
+        let cfg = ServeConfig::default();
+        assert!(serve(&cfg, vec![]).is_err(), "empty request set");
+        let bad = vec![Request { id: 0, prompt: vec![], max_new: 4, arrival: 0 }];
+        assert!(serve(&cfg, bad).is_err(), "empty prompt");
+        let zero = vec![Request { id: 0, prompt: vec![1], max_new: 0, arrival: 0 }];
+        assert!(serve(&cfg, zero).is_err(), "zero budget");
+        let dcfg = ServeConfig {
+            eng: EngineConfig { policy: Policy::ModelBased, ..EngineConfig::default() },
+            ..ServeConfig::default()
+        };
+        let ok = vec![Request { id: 0, prompt: vec![1], max_new: 2, arrival: 0 }];
+        assert!(serve(&dcfg, ok).is_err(), "model-based policy is offline-only");
+    }
+}

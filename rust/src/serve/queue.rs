@@ -1,0 +1,89 @@
+//! Deterministic request queue: the server-side view of the arrival
+//! process.
+//!
+//! Requests are held in arrival order (ties broken by id, so traces are
+//! fully deterministic) and released either by the virtual clock
+//! ([`RequestQueue::release_due`], open-loop modes) or by completion
+//! pressure ([`RequestQueue::release_n`], closed-loop concurrency).
+
+use std::collections::VecDeque;
+
+use crate::serve::request::Request;
+
+/// Requests not yet released to the server, sorted by (arrival, id).
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    upcoming: VecDeque<Request>,
+}
+
+impl RequestQueue {
+    pub fn new(mut requests: Vec<Request>) -> Self {
+        requests.sort_by_key(|r| (r.arrival, r.id));
+        RequestQueue { upcoming: requests.into() }
+    }
+
+    /// Requests still unreleased.
+    pub fn len(&self) -> usize {
+        self.upcoming.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.upcoming.is_empty()
+    }
+
+    /// The next arrival tick, if any request is still unreleased.
+    pub fn next_arrival(&self) -> Option<u64> {
+        self.upcoming.front().map(|r| r.arrival)
+    }
+
+    /// Open loop: release every request whose arrival tick has passed.
+    pub fn release_due(&mut self, now: u64) -> Vec<Request> {
+        let mut out = Vec::new();
+        while self.upcoming.front().is_some_and(|r| r.arrival <= now) {
+            out.push(self.upcoming.pop_front().unwrap());
+        }
+        out
+    }
+
+    /// Closed loop: release up to `room` requests regardless of their
+    /// arrival tick (the client keeps a fixed concurrency in flight).
+    pub fn release_n(&mut self, room: usize) -> Vec<Request> {
+        let take = room.min(self.upcoming.len());
+        self.upcoming.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: u64) -> Request {
+        Request { id, prompt: vec![1], max_new: 1, arrival }
+    }
+
+    #[test]
+    fn releases_in_arrival_order_with_id_tiebreak() {
+        let mut q = RequestQueue::new(vec![req(2, 5), req(0, 0), req(1, 0), req(3, 9)]);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.next_arrival(), Some(0));
+        let r0 = q.release_due(0);
+        assert_eq!(r0.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.release_due(4).len(), 0, "nothing due before tick 5");
+        assert_eq!(q.next_arrival(), Some(5));
+        let r5 = q.release_due(7);
+        assert_eq!(r5[0].id, 2);
+        let r9 = q.release_due(100);
+        assert_eq!(r9[0].id, 3);
+        assert!(q.is_empty());
+        assert_eq!(q.next_arrival(), None);
+    }
+
+    #[test]
+    fn closed_loop_release_ignores_ticks() {
+        let mut q = RequestQueue::new(vec![req(0, 0), req(1, 50), req(2, 99)]);
+        assert_eq!(q.release_n(0).len(), 0);
+        let r = q.release_n(2);
+        assert_eq!(r.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.release_n(5).len(), 1, "release caps at what remains");
+    }
+}

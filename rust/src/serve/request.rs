@@ -1,0 +1,189 @@
+//! Per-request lifecycle: the serving state machine and its timing log.
+//!
+//! ```text
+//!   Queued ──► Prefilling ──► Decoding ──► Finished{Eos | MaxTokens}
+//!                   │                          ▲
+//!                   └──────────────────────────┘   (EOS or a budget of 1
+//!                                                   at the first token)
+//! ```
+//!
+//! Transitions are enforced ([`RequestState::can_transition`]): a request
+//! cannot decode before prefilling, cannot finish twice, and cannot leave
+//! `Finished`. The [`RequestLog`] stamps wall-clock instants at release,
+//! first token and completion — TTFT and TPOT derive from those.
+
+use std::time::Instant;
+
+/// One client request of the simulated open system.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub prompt: Vec<i32>,
+    /// Decode budget: the request finishes after this many generated
+    /// tokens (the prefill token counts) unless EOS arrives first.
+    pub max_new: usize,
+    /// Arrival tick in the deterministic trace
+    /// ([`crate::workload::ArrivalSpec`]).
+    pub arrival: u64,
+}
+
+/// Why a request finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The model emitted the EOS token (recorded, then retired).
+    Eos,
+    /// The per-request decode budget was exhausted.
+    MaxTokens,
+}
+
+/// The per-request state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Released by the arrival process, waiting for admission.
+    Queued,
+    /// Admitted into a KV slot; its prefill wave is running.
+    Prefilling,
+    /// In the decode set (an active slot of the current waves).
+    Decoding,
+    /// Retired; its KV slot has been recycled.
+    Finished(FinishReason),
+}
+
+impl RequestState {
+    /// Legal lifecycle transitions (see the module diagram).
+    pub fn can_transition(self, to: RequestState) -> bool {
+        matches!(
+            (self, to),
+            (RequestState::Queued, RequestState::Prefilling)
+                | (RequestState::Prefilling, RequestState::Decoding)
+                | (RequestState::Prefilling, RequestState::Finished(_))
+                | (RequestState::Decoding, RequestState::Finished(_))
+        )
+    }
+}
+
+/// Serving-side record of one request: state, generated tokens and the
+/// wall-clock instants latency metrics derive from.
+#[derive(Debug, Clone)]
+pub struct RequestLog {
+    pub state: RequestState,
+    pub tokens: Vec<i32>,
+    released: Option<Instant>,
+    first_token: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+impl Default for RequestLog {
+    fn default() -> Self {
+        RequestLog {
+            state: RequestState::Queued,
+            tokens: Vec::new(),
+            released: None,
+            first_token: None,
+            finished: None,
+        }
+    }
+}
+
+impl RequestLog {
+    /// Stamp the client-send instant (the request left the arrival trace).
+    pub fn release(&mut self) {
+        self.released = Some(Instant::now());
+    }
+
+    /// Stamp first-token emission (prefill completed for this request).
+    pub fn note_first_token(&mut self) {
+        if self.first_token.is_none() {
+            self.first_token = Some(Instant::now());
+        }
+    }
+
+    /// Advance the state machine; panics on an illegal transition (a
+    /// scheduler bug, not a load condition).
+    pub fn transition(&mut self, to: RequestState) {
+        assert!(
+            self.state.can_transition(to),
+            "illegal request transition {:?} -> {to:?}",
+            self.state
+        );
+        self.state = to;
+        if matches!(to, RequestState::Finished(_)) {
+            self.finished = Some(Instant::now());
+        }
+    }
+
+    /// Time-to-first-token in seconds (release → first token).
+    pub fn ttft(&self) -> Option<f64> {
+        match (self.released, self.first_token) {
+            (Some(r), Some(f)) => Some(f.duration_since(r).as_secs_f64()),
+            _ => None,
+        }
+    }
+
+    /// Time-per-output-token in seconds (first token → finish, averaged
+    /// over the decode tokens). `None` for single-token requests.
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token, self.finished) {
+            (Some(f), Some(d)) if self.tokens.len() > 1 => {
+                Some(d.duration_since(f).as_secs_f64() / (self.tokens.len() - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_transitions_are_enforced() {
+        use RequestState::*;
+        assert!(Queued.can_transition(Prefilling));
+        assert!(Prefilling.can_transition(Decoding));
+        assert!(Prefilling.can_transition(Finished(FinishReason::Eos)));
+        assert!(Decoding.can_transition(Finished(FinishReason::MaxTokens)));
+        // Illegal: skipping prefill, reviving a finished request, …
+        assert!(!Queued.can_transition(Decoding));
+        assert!(!Queued.can_transition(Finished(FinishReason::Eos)));
+        assert!(!Decoding.can_transition(Prefilling));
+        assert!(!Finished(FinishReason::Eos).can_transition(Decoding));
+        assert!(!Finished(FinishReason::Eos).can_transition(Finished(FinishReason::MaxTokens)));
+    }
+
+    #[test]
+    fn log_walks_the_happy_path_and_times_it() {
+        let mut log = RequestLog::default();
+        assert_eq!(log.state, RequestState::Queued);
+        assert_eq!(log.ttft(), None);
+        log.release();
+        log.transition(RequestState::Prefilling);
+        log.note_first_token();
+        log.tokens.push(7);
+        log.transition(RequestState::Decoding);
+        log.tokens.push(9);
+        assert_eq!(log.tpot(), None, "tpot needs a finish stamp");
+        log.transition(RequestState::Finished(FinishReason::MaxTokens));
+        assert!(log.ttft().unwrap() >= 0.0);
+        assert!(log.tpot().unwrap() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal request transition")]
+    fn illegal_transition_panics() {
+        let mut log = RequestLog::default();
+        log.transition(RequestState::Decoding);
+    }
+
+    #[test]
+    fn single_token_request_has_no_tpot() {
+        let mut log = RequestLog::default();
+        log.release();
+        log.transition(RequestState::Prefilling);
+        log.note_first_token();
+        log.tokens.push(3);
+        log.transition(RequestState::Finished(FinishReason::Eos));
+        assert!(log.ttft().is_some());
+        assert_eq!(log.tpot(), None);
+    }
+}

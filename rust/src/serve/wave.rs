@@ -1,0 +1,180 @@
+//! Wave scheduling: forming prefill and decode waves from the in-flight
+//! set, and deciding *when* to backfill.
+//!
+//! A decode **wave** is one [`crate::exec::Pipeline::decode_step`] over
+//! the current active-slot set — inside it, the strategy's module
+//! micro-batches apply (`b_a` per attention launch, `b_e` per expert
+//! launch, the accumulated batch `B` spanning the whole wave). The
+//! scheduler's job is to keep wave membership as close to `B` as the
+//! open system allows:
+//!
+//! * **module policy** — prefills are batched (up to `B` prompts per
+//!   prefill wave) and backfill is *hysteretic*: while sequences are in
+//!   flight, newly admitted requests wait until at least
+//!   `min_backfill` can join at once (half of `B` by default), so
+//!   backfill prefill waves stay large and the expert modules keep
+//!   seeing near-`B` token batches as the wave drains. The tail is
+//!   flushed when no further arrivals can top the group up.
+//! * **continuous policy** — `prefill_chunk = 1` and
+//!   `min_backfill = 1`: every released request is inserted alone as
+//!   soon as a slot frees (the vLLM-style TTFT-optimizing insertion the
+//!   offline [`crate::baselines::ContinuousRunner`] implements).
+
+use std::sync::{Arc, RwLock};
+
+use crate::exec::BatchState;
+use crate::kv::KvCache;
+
+/// In-flight decode set + backfill policy.
+pub struct WaveScheduler {
+    /// The live decode membership (active KV slots, lens, last tokens).
+    pub state: BatchState,
+    /// Request id per batch position (mirrors the state's swap-remove
+    /// order exactly).
+    pub ids: Vec<usize>,
+    /// Cap on concurrently decoding sequences (module: the plan's `B`;
+    /// continuous: the baseline slot-pool size).
+    pub max_in_flight: usize,
+    /// Largest prefill wave (module: `B`; continuous: 1).
+    pub prefill_chunk: usize,
+    /// Smallest admission group allowed to join a non-empty wave.
+    pub min_backfill: usize,
+    /// Whether requests may join while sequences are in flight at all.
+    pub backfill: bool,
+    /// Requests admitted into a non-empty wave (the backfill count).
+    pub backfilled: u64,
+    /// Decode waves launched.
+    pub decode_waves: u64,
+}
+
+impl WaveScheduler {
+    pub fn new(
+        kv: Arc<RwLock<KvCache>>,
+        max_in_flight: usize,
+        prefill_chunk: usize,
+        min_backfill: usize,
+        backfill: bool,
+    ) -> Self {
+        WaveScheduler {
+            state: BatchState::new(kv),
+            ids: Vec::new(),
+            max_in_flight: max_in_flight.max(1),
+            prefill_chunk: prefill_chunk.max(1),
+            min_backfill: min_backfill.max(1),
+            backfill,
+            backfilled: 0,
+            decode_waves: 0,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Free decode positions under the in-flight cap.
+    pub fn room(&self) -> usize {
+        self.max_in_flight.saturating_sub(self.in_flight())
+    }
+
+    /// How many of `pending` released requests to admit now (0 = hold).
+    ///
+    /// `more_arrivals` says whether the trace still has unreleased
+    /// requests — when it does not, a sub-`min_backfill` tail is flushed
+    /// rather than starved (it could never grow to the threshold).
+    pub fn admit_quota(&self, pending: usize, free_slots: usize, more_arrivals: bool) -> usize {
+        let n = pending.min(self.room()).min(free_slots);
+        if n == 0 {
+            return 0;
+        }
+        if self.state.is_empty() {
+            return n;
+        }
+        if !self.backfill {
+            return 0;
+        }
+        if n >= self.min_backfill || (!more_arrivals && n == pending) {
+            n
+        } else {
+            0
+        }
+    }
+
+    /// Join a freshly prefilled sequence to the decode set.
+    pub fn push(&mut self, id: usize, slot: usize, len: usize, last: i32) {
+        self.state.push(slot, len, last);
+        self.ids.push(id);
+    }
+
+    /// Retire batch position `i`; returns (request id, KV slot). The
+    /// caller recycles the slot through the admission controller.
+    pub fn retire(&mut self, i: usize) -> (usize, usize) {
+        let id = self.ids.swap_remove(i);
+        let slot = self.state.swap_remove(i);
+        (id, slot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(max_in_flight: usize, min_backfill: usize, backfill: bool) -> WaveScheduler {
+        let kv = Arc::new(RwLock::new(KvCache::new(1, 1, 2, 8, max_in_flight)));
+        WaveScheduler::new(kv, max_in_flight, max_in_flight, min_backfill, backfill)
+    }
+
+    #[test]
+    fn empty_wave_admits_everything_available() {
+        let s = sched(16, 8, true);
+        assert_eq!(s.admit_quota(30, 16, true), 16, "capped by slots/room");
+        assert_eq!(s.admit_quota(5, 16, true), 5);
+        assert_eq!(s.admit_quota(5, 2, true), 2, "capped by free slots");
+        assert_eq!(s.admit_quota(0, 16, true), 0);
+    }
+
+    #[test]
+    fn backfill_is_hysteretic_with_tail_flush() {
+        let mut s = sched(16, 8, true);
+        for i in 0..10 {
+            s.push(i, i, 4, 1);
+        }
+        assert_eq!(s.in_flight(), 10);
+        assert_eq!(s.room(), 6);
+        // Below min_backfill while more arrivals are coming: hold.
+        assert_eq!(s.admit_quota(3, 6, true), 0);
+        // Trace exhausted and the whole tail fits: flush it.
+        assert_eq!(s.admit_quota(3, 6, false), 3);
+        // Tail bigger than room: keep holding until room grows.
+        assert_eq!(s.admit_quota(9, 6, false), 0);
+        // At or above min_backfill: join regardless of future arrivals.
+        for i in 0..2 {
+            s.retire(i);
+        }
+        assert_eq!(s.room(), 8);
+        assert_eq!(s.admit_quota(9, 8, true), 8);
+    }
+
+    #[test]
+    fn no_backfill_means_wave_at_a_time() {
+        let mut s = sched(8, 1, false);
+        assert_eq!(s.admit_quota(5, 8, true), 5, "empty wave still admits");
+        s.push(0, 0, 4, 1);
+        assert_eq!(s.admit_quota(5, 7, false), 0, "never joins a live wave");
+        s.retire(0);
+        assert_eq!(s.admit_quota(5, 8, false), 5);
+    }
+
+    #[test]
+    fn retire_mirrors_batch_state_swap_order() {
+        let mut s = sched(8, 1, true);
+        s.push(10, 0, 3, 1);
+        s.push(11, 1, 4, 2);
+        s.push(12, 2, 5, 3);
+        let (id, slot) = s.retire(0);
+        assert_eq!((id, slot), (10, 0));
+        // Swap-remove moved the tail into position 0 in both arrays.
+        assert_eq!(s.ids, vec![12, 11]);
+        assert_eq!(s.state.slots, vec![2, 1]);
+        assert_eq!(s.state.lens, vec![5, 4]);
+    }
+}

@@ -56,6 +56,29 @@ impl RunReport {
     }
 }
 
+/// Project a batching policy onto the engine's weight-residency knobs.
+/// Shared by the offline driver and the online server ([`crate::serve`])
+/// so `moe-gen run` and `moe-gen serve` compare policies under identical
+/// residency rules.
+///
+/// Baseline policies fetch weights on demand (no prefetch overlap).
+/// Weight-residency per policy: DeepSpeed streams weights every
+/// launch (cache off, mirroring Knobs::deepspeed's no-reuse); FlexGen
+/// and MoE-Lightning hold fetched weights for the Knobs reuse rounds.
+/// Continuous keeps the engine's default cache with on-demand
+/// fetches — its differentiator here is sequence-level scheduling,
+/// not residency (the simulator's vLLM row additionally models
+/// GPU-resident weights, which the offloaded live path cannot).
+pub fn apply_policy_residency(cfg: &mut EngineConfig) {
+    cfg.prefetch = matches!(cfg.policy, Policy::ModuleBased);
+    match cfg.policy {
+        Policy::ModelBased => cfg.weight_cache_bytes = 0,
+        Policy::FlexGen => cfg.weight_reuse = Knobs::flexgen().reuse,
+        Policy::MoELightning => cfg.weight_reuse = Knobs::moe_lightning().reuse,
+        Policy::ModuleBased | Policy::Continuous => {}
+    }
+}
+
 /// Run `prompts` for `steps` greedy tokens under the configured policy.
 pub fn run_offline(
     mut cfg: EngineConfig,
@@ -63,21 +86,8 @@ pub fn run_offline(
     steps: usize,
 ) -> Result<RunReport> {
     let policy = cfg.policy;
-    // Baseline policies fetch weights on demand (no prefetch overlap).
-    // Weight-residency per policy: DeepSpeed streams weights every
-    // launch (cache off, mirroring Knobs::deepspeed's no-reuse); FlexGen
-    // and MoE-Lightning hold fetched weights for the Knobs reuse rounds.
-    // Continuous keeps the engine's default cache with on-demand
-    // fetches — its differentiator here is sequence-level scheduling,
-    // not residency (the simulator's vLLM row additionally models
-    // GPU-resident weights, which the offloaded live path cannot).
-    cfg.prefetch = matches!(policy, Policy::ModuleBased);
-    match policy {
-        Policy::ModelBased => cfg.weight_cache_bytes = 0,
-        Policy::FlexGen => cfg.weight_reuse = Knobs::flexgen().reuse,
-        Policy::MoELightning => cfg.weight_reuse = Knobs::moe_lightning().reuse,
-        Policy::ModuleBased | Policy::Continuous => {}
-    }
+    let micro = cfg.baseline_micro_batch.max(1);
+    apply_policy_residency(&mut cfg);
     let mut eng = Engine::new(cfg)?;
     eng.warmup()?; // compile outside the timed region (the paper's Table 4
                    // includes model *loading*, reported separately here)
@@ -85,10 +95,10 @@ pub fn run_offline(
     let tokens = match policy {
         Policy::ModuleBased => eng.generate(prompts, steps)?,
         Policy::ModelBased | Policy::FlexGen | Policy::MoELightning => {
-            // Unified small micro-batch through the whole model.
-            run_model_based(&mut eng, prompts, steps, 8)?
+            // Unified micro-batch through the whole model.
+            run_model_based(&mut eng, prompts, steps, micro)?
         }
-        Policy::Continuous => ContinuousRunner::new(8).run(&mut eng, prompts, steps)?,
+        Policy::Continuous => ContinuousRunner::new(micro).run(&mut eng, prompts, steps)?,
     };
     let wall = sw.secs();
     let m = &eng.metrics;

@@ -53,6 +53,13 @@ impl Rng {
         self.normal() as f32
     }
 
+    /// Exponential sample with the given mean (inverse-CDF transform) —
+    /// the inter-arrival gap generator for Poisson-like request traces.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        assert!(mean >= 0.0);
+        -mean * (1.0 - self.f64()).ln()
+    }
+
     /// Sample from a log-normal-ish length distribution clamped to [lo, hi]
     /// (prompt/output length generator for synthetic workloads).
     pub fn length(&mut self, mean: usize, lo: usize, hi: usize) -> usize {
@@ -122,6 +129,17 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.05, "mean={mean}");
         assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn exp_nonnegative_with_roughly_right_mean() {
+        let mut r = Rng::new(9);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.exp(3.0)).collect();
+        assert!(xs.iter().all(|&x| x >= 0.0));
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.2, "mean={mean}");
+        assert_eq!(Rng::new(1).exp(0.0), 0.0, "zero mean degenerates to zero gaps");
     }
 
     #[test]

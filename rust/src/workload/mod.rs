@@ -1,34 +1,127 @@
-//! Synthetic workloads matching the paper's evaluation datasets (§5.1).
+//! Synthetic workloads matching the paper's evaluation datasets (§5.1),
+//! plus deterministic *arrival traces* for the online serving subsystem
+//! ([`crate::serve`]).
 //!
 //! Only (sequence count, prompt length, decode length) enter the batching
 //! and scheduling problem, so each dataset is represented by its length
 //! statistics (paper Table 4 header) plus a deterministic token-level
-//! generator for live runs on the tiny model.
+//! generator for live runs on the tiny model. For *serving* experiments
+//! each dataset additionally carries an [`ArrivalMode`] — how its
+//! requests reach the server over time (the open-system regime MoE-Lens
+//! analyzes, vs. the closed offline drivers of the throughput tables).
 
 use crate::util::rng::Rng;
 
-/// A dataset's shape statistics (paper Table 4 / §5.1).
+/// How requests arrive at the server over virtual time. Ticks are
+/// scheduler iterations (one decode wave each), so a `mean_gap` of 1.0
+/// means roughly one new request per decode step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalMode {
+    /// Everything is available at t = 0 — the offline/batch regime
+    /// (`serve` under this trace must reproduce `run_offline` exactly).
+    AtTimeZero,
+    /// Open loop: Poisson-like arrivals with exponential inter-arrival
+    /// gaps of the given mean (in ticks), independent of completions.
+    OpenLoop { mean_gap: f64 },
+    /// Open loop, bursty: requests arrive in back-to-back bursts of
+    /// `burst`, with exponential gaps of mean `mean_gap` ticks *between*
+    /// bursts (multi-round chat traffic, ChatBot-Arena-style).
+    Bursty { mean_gap: f64, burst: usize },
+    /// Closed loop: a fixed client concurrency — the next request is
+    /// released only while fewer than `concurrency` are in the system
+    /// (arrival is completion-driven, so there is no arrival-tick trace).
+    ClosedLoop { concurrency: usize },
+}
+
+/// A deterministic arrival process: mode + seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalSpec {
+    pub mode: ArrivalMode,
+    pub seed: u64,
+}
+
+impl ArrivalSpec {
+    pub fn at_time_zero() -> Self {
+        ArrivalSpec { mode: ArrivalMode::AtTimeZero, seed: 0 }
+    }
+
+    /// Arrival tick per request (non-decreasing, deterministic in the
+    /// seed). Closed-loop traces return all-zero ticks: release is
+    /// completion-driven and handled by the serving driver.
+    pub fn arrival_ticks(&self, n: usize) -> Vec<u64> {
+        let mut rng = Rng::new(self.seed ^ 0x5EED_A331_u64);
+        match self.mode {
+            ArrivalMode::AtTimeZero | ArrivalMode::ClosedLoop { .. } => vec![0; n],
+            ArrivalMode::OpenLoop { mean_gap } => {
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exp(mean_gap);
+                        t.round() as u64
+                    })
+                    .collect()
+            }
+            ArrivalMode::Bursty { mean_gap, burst } => {
+                let burst = burst.max(1);
+                let mut t = 0.0f64;
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    for _ in 0..burst.min(n - out.len()) {
+                        out.push(t.round() as u64);
+                    }
+                    t += rng.exp(mean_gap);
+                }
+                out
+            }
+        }
+    }
+}
+
+/// A dataset's shape statistics (paper Table 4 / §5.1) plus the arrival
+/// process its serving experiment uses.
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
     pub name: &'static str,
     pub num_sequences: usize,
     pub prompt_len: usize,
     pub decode_len: usize,
+    pub arrival: ArrivalMode,
 }
 
-/// MMLU: 116K multiple-choice prompts, answer = first token (prefill-only).
+/// MMLU: 116K multiple-choice prompts, answer = first token (prefill-only,
+/// evaluated as one offline batch).
 pub fn mmlu() -> DatasetSpec {
-    DatasetSpec { name: "MMLU", num_sequences: 116_000, prompt_len: 512, decode_len: 1 }
+    DatasetSpec {
+        name: "MMLU",
+        num_sequences: 116_000,
+        prompt_len: 512,
+        decode_len: 1,
+        arrival: ArrivalMode::AtTimeZero,
+    }
 }
 
-/// GSM8K: 8.5K math problems, multi-step answers.
+/// GSM8K: 8.5K math problems, multi-step answers; served as a steady
+/// open-loop stream.
 pub fn gsm8k() -> DatasetSpec {
-    DatasetSpec { name: "GSM8K", num_sequences: 8_500, prompt_len: 512, decode_len: 256 }
+    DatasetSpec {
+        name: "GSM8K",
+        num_sequences: 8_500,
+        prompt_len: 512,
+        decode_len: 256,
+        arrival: ArrivalMode::OpenLoop { mean_gap: 2.0 },
+    }
 }
 
-/// ChatBot-Arena: 36K multi-round chats, long outputs.
+/// ChatBot-Arena: 36K multi-round chats, long outputs; chat traffic is
+/// bursty (users send follow-up rounds back-to-back).
 pub fn chatbot_arena() -> DatasetSpec {
-    DatasetSpec { name: "ChatBotArena", num_sequences: 36_000, prompt_len: 256, decode_len: 512 }
+    DatasetSpec {
+        name: "ChatBotArena",
+        num_sequences: 36_000,
+        prompt_len: 256,
+        decode_len: 512,
+        arrival: ArrivalMode::Bursty { mean_gap: 8.0, burst: 32 },
+    }
 }
 
 /// LongBench-style long-context tasks (paper Table 8 columns).
@@ -38,6 +131,7 @@ pub fn longbench(prompt_k: usize, decode_k: usize, batch: usize) -> DatasetSpec 
         num_sequences: batch,
         prompt_len: prompt_k * 1024,
         decode_len: decode_k * 1024,
+        arrival: ArrivalMode::AtTimeZero,
     }
 }
 
@@ -64,6 +158,15 @@ pub fn generate_prompts(
         .collect()
 }
 
+/// Per-request decode budgets (max new tokens), log-normally spread
+/// around `mean` and clamped to `[lo, max]`. Deterministic in `seed`.
+/// Serving runs pair these with an EOS token id: a request finishes on
+/// whichever comes first.
+pub fn decode_lengths(n: usize, mean: usize, lo: usize, max: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed ^ 0xDEC0_DE00_u64);
+    (0..n).map(|_| rng.length(mean, lo.max(1), max)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,6 +178,10 @@ mod tests {
         assert_eq!(gsm8k().prompt_len, 512);
         assert_eq!(chatbot_arena().decode_len, 512);
         assert_eq!(longbench(16, 8, 50).prompt_len, 16384);
+        // Serving traces: batch evals arrive at t=0, chat is bursty.
+        assert_eq!(mmlu().arrival, ArrivalMode::AtTimeZero);
+        assert!(matches!(chatbot_arena().arrival, ArrivalMode::Bursty { .. }));
+        assert!(matches!(gsm8k().arrival, ArrivalMode::OpenLoop { .. }));
     }
 
     #[test]
@@ -99,5 +206,48 @@ mod tests {
         let distinct: std::collections::HashSet<usize> =
             prompts.iter().map(|p| p.len()).collect();
         assert!(distinct.len() > 5, "length distribution collapsed");
+    }
+
+    #[test]
+    fn arrival_ticks_deterministic_and_monotone() {
+        let spec = ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 2.0 }, seed: 11 };
+        let a = spec.arrival_ticks(64);
+        let b = spec.arrival_ticks(64);
+        assert_eq!(a, b, "trace must be deterministic in the seed");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "ticks must be non-decreasing");
+        assert!(*a.last().unwrap() > 0, "open-loop arrivals must spread over time");
+        let c = ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 2.0 }, seed: 12 }
+            .arrival_ticks(64);
+        assert_ne!(a, c, "different seeds must give different traces");
+    }
+
+    #[test]
+    fn at_time_zero_and_closed_loop_release_everything_up_front() {
+        for mode in [ArrivalMode::AtTimeZero, ArrivalMode::ClosedLoop { concurrency: 4 }] {
+            let ticks = ArrivalSpec { mode, seed: 3 }.arrival_ticks(10);
+            assert_eq!(ticks, vec![0; 10]);
+        }
+    }
+
+    #[test]
+    fn bursty_trace_groups_arrivals() {
+        let spec =
+            ArrivalSpec { mode: ArrivalMode::Bursty { mean_gap: 16.0, burst: 8 }, seed: 5 };
+        let ticks = spec.arrival_ticks(32);
+        assert_eq!(ticks.len(), 32);
+        assert!(ticks.windows(2).all(|w| w[0] <= w[1]));
+        // Bursts share a tick: far fewer distinct ticks than requests.
+        let distinct: std::collections::HashSet<u64> = ticks.iter().copied().collect();
+        assert!(distinct.len() <= 4 + 1, "expected ~4 bursts, got {}", distinct.len());
+        assert!(distinct.len() > 1, "bursts must be separated in time");
+    }
+
+    #[test]
+    fn decode_lengths_bounded_and_deterministic() {
+        let a = decode_lengths(100, 8, 2, 16, 7);
+        assert_eq!(a, decode_lengths(100, 8, 2, 16, 7));
+        assert!(a.iter().all(|&l| (2..=16).contains(&l)));
+        let distinct: std::collections::HashSet<usize> = a.iter().copied().collect();
+        assert!(distinct.len() > 3, "decode budget distribution collapsed");
     }
 }

@@ -1,0 +1,223 @@
+//! Integration: the online serving subsystem against the offline driver.
+//!
+//! The serving contract (DESIGN.md §7):
+//!
+//! * **serving ≡ offline** — under a trace where everything arrives at
+//!   t = 0 and nothing hits EOS, `serve` emits bit-identical greedy
+//!   tokens to `run_offline` for the same prompts (wave membership is
+//!   throughput-only, like every other batching knob);
+//! * **apples-to-apples policies** — module-based and continuous serving
+//!   run the identical arrival trace and emit identical tokens;
+//! * **backfill saturation** — with backfill enabled, the `expert_ffn`
+//!   average batch under module policy stays within 25% of the offline
+//!   value while sequences drain;
+//! * **slot lifecycle** — no slot leaks, and a recycled slot's successor
+//!   reproduces a fresh run's tokens exactly.
+//!
+//! Everything runs hermetically on the reference backend.
+
+use moe_gen::config::{EngineConfig, Policy};
+use moe_gen::serve::{self, Request, ServeConfig};
+use moe_gen::server;
+use moe_gen::workload::{self, ArrivalMode, ArrivalSpec};
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    workload::generate_prompts(n, 12, 40, 512, 3)
+}
+
+/// Requests over `prompts` with a fixed decode budget and given arrivals.
+fn fixed_requests(prompts: &[Vec<i32>], max_new: usize, arrivals: &[u64]) -> Vec<Request> {
+    prompts
+        .iter()
+        .zip(arrivals)
+        .enumerate()
+        .map(|(id, (p, &arrival))| Request { id, prompt: p.clone(), max_new, arrival })
+        .collect()
+}
+
+fn eng_cfg(policy: Policy) -> EngineConfig {
+    EngineConfig { policy, ..EngineConfig::default() }
+}
+
+#[test]
+fn serve_at_t0_without_eos_matches_run_offline() {
+    let ps = prompts(10);
+    let steps = 5;
+    let offline = server::run_offline(eng_cfg(Policy::ModuleBased), &ps, steps).unwrap();
+
+    let cfg = ServeConfig {
+        eng: eng_cfg(Policy::ModuleBased),
+        arrival: ArrivalSpec::at_time_zero(),
+        eos: None,
+        ..ServeConfig::default()
+    };
+    let reqs = fixed_requests(&ps, steps, &vec![0; ps.len()]);
+    let rep = serve::serve(&cfg, reqs).unwrap();
+
+    assert_eq!(rep.tokens, offline.tokens, "serve diverged from the offline driver");
+    assert_eq!(rep.requests, 10);
+    assert_eq!(rep.finished_max, 10, "EOS disabled: everything runs to budget");
+    assert_eq!(rep.finished_eos, 0);
+    assert_eq!(rep.leaked_slots, 0, "slots must all be recycled");
+    assert_eq!(rep.decode_tokens, 10 * (steps as u64 - 1));
+}
+
+#[test]
+fn module_and_continuous_serve_the_same_trace_with_identical_tokens() {
+    let ps = prompts(8);
+    let arrival = ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 1.0 }, seed: 9 };
+    let arrivals = arrival.arrival_ticks(ps.len());
+    let mut reports = Vec::new();
+    for policy in [Policy::ModuleBased, Policy::Continuous] {
+        let cfg = ServeConfig {
+            eng: eng_cfg(policy),
+            arrival,
+            ..ServeConfig::default()
+        };
+        let reqs = fixed_requests(&ps, 5, &arrivals);
+        reports.push(serve::serve(&cfg, reqs).unwrap());
+    }
+    let (m, c) = (&reports[0], &reports[1]);
+    assert_eq!(m.tokens, c.tokens, "policy changed greedy tokens");
+    for rep in [m, c] {
+        assert_eq!(rep.finished_max, 8);
+        assert_eq!(rep.leaked_slots, 0);
+        assert!(rep.decode_waves > 0);
+        assert!(rep.total_tp > 0.0);
+        // Latency percentiles are populated and ordered.
+        assert!(rep.ttft_p99 >= rep.ttft_p50 && rep.ttft_p50 >= 0.0);
+        assert!(rep.tpot_p99 >= rep.tpot_p50 && rep.tpot_p50 >= 0.0);
+    }
+    // Continuous batching admits into a pool of baseline_micro_batch
+    // slots; module policy waves at B.
+    assert!(c.peak_slots <= 8);
+}
+
+#[test]
+fn backfill_keeps_expert_batch_near_offline_while_draining() {
+    // 24 requests against B = 16: the first wave fills B, the rest must
+    // be backfilled as earlier sequences drain at varying budgets.
+    let ps = prompts(24);
+    let budgets = workload::decode_lengths(24, 6, 2, 8, 11);
+    let mean_steps = 6;
+    let base = EngineConfig { max_batch: 16, ..eng_cfg(Policy::ModuleBased) };
+
+    let offline = server::run_offline(base.clone(), &ps, mean_steps).unwrap();
+
+    let mk_reqs = || {
+        ps.iter()
+            .zip(&budgets)
+            .enumerate()
+            .map(|(id, (p, &b))| Request { id, prompt: p.clone(), max_new: b, arrival: 0 })
+            .collect::<Vec<_>>()
+    };
+    let cfg = ServeConfig {
+        eng: base.clone(),
+        arrival: ArrivalSpec::at_time_zero(),
+        backfill: true,
+        ..ServeConfig::default()
+    };
+    let rep = serve::serve(&cfg, mk_reqs()).unwrap();
+    assert!(rep.backfilled > 0, "the trailing 8 requests must backfill a live wave");
+    assert_eq!(rep.leaked_slots, 0);
+    assert_eq!(rep.finished_eos + rep.finished_max, 24);
+    // The acceptance bar: module batches stay saturated while draining.
+    assert!(
+        rep.expert_avg_batch >= 0.75 * offline.expert_avg_batch,
+        "backfill failed to keep expert batches large: serve {:.2} vs offline {:.2}",
+        rep.expert_avg_batch,
+        offline.expert_avg_batch
+    );
+
+    // Backfill off = wave-at-a-time: nothing joins a live wave.
+    let cfg_off = ServeConfig { backfill: false, ..cfg };
+    let rep_off = serve::serve(&cfg_off, mk_reqs()).unwrap();
+    assert_eq!(rep_off.backfilled, 0);
+    assert_eq!(rep_off.tokens, rep.tokens, "backfill is throughput-only");
+}
+
+#[test]
+fn eos_terminates_streams_early_as_prefixes() {
+    let ps = prompts(6);
+    let steps = 8;
+    let offline = server::run_offline(eng_cfg(Policy::ModuleBased), &ps, steps).unwrap();
+    // Choose a token that provably occurs mid-stream: sequence 0's 4th.
+    let eos = offline.tokens[0][3];
+
+    let cfg = ServeConfig {
+        eng: eng_cfg(Policy::ModuleBased),
+        arrival: ArrivalSpec::at_time_zero(),
+        eos: Some(eos),
+        ..ServeConfig::default()
+    };
+    let rep = serve::serve(&cfg, fixed_requests(&ps, steps, &[0; 6])).unwrap();
+    assert!(rep.finished_eos >= 1, "sequence 0 must finish on EOS");
+    assert_eq!(rep.leaked_slots, 0, "early exits must still recycle slots");
+    for (full, cut) in offline.tokens.iter().zip(&rep.tokens) {
+        match full.iter().position(|&t| t == eos) {
+            Some(p) => assert_eq!(cut, &full[..=p], "EOS stream must be a prefix (incl. EOS)"),
+            None => assert_eq!(cut, full, "EOS-free stream must match the offline run"),
+        }
+    }
+    // Sequence 0 stops at its first occurrence of the chosen token.
+    let p0 = offline.tokens[0].iter().position(|&t| t == eos).unwrap();
+    assert_eq!(rep.tokens[0].len(), p0 + 1);
+    assert!(rep.tokens[0].len() <= 4);
+}
+
+#[test]
+fn recycled_slot_reproduces_fresh_tokens() {
+    // A single-slot pool forces every request through the same recycled
+    // slot, one at a time; tokens must equal a fresh offline run.
+    let ps = prompts(5);
+    let steps = 4;
+    let offline = server::run_offline(eng_cfg(Policy::ModuleBased), &ps, steps).unwrap();
+    let cfg = ServeConfig {
+        eng: eng_cfg(Policy::ModuleBased),
+        arrival: ArrivalSpec::at_time_zero(),
+        kv_slots: Some(1),
+        ..ServeConfig::default()
+    };
+    let rep = serve::serve(&cfg, fixed_requests(&ps, steps, &[0; 5])).unwrap();
+    assert_eq!(rep.peak_slots, 1, "one slot serves everything sequentially");
+    assert_eq!(rep.tokens, offline.tokens, "recycled slot corrupted a successor");
+    assert_eq!(rep.leaked_slots, 0);
+}
+
+#[test]
+fn closed_loop_concurrency_bounds_the_in_flight_set() {
+    let ps = prompts(9);
+    let cfg = ServeConfig {
+        eng: eng_cfg(Policy::ModuleBased),
+        arrival: ArrivalSpec { mode: ArrivalMode::ClosedLoop { concurrency: 3 }, seed: 0 },
+        ..ServeConfig::default()
+    };
+    let rep = serve::serve(&cfg, fixed_requests(&ps, 4, &[0; 9])).unwrap();
+    assert!(rep.peak_slots <= 3, "closed loop must cap in-flight at the concurrency");
+    assert_eq!(rep.finished_max, 9);
+    assert_eq!(rep.leaked_slots, 0);
+}
+
+#[test]
+fn serve_under_byte_budget_respects_eq2_sizing() {
+    let ps = prompts(6);
+    // Budget for exactly two sequences' KV: admission must never hold
+    // more than two slots.
+    let c = moe_gen::runtime::RtConfig::tiny();
+    let slot_bytes = moe_gen::kv::KvCache::slot_bytes_for(
+        c.num_layers,
+        c.num_kv_heads,
+        c.head_dim,
+        c.max_context,
+    );
+    let cfg = ServeConfig {
+        eng: eng_cfg(Policy::ModuleBased),
+        arrival: ArrivalSpec::at_time_zero(),
+        kv_budget_bytes: Some(2 * slot_bytes + slot_bytes / 3),
+        ..ServeConfig::default()
+    };
+    let rep = serve::serve(&cfg, fixed_requests(&ps, 3, &[0; 6])).unwrap();
+    assert!(rep.peak_slots <= 2, "byte budget admits at most two sequences");
+    assert_eq!(rep.finished_max, 6);
+    assert_eq!(rep.leaked_slots, 0);
+}
