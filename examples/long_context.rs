@@ -6,9 +6,9 @@
 
 use anyhow::Result;
 
-use moe_gen::config::EngineConfig;
-use moe_gen::engine::Engine;
+use moe_gen::session::Session;
 use moe_gen::sim::tables;
+use moe_gen::spec::JobSpec;
 use moe_gen::workload;
 
 fn main() -> Result<()> {
@@ -16,23 +16,23 @@ fn main() -> Result<()> {
     // the longest contexts the tiny model supports (prefill 64 + 60
     // decode ≈ max_context 128). The paper's observation holds at any
     // scale: a longer context shrinks the feasible accumulated batch.
-    let cfg = EngineConfig { artifacts_dir: "artifacts".into(), ..EngineConfig::default() };
-    let mut eng = Engine::new(cfg)?;
-    eng.warmup()?;
-    let cap = eng.model_cfg().max_context;
-    let pre = eng.model_cfg().prefill_seq;
+    // A context sweep is not a trajectory point: bench_log off.
+    let mut spec = JobSpec { bench_log: None, ..JobSpec::default() };
+    spec.eng.artifacts_dir = "artifacts".into();
+    let mut session = Session::open(spec)?;
+    let cap = session.engine().model_cfg().max_context;
+    let pre = session.engine().model_cfg().prefill_seq;
     let steps = cap - pre; // decode to capacity
 
     for &(n, plen) in &[(32usize, 16usize), (32, 60)] {
         let prompts = workload::generate_prompts(n, plen, plen, 512, 11);
-        let t0 = std::time::Instant::now();
-        let toks = eng.generate(&prompts, steps)?;
-        let wall = t0.elapsed().as_secs_f64();
-        let decoded: usize = toks.iter().map(|t| t.len()).sum();
+        let report = session.run_prompts(&prompts, steps)?;
+        let decoded: usize = report.tokens.iter().map(|t| t.len()).sum();
         println!(
-            "live: {n} seqs × prompt {plen:>2} + decode {steps} -> {decoded} tokens in {wall:.2}s \
+            "live: {n} seqs × prompt {plen:>2} + decode {steps} -> {decoded} tokens in {:.2}s \
              ({:.1} tok/s, ctx up to {})",
-            decoded as f64 / wall,
+            report.wall_secs,
+            decoded as f64 / report.wall_secs.max(1e-9),
             plen + steps,
         );
     }

@@ -7,17 +7,20 @@
 //!   * model-based  (DeepSpeed/FlexGen-style unified micro-batches)
 //!   * continuous   (vLLM-style slot pool with batch-1 prefill insertion)
 //!
-//! Greedy decode is policy-invariant, so the token streams must agree —
-//! verified below — while throughput and expert-module batch statistics
-//! differ exactly the way the paper's Table 1/Table 6 describe.
-//! Results are recorded in EXPERIMENTS.md §Live-E2E.
+//! Each policy's job is described by the same [`JobSpec`] with only the
+//! policy swapped, and driven through a [`Session`]. Greedy decode is
+//! policy-invariant, so the token streams must agree — verified below —
+//! while throughput and expert-module batch statistics differ exactly the
+//! way the paper's Table 1/Table 6 describe. Results are recorded in
+//! EXPERIMENTS.md §Live-E2E.
 //!
 //!     make artifacts && cargo run --release --example offline_benchmark
 
 use anyhow::Result;
 
-use moe_gen::config::{EngineConfig, Policy};
-use moe_gen::server::run_offline;
+use moe_gen::config::Policy;
+use moe_gen::session::Session;
+use moe_gen::spec::JobSpec;
 use moe_gen::workload;
 
 fn main() -> Result<()> {
@@ -37,19 +40,18 @@ fn main() -> Result<()> {
 
     let mut reports = Vec::new();
     for policy in [Policy::ModuleBased, Policy::ModelBased, Policy::Continuous] {
-        let cfg = EngineConfig {
-            artifacts_dir: "artifacts".into(),
-            policy,
-            max_batch: 128,
-            omega: 0.0,
-            // Emulate a bandwidth-starved offloading link (the regime the
-            // paper targets): every module's weight+activation bytes cross
-            // a 300 MB/s link; MoE-Gen prefetches/overlaps, baselines
-            // stall on demand (run_offline sets prefetch per policy).
-            throttle_htod: Some(300e6),
-            ..EngineConfig::default()
-        };
-        let r = run_offline(cfg, &prompts, steps)?;
+        let mut spec = JobSpec { bench_log: None, ..JobSpec::default() };
+        spec.eng.artifacts_dir = "artifacts".into();
+        spec.eng.policy = policy;
+        spec.eng.max_batch = 128;
+        spec.eng.omega = 0.0;
+        // Emulate a bandwidth-starved offloading link (the regime the
+        // paper targets): every module's weight+activation bytes cross a
+        // 300 MB/s link; MoE-Gen prefetches/overlaps, baselines stall on
+        // demand (Session applies the per-policy residency rules).
+        spec.eng.throttle_htod = Some(300e6);
+        let mut session = Session::open(spec)?;
+        let r = session.run_prompts(&prompts, steps)?;
         println!("{}", r.summary());
         reports.push(r);
     }

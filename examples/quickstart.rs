@@ -1,44 +1,45 @@
-//! Quickstart: load the AOT-compiled tiny MoE, serve a small batch of
-//! prompts with module-based batching, print the generated tokens and
-//! throughput.
+//! Quickstart: describe a job with the typed [`JobSpec`], open a
+//! [`Session`] over the AOT-compiled tiny MoE, generate a small batch of
+//! prompts with module-based batching, print tokens and throughput.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
 
-use moe_gen::config::EngineConfig;
-use moe_gen::engine::Engine;
+use moe_gen::session::Session;
+use moe_gen::spec::JobSpec;
 use moe_gen::workload;
 
 fn main() -> Result<()> {
-    // 1. Engine over the AOT artifacts (HLO text -> PJRT executables).
-    let cfg = EngineConfig {
-        artifacts_dir: "artifacts".into(),
-        omega: 0.25, // quarter of the decode batch attends on the CPU kernel
-        ..EngineConfig::default()
-    };
-    let mut eng = Engine::new(cfg)?;
-    eng.warmup()?;
+    // 1. A job spec: every knob of the engine, workload and strategy in
+    //    one validated, JSON-round-trippable value (try `spec.dump()`).
+    let mut spec = JobSpec::default();
+    spec.eng.artifacts_dir = "artifacts".into();
+    spec.eng.omega = 0.25; // quarter of the decode batch attends on the CPU kernel
+    spec.validate()?;
+
+    // 2. A session owns the engine (validate → build → warm up) and, on
+    //    run, appends a record to the BENCH_live.json perf trajectory.
+    let mut session = Session::open(spec)?;
+    let c = session.engine().model_cfg();
     println!(
         "loaded tiny MoE: {} layers, {} experts (top-{}), {} weights",
-        eng.model_cfg().num_layers,
-        eng.model_cfg().num_experts,
-        eng.model_cfg().top_k,
-        moe_gen::util::fmt_bytes(eng.weights_total_bytes() as f64),
+        c.num_layers,
+        c.num_experts,
+        c.top_k,
+        moe_gen::util::fmt_bytes(session.engine().weights_total_bytes() as f64),
     );
 
-    // 2. A batch of prompts (synthetic token ids; vocabulary is 512).
+    // 3. Greedy-decode 12 tokens for 8 synthetic prompts (vocab 512).
     let prompts = workload::generate_prompts(8, 20, 64, 512, 42);
-
-    // 3. Greedy-decode 12 tokens per sequence.
-    let tokens = eng.generate(&prompts, 12)?;
-    for (i, (p, t)) in prompts.iter().zip(&tokens).enumerate() {
+    let report = session.run_prompts(&prompts, 12)?;
+    for (i, (p, t)) in prompts.iter().zip(&report.tokens).enumerate() {
         println!("seq {i}: prompt[{:>2} tok] -> {:?}", p.len(), t);
     }
 
     // 4. Metrics: the module-based-batching signature is the expert
     //    module's average batch (tokens pooled across the whole decode
     //    batch, not per-micro-batch).
-    println!("\n{}", eng.metrics.report());
+    println!("\n{}", session.engine().metrics.report());
     Ok(())
 }

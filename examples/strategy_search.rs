@@ -1,15 +1,17 @@
 //! Batching-strategy search (paper §4.3–4.4) across the paper's models
-//! and testbeds, plus a live per-module latency profile of the tiny MoE
-//! (the paper's App. B "workload profiling" — what the search consumes on
-//! real hardware).
+//! and testbeds, plus the *closed* profile→search loop on the live tiny
+//! MoE: a [`Session`] measures the per-module latency profile (the
+//! paper's App. B "workload profiling") and seeds its strategy search
+//! from it — the same searched strategy `moe-gen run --strategy search`
+//! executes.
 //!
 //!     cargo run --release --example strategy_search
 
 use anyhow::Result;
 
-use moe_gen::config::EngineConfig;
-use moe_gen::engine::Engine;
 use moe_gen::sched::{self, Knobs, Scenario};
+use moe_gen::session::Session;
+use moe_gen::spec::JobSpec;
 use moe_gen::{hw, model};
 
 fn main() -> Result<()> {
@@ -44,15 +46,31 @@ fn main() -> Result<()> {
         }
     }
 
-    let cfg = EngineConfig { artifacts_dir: "artifacts".into(), ..EngineConfig::default() };
-    match Engine::new(cfg) {
-        Ok(mut eng) => {
-            println!("\n=== live pipeline-stage profile (tiny MoE, {} backend) ===\n", eng.backend_name());
-            eng.warmup()?;
+    let mut spec = JobSpec { bench_log: None, ..JobSpec::default() };
+    spec.eng.artifacts_dir = "artifacts".into();
+    match Session::open(spec) {
+        Ok(mut session) => {
+            println!(
+                "\n=== live pipeline-stage profile (tiny MoE, {} backend) ===\n",
+                session.engine().backend_name()
+            );
             println!("{:<14} {:>8} {:>14}", "stage", "bucket", "latency (ms)");
-            for (name, bucket, secs) in eng.profile_modules()? {
+            for (name, bucket, secs) in session.profile()?.rows.clone() {
                 println!("{name:<14} {bucket:>8} {:>14.3}", secs * 1e3);
             }
+            // The closed loop: the profile above *is* the search's cost
+            // model (basis = measured); apply() would make it live.
+            let o = session.search()?;
+            println!(
+                "\nsearched ({}): B={} b_a={} b_e={} ω={:.2} → {:.1} tok/s ({} candidates)",
+                o.basis.slug(),
+                o.decode.b,
+                o.decode.b_a,
+                o.decode.b_e,
+                o.decode.omega,
+                o.throughput,
+                o.candidates_evaluated,
+            );
         }
         Err(e) => println!("(live profile skipped: {e})"),
     }

@@ -9,27 +9,37 @@
 //!   * baseline micro-batch size (the unified batch the model-based and
 //!     continuous baselines push through the whole model)
 //!
-//! Each row is a full offline run on the tiny MoE; token streams are
+//! Every row constructs its job through the typed [`JobSpec`] layer and
+//! runs it through a [`Session`] — the same path the CLI uses — so the
+//! ablated knobs are exactly the spec's public ones. Token streams are
 //! checked for invariance across all ablations (greedy decode must not
-//! depend on any of these knobs).
+//! depend on any of these knobs), and a final baseline row appends one
+//! record to the repo-root `BENCH_live.json` perf trajectory.
 
-use moe_gen::config::EngineConfig;
-use moe_gen::engine::Engine;
+use moe_gen::config::Policy;
+use moe_gen::session::Session;
+use moe_gen::spec::JobSpec;
 use moe_gen::workload;
 
-fn run(cfg: EngineConfig, prompts: &[Vec<i32>], steps: usize) -> (f64, f64, Vec<Vec<i32>>) {
-    let mut eng = Engine::new(cfg).expect("artifacts missing — run `make artifacts`");
-    eng.warmup().unwrap();
+/// Base spec shared by every ablation row: live artifacts when present,
+/// no trajectory spam from sweep rows (the dedicated baseline row at the
+/// end records instead).
+fn base_spec() -> JobSpec {
+    let mut spec = JobSpec { bench_log: None, ..JobSpec::default() };
+    spec.eng.artifacts_dir = "artifacts".into();
+    spec
+}
+
+fn run(spec: JobSpec, prompts: &[Vec<i32>], steps: usize) -> (f64, f64, Vec<Vec<i32>>) {
+    let mut s = Session::open(spec).expect("artifacts missing — run `make artifacts`");
     let t0 = std::time::Instant::now();
-    let toks = eng.generate(prompts, steps).unwrap();
-    let wall = t0.elapsed().as_secs_f64();
-    (wall, eng.metrics.decode_throughput(), toks)
+    let rep = s.run_prompts(prompts, steps).expect("ablation run");
+    (t0.elapsed().as_secs_f64(), rep.decode_tp, rep.tokens)
 }
 
 fn main() {
     let prompts = workload::generate_prompts(48, 24, 64, 512, 3);
     let steps = 12;
-    let base = EngineConfig { artifacts_dir: "artifacts".into(), ..EngineConfig::default() };
     let mut reference: Option<Vec<Vec<i32>>> = None;
     fn check(reference: &mut Option<Vec<Vec<i32>>>, name: &str, toks: &Vec<Vec<i32>>) {
         match reference {
@@ -40,8 +50,12 @@ fn main() {
 
     println!("== ablation: accumulated batch B (max_batch) ==");
     for b in [4usize, 16, 48] {
-        let cfg = EngineConfig { max_batch: b, ..base.clone() };
-        let (wall, dtp, toks) = run(cfg, &prompts, steps);
+        let mut spec = base_spec();
+        spec.eng.max_batch = b;
+        // Keep the spec valid: attention can never micro-batch more
+        // sequences than the wave accumulates (validate rejects b_a > B).
+        spec.eng.attn_micro = spec.eng.attn_micro.min(b);
+        let (wall, dtp, toks) = run(spec, &prompts, steps);
         check(&mut reference, "max_batch", &toks);
         println!("bench: ablate_B_{b:<4}        wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
     }
@@ -52,8 +66,10 @@ fn main() {
     // paper's search avoids by keeping b_a small.
     println!("\n== ablation: attention micro-batch b_a ==");
     for ba in [8usize, 16, 32] {
-        let cfg = EngineConfig { attn_micro: ba, max_batch: 48, ..base.clone() };
-        let (wall, dtp, toks) = run(cfg, &prompts, steps);
+        let mut spec = base_spec();
+        spec.eng.attn_micro = ba;
+        spec.eng.max_batch = 48;
+        let (wall, dtp, toks) = run(spec, &prompts, steps);
         check(&mut reference, "attn_micro", &toks);
         println!("bench: ablate_ba_{ba:<4}       wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
     }
@@ -64,8 +80,10 @@ fn main() {
     // asserting exactness (must stay near 100%).
     println!("\n== ablation: ω CPU-attention split (live Fig. 7) ==");
     for omega in [0.0f64, 0.25, 0.5, 0.75, 1.0] {
-        let cfg = EngineConfig { omega, max_batch: 48, ..base.clone() };
-        let (wall, dtp, toks) = run(cfg, &prompts, steps);
+        let mut spec = base_spec();
+        spec.eng.omega = omega;
+        spec.eng.max_batch = 48;
+        let (wall, dtp, toks) = run(spec, &prompts, steps);
         let r = reference.as_ref().unwrap();
         let total: usize = r.iter().map(|t| t.len()).sum();
         let agree: usize = r
@@ -83,13 +101,11 @@ fn main() {
 
     println!("\n== ablation: prefetch vs on-demand (300 MB/s link) ==");
     for prefetch in [true, false] {
-        let cfg = EngineConfig {
-            prefetch,
-            throttle_htod: Some(300e6),
-            max_batch: 48,
-            ..base.clone()
-        };
-        let (wall, dtp, toks) = run(cfg, &prompts, steps);
+        let mut spec = base_spec();
+        spec.eng.prefetch = prefetch;
+        spec.eng.throttle_htod = Some(300e6);
+        spec.eng.max_batch = 48;
+        let (wall, dtp, toks) = run(spec, &prompts, steps);
         check(&mut reference, "prefetch", &toks);
         println!(
             "bench: ablate_prefetch_{:<5} wall {wall:>7.2}s decode {dtp:>8.1} tok/s",
@@ -99,13 +115,11 @@ fn main() {
 
     println!("\n== ablation: weight cache on/off (300 MB/s link) ==");
     for cache in [true, false] {
-        let cfg = EngineConfig {
-            weight_cache_bytes: if cache { 256 << 20 } else { 0 },
-            throttle_htod: Some(300e6),
-            max_batch: 48,
-            ..base.clone()
-        };
-        let (wall, dtp, toks) = run(cfg, &prompts, steps);
+        let mut spec = base_spec();
+        spec.eng.weight_cache_bytes = if cache { 256 << 20 } else { 0 };
+        spec.eng.throttle_htod = Some(300e6);
+        spec.eng.max_batch = 48;
+        let (wall, dtp, toks) = run(spec, &prompts, steps);
         check(&mut reference, "weight_cache", &toks);
         println!(
             "bench: ablate_wcache_{:<5} wall {wall:>7.2}s decode {dtp:>8.1} tok/s",
@@ -115,18 +129,25 @@ fn main() {
 
     println!("\n== ablation: baseline micro-batch (continuous policy) ==");
     for micro in [4usize, 8, 16] {
-        let cfg = EngineConfig {
-            policy: moe_gen::config::Policy::Continuous,
-            baseline_micro_batch: micro,
-            ..base.clone()
-        };
-        let rep = moe_gen::server::run_offline(cfg, &prompts, steps).unwrap();
-        check(&mut reference, "baseline_micro_batch", &rep.tokens);
-        println!(
-            "bench: ablate_micro_{micro:<4}     wall {:>7.2}s decode {:>8.1} tok/s",
-            rep.wall_secs, rep.decode_tp
-        );
+        let mut spec = base_spec();
+        spec.eng.policy = Policy::Continuous;
+        spec.eng.baseline_micro_batch = micro;
+        let (wall, dtp, toks) = run(spec, &prompts, steps);
+        check(&mut reference, "baseline_micro_batch", &toks);
+        println!("bench: ablate_micro_{micro:<4}     wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
     }
+
+    // One baseline row recorded into the perf trajectory (the sweep rows
+    // above stay out of it on purpose — they ablate, they don't track).
+    let mut spec = base_spec();
+    spec.eng.max_batch = 48;
+    spec.bench_log = Some(moe_gen::spec::default_bench_log());
+    let (wall, dtp, toks) = run(spec, &prompts, steps);
+    check(&mut reference, "baseline_record", &toks);
+    println!(
+        "\nbench: baseline_B48          wall {wall:>7.2}s decode {dtp:>8.1} tok/s \
+         (recorded to BENCH_live.json)"
+    );
 
     println!("\ntoken invariance across all ablations ✓");
 }

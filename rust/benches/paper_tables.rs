@@ -2,7 +2,9 @@
 //! figure of the paper's evaluation (the workload is the simulator +
 //! strategy search itself), reports how long each takes, and writes a
 //! machine-readable `BENCH_paper_tables.json` at the repo root so later
-//! changes have a throughput trajectory to compare against.
+//! changes have a throughput trajectory to compare against. The live
+//! block runs through the typed `JobSpec`/`Session` layer and therefore
+//! also appends one record to the repo-root `BENCH_live.json` trajectory.
 //!
 //! Criterion is unavailable offline; this is a hand-rolled harness with
 //! the same contract: timed, repeatable, machine-parseable lines.
@@ -10,10 +12,11 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
-use moe_gen::config::EngineConfig;
 use moe_gen::sched::Scenario;
+use moe_gen::session::Session;
 use moe_gen::sim::{self, tables, System};
-use moe_gen::{hw, model, server, workload};
+use moe_gen::spec::{JobSpec, WorkloadSpec};
+use moe_gen::{hw, model};
 
 fn bench_table(id: &str) -> (String, f64) {
     // Warm-up + 3 timed repetitions; report the minimum (least noise).
@@ -81,13 +84,19 @@ fn scenarios_json() -> String {
     s
 }
 
-/// One small live run on the reference backend: the weight-residency
-/// subsystem's hit-rate and overlap land in the bench trajectory.
+/// One small live run on the reference backend through the typed
+/// spec/session layer: the weight-residency hit-rate and overlap land in
+/// this file's `live` block, and `Session::run` appends the same run to
+/// the repo-root `BENCH_live.json` trajectory.
 fn live_json() -> String {
-    let prompts = workload::generate_prompts(12, 16, 48, 512, 7);
+    let mut spec = JobSpec {
+        workload: WorkloadSpec { num_requests: 12, mean_prompt: 16, max_prompt: 48, steps: 6 },
+        ..JobSpec::default()
+    };
+    spec.eng.seed = 7;
     let t0 = Instant::now();
-    let rep = server::run_offline(EngineConfig::default(), &prompts, 6)
-        .expect("live run on the reference backend");
+    let mut session = Session::open(spec).expect("session over the reference backend");
+    let rep = session.run().expect("live run on the reference backend");
     format!(
         "{{\"backend\": \"ref-cpu\", \"sequences\": {}, \"steps\": 6, \
          \"decode_tps\": {:.3}, \"weight_cache_hit_rate\": {:.4}, \

@@ -1,0 +1,183 @@
+//! Strict command-line flag parsing for the `moe-gen` binary.
+//!
+//! The old parser collected any `--key value` pair into a map, so a typo
+//! like `--stpes 32` silently ran with the default step count — the worst
+//! failure mode for an experiment driver, where a mistyped knob produces a
+//! *plausible but wrong* measurement. This layer makes every subcommand
+//! declare its flag vocabulary: unknown flags are rejected with a
+//! "did you mean `--steps`?" hint (edit distance over the declared set),
+//! value-taking flags must receive a value, and boolean flags must not.
+
+use std::collections::HashMap;
+
+/// One declared flag of a subcommand.
+#[derive(Debug, Clone, Copy)]
+pub struct Flag {
+    /// Name without the `--` prefix.
+    pub name: &'static str,
+    /// Whether the flag consumes a value (`--steps 16`); `false` means a
+    /// bare switch (`--no-backfill`).
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Convenience constructor for a value-taking flag.
+pub const fn val(name: &'static str, help: &'static str) -> Flag {
+    Flag { name, takes_value: true, help }
+}
+
+/// Convenience constructor for a boolean switch.
+pub const fn switch(name: &'static str, help: &'static str) -> Flag {
+    Flag { name, takes_value: false, help }
+}
+
+/// Parse `args` against a declared flag set. Accepts `--key value`,
+/// `--key=value`, and bare `--switch` (stored as `"true"`). Rejects
+/// unknown flags (with a nearest-match hint), missing values, values
+/// handed to switches, repeated flags, and stray positional arguments.
+pub fn parse(args: &[String], allowed: &[Flag]) -> Result<HashMap<String, String>, String> {
+    let find = |name: &str| allowed.iter().find(|f| f.name == name);
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let arg = &args[i];
+        let Some(raw) = arg.strip_prefix("--") else {
+            return Err(format!(
+                "unexpected argument {arg:?} (flags start with --; run `moe-gen` for usage)"
+            ));
+        };
+        let (name, inline_val) = match raw.split_once('=') {
+            Some((n, v)) => (n, Some(v.to_string())),
+            None => (raw, None),
+        };
+        let Some(flag) = find(name) else {
+            let hint = closest(name, &allowed.iter().map(|f| f.name).collect::<Vec<_>>())
+                .map(|s| format!(" — did you mean `--{s}`?"))
+                .unwrap_or_default();
+            return Err(format!("unknown flag `--{name}`{hint}"));
+        };
+        if out.contains_key(flag.name) {
+            return Err(format!("flag `--{name}` given more than once"));
+        }
+        let value = if flag.takes_value {
+            match inline_val {
+                Some(v) => v,
+                None => {
+                    i += 1;
+                    match args.get(i) {
+                        Some(v) if !v.starts_with("--") => v.clone(),
+                        _ => return Err(format!("flag `--{name}` expects a value")),
+                    }
+                }
+            }
+        } else {
+            if inline_val.is_some() {
+                return Err(format!("flag `--{name}` does not take a value"));
+            }
+            "true".to_string()
+        };
+        out.insert(flag.name.to_string(), value);
+        i += 1;
+    }
+    Ok(out)
+}
+
+/// Nearest name within edit distance 2 (ties broken by declaration
+/// order) — the "did you mean" candidate. Shared with the config-file
+/// unknown-key diagnostics ([`crate::spec`]).
+pub fn closest<'a>(name: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    candidates
+        .iter()
+        .map(|c| (levenshtein(name, c), *c))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, c)| c)
+}
+
+/// Classic dynamic-programming edit distance (insert/delete/substitute).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1; b.len() + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// Render a subcommand's flag table for usage text.
+pub fn render_flags(allowed: &[Flag]) -> String {
+    let mut s = String::new();
+    for f in allowed {
+        let head = if f.takes_value {
+            format!("--{} <v>", f.name)
+        } else {
+            format!("--{}", f.name)
+        };
+        s.push_str(&format!("    {head:<22} {}\n", f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags() -> Vec<Flag> {
+        vec![val("steps", "decode steps"), val("n", "sequences"), switch("no-backfill", "off")]
+    }
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_switches_and_equals_form() {
+        let m = parse(&args(&["--steps", "32", "--no-backfill", "--n=7"]), &flags()).unwrap();
+        assert_eq!(m["steps"], "32");
+        assert_eq!(m["no-backfill"], "true");
+        assert_eq!(m["n"], "7");
+    }
+
+    #[test]
+    fn rejects_typo_with_did_you_mean() {
+        let err = parse(&args(&["--stpes", "32"]), &flags()).unwrap_err();
+        assert!(err.contains("--stpes"), "{err}");
+        assert!(err.contains("did you mean `--steps`"), "{err}");
+        // Far-off names get no hint but still fail.
+        let err = parse(&args(&["--zzzzzzzz", "1"]), &flags()).unwrap_err();
+        assert!(err.contains("unknown flag"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_value_and_valued_switch() {
+        assert!(parse(&args(&["--steps"]), &flags()).is_err());
+        assert!(parse(&args(&["--steps", "--n", "2"]), &flags()).is_err());
+        assert!(parse(&args(&["--no-backfill=yes"]), &flags()).is_err());
+        assert!(parse(&args(&["stray"]), &flags()).is_err());
+        assert!(parse(&args(&["--n", "1", "--n", "2"]), &flags()).is_err(), "repeated flag");
+    }
+
+    #[test]
+    fn negative_values_are_accepted() {
+        // A value beginning with '-' (but not '--') must parse: --eos -1.
+        let allowed = vec![val("eos", "eos id")];
+        let m = parse(&args(&["--eos", "-1"]), &allowed).unwrap();
+        assert_eq!(m["eos"], "-1");
+    }
+
+    #[test]
+    fn edit_distance_behaves() {
+        assert_eq!(levenshtein("steps", "stpes"), 2);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("same", "same"), 0);
+        assert_eq!(closest("omgea", &["omega", "steps"]), Some("omega"));
+        assert_eq!(closest("unrelated", &["omega", "steps"]), None);
+    }
+}

@@ -33,6 +33,18 @@ impl Policy {
         }
     }
 
+    /// Canonical machine-readable name — the identifier the CLI and the
+    /// [`crate::spec`] JSON layer use. Always accepted by [`Policy::parse`].
+    pub fn slug(&self) -> &'static str {
+        match self {
+            Policy::ModuleBased => "module",
+            Policy::ModelBased => "model",
+            Policy::FlexGen => "flexgen",
+            Policy::MoELightning => "moe-lightning",
+            Policy::Continuous => "continuous",
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Policy> {
         Some(match s.to_ascii_lowercase().as_str() {
             "module" | "module-based" | "moe-gen" | "moegen" => Policy::ModuleBased,
@@ -56,7 +68,12 @@ impl Policy {
 }
 
 /// Live-engine configuration.
-#[derive(Debug, Clone)]
+///
+/// Assembled through the typed spec layer ([`crate::spec::JobSpec`]) —
+/// build a spec, `validate()` it, and let [`crate::session::Session`]
+/// construct the engine; ad-hoc struct literals of this type belong in
+/// tests only.
+#[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
     /// Directory holding manifest.json / *.hlo.txt / weights.npz.
     pub artifacts_dir: PathBuf,
@@ -101,6 +118,43 @@ pub struct EngineConfig {
     pub verbose: bool,
 }
 
+impl EngineConfig {
+    /// Reject configurations the deep pipeline would only trip over
+    /// mid-run (or silently clamp): called from
+    /// [`crate::spec::JobSpec::validate`] so bad states fail at build
+    /// time. Returns a human-readable description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.omega) || !self.omega.is_finite() {
+            return Err(format!("omega must be in [0, 1], got {}", self.omega));
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch (accumulated batch B) must be >= 1".into());
+        }
+        if self.attn_micro == 0 {
+            return Err("attn_micro (b_a) must be >= 1".into());
+        }
+        if self.attn_micro > self.max_batch {
+            return Err(format!(
+                "attention micro-batch b_a = {} exceeds accumulated batch B = {} \
+                 (attention can never see more sequences than the wave holds)",
+                self.attn_micro, self.max_batch
+            ));
+        }
+        if self.baseline_micro_batch == 0 {
+            return Err("baseline_micro_batch must be >= 1".into());
+        }
+        if self.weight_reuse < 1.0 || !self.weight_reuse.is_finite() {
+            return Err(format!("weight_reuse must be >= 1.0, got {}", self.weight_reuse));
+        }
+        if let Some(bw) = self.throttle_htod {
+            if bw <= 0.0 || !bw.is_finite() {
+                return Err(format!("throttle_htod must be a positive bandwidth, got {bw}"));
+            }
+        }
+        Ok(())
+    }
+}
+
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
@@ -143,6 +197,32 @@ mod tests {
             let _ = parsed;
         }
         assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn policy_slug_roundtrips_through_parse() {
+        for p in Policy::all() {
+            assert_eq!(Policy::parse(p.slug()), Some(p), "slug {} must parse", p.slug());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_states() {
+        assert!(EngineConfig::default().validate().is_ok());
+        let bad = [
+            EngineConfig { omega: 1.5, ..EngineConfig::default() },
+            EngineConfig { omega: f64::NAN, ..EngineConfig::default() },
+            EngineConfig { max_batch: 0, ..EngineConfig::default() },
+            EngineConfig { attn_micro: 0, ..EngineConfig::default() },
+            EngineConfig { attn_micro: 9, max_batch: 8, ..EngineConfig::default() },
+            EngineConfig { baseline_micro_batch: 0, ..EngineConfig::default() },
+            EngineConfig { weight_reuse: 0.5, ..EngineConfig::default() },
+            EngineConfig { throttle_htod: Some(0.0), ..EngineConfig::default() },
+            EngineConfig { throttle_htod: Some(-1.0), ..EngineConfig::default() },
+        ];
+        for cfg in bad {
+            assert!(cfg.validate().is_err(), "must reject {cfg:?}");
+        }
     }
 
     #[test]

@@ -24,6 +24,12 @@
 //! reproduces the golden trace from `python/compile/engine_ref.py`
 //! token-for-token (see tests/integration_engine.rs); with any backend,
 //! greedy tokens are invariant to the plan (tests/integration_pipeline.rs).
+//!
+//! The engine is the *execution* layer, not the entry layer: describe
+//! jobs with [`crate::spec::JobSpec`] and drive them through
+//! [`crate::session::Session`], which owns one engine and closes the
+//! profile→search→apply→run loop ([`Engine::set_strategy`] is how a
+//! searched strategy lands here).
 
 use std::sync::{Arc, RwLock};
 

@@ -33,9 +33,33 @@
 //! coordinator loads `artifacts/*.hlo.txt` through the PJRT C API once
 //! and serves everything from rust; without it, the reference backend
 //! serves the same module graph hermetically.
+//!
+//! ## Public API
+//!
+//! The crate's entry surface is the typed spec layer: describe any job —
+//! offline run, serving experiment, strategy search, simulation, profile —
+//! as a validated, JSON-round-trippable [`spec::JobSpec`], then drive it
+//! through [`session::Session`], which owns one engine and closes the
+//! paper's §4.4 loop (`profile() → search() → apply() → run()/serve()`):
+//! a searched [`sched::Strategy`] flows directly into live execution.
+//!
+//! ```no_run
+//! use moe_gen::session::Session;
+//! use moe_gen::spec::{JobSpec, StrategySource};
+//!
+//! let spec = JobSpec { strategy: StrategySource::Searched, ..JobSpec::default() };
+//! let mut session = Session::open(spec)?;
+//! let report = session.run()?; // executes the searched per-module batch sizes
+//! println!("{}", report.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The pre-spec free functions (`server::run_offline`, `serve::run_serve`,
+//! `serve::serve`) remain as thin deprecated wrappers for one release.
 
 pub mod baselines;
 pub mod batching;
+pub mod cli;
 pub mod config;
 pub mod cpu_attn;
 pub mod dag;
@@ -50,7 +74,9 @@ pub mod runtime;
 pub mod sched;
 pub mod serve;
 pub mod server;
+pub mod session;
 pub mod sim;
+pub mod spec;
 pub mod util;
 pub mod weights;
 pub mod workload;

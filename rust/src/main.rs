@@ -1,135 +1,342 @@
-//! moe-gen CLI — leader entrypoint.
+//! moe-gen CLI — leader entrypoint over the typed spec layer.
+//!
+//! Every subcommand resolves to one [`JobSpec`] — optionally loaded from
+//! `--config job.json`, then overlaid with that subcommand's flags,
+//! validated, and (except the pure-simulator commands) driven through a
+//! [`Session`]. `--dump-config out.json` writes the resolved spec instead
+//! of running, so any CLI invocation can be frozen into a reproducible
+//! config file. Unknown or typo'd flags are rejected per subcommand with
+//! a "did you mean" hint ([`moe_gen::cli`]).
 //!
 //! Subcommands:
-//!   run       live offline inference on the tiny MoE (real PJRT path)
+//!   run       live offline inference (`--strategy search` executes the
+//!             searched per-module batch sizes — the paper's §4.4 loop)
 //!   serve     online serving under a deterministic arrival trace
 //!   tables    regenerate the paper's evaluation tables from the simulator
 //!   search    batching-strategy search for a paper model/testbed
 //!   simulate  per-system throughput for one scenario
 //!   profile   live per-module latency profile across buckets
 
-use std::collections::HashMap;
+use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use moe_gen::config::{EngineConfig, Policy};
-use moe_gen::engine::Engine;
-use moe_gen::sim::tables;
+use moe_gen::cli::{self, switch, val, Flag};
+use moe_gen::config::Policy;
+use moe_gen::sched::{self, Knobs};
+use moe_gen::session::Session;
+use moe_gen::sim::{self, tables};
+use moe_gen::spec::{JobKind, JobSpec, SearchBasis, StrategySource};
+use moe_gen::util;
 use moe_gen::workload::{ArrivalMode, ArrivalSpec};
-use moe_gen::{hw, model, sched, serve, server, sim, workload};
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
-    let mut m = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                m.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                m.insert(key.to_string(), "true".to_string());
-                i += 1;
-            }
-        } else {
-            i += 1;
+fn common_flags() -> Vec<Flag> {
+    vec![
+        val("config", "load a JobSpec JSON file before applying flags"),
+        val("dump-config", "write the resolved JobSpec JSON to this path and exit"),
+        switch("help", "print this subcommand's flags"),
+    ]
+}
+
+fn flags_for(kind: JobKind) -> Vec<Flag> {
+    let mut f = common_flags();
+    let engine = [
+        val("artifacts", "artifacts dir (manifest.json / *.hlo.txt / weights.npz)"),
+        val("seed", "workload + arrival seed"),
+        val("policy", "module|model|flexgen|moe-lightning|continuous"),
+        val("omega", "CPU-attention split ratio in [0,1]"),
+        val("max-batch", "accumulated batch cap B"),
+        val("attn-micro", "attention micro-batch b_a"),
+        val("micro-batch", "baseline unified micro-batch"),
+        val("bench-log", "trajectory file for run records, or 'none'"),
+    ];
+    let strategy = [
+        val("strategy", "defaults|search — what the engine executes"),
+        val("search-basis", "auto|measured|analytic cost model for --strategy search"),
+    ];
+    let scenario = [
+        val("model", "paper model (mixtral-8x7b, deepseek-v2, ...)"),
+        val("testbed", "paper testbed (c1|c2|c3)"),
+        val("prompt", "scenario prompt length"),
+        val("decode", "scenario decode length"),
+    ];
+    match kind {
+        JobKind::Run => {
+            f.extend(engine);
+            f.extend(strategy);
+            f.extend(scenario);
+            f.push(val("n", "number of sequences"));
+            f.push(val("steps", "greedy decode steps per sequence"));
+        }
+        JobKind::Serve => {
+            f.extend(engine);
+            f.extend(strategy);
+            f.push(val("n", "number of requests"));
+            f.push(val("arrival", "t0|open|bursty|closed"));
+            f.push(val("gap", "mean inter-arrival gap in ticks (open/bursty)"));
+            f.push(val("burst", "requests per burst (bursty)"));
+            f.push(val("concurrency", "client concurrency (closed)"));
+            f.push(val("mean-decode", "mean per-request decode budget"));
+            f.push(val("max-decode", "per-request decode budget cap"));
+            f.push(val("eos", "EOS token id (enables early termination)"));
+            f.push(switch("no-backfill", "disable joining live decode waves"));
+            f.push(val("kv-slots", "KV admission pool size in slots"));
+            f.push(val("kv-budget", "KV admission pool as a host byte budget"));
+        }
+        JobKind::Tables => {
+            f.push(val("table", "all|1|4|5|6|7|8|9|10|fig3|fig4|fig7"));
+        }
+        JobKind::Search => {
+            f.extend(scenario);
+            f.push(switch("json", "also print a config-ready strategy JSON snippet"));
+        }
+        JobKind::Simulate => {
+            f.extend(scenario);
+        }
+        JobKind::Profile => {
+            f.push(val("artifacts", "artifacts dir"));
         }
     }
-    m
+    f
 }
 
 fn usage() -> ! {
     eprintln!(
         "moe-gen — MoE-Gen reproduction (module-based batching)\n\
          \n\
-         USAGE: moe-gen <command> [flags]\n\
+         USAGE: moe-gen <command> [flags]   (`moe-gen <command> --help` lists flags)\n\
          \n\
          COMMANDS:\n\
-           run       --policy module|model|continuous  --n 64  --steps 16\n\
-                     --omega 0.0  --micro-batch 8  --artifacts artifacts  --seed 0\n\
-           serve     --policy module|continuous  --n 64  --arrival t0|open|bursty|closed\n\
-                     --gap 1.0  --burst 8  --concurrency 16  --mean-decode 8\n\
-                     --max-decode 16  --eos <id>  --no-backfill  --kv-slots <n>\n\
-                     --micro-batch 8  --max-batch 128  --seed 0\n\
-           tables    --table all|1|4|5|6|7|8|9|10|fig3|fig4|fig7\n\
-           search    --model mixtral-8x7b --testbed c2 --prompt 512 --decode 256\n\
-           simulate  --model deepseek-v2 --testbed c2 --prompt 512 --decode 256\n\
-           profile   --artifacts artifacts"
+           run       offline inference; --strategy search runs the searched strategy\n\
+           serve     online serving under a deterministic arrival trace\n\
+           tables    regenerate the paper's evaluation tables\n\
+           search    batching-strategy search for a paper model/testbed\n\
+           simulate  per-system throughput for one scenario\n\
+           profile   live per-module latency profile across buckets\n\
+         \n\
+         Any command accepts --config job.json (typed JobSpec, see\n\
+         examples/job_offline.json) and --dump-config out.json."
     );
     std::process::exit(2);
+}
+
+/// Overlay parsed flags onto the spec. Every flag is declared per
+/// subcommand, so anything present here is intentional.
+fn overlay(spec: &mut JobSpec, flags: &std::collections::HashMap<String, String>) -> Result<()> {
+    fn num<T: std::str::FromStr>(
+        flags: &std::collections::HashMap<String, String>,
+        key: &str,
+    ) -> Result<Option<T>>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        flags
+            .get(key)
+            .map(|s| s.parse::<T>().with_context(|| format!("flag --{key}: bad value {s:?}")))
+            .transpose()
+    }
+
+    if let Some(a) = flags.get("artifacts") {
+        spec.eng.artifacts_dir = PathBuf::from(a);
+    }
+    if let Some(seed) = num::<u64>(flags, "seed")? {
+        spec.eng.seed = seed;
+        spec.serve.arrival.seed = seed;
+    }
+    if let Some(p) = flags.get("policy") {
+        spec.eng.policy = Policy::parse(p)
+            .ok_or_else(|| anyhow!("unknown policy {p:?}; try module|model|flexgen|moe-lightning|continuous"))?;
+    }
+    if let Some(v) = num::<f64>(flags, "omega")? {
+        spec.eng.omega = v;
+    }
+    if let Some(v) = num::<usize>(flags, "max-batch")? {
+        spec.eng.max_batch = v;
+    }
+    if let Some(v) = num::<usize>(flags, "attn-micro")? {
+        spec.eng.attn_micro = v;
+    }
+    if let Some(v) = num::<usize>(flags, "micro-batch")? {
+        spec.eng.baseline_micro_batch = v;
+    }
+    if let Some(p) = flags.get("bench-log") {
+        spec.bench_log = match p.as_str() {
+            "none" | "off" => None,
+            path => Some(PathBuf::from(path)),
+        };
+    }
+    if let Some(s) = flags.get("strategy") {
+        spec.strategy = StrategySource::parse_tag(s).ok_or_else(|| {
+            anyhow!(
+                "unknown --strategy {s:?}; try defaults|search \
+                 (explicit strategies come from --config)"
+            )
+        })?;
+    }
+    if let Some(s) = flags.get("search-basis") {
+        spec.search_basis = SearchBasis::parse(s)
+            .ok_or_else(|| anyhow!("unknown --search-basis {s:?}; try auto|measured|analytic"))?;
+    }
+    if let Some(m) = flags.get("model") {
+        spec.scenario.model = m.clone();
+    }
+    if let Some(t) = flags.get("testbed") {
+        spec.scenario.testbed = t.clone();
+    }
+    if let Some(v) = num::<usize>(flags, "prompt")? {
+        spec.scenario.prompt_len = v;
+    }
+    if let Some(v) = num::<usize>(flags, "decode")? {
+        spec.scenario.decode_len = v;
+    }
+    if let Some(v) = num::<usize>(flags, "n")? {
+        spec.workload.num_requests = v;
+    }
+    if let Some(v) = num::<usize>(flags, "steps")? {
+        spec.workload.steps = v;
+    }
+    // Rebuild the arrival process when ANY of its knobs appears —
+    // `--gap 4` without `--arrival` must retune the current mode, not
+    // silently do nothing, and a knob the target mode cannot use
+    // (`--arrival t0 --gap 3`) is rejected by ArrivalMode::from_parts,
+    // which owns the vocabulary for CLI and JSON alike. When retuning
+    // the current mode, knobs not on the command line keep their
+    // current values; when `--arrival` switches mode, only explicit
+    // flags apply (the rest take the mode defaults).
+    if ["arrival", "gap", "burst", "concurrency"].iter().any(|k| flags.contains_key(*k)) {
+        let cur = spec.serve.arrival;
+        let (cur_gap, cur_burst, cur_conc) = if flags.contains_key("arrival") {
+            (None, None, None)
+        } else {
+            match cur.mode {
+                ArrivalMode::AtTimeZero => (None, None, None),
+                ArrivalMode::OpenLoop { mean_gap } => (Some(mean_gap), None, None),
+                ArrivalMode::Bursty { mean_gap, burst } => (Some(mean_gap), Some(burst), None),
+                ArrivalMode::ClosedLoop { concurrency } => (None, None, Some(concurrency)),
+            }
+        };
+        let name = flags.get("arrival").map(String::as_str).unwrap_or(cur.mode.slug());
+        let mode = ArrivalMode::from_parts(
+            name,
+            num::<f64>(flags, "gap")?.or(cur_gap),
+            num::<usize>(flags, "burst")?.or(cur_burst),
+            num::<usize>(flags, "concurrency")?.or(cur_conc),
+        )
+        .map_err(|e| anyhow!("{e}"))?;
+        spec.serve.arrival = ArrivalSpec { mode, seed: cur.seed };
+    }
+    if let Some(v) = num::<usize>(flags, "mean-decode")? {
+        spec.serve.mean_decode = v;
+    }
+    if let Some(v) = num::<usize>(flags, "max-decode")? {
+        spec.serve.max_decode = v;
+    }
+    if let Some(v) = num::<i32>(flags, "eos")? {
+        spec.serve.eos = Some(v);
+    }
+    if flags.contains_key("no-backfill") {
+        spec.serve.backfill = false;
+    }
+    if let Some(v) = num::<usize>(flags, "kv-slots")? {
+        spec.serve.kv_slots = Some(v);
+    }
+    if let Some(v) = num::<usize>(flags, "kv-budget")? {
+        spec.serve.kv_budget_bytes = Some(v);
+    }
+    if let Some(t) = flags.get("table") {
+        spec.table = t.clone();
+    }
+    Ok(())
+}
+
+fn print_search_outcome(s: &mut Session) -> Result<()> {
+    let o = s.search()?;
+    let d = &o.decode;
+    println!(
+        "[search] basis={} B={} b_a={} b_e={} ω={:.2} S_expert={} S_params={} \
+         → {:.1} tok/s ({} candidates)",
+        o.basis.slug(),
+        d.b,
+        d.b_a,
+        d.b_e,
+        d.omega,
+        util::fmt_bytes(d.s_expert as f64),
+        util::fmt_bytes(d.s_params as f64),
+        o.throughput,
+        o.candidates_evaluated,
+    );
+    Ok(())
 }
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
-    let flags = parse_flags(&args[1..]);
-    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+    let Some(kind) = JobKind::parse(cmd) else {
+        eprintln!("unknown command {cmd:?}");
+        usage()
+    };
+    let allowed = flags_for(kind);
+    let flags = match cli::parse(&args[1..], &allowed) {
+        Ok(f) => f,
+        Err(e) => bail!("{cmd}: {e}\n\nflags for `moe-gen {cmd}`:\n{}", cli::render_flags(&allowed)),
+    };
+    if flags.contains_key("help") {
+        println!("flags for `moe-gen {cmd}`:\n{}", cli::render_flags(&allowed));
+        return Ok(());
+    }
 
-    match cmd.as_str() {
-        "run" => {
-            let policy = Policy::parse(&get("policy", "module"))
-                .unwrap_or(Policy::ModuleBased);
-            let n: usize = get("n", "64").parse()?;
-            let steps: usize = get("steps", "16").parse()?;
-            let cfg = EngineConfig {
-                artifacts_dir: get("artifacts", "artifacts").into(),
-                policy,
-                omega: get("omega", "0").parse()?,
-                max_batch: get("max-batch", "128").parse()?,
-                baseline_micro_batch: get("micro-batch", "8").parse()?,
-                seed: get("seed", "0").parse()?,
-                ..EngineConfig::default()
-            };
-            let prompts = workload::generate_prompts(n, 24, 64, 512, cfg.seed);
-            println!("[run] {} prompts, {steps} steps, policy={}", n, policy.name());
-            let report = server::run_offline(cfg, &prompts, steps)?;
-            println!("{}", report.summary());
-        }
-        "serve" => {
-            // No silent default here: a typo'd policy must not run the
-            // wrong side of the module-vs-continuous A/B experiment.
-            let policy_arg = get("policy", "module");
-            let Some(policy) = Policy::parse(&policy_arg) else {
-                bail!("unknown policy {policy_arg}; try module|continuous");
-            };
-            let seed: u64 = get("seed", "0").parse()?;
-            let mode = match get("arrival", "open").as_str() {
-                "t0" | "zero" | "offline" => ArrivalMode::AtTimeZero,
-                "open" => ArrivalMode::OpenLoop { mean_gap: get("gap", "1").parse()? },
-                "bursty" => ArrivalMode::Bursty {
-                    mean_gap: get("gap", "4").parse()?,
-                    burst: get("burst", "8").parse()?,
-                },
-                "closed" => ArrivalMode::ClosedLoop {
-                    concurrency: get("concurrency", "16").parse()?,
-                },
-                other => bail!("unknown arrival mode {other}; try t0|open|bursty|closed"),
-            };
-            let scfg = serve::ServeConfig {
-                eng: EngineConfig {
-                    artifacts_dir: get("artifacts", "artifacts").into(),
-                    policy,
-                    omega: get("omega", "0").parse()?,
-                    max_batch: get("max-batch", "128").parse()?,
-                    baseline_micro_batch: get("micro-batch", "8").parse()?,
-                    seed,
-                    ..EngineConfig::default()
-                },
-                arrival: ArrivalSpec { mode, seed },
-                num_requests: get("n", "64").parse()?,
-                mean_decode: get("mean-decode", "8").parse()?,
-                max_decode: get("max-decode", "16").parse()?,
-                eos: flags.get("eos").map(|s| s.parse()).transpose()?,
-                backfill: !flags.contains_key("no-backfill"),
-                kv_slots: flags.get("kv-slots").map(|s| s.parse()).transpose()?,
-                ..serve::ServeConfig::default()
-            };
+    let mut spec = match flags.get("config") {
+        Some(path) => JobSpec::load(std::path::Path::new(path))?,
+        None => JobSpec::default(),
+    };
+    spec.kind = kind;
+    overlay(&mut spec, &flags)?;
+    spec.validate()?;
+
+    if let Some(path) = flags.get("dump-config") {
+        let path = std::path::Path::new(path);
+        spec.save(path)?;
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
+
+    match spec.kind {
+        JobKind::Run => {
             println!(
-                "[serve] {} requests, policy={}, arrival={mode:?}, backfill={}",
-                scfg.num_requests,
-                policy.name(),
-                scfg.backfill
+                "[run] {} prompts, {} steps, policy={}, strategy={}",
+                spec.workload.num_requests,
+                spec.workload.steps,
+                spec.eng.policy.name(),
+                spec.strategy.slug(),
             );
-            let report = serve::run_serve(&scfg)?;
+            let searched = spec.strategy == StrategySource::Searched;
+            let mut s = Session::open(spec)?;
+            if searched {
+                print_search_outcome(&mut s)?;
+            }
+            let report = s.run()?;
+            println!("{}", report.summary());
+            let p = s.plan();
+            println!(
+                "[run] executed plan: B={} b_a={} b_e={} ω={:.2}",
+                p.accum_batch, p.attn_micro, p.expert_micro, p.omega
+            );
+        }
+        JobKind::Serve => {
+            println!(
+                "[serve] {} requests, policy={}, arrival={:?}, backfill={}, strategy={}",
+                spec.workload.num_requests,
+                spec.eng.policy.name(),
+                spec.serve.arrival.mode,
+                spec.serve.backfill,
+                spec.strategy.slug(),
+            );
+            let searched = spec.strategy == StrategySource::Searched;
+            let mut s = Session::open(spec)?;
+            if searched {
+                print_search_outcome(&mut s)?;
+            }
+            let report = s.serve()?;
             println!("{}", report.summary());
             println!(
                 "[serve] prefill {} tok, decode {} tok over {} waves; \
@@ -141,28 +348,19 @@ fn main() -> Result<()> {
                 report.leaked_slots,
             );
         }
-        "tables" => {
-            let which = get("table", "all");
-            print!("{}", tables::render(&which));
+        JobKind::Tables => {
+            print!("{}", tables::render(&spec.table));
         }
-        "search" => {
-            let m = model::by_name(&get("model", "mixtral-8x7b"))
-                .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
-            let h = hw::by_name(&get("testbed", "c2"))
-                .ok_or_else(|| anyhow::anyhow!("unknown testbed"))?;
-            let scn = sched::Scenario::new(
-                m, h,
-                get("prompt", "512").parse()?,
-                get("decode", "256").parse()?,
-            );
-            let dec = sched::search_decode(&scn, &sched::Knobs::moe_gen());
-            let pre = sched::search_prefill(&scn, &sched::Knobs::moe_gen_gpu_only());
+        JobKind::Search => {
+            let scn = spec.scenario.to_scenario()?;
+            let dec = sched::search_decode(&scn, &Knobs::moe_gen());
+            let pre = sched::search_prefill(&scn, &Knobs::moe_gen_gpu_only());
             println!("scenario: {} on {}", scn.model.name, scn.hw.name);
             println!(
                 "decode : B={} b_a={} b_e={} ω={:.1} S_expert={} S_params={} → {:.1} tok/s ({} candidates)",
                 dec.strategy.b, dec.strategy.b_a, dec.strategy.b_e, dec.strategy.omega,
-                moe_gen::util::fmt_bytes(dec.strategy.s_expert as f64),
-                moe_gen::util::fmt_bytes(dec.strategy.s_params as f64),
+                util::fmt_bytes(dec.strategy.s_expert as f64),
+                util::fmt_bytes(dec.strategy.s_params as f64),
                 dec.throughput, dec.candidates_evaluated
             );
             println!(
@@ -170,50 +368,49 @@ fn main() -> Result<()> {
                 pre.strategy.b, pre.strategy.b_a, pre.strategy.b_e,
                 pre.throughput, pre.candidates_evaluated
             );
+            if flags.contains_key("json") {
+                // Paste-ready: `{"strategy": ...}` merges into a --config
+                // file, closing search → run across processes.
+                let mut m = std::collections::BTreeMap::new();
+                let mut strat = std::collections::BTreeMap::new();
+                strat.insert("decode".to_string(), dec.strategy.to_json());
+                strat.insert("prefill".to_string(), pre.strategy.to_json());
+                m.insert(
+                    "strategy".to_string(),
+                    moe_gen::util::json::Json::Obj(strat),
+                );
+                println!("{}", moe_gen::util::json::Json::Obj(m).dump());
+            }
         }
-        "simulate" => {
-            let m = model::by_name(&get("model", "deepseek-v2"))
-                .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
-            let h = hw::by_name(&get("testbed", "c2"))
-                .ok_or_else(|| anyhow::anyhow!("unknown testbed"))?;
-            let scn = sched::Scenario::new(
-                m, h,
-                get("prompt", "512").parse()?,
-                get("decode", "256").parse()?,
+        JobKind::Simulate => {
+            let scn = spec.scenario.to_scenario()?;
+            println!(
+                "scenario: {} on {} (prompt {}, decode {})",
+                scn.model.name, scn.hw.name, scn.prompt_len, scn.decode_len
             );
-            println!("scenario: {} on {} (prompt {}, decode {})",
-                scn.model.name, scn.hw.name, scn.prompt_len, scn.decode_len);
             println!("{:<16} {:>12} {:>12}", "system", "decode tok/s", "prefill tok/s");
-            for sys in sim::System::table_order() {
-                let d = sim::decode_tp(&scn, sys);
-                let p = sim::prefill_tp(&scn, sys);
+            for (name, d, p) in sim::system_rows(&scn) {
                 println!(
                     "{:<16} {:>12} {:>12}",
-                    sys.name(),
+                    name,
                     d.map(|x| format!("{x:.1}")).unwrap_or_else(|| "Fail".into()),
                     p.map(|x| format!("{x:.1}")).unwrap_or_else(|| "Fail".into()),
                 );
             }
         }
-        "profile" => {
-            let cfg = EngineConfig {
-                artifacts_dir: get("artifacts", "artifacts").into(),
-                ..EngineConfig::default()
-            };
-            let mut eng = Engine::new(cfg)?;
-            eng.warmup()?;
+        JobKind::Profile => {
+            let mut s = Session::open(spec)?;
             println!("{:<14} {:>8} {:>12}", "module", "bucket", "latency (ms)");
-            for (name, bucket, secs) in eng.profile_modules()? {
+            let rows = s.profile()?.rows.clone();
+            for (name, bucket, secs) in rows {
                 println!("{name:<14} {bucket:>8} {:>12.3}", secs * 1e3);
             }
-            println!(
-                "compile time total: {:.2}s",
-                eng.compile_secs()
-            );
+            let eng = s.engine();
+            println!("compile time total: {:.2}s", eng.compile_secs());
             let m = &eng.metrics;
             println!(
                 "weight cache: budget {} | hit-rate {:.1}% ({} hits / {} misses, {} evictions)",
-                moe_gen::util::fmt_bytes(eng.weights.cache.budget() as f64),
+                util::fmt_bytes(eng.weights.cache.budget() as f64),
                 100.0 * m.weight_hit_rate(),
                 m.weight_hits,
                 m.weight_misses,
@@ -222,12 +419,9 @@ fn main() -> Result<()> {
             println!(
                 "HtoD: {:.1}% overlapped ({} overlapped / {} stalled)",
                 100.0 * m.htod_overlap_fraction(),
-                moe_gen::util::fmt_bytes(m.htod_overlapped_bytes as f64),
-                moe_gen::util::fmt_bytes(m.htod_stalled_bytes as f64),
+                util::fmt_bytes(m.htod_overlapped_bytes as f64),
+                util::fmt_bytes(m.htod_stalled_bytes as f64),
             );
-        }
-        _ => {
-            bail!("unknown command {cmd}; try `moe-gen` with no args for usage");
         }
     }
     Ok(())

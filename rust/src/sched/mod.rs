@@ -26,10 +26,13 @@
 //! budget, predictive-prefetch buffer, multi-round reuse), so the
 //! modeled reuse/overlap behaviour and the executed one are one policy.
 
+use std::collections::BTreeMap;
+
 use crate::dag::{Dag, Resource};
 use crate::exec::ModuleKind;
 use crate::hw::HwProfile;
 use crate::model::ModelDesc;
+use crate::util::json::Json;
 
 /// Workload scenario: model × hardware × context shape.
 #[derive(Debug, Clone)]
@@ -77,6 +80,90 @@ pub struct Strategy {
     /// FlexGen/MoE-Lightning multi-round reuse). Searches copy it from
     /// the policy's [`Knobs::reuse`] so it executes live.
     pub reuse: f64,
+}
+
+impl Strategy {
+    /// Reject strategies the pipeline would only clamp or trip over deep
+    /// in a run — used by [`crate::spec::JobSpec::validate`] on explicit
+    /// strategies before they reach `Engine::set_strategy`.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.b == 0 {
+            return Err("strategy: accumulated batch B must be >= 1".into());
+        }
+        if self.b_a == 0 || self.b_e == 0 {
+            return Err("strategy: micro-batches b_a and b_e must be >= 1".into());
+        }
+        if self.b_a > self.b {
+            return Err(format!(
+                "strategy: b_a = {} exceeds B = {} (attention cannot micro-batch \
+                 more sequences than the wave accumulates)",
+                self.b_a, self.b
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.omega) || !self.omega.is_finite() {
+            return Err(format!("strategy: omega must be in [0, 1], got {}", self.omega));
+        }
+        if self.reuse < 1.0 || !self.reuse.is_finite() {
+            return Err(format!("strategy: reuse must be >= 1.0, got {}", self.reuse));
+        }
+        Ok(())
+    }
+
+    /// JSON encoding of the search-space point (paper Table 2 names).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("b".to_string(), Json::Num(self.b as f64));
+        m.insert("b_a".to_string(), Json::Num(self.b_a as f64));
+        m.insert("b_e".to_string(), Json::Num(self.b_e as f64));
+        m.insert("omega".to_string(), Json::Num(self.omega));
+        m.insert("s_expert".to_string(), Json::Num(self.s_expert as f64));
+        m.insert("s_params".to_string(), Json::Num(self.s_params as f64));
+        m.insert("reuse".to_string(), Json::Num(self.reuse));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`to_json`](Strategy::to_json); `b`, `b_a`, `b_e` are
+    /// required, the residency fields default to zero / plain LRU.
+    /// Wrong-typed, negative or fractional integer fields are errors,
+    /// never coercions — a config typo must not silently execute a
+    /// different strategy.
+    pub fn from_json(v: &Json) -> Result<Strategy, String> {
+        let num = |k: &str| -> Result<Option<f64>, String> {
+            match v.get(k) {
+                None => Ok(None),
+                Some(t) => match t.as_f64() {
+                    Some(n) => Ok(Some(n)),
+                    None => Err(format!("strategy: {k} must be a number")),
+                },
+            }
+        };
+        let uint = |k: &str, n: f64| -> Result<usize, String> {
+            if n.is_finite() && n >= 0.0 && n.fract() == 0.0 {
+                Ok(n as usize)
+            } else {
+                Err(format!("strategy: {k} must be a non-negative integer, got {n}"))
+            }
+        };
+        let req_uint = |k: &str| -> Result<usize, String> {
+            let n = num(k)?.ok_or_else(|| format!("strategy: missing numeric field {k:?}"))?;
+            uint(k, n)
+        };
+        let opt_uint = |k: &str, d: usize| -> Result<usize, String> {
+            match num(k)? {
+                None => Ok(d),
+                Some(n) => uint(k, n),
+            }
+        };
+        Ok(Strategy {
+            b: req_uint("b")?,
+            b_a: req_uint("b_a")?,
+            b_e: req_uint("b_e")?,
+            omega: num("omega")?.unwrap_or(0.0),
+            s_expert: opt_uint("s_expert", 0)?,
+            s_params: opt_uint("s_params", 0)?,
+            reuse: num("reuse")?.unwrap_or(1.0),
+        })
+    }
 }
 
 /// Policy-structure knobs: how the DAG is wired for each batching policy.
@@ -623,6 +710,32 @@ mod tests {
 
     fn scn_dsv2() -> Scenario {
         Scenario::new(model::deepseek_v2(), hw::c2(), 512, 256)
+    }
+
+    #[test]
+    fn strategy_json_roundtrip_and_validate() {
+        let s = Strategy {
+            b: 1024, b_a: 256, b_e: 8192, omega: 0.6,
+            s_expert: 352_321_536, s_params: 1_073_741_824, reuse: 4.0,
+        };
+        assert!(s.validate().is_ok());
+        assert_eq!(Strategy::from_json(&s.to_json()).unwrap(), s);
+        // Missing required field.
+        assert!(Strategy::from_json(&Json::parse(r#"{"b": 8}"#).unwrap()).is_err());
+        // Strict numbers: fractional/negative/wrong-typed fields error.
+        let bad = Json::parse(r#"{"b": 96.7, "b_a": 8, "b_e": 16}"#).unwrap();
+        assert!(Strategy::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"b": 8, "b_a": -1, "b_e": 16}"#).unwrap();
+        assert!(Strategy::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"b": 8, "b_a": 8, "b_e": 16, "omega": "x"}"#).unwrap();
+        assert!(Strategy::from_json(&bad).is_err());
+        // Bad states the spec layer must reject at build time.
+        assert!(Strategy { b: 0, ..s }.validate().is_err());
+        assert!(Strategy { b_a: 2048, ..s }.validate().is_err(), "b_a > B");
+        assert!(Strategy { omega: -0.1, ..s }.validate().is_err());
+        assert!(Strategy { omega: 1.1, ..s }.validate().is_err());
+        assert!(Strategy { reuse: 0.0, ..s }.validate().is_err());
+        assert!(Strategy { b_e: 0, ..s }.validate().is_err());
     }
 
     #[test]

@@ -162,17 +162,36 @@ pub fn synth_requests(cfg: &ServeConfig, vocab: usize) -> Vec<Request> {
         .collect()
 }
 
-/// Serve a synthesized workload (the `moe-gen serve` entrypoint).
+/// Serve `requests` on a *prepared* engine (built, warmed up, strategy
+/// applied — what [`crate::session::Session::serve`] does). Resets the
+/// engine's accumulated metrics first so the report covers this
+/// experiment only.
+pub fn execute(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Result<ServeReport> {
+    eng.metrics = crate::metrics::Metrics::new();
+    serve_on(eng, cfg, requests)
+}
+
+/// Legacy one-shot entry: build an engine and serve a synthesized
+/// workload. Thin shim over the session path, kept for one release.
+#[deprecated(
+    since = "0.3.0",
+    note = "assemble a spec::JobSpec (kind = Serve) and drive session::Session::serve instead"
+)]
 pub fn run_serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let mut eng = build_engine(&cfg.eng)?;
     let requests = synth_requests(cfg, eng.model_cfg().vocab_size);
-    serve_on(&mut eng, cfg, requests)
+    execute(&mut eng, cfg, requests)
 }
 
-/// Serve an explicit request set (integration tests pin prompts/budgets).
+/// Legacy one-shot entry: build an engine and serve an explicit request
+/// set. Thin shim over the session path, kept for one release.
+#[deprecated(
+    since = "0.3.0",
+    note = "assemble a spec::JobSpec (kind = Serve) and drive session::Session::serve_requests instead"
+)]
 pub fn serve(cfg: &ServeConfig, requests: Vec<Request>) -> Result<ServeReport> {
     let mut eng = build_engine(&cfg.eng)?;
-    serve_on(&mut eng, cfg, requests)
+    execute(&mut eng, cfg, requests)
 }
 
 fn build_engine(eng_cfg: &EngineConfig) -> Result<Engine> {
@@ -408,6 +427,7 @@ fn serve_loop(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy wrappers stay covered until removal
 mod tests {
     use super::*;
 

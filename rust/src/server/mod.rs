@@ -1,11 +1,18 @@
 //! Offline inference driver: run a prompt set through a batching policy
 //! on the live engine and report paper-style metrics.
+//!
+//! [`execute`] drives a *prepared* engine (the
+//! [`crate::session::Session`] path — strategy already applied);
+//! [`run_offline`] is the legacy one-shot wrapper that builds its own
+//! engine from an [`EngineConfig`], kept as a thin deprecated shim for
+//! this release.
 
 use anyhow::Result;
 
 use crate::baselines::{run_model_based, ContinuousRunner};
 use crate::config::{EngineConfig, Policy};
 use crate::engine::Engine;
+use crate::metrics::Metrics;
 use crate::sched::Knobs;
 use crate::util::Stopwatch;
 
@@ -79,26 +86,22 @@ pub fn apply_policy_residency(cfg: &mut EngineConfig) {
     }
 }
 
-/// Run `prompts` for `steps` greedy tokens under the configured policy.
-pub fn run_offline(
-    mut cfg: EngineConfig,
-    prompts: &[Vec<i32>],
-    steps: usize,
-) -> Result<RunReport> {
-    let policy = cfg.policy;
-    let micro = cfg.baseline_micro_batch.max(1);
-    apply_policy_residency(&mut cfg);
-    let mut eng = Engine::new(cfg)?;
-    eng.warmup()?; // compile outside the timed region (the paper's Table 4
-                   // includes model *loading*, reported separately here)
+/// Run `prompts` for `steps` greedy tokens on a *prepared* engine (built,
+/// warmed up, strategy applied — what [`crate::session::Session::run`]
+/// does). Resets the engine's accumulated metrics first, so a session can
+/// execute several phases without cross-contaminating reports.
+pub fn execute(eng: &mut Engine, prompts: &[Vec<i32>], steps: usize) -> Result<RunReport> {
+    eng.metrics = Metrics::new();
+    let policy = eng.cfg.policy;
+    let micro = eng.cfg.baseline_micro_batch.max(1);
     let sw = Stopwatch::start();
     let tokens = match policy {
         Policy::ModuleBased => eng.generate(prompts, steps)?,
         Policy::ModelBased | Policy::FlexGen | Policy::MoELightning => {
             // Unified micro-batch through the whole model.
-            run_model_based(&mut eng, prompts, steps, micro)?
+            run_model_based(eng, prompts, steps, micro)?
         }
-        Policy::Continuous => ContinuousRunner::new(micro).run(&mut eng, prompts, steps)?,
+        Policy::Continuous => ContinuousRunner::new(micro).run(eng, prompts, steps)?,
     };
     let wall = sw.secs();
     let m = &eng.metrics;
@@ -121,6 +124,24 @@ pub fn run_offline(
         weight_evictions: m.weight_evictions,
         tokens,
     })
+}
+
+/// Legacy one-shot entry: build an engine from `cfg` and run. Thin shim
+/// over the session path, kept for one release.
+#[deprecated(
+    since = "0.3.0",
+    note = "assemble a spec::JobSpec and drive session::Session::run instead"
+)]
+pub fn run_offline(
+    mut cfg: EngineConfig,
+    prompts: &[Vec<i32>],
+    steps: usize,
+) -> Result<RunReport> {
+    apply_policy_residency(&mut cfg);
+    let mut eng = Engine::new(cfg)?;
+    eng.warmup()?; // compile outside the timed region (the paper's Table 4
+                   // includes model *loading*, reported separately here)
+    execute(&mut eng, prompts, steps)
 }
 
 #[cfg(test)]

@@ -1,0 +1,715 @@
+//! [`Session`] — one engine, driven end-to-end from a [`JobSpec`]
+//! (DESIGN.md §8).
+//!
+//! This is where the paper's actual pipeline (§4.4, App. B) becomes the
+//! crate's *default* path instead of a test-only one:
+//!
+//! ```text
+//! profile()  →  search()  →  apply()  →  run() / serve()
+//! (App. B       (§4.4         (set_       (live execution with
+//!  per-bucket    strategy      strategy)    the searched per-module
+//!  latencies)    search)                    batch sizes)
+//! ```
+//!
+//! A `Session` owns one [`Engine`] built from its spec. `search()` seeds
+//! its cost model from the engine's **measured** per-bucket module
+//! latencies ([`Engine::profile_modules`]) whenever the live backend can
+//! be profiled, and falls back cleanly to the simulator's analytic
+//! [`Knobs`] cost model over the spec's [`crate::spec::ScenarioSpec`]
+//! when no backend
+//! profile exists (or when the spec forces a basis). `apply()` wires the
+//! winning [`Strategy`] straight into [`Engine::set_strategy`], so
+//! `moe-gen run --strategy search` executes the searched configuration —
+//! the closed loop MoE-Lightning and EPS-MoE show the throughput win
+//! comes from.
+//!
+//! Every `run()`/`serve()` appends a trajectory record to the spec's
+//! `bench_log` (`BENCH_live.json` at the repo root by default), so the
+//! perf history accumulates across sessions and benches.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Policy;
+use crate::engine::Engine;
+use crate::exec::{ModuleKind, Plan};
+use crate::metrics::Metrics;
+use crate::sched::{self, Knobs, Strategy};
+use crate::serve::{self, Request, ServeReport};
+use crate::server::{self, RunReport};
+use crate::spec::{JobSpec, SearchBasis, StrategySource};
+use crate::util::json::Json;
+use crate::weights::WeightSizes;
+use crate::workload;
+
+/// Which cost model actually scored the winning strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyBasis {
+    /// Measured per-bucket module latencies from the live backend.
+    MeasuredProfile,
+    /// The simulator's analytic DAG cost model over the spec's scenario.
+    AnalyticModel,
+}
+
+impl StrategyBasis {
+    pub fn slug(&self) -> &'static str {
+        match self {
+            StrategyBasis::MeasuredProfile => "measured",
+            StrategyBasis::AnalyticModel => "analytic",
+        }
+    }
+}
+
+/// Result of [`Session::search`]: the strategies that will execute, plus
+/// provenance.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub decode: Strategy,
+    pub prefill: Option<Strategy>,
+    /// Predicted decode throughput (tokens/s) under the chosen basis —
+    /// comparable *within* a basis, not across bases.
+    pub throughput: f64,
+    pub candidates_evaluated: usize,
+    pub basis: StrategyBasis,
+}
+
+/// Measured per-bucket module latencies (the App.-B workload profile) in
+/// lookup form.
+#[derive(Debug, Clone, Default)]
+pub struct ModuleProfile {
+    /// `(module name, bucket, seconds)` rows from
+    /// [`Engine::profile_modules`].
+    pub rows: Vec<(String, usize, f64)>,
+}
+
+impl ModuleProfile {
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Measured latency of `kind` covering `n` rows: the smallest
+    /// profiled bucket ≥ `n`, else the largest (the launch the pipeline
+    /// would actually make).
+    pub fn lat(&self, kind: ModuleKind, n: usize) -> Option<f64> {
+        let name = kind.name();
+        let mut best: Option<(usize, f64)> = None; // smallest bucket >= n
+        let mut largest: Option<(usize, f64)> = None;
+        for (m, bucket, secs) in &self.rows {
+            if m != name {
+                continue;
+            }
+            if largest.map(|(b, _)| *bucket > b).unwrap_or(true) {
+                largest = Some((*bucket, *secs));
+            }
+            if *bucket >= n && best.map(|(b, _)| *bucket < b).unwrap_or(true) {
+                best = Some((*bucket, *secs));
+            }
+        }
+        best.or(largest).map(|(_, s)| s)
+    }
+
+    /// Largest profiled bucket for `kind` (the per-launch row capacity).
+    fn cap(&self, kind: ModuleKind) -> Option<usize> {
+        self.rows
+            .iter()
+            .filter(|(m, _, _)| m == kind.name())
+            .map(|(_, b, _)| *b)
+            .max()
+    }
+
+    /// Time for `kind` to cover `total` rows in capacity-sized launches.
+    fn stage(&self, kind: ModuleKind, total: usize) -> Option<f64> {
+        if total == 0 {
+            return Some(0.0);
+        }
+        let cap = self.cap(kind)?;
+        let full = total / cap;
+        let rem = total % cap;
+        let mut t = full as f64 * self.lat(kind, cap)?;
+        if rem > 0 {
+            t += self.lat(kind, rem)?;
+        }
+        Some(t)
+    }
+}
+
+/// One engine driven end-to-end from a [`JobSpec`]. See module docs.
+pub struct Session {
+    spec: JobSpec,
+    eng: Engine,
+    profile: Option<ModuleProfile>,
+    outcome: Option<SearchOutcome>,
+    applied: bool,
+}
+
+impl Session {
+    /// Validate the spec, project its policy onto the residency knobs,
+    /// build the engine and pre-compile every module variant.
+    pub fn open(spec: JobSpec) -> Result<Session> {
+        spec.validate()?;
+        let mut eng_cfg = spec.eng.clone();
+        server::apply_policy_residency(&mut eng_cfg);
+        let mut eng = Engine::new(eng_cfg)?;
+        eng.warmup()?;
+        Ok(Session { spec, eng, profile: None, outcome: None, applied: false })
+    }
+
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.eng
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.eng
+    }
+
+    /// The engine's currently active micro-batch plan.
+    pub fn plan(&self) -> Plan {
+        self.eng.plan()
+    }
+
+    // -- profile -------------------------------------------------------------
+
+    /// Live per-module latency profile across buckets (paper App. B),
+    /// measured once per session and cached — both the `profile` job and
+    /// the measured strategy search consume it.
+    pub fn profile(&mut self) -> Result<&ModuleProfile> {
+        if self.profile.is_none() {
+            let rows = self.eng.profile_modules()?;
+            self.profile = Some(ModuleProfile { rows });
+        }
+        Ok(self.profile.as_ref().unwrap())
+    }
+
+    // -- search --------------------------------------------------------------
+
+    /// Strategy search for this session's engine, cached after the first
+    /// call. Basis selection per the spec:
+    ///
+    /// * `Measured` — require the live profile (error if unavailable);
+    /// * `Analytic` — force the simulator's cost model over the spec's
+    ///   scenario;
+    /// * `Auto` — measured when [`Engine::profile_modules`] succeeds
+    ///   with per-bucket rows, analytic fallback otherwise.
+    pub fn search(&mut self) -> Result<SearchOutcome> {
+        if let Some(o) = &self.outcome {
+            return Ok(o.clone());
+        }
+        let basis = self.spec.search_basis;
+        let out = match basis {
+            SearchBasis::Measured => self.search_measured()?,
+            SearchBasis::Analytic => self.search_analytic()?,
+            SearchBasis::Auto => match self.search_measured() {
+                Ok(o) => o,
+                // No usable backend profile — fall back to the analytic
+                // model rather than failing the job.
+                Err(_) => self.search_analytic()?,
+            },
+        };
+        self.outcome = Some(out.clone());
+        Ok(out)
+    }
+
+    /// Measured-profile search: enumerate `(B, b_a, b_e)` over the live
+    /// backend's bucket grids and score one decode step as the sum of
+    /// measured per-module launch latencies (App. B — the profile *is*
+    /// the cost model). ω carries over from the engine config: the
+    /// profile has no CPU-attention rows, so the GPU-measured objective
+    /// cannot rank ω and must not pretend to.
+    fn search_measured(&mut self) -> Result<SearchOutcome> {
+        let cfg = self.eng.model_cfg().clone();
+        let eng_cfg = self.eng.cfg.clone();
+        self.profile()?;
+        let p = self.profile.as_ref().unwrap();
+        if p.is_empty() {
+            return Err(anyhow!("backend produced an empty module profile"));
+        }
+        let sizes = WeightSizes::from_cfg(&cfg);
+        let omega = eng_cfg.omega;
+        let max_b = eng_cfg.max_batch;
+
+        let mut b_grid: Vec<usize> = cfg
+            .decode_batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b <= max_b)
+            .chain(std::iter::once(max_b))
+            .collect();
+        b_grid.sort_unstable();
+        b_grid.dedup();
+        let mut best: Option<(Strategy, f64)> = None;
+        let mut evaluated = 0;
+        for &b in &b_grid {
+            let mut ba_grid: Vec<usize> = cfg
+                .decode_batch_buckets
+                .iter()
+                .copied()
+                .filter(|&ba| ba <= b)
+                .collect();
+            if ba_grid.is_empty() {
+                ba_grid.push(b);
+            }
+            for &b_a in &ba_grid {
+                for &b_e in &cfg.expert_buckets {
+                    let Some(t) = measured_decode_step(p, &cfg, b, b_a, b_e, omega) else {
+                        continue;
+                    };
+                    evaluated += 1;
+                    let tp = b as f64 / t.max(1e-12);
+                    if best.as_ref().map(|(_, btp)| tp > *btp).unwrap_or(true) {
+                        let s = Strategy {
+                            b,
+                            b_a,
+                            b_e,
+                            omega,
+                            // Residency: keep the engine's configured
+                            // budgets live (the measured objective does
+                            // not model HtoD, so it must not override
+                            // them with zeros).
+                            s_expert: 2 * sizes.expert,
+                            s_params: eng_cfg.weight_cache_bytes,
+                            reuse: eng_cfg.weight_reuse,
+                        };
+                        best = Some((s, tp));
+                    }
+                }
+            }
+        }
+        let (decode, throughput) =
+            best.ok_or_else(|| anyhow!("measured search found no scorable candidate"))?;
+
+        // Prefill: pick the attention micro-batch with the best measured
+        // tokens/s over the causal-attention launch.
+        let mut pre_best: Option<(usize, f64)> = None;
+        for &ba in &cfg.prefill_batch_buckets {
+            if let Some(lat) = p.lat(ModuleKind::AttnPrefill, ba) {
+                let tp = (ba * cfg.prefill_seq) as f64 / lat.max(1e-12);
+                if pre_best.map(|(_, btp)| tp > btp).unwrap_or(true) {
+                    pre_best = Some((ba, tp));
+                }
+            }
+        }
+        let prefill = pre_best.map(|(ba, _)| Strategy {
+            b: (ba * cfg.prefill_seq).max(1),
+            b_a: ba,
+            b_e: decode.b_e,
+            omega: 0.0,
+            s_expert: decode.s_expert,
+            s_params: decode.s_params,
+            reuse: decode.reuse,
+        });
+        Ok(SearchOutcome {
+            decode,
+            prefill,
+            throughput,
+            candidates_evaluated: evaluated,
+            basis: StrategyBasis::MeasuredProfile,
+        })
+    }
+
+    /// Analytic fallback: the §4.4 search over the spec's paper-scale
+    /// scenario, with the DAG wired per the engine's policy.
+    fn search_analytic(&mut self) -> Result<SearchOutcome> {
+        let scn = self.spec.scenario.to_scenario()?;
+        let knobs = knobs_for(self.spec.eng.policy);
+        let dec = sched::search_decode(&scn, &knobs);
+        if dec.throughput <= 0.0 {
+            return Err(anyhow!(
+                "analytic search found no feasible strategy for {} on {}",
+                scn.model.name,
+                scn.hw.name
+            ));
+        }
+        let pre = sched::search_prefill(&scn, &Knobs { cpu_attention: false, ..knobs });
+        Ok(SearchOutcome {
+            decode: dec.strategy,
+            prefill: (pre.throughput > 0.0).then_some(pre.strategy),
+            throughput: dec.throughput,
+            candidates_evaluated: dec.candidates_evaluated + pre.candidates_evaluated,
+            basis: StrategyBasis::AnalyticModel,
+        })
+    }
+
+    // -- apply ---------------------------------------------------------------
+
+    /// Resolve the spec's [`StrategySource`] onto the live engine:
+    /// `Searched` runs (or reuses) the search and hands its result to
+    /// [`Engine::set_strategy`]; `Explicit` applies the given strategy;
+    /// `EngineDefaults` keeps the config-derived plan. Returns the plan
+    /// that will execute. Idempotent; `run()`/`serve()` call it lazily.
+    pub fn apply(&mut self) -> Result<Plan> {
+        match self.spec.strategy.clone() {
+            StrategySource::EngineDefaults => {}
+            StrategySource::Searched => {
+                let o = self.search()?;
+                self.eng.set_strategy(&o.decode, o.prefill.as_ref());
+            }
+            StrategySource::Explicit { decode, prefill } => {
+                self.eng.set_strategy(&decode, prefill.as_ref());
+            }
+        }
+        self.applied = true;
+        Ok(self.eng.plan())
+    }
+
+    // -- execute -------------------------------------------------------------
+
+    /// Offline run over the spec's synthesized workload.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let c = self.eng.model_cfg();
+        let max_prompt = self.spec.workload.max_prompt.min(c.prefill_seq);
+        let mean_prompt = self.spec.workload.mean_prompt.min(max_prompt);
+        let prompts = workload::generate_prompts(
+            self.spec.workload.num_requests,
+            mean_prompt,
+            max_prompt,
+            c.vocab_size,
+            self.spec.eng.seed,
+        );
+        let steps = self.spec.workload.steps;
+        self.run_prompts(&prompts, steps)
+    }
+
+    /// Offline run over an explicit prompt set (benches and tests pin
+    /// their own prompts).
+    pub fn run_prompts(&mut self, prompts: &[Vec<i32>], steps: usize) -> Result<RunReport> {
+        if !self.applied {
+            self.apply()?;
+        }
+        let report = server::execute(&mut self.eng, prompts, steps)?;
+        self.record_run(&report, steps);
+        Ok(report)
+    }
+
+    /// Online serving over the spec's synthesized request trace.
+    pub fn serve(&mut self) -> Result<ServeReport> {
+        let scfg = self.spec.serve_config();
+        let requests = serve::synth_requests(&scfg, self.eng.model_cfg().vocab_size);
+        self.serve_requests(requests)
+    }
+
+    /// Online serving over an explicit request set.
+    pub fn serve_requests(&mut self, requests: Vec<Request>) -> Result<ServeReport> {
+        if !self.applied {
+            self.apply()?;
+        }
+        let scfg = self.spec.serve_config();
+        let report = serve::execute(&mut self.eng, &scfg, requests)?;
+        self.record_serve(&report);
+        Ok(report)
+    }
+
+    // -- trajectory records --------------------------------------------------
+
+    fn record_base(&self, wall_secs: f64) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        let plan = self.eng.plan();
+        m.insert("ts_unix_ms".into(), Json::Num(ts));
+        m.insert("job".into(), Json::Str(self.spec.kind.slug().into()));
+        m.insert("policy".into(), Json::Str(self.spec.eng.policy.slug().into()));
+        m.insert("backend".into(), Json::Str(self.eng.backend_name().into()));
+        m.insert("strategy_source".into(), Json::Str(self.spec.strategy.slug().into()));
+        m.insert(
+            "search_basis".into(),
+            self.outcome
+                .as_ref()
+                .map(|o| Json::Str(o.basis.slug().into()))
+                .unwrap_or(Json::Null),
+        );
+        let mut pj = BTreeMap::new();
+        pj.insert("b".into(), Json::Num(plan.accum_batch as f64));
+        pj.insert("b_a".into(), Json::Num(plan.attn_micro as f64));
+        pj.insert("b_e".into(), Json::Num(plan.expert_micro as f64));
+        pj.insert("omega".into(), Json::Num(plan.omega));
+        m.insert("plan".into(), Json::Obj(pj));
+        m.insert("wall_ms".into(), Json::Num(wall_secs * 1e3));
+        m
+    }
+
+    fn record_run(&self, r: &RunReport, steps: usize) {
+        let Some(path) = self.spec.bench_log.clone() else { return };
+        let mut m = self.record_base(r.wall_secs);
+        m.insert("sequences".into(), Json::Num(r.sequences as f64));
+        m.insert("steps".into(), Json::Num(steps as f64));
+        m.insert("prefill_tps".into(), Json::Num(r.prefill_tp));
+        m.insert("decode_tps".into(), Json::Num(r.decode_tp));
+        m.insert("total_tps".into(), Json::Num(r.total_tp));
+        m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
+        m.insert("weight_cache_hit_rate".into(), Json::Num(r.weight_hit_rate));
+        m.insert("htod_overlap_fraction".into(), Json::Num(r.htod_overlap_fraction));
+        append_bench_record(&path, Json::Obj(m));
+    }
+
+    fn record_serve(&self, r: &ServeReport) {
+        let Some(path) = self.spec.bench_log.clone() else { return };
+        let mut m = self.record_base(r.wall_secs);
+        m.insert("requests".into(), Json::Num(r.requests as f64));
+        m.insert("total_tps".into(), Json::Num(r.total_tp));
+        m.insert("ttft_p50_ms".into(), Json::Num(r.ttft_p50 * 1e3));
+        m.insert("ttft_p99_ms".into(), Json::Num(r.ttft_p99 * 1e3));
+        m.insert("tpot_p50_ms".into(), Json::Num(r.tpot_p50 * 1e3));
+        m.insert("tpot_p99_ms".into(), Json::Num(r.tpot_p99 * 1e3));
+        m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
+        m.insert("backfilled".into(), Json::Num(r.backfilled as f64));
+        append_bench_record(&path, Json::Obj(m));
+    }
+
+    /// Reset the engine's accumulated metrics (each `execute` does this
+    /// itself; exposed for callers interleaving phases manually).
+    pub fn reset_metrics(&mut self) {
+        self.eng.metrics = Metrics::new();
+    }
+}
+
+/// How the analytic DAG is wired for each live policy.
+fn knobs_for(policy: Policy) -> Knobs {
+    match policy {
+        Policy::ModuleBased => Knobs::moe_gen(),
+        Policy::ModelBased => Knobs::deepspeed(),
+        Policy::FlexGen => Knobs::flexgen(),
+        Policy::MoELightning => Knobs::moe_lightning(),
+        Policy::Continuous => Knobs::vllm(),
+    }
+}
+
+/// Measured cost of one decode step of the whole model at candidate
+/// `(B, b_a, b_e, ω)` — the sum of per-module launch latencies the live
+/// pipeline would make (GPU share only; the CPU split runs overlapped and
+/// unprofiled, so ω is an input, not a decision variable).
+fn measured_decode_step(
+    p: &ModuleProfile,
+    c: &crate::runtime::RtConfig,
+    b: usize,
+    b_a: usize,
+    b_e: usize,
+    omega: f64,
+) -> Option<f64> {
+    let layers = c.num_layers as f64;
+    let mut t = p.stage(ModuleKind::Embed, b)?;
+    // Per-layer stages over B tokens (decode: one token per sequence).
+    let mut per_layer = p.stage(ModuleKind::PreAttention, b)?
+        + p.stage(ModuleKind::PostAttention, b)?
+        + p.stage(ModuleKind::Router, b)?;
+    // Attention: the GPU share of the wave in b_a-sequence launches.
+    let gpu_seqs = ((1.0 - omega) * b as f64).ceil() as usize;
+    if gpu_seqs > 0 {
+        let micro = b_a.min(gpu_seqs).max(1);
+        let launches = gpu_seqs.div_ceil(micro);
+        per_layer += launches as f64 * p.lat(ModuleKind::AttnDecode, micro)?;
+    }
+    // Experts: B·top_k routed tokens spread over the layer's experts,
+    // micro-batched at b_e per launch. Ceiling division: every routed
+    // token must be costed, or non-divisible B candidates get a free
+    // discount and win the search on an accounting artifact.
+    let routed = b * c.top_k;
+    let active = c.num_experts.min(routed.max(1));
+    let per_expert = routed.div_ceil(active).max(1);
+    let launch_tokens = b_e.min(per_expert);
+    let launches = per_expert.div_ceil(launch_tokens);
+    per_layer += (active * launches) as f64 * p.lat(ModuleKind::ExpertFfn, launch_tokens)?;
+    // Shared expert: dense FFN over all B tokens (no dedicated profile
+    // row; the expert kernel at the same token count is the measured
+    // proxy).
+    if c.use_shared_expert {
+        per_layer += p.stage(ModuleKind::ExpertFfn, b)?;
+    }
+    t += layers * per_layer;
+    t += p.stage(ModuleKind::LmHead, b)?;
+    Some(t)
+}
+
+/// Append one record to the `BENCH_live.json` trajectory:
+/// `{"bench": "live", "runs": [...]}`, created on first use, extended
+/// in place afterwards. IO problems are reported, never fatal — a bench
+/// log must not fail a run — and an existing file that cannot be parsed
+/// as a trajectory is left untouched rather than overwritten (the file
+/// exists to *accumulate* history; never erase it on a read hiccup).
+fn append_bench_record(path: &Path, record: Json) {
+    let mut runs: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if !text.trim().is_empty() {
+            match Json::parse(&text)
+                .map(|v| v.get("runs").and_then(Json::as_arr).map(<[Json]>::to_vec))
+            {
+                Ok(Some(existing)) => runs = existing,
+                _ => {
+                    eprintln!(
+                        "warning: {} exists but is not a bench trajectory; not appending",
+                        path.display()
+                    );
+                    return;
+                }
+            }
+        }
+    }
+    runs.push(record);
+    let mut units = BTreeMap::new();
+    units.insert("decode_tps".into(), Json::Str("tokens/s".into()));
+    units.insert("total_tps".into(), Json::Str("tokens/s".into()));
+    units.insert("wall_ms".into(), Json::Str("ms".into()));
+    units.insert("ttft_p50_ms".into(), Json::Str("ms".into()));
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("live".into()));
+    top.insert("units".into(), Json::Obj(units));
+    top.insert("runs".into(), Json::Arr(runs));
+    let mut text = Json::Obj(top).dump();
+    text.push('\n');
+    if let Err(e) = std::fs::write(path, text) {
+        eprintln!("warning: could not append bench record to {}: {e}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::{JobKind, WorkloadSpec};
+
+    fn quiet_spec() -> JobSpec {
+        JobSpec {
+            workload: WorkloadSpec { num_requests: 4, mean_prompt: 6, max_prompt: 12, steps: 3 },
+            bench_log: None,
+            ..JobSpec::default()
+        }
+    }
+
+    #[test]
+    fn session_open_validates_first() {
+        let mut bad = quiet_spec();
+        bad.eng.omega = 2.0;
+        assert!(Session::open(bad).is_err(), "invalid spec must not build an engine");
+    }
+
+    #[test]
+    fn module_profile_lookup_picks_covering_bucket() {
+        let p = ModuleProfile {
+            rows: vec![
+                ("expert_ffn".into(), 8, 1.0),
+                ("expert_ffn".into(), 32, 2.0),
+                ("expert_ffn".into(), 128, 3.0),
+            ],
+        };
+        assert_eq!(p.lat(ModuleKind::ExpertFfn, 1), Some(1.0));
+        assert_eq!(p.lat(ModuleKind::ExpertFfn, 8), Some(1.0));
+        assert_eq!(p.lat(ModuleKind::ExpertFfn, 9), Some(2.0));
+        assert_eq!(p.lat(ModuleKind::ExpertFfn, 500), Some(3.0), "over cap → largest");
+        assert_eq!(p.lat(ModuleKind::Embed, 8), None, "unprofiled module");
+        // stage() decomposes an over-cap total into full + remainder launches.
+        assert_eq!(p.stage(ModuleKind::ExpertFfn, 256), Some(2.0 * 3.0));
+        assert_eq!(p.stage(ModuleKind::ExpertFfn, 136), Some(3.0 + 1.0));
+        assert_eq!(p.stage(ModuleKind::ExpertFfn, 0), Some(0.0));
+    }
+
+    #[test]
+    fn measured_search_runs_on_reference_backend() {
+        let mut s = Session::open(JobSpec {
+            search_basis: crate::spec::SearchBasis::Measured,
+            ..quiet_spec()
+        })
+        .unwrap();
+        let o = s.search().unwrap();
+        assert_eq!(o.basis, StrategyBasis::MeasuredProfile);
+        assert!(o.candidates_evaluated > 4, "grid too small: {}", o.candidates_evaluated);
+        assert!(o.throughput > 0.0);
+        assert!(o.decode.validate().is_ok(), "searched strategy must be valid: {:?}", o.decode);
+        assert!(o.decode.b <= s.spec().eng.max_batch);
+        assert!(o.prefill.is_some(), "prefill attention buckets are profiled");
+        // Cached: a second call returns the same outcome.
+        let o2 = s.search().unwrap();
+        assert_eq!(o2.decode, o.decode);
+    }
+
+    #[test]
+    fn analytic_fallback_and_forced_basis() {
+        let mut s = Session::open(JobSpec {
+            search_basis: crate::spec::SearchBasis::Analytic,
+            ..quiet_spec()
+        })
+        .unwrap();
+        let o = s.search().unwrap();
+        assert_eq!(o.basis, StrategyBasis::AnalyticModel);
+        assert!(o.throughput > 0.0);
+        assert!(o.decode.b >= 1);
+    }
+
+    #[test]
+    fn apply_searched_strategy_sets_engine_plan() {
+        let mut s = Session::open(JobSpec {
+            strategy: StrategySource::Searched,
+            search_basis: crate::spec::SearchBasis::Measured,
+            ..quiet_spec()
+        })
+        .unwrap();
+        let plan = s.apply().unwrap();
+        let o = s.search().unwrap();
+        let expect = Plan::from_strategy(
+            &o.decode,
+            o.prefill.as_ref(),
+            s.engine().model_cfg(),
+            s.spec().eng.max_batch,
+        );
+        assert_eq!(plan, expect, "the applied plan must be the searched strategy's projection");
+    }
+
+    #[test]
+    fn run_produces_tokens_and_respects_bench_log_none() {
+        let mut s = Session::open(quiet_spec()).unwrap();
+        let r = s.run().unwrap();
+        assert_eq!(r.sequences, 4);
+        assert_eq!(r.tokens.len(), 4);
+        for t in &r.tokens {
+            assert_eq!(t.len(), 3);
+        }
+    }
+
+    #[test]
+    fn serve_job_round_trips_through_session() {
+        let mut spec = quiet_spec();
+        spec.kind = JobKind::Serve;
+        spec.serve.mean_decode = 2;
+        spec.serve.max_decode = 4;
+        let mut s = Session::open(spec).unwrap();
+        let r = s.serve().unwrap();
+        assert_eq!(r.requests, 4);
+        assert_eq!(r.leaked_slots, 0);
+    }
+
+    #[test]
+    fn bench_record_appends() {
+        let dir = std::env::temp_dir().join("moe_gen_session_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_live.json");
+        let _ = std::fs::remove_file(&path);
+        let mut spec = quiet_spec();
+        spec.bench_log = Some(path.clone());
+        let mut s = Session::open(spec.clone()).unwrap();
+        s.run().unwrap();
+        s.run().unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.req("bench").as_str(), Some("live"));
+        let runs = v.req("runs").as_arr().unwrap();
+        assert_eq!(runs.len(), 2, "each run appends one record");
+        assert_eq!(runs[0].req("job").as_str(), Some("run"));
+        assert!(runs[0].req("decode_tps").as_f64().unwrap() >= 0.0);
+        assert_eq!(runs[0].req("plan").req("b").as_usize(), Some(128));
+
+        // A file that is not a trajectory must never be clobbered.
+        std::fs::write(&path, "definitely not json").unwrap();
+        let mut s2 = Session::open(spec).unwrap();
+        s2.run().unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "definitely not json",
+            "unparseable bench log must be left untouched"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -394,6 +394,16 @@ pub fn table1_row(scn: &Scenario, sys: System, prefill: bool) -> Option<(f64, f6
     }
 }
 
+/// One `(system name, decode tok/s, prefill tok/s)` row per system in
+/// table order — the structured payload behind `moe-gen simulate` and the
+/// spec layer's `Simulate` job (`None` = the paper's "Fail" cells).
+pub fn system_rows(scn: &Scenario) -> Vec<(&'static str, Option<f64>, Option<f64>)> {
+    System::table_order()
+        .iter()
+        .map(|&sys| (sys.name(), decode_tp(scn, sys), prefill_tp(scn, sys)))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

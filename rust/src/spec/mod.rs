@@ -1,0 +1,886 @@
+//! The typed job-specification layer — the crate's single public entry
+//! surface (DESIGN.md §8).
+//!
+//! A [`JobSpec`] is a validated, JSON-round-trippable description of any
+//! job this repo can run — an offline throughput run, an online serving
+//! experiment, a strategy search, a paper-scale simulation, a live module
+//! profile, or a table render. It unifies what used to be assembled by
+//! ad-hoc struct literals spread across `main.rs`, `server::run_offline`,
+//! `serve::run_serve` and the benches: the engine knobs
+//! ([`EngineConfig`]), the serving knobs ([`ServeSpec`] → ServeConfig),
+//! the workload shape ([`WorkloadSpec`]), the analytic scenario
+//! ([`ScenarioSpec`]) and — the piece that closes the paper's
+//! profile→search→execute loop (§4.4, App. B) — the *strategy source*
+//! ([`StrategySource`]): whether the job runs on engine defaults, on a
+//! freshly searched strategy, or on an explicit one.
+//!
+//! [`JobSpec::validate`] rejects bad states (ω ∉ [0, 1], `b_a > B`, zero
+//! batches, unknown model names, …) at build time, before an engine ever
+//! exists. [`JobSpec::dump`] and the `FromStr` impl round-trip through
+//! [`crate::util::json`], so `moe-gen run --config job.json` and
+//! `--dump-config` are exact inverses.
+//!
+//! Execution lives in [`crate::session::Session`], which owns one engine
+//! per spec and exposes `profile() → search() → apply() → run()/serve()`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{EngineConfig, Policy};
+use crate::hw;
+use crate::model;
+use crate::sched::{Scenario, Strategy};
+use crate::serve::ServeConfig;
+use crate::util::json::Json;
+use crate::workload::ArrivalSpec;
+
+/// What kind of job a [`JobSpec`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Offline inference: a fixed prompt set, greedy decode for
+    /// `workload.steps` tokens (the throughput-table regime).
+    Run,
+    /// Online serving under a deterministic arrival trace.
+    Serve,
+    /// Batching-strategy search only (report, don't execute).
+    Search,
+    /// Paper-scale simulator: per-system throughput for one scenario.
+    Simulate,
+    /// Live per-module latency profile across buckets (paper App. B).
+    Profile,
+    /// Render the paper's evaluation tables from the simulator.
+    Tables,
+}
+
+impl JobKind {
+    pub fn slug(&self) -> &'static str {
+        match self {
+            JobKind::Run => "run",
+            JobKind::Serve => "serve",
+            JobKind::Search => "search",
+            JobKind::Simulate => "simulate",
+            JobKind::Profile => "profile",
+            JobKind::Tables => "tables",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobKind> {
+        Some(match s {
+            "run" => JobKind::Run,
+            "serve" => JobKind::Serve,
+            "search" => JobKind::Search,
+            "simulate" => JobKind::Simulate,
+            "profile" => JobKind::Profile,
+            "tables" => JobKind::Tables,
+            _ => return None,
+        })
+    }
+}
+
+/// Where the executed batching strategy comes from — the knob that makes
+/// the searched configuration the one that runs (`moe-gen run --strategy
+/// search`), instead of a value printed and thrown away.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StrategySource {
+    /// Keep the engine's config-derived default plan.
+    EngineDefaults,
+    /// Run the strategy search first and execute its result
+    /// (`Session::apply` wires the searched [`Strategy`] straight into
+    /// `Engine::set_strategy`).
+    Searched,
+    /// Execute an explicitly supplied strategy (from a config file or a
+    /// prior search's dump).
+    Explicit { decode: Strategy, prefill: Option<Strategy> },
+}
+
+impl StrategySource {
+    /// Canonical tag — what `to_json` emits for the non-explicit
+    /// sources and what bench-log records store, always accepted by
+    /// [`StrategySource::parse_tag`].
+    pub fn slug(&self) -> &'static str {
+        match self {
+            StrategySource::EngineDefaults => "defaults",
+            StrategySource::Searched => "search",
+            StrategySource::Explicit { .. } => "explicit",
+        }
+    }
+
+    /// The single owner of the string vocabulary (`defaults`/`engine`,
+    /// `search`/`searched`) — the CLI `--strategy` flag and the JSON
+    /// decoding both parse through this. Explicit strategies have no
+    /// tag; they are JSON objects.
+    pub fn parse_tag(s: &str) -> Option<StrategySource> {
+        Some(match s {
+            "defaults" | "engine" => StrategySource::EngineDefaults,
+            "search" | "searched" => StrategySource::Searched,
+            _ => return None,
+        })
+    }
+}
+
+/// Which cost model seeds `Session::search`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchBasis {
+    /// Measured per-bucket module latencies from the live backend when
+    /// profiling succeeds; the analytic simulator otherwise.
+    Auto,
+    /// Require the measured profile (error if the backend cannot be
+    /// profiled).
+    Measured,
+    /// Force the simulator's analytic `Knobs` cost model over the
+    /// configured [`ScenarioSpec`].
+    Analytic,
+}
+
+impl SearchBasis {
+    pub fn slug(&self) -> &'static str {
+        match self {
+            SearchBasis::Auto => "auto",
+            SearchBasis::Measured => "measured",
+            SearchBasis::Analytic => "analytic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SearchBasis> {
+        Some(match s {
+            "auto" => SearchBasis::Auto,
+            "measured" | "profile" => SearchBasis::Measured,
+            "analytic" | "model" | "sim" => SearchBasis::Analytic,
+            _ => return None,
+        })
+    }
+}
+
+/// Shape of the synthesized token-level workload (live tiny-model runs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Sequences (offline) / requests (serving).
+    pub num_requests: usize,
+    /// Log-normal mean prompt length (tokens).
+    pub mean_prompt: usize,
+    /// Prompt length cap (clamped to the model's prefill window).
+    pub max_prompt: usize,
+    /// Greedy decode steps per sequence for offline runs (serving uses
+    /// [`ServeSpec`]'s per-request budgets instead).
+    pub steps: usize,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec { num_requests: 64, mean_prompt: 24, max_prompt: 64, steps: 16 }
+    }
+}
+
+/// Serving-only knobs (arrival trace, per-request budgets, admission).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    pub arrival: ArrivalSpec,
+    /// Log-normal mean decode budget (tokens per request).
+    pub mean_decode: usize,
+    pub max_decode: usize,
+    /// EOS token id; `None` disables early termination.
+    pub eos: Option<i32>,
+    /// Allow requests to join a live decode wave (module policy).
+    pub backfill: bool,
+    /// KV admission pool override in slots.
+    pub kv_slots: Option<usize>,
+    /// KV admission pool as a host-memory byte budget (overrides
+    /// `kv_slots`; paper Eqs. 2–3 sizing).
+    pub kv_budget_bytes: Option<usize>,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            // Open loop, like ServeConfig::default and the pre-spec CLI:
+            // `moe-gen serve` with no --arrival keeps measuring the same
+            // regime it always did (t0 is the offline-equivalence mode,
+            // opted into explicitly).
+            arrival: ArrivalSpec {
+                mode: crate::workload::ArrivalMode::OpenLoop { mean_gap: 1.0 },
+                seed: 0,
+            },
+            mean_decode: 8,
+            max_decode: 16,
+            eos: None,
+            backfill: true,
+            kv_slots: None,
+            kv_budget_bytes: None,
+        }
+    }
+}
+
+/// Analytic scenario: which paper model/testbed the simulator-side jobs
+/// (`search`, `simulate`) and the analytic search fallback score against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub model: String,
+    pub testbed: String,
+    pub prompt_len: usize,
+    pub decode_len: usize,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            model: "mixtral-8x7b".to_string(),
+            testbed: "c2".to_string(),
+            prompt_len: 512,
+            decode_len: 256,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Resolve the names against the model/hardware registries.
+    pub fn to_scenario(&self) -> Result<Scenario> {
+        let m = model::by_name(&self.model)
+            .ok_or_else(|| anyhow!("unknown model {:?} (try e.g. mixtral-8x7b, deepseek-v2)", self.model))?;
+        let h = hw::by_name(&self.testbed)
+            .ok_or_else(|| anyhow!("unknown testbed {:?} (try c1|c2|c3)", self.testbed))?;
+        Ok(Scenario::new(m, h, self.prompt_len, self.decode_len))
+    }
+}
+
+/// Default trajectory file for [`crate::session::Session`] run records —
+/// the repo root, next to `BENCH_paper_tables.json`, when this binary
+/// still runs out of its build checkout; the working directory otherwise
+/// (a relocated binary must not append into a stale absolute path).
+pub fn default_bench_log() -> PathBuf {
+    let repo_root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+    if repo_root.is_dir() {
+        repo_root.join("BENCH_live.json")
+    } else {
+        PathBuf::from("BENCH_live.json")
+    }
+}
+
+/// A validated, JSON-round-trippable description of one job. See the
+/// module docs; construct with struct-update syntax over
+/// [`JobSpec::default`], then [`validate`](JobSpec::validate) before
+/// handing it to [`crate::session::Session::open`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub kind: JobKind,
+    pub eng: EngineConfig,
+    pub workload: WorkloadSpec,
+    pub serve: ServeSpec,
+    pub scenario: ScenarioSpec,
+    pub strategy: StrategySource,
+    pub search_basis: SearchBasis,
+    /// Table selector for [`JobKind::Tables`].
+    pub table: String,
+    /// Where `Session::run`/`serve` append their trajectory record;
+    /// `None` disables recording.
+    pub bench_log: Option<PathBuf>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            kind: JobKind::Run,
+            eng: EngineConfig::default(),
+            workload: WorkloadSpec::default(),
+            serve: ServeSpec::default(),
+            scenario: ScenarioSpec::default(),
+            strategy: StrategySource::EngineDefaults,
+            search_basis: SearchBasis::Auto,
+            table: "all".to_string(),
+            bench_log: Some(default_bench_log()),
+        }
+    }
+}
+
+impl JobSpec {
+    /// Reject bad states at build time, before an engine exists — the
+    /// contract that replaces "fails deep in the pipeline". Every error
+    /// names the offending field and the constraint it violates.
+    pub fn validate(&self) -> Result<()> {
+        self.eng.validate().map_err(|e| anyhow!("engine: {e}"))?;
+        let w = &self.workload;
+        if w.num_requests == 0 {
+            return Err(anyhow!("workload: num_requests must be >= 1"));
+        }
+        if w.steps == 0 {
+            return Err(anyhow!("workload: steps must be >= 1"));
+        }
+        if w.mean_prompt == 0 || w.max_prompt == 0 {
+            return Err(anyhow!("workload: prompt lengths must be >= 1"));
+        }
+        if w.mean_prompt > w.max_prompt {
+            return Err(anyhow!(
+                "workload: mean_prompt = {} exceeds max_prompt = {}",
+                w.mean_prompt,
+                w.max_prompt
+            ));
+        }
+        let s = &self.serve;
+        s.arrival.mode.validate().map_err(|e| anyhow!("serve: {e}"))?;
+        if s.mean_decode == 0 {
+            return Err(anyhow!("serve: mean_decode must be >= 1"));
+        }
+        if s.mean_decode > s.max_decode {
+            return Err(anyhow!(
+                "serve: mean_decode = {} exceeds max_decode = {}",
+                s.mean_decode,
+                s.max_decode
+            ));
+        }
+        if s.kv_slots == Some(0) {
+            return Err(anyhow!("serve: kv_slots = 0 admits nothing"));
+        }
+        if s.kv_budget_bytes == Some(0) {
+            return Err(anyhow!("serve: kv_budget_bytes = 0 admits nothing"));
+        }
+        if self.kind == JobKind::Serve
+            && !matches!(self.eng.policy, Policy::ModuleBased | Policy::Continuous)
+        {
+            return Err(anyhow!(
+                "serve supports policies module|continuous, got {}",
+                self.eng.policy.slug()
+            ));
+        }
+        if let StrategySource::Explicit { decode, prefill } = &self.strategy {
+            decode.validate().map_err(|e| anyhow!("explicit decode {e}"))?;
+            if let Some(p) = prefill {
+                if p.b == 0 || p.b_a == 0 || p.b_e == 0 {
+                    return Err(anyhow!("explicit prefill strategy: batches must be >= 1"));
+                }
+            }
+        }
+        if self.table.is_empty() {
+            return Err(anyhow!("table selector must not be empty (try \"all\")"));
+        }
+        // Scenario names resolve eagerly so `--model mixtrall-8x7b`
+        // fails here, not after a 30 s profile when the analytic
+        // fallback finally needs it.
+        self.scenario.to_scenario()?;
+        Ok(())
+    }
+
+    /// Project the serving-side of this spec onto the legacy
+    /// [`ServeConfig`] the scheduler loop consumes.
+    pub fn serve_config(&self) -> ServeConfig {
+        ServeConfig {
+            eng: self.eng.clone(),
+            arrival: self.serve.arrival,
+            num_requests: self.workload.num_requests,
+            mean_prompt: self.workload.mean_prompt,
+            max_prompt: self.workload.max_prompt,
+            mean_decode: self.serve.mean_decode,
+            max_decode: self.serve.max_decode,
+            eos: self.serve.eos,
+            backfill: self.serve.backfill,
+            kv_slots: self.serve.kv_slots,
+            kv_budget_bytes: self.serve.kv_budget_bytes,
+        }
+    }
+
+    // -- JSON ----------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let e = &self.eng;
+        let mut eng = BTreeMap::new();
+        eng.insert("artifacts_dir".into(), Json::Str(e.artifacts_dir.display().to_string()));
+        eng.insert("policy".into(), Json::Str(e.policy.slug().into()));
+        eng.insert("omega".into(), Json::Num(e.omega));
+        eng.insert("max_batch".into(), Json::Num(e.max_batch as f64));
+        eng.insert("attn_micro".into(), Json::Num(e.attn_micro as f64));
+        eng.insert(
+            "throttle_htod".into(),
+            e.throttle_htod.map(Json::Num).unwrap_or(Json::Null),
+        );
+        eng.insert("prefetch".into(), Json::Bool(e.prefetch));
+        eng.insert("weight_cache_bytes".into(), Json::Num(e.weight_cache_bytes as f64));
+        eng.insert("weight_reuse".into(), Json::Num(e.weight_reuse));
+        eng.insert("baseline_micro_batch".into(), Json::Num(e.baseline_micro_batch as f64));
+        eng.insert("seed".into(), Json::Num(e.seed as f64));
+        eng.insert("verbose".into(), Json::Bool(e.verbose));
+
+        let w = &self.workload;
+        let mut wl = BTreeMap::new();
+        wl.insert("num_requests".into(), Json::Num(w.num_requests as f64));
+        wl.insert("mean_prompt".into(), Json::Num(w.mean_prompt as f64));
+        wl.insert("max_prompt".into(), Json::Num(w.max_prompt as f64));
+        wl.insert("steps".into(), Json::Num(w.steps as f64));
+
+        let s = &self.serve;
+        let mut sv = BTreeMap::new();
+        sv.insert("arrival".into(), s.arrival.to_json());
+        sv.insert("mean_decode".into(), Json::Num(s.mean_decode as f64));
+        sv.insert("max_decode".into(), Json::Num(s.max_decode as f64));
+        sv.insert("eos".into(), s.eos.map(|t| Json::Num(t as f64)).unwrap_or(Json::Null));
+        sv.insert("backfill".into(), Json::Bool(s.backfill));
+        sv.insert(
+            "kv_slots".into(),
+            s.kv_slots.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+        );
+        sv.insert(
+            "kv_budget_bytes".into(),
+            s.kv_budget_bytes.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+        );
+
+        let sc = &self.scenario;
+        let mut scn = BTreeMap::new();
+        scn.insert("model".into(), Json::Str(sc.model.clone()));
+        scn.insert("testbed".into(), Json::Str(sc.testbed.clone()));
+        scn.insert("prompt_len".into(), Json::Num(sc.prompt_len as f64));
+        scn.insert("decode_len".into(), Json::Num(sc.decode_len as f64));
+
+        let strategy = match &self.strategy {
+            StrategySource::EngineDefaults => Json::Str("defaults".into()),
+            StrategySource::Searched => Json::Str("search".into()),
+            StrategySource::Explicit { decode, prefill } => {
+                let mut m = BTreeMap::new();
+                m.insert("decode".into(), decode.to_json());
+                m.insert(
+                    "prefill".into(),
+                    prefill.as_ref().map(Strategy::to_json).unwrap_or(Json::Null),
+                );
+                Json::Obj(m)
+            }
+        };
+
+        let mut top = BTreeMap::new();
+        top.insert("job".into(), Json::Str(self.kind.slug().into()));
+        top.insert("engine".into(), Json::Obj(eng));
+        top.insert("workload".into(), Json::Obj(wl));
+        top.insert("serve".into(), Json::Obj(sv));
+        top.insert("scenario".into(), Json::Obj(scn));
+        top.insert("strategy".into(), strategy);
+        top.insert("search_basis".into(), Json::Str(self.search_basis.slug().into()));
+        top.insert("table".into(), Json::Str(self.table.clone()));
+        top.insert(
+            "bench_log".into(),
+            self.bench_log
+                .as_ref()
+                .map(|p| Json::Str(p.display().to_string()))
+                .unwrap_or(Json::Null),
+        );
+        Json::Obj(top)
+    }
+
+    /// Serialized spec (pretty JSON + trailing newline) — what
+    /// `--dump-config` writes and the `FromStr` impl reads back
+    /// identically.
+    pub fn dump(&self) -> String {
+        let mut s = self.to_json().dump();
+        s.push('\n');
+        s
+    }
+
+    /// Parse a spec document. Sections and fields fall back to their
+    /// defaults when absent (a config file only needs the knobs it
+    /// changes); *unknown* keys are rejected with the valid vocabulary,
+    /// mirroring the CLI's typo protection.
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        check_keys(
+            v,
+            &[
+                "job", "engine", "workload", "serve", "scenario", "strategy", "search_basis",
+                "table", "bench_log",
+            ],
+            "spec",
+        )?;
+        let mut spec = JobSpec::default();
+        if let Some(k) = v.get("job") {
+            let s = k.as_str().ok_or_else(|| anyhow!("spec: \"job\" must be a string"))?;
+            spec.kind = JobKind::parse(s)
+                .ok_or_else(|| anyhow!("spec: unknown job {s:?}; try run|serve|search|simulate|profile|tables"))?;
+        }
+        if let Some(e) = v.get("engine") {
+            check_keys(
+                e,
+                &[
+                    "artifacts_dir", "policy", "omega", "max_batch", "attn_micro",
+                    "throttle_htod", "prefetch", "weight_cache_bytes", "weight_reuse",
+                    "baseline_micro_batch", "seed", "verbose",
+                ],
+                "engine",
+            )?;
+            let c = &mut spec.eng;
+            if let Some(s) = e.get("artifacts_dir").and_then(Json::as_str) {
+                c.artifacts_dir = PathBuf::from(s);
+            }
+            if let Some(s) = e.get("policy").and_then(Json::as_str) {
+                c.policy = Policy::parse(s).ok_or_else(|| {
+                    anyhow!("engine: unknown policy {s:?}; try module|model|flexgen|moe-lightning|continuous")
+                })?;
+            }
+            get_f64(e, "engine", "omega", &mut c.omega)?;
+            get_usize(e, "engine", "max_batch", &mut c.max_batch)?;
+            get_usize(e, "engine", "attn_micro", &mut c.attn_micro)?;
+            if let Some(t) = e.get("throttle_htod") {
+                c.throttle_htod = match t {
+                    Json::Null => None,
+                    Json::Num(n) => Some(*n),
+                    _ => return Err(anyhow!("engine: throttle_htod must be a number or null")),
+                };
+            }
+            get_bool(e, "engine", "prefetch", &mut c.prefetch)?;
+            get_usize(e, "engine", "weight_cache_bytes", &mut c.weight_cache_bytes)?;
+            get_f64(e, "engine", "weight_reuse", &mut c.weight_reuse)?;
+            get_usize(e, "engine", "baseline_micro_batch", &mut c.baseline_micro_batch)?;
+            if let Some(t) = e.get("seed") {
+                c.seed = as_uint(t, "engine", "seed")?;
+            }
+            get_bool(e, "engine", "verbose", &mut c.verbose)?;
+        }
+        if let Some(w) = v.get("workload") {
+            check_keys(w, &["num_requests", "mean_prompt", "max_prompt", "steps"], "workload")?;
+            get_usize(w, "workload", "num_requests", &mut spec.workload.num_requests)?;
+            get_usize(w, "workload", "mean_prompt", &mut spec.workload.mean_prompt)?;
+            get_usize(w, "workload", "max_prompt", &mut spec.workload.max_prompt)?;
+            get_usize(w, "workload", "steps", &mut spec.workload.steps)?;
+        }
+        if let Some(s) = v.get("serve") {
+            check_keys(
+                s,
+                &["arrival", "mean_decode", "max_decode", "eos", "backfill", "kv_slots",
+                  "kv_budget_bytes"],
+                "serve",
+            )?;
+            if let Some(a) = s.get("arrival") {
+                spec.serve.arrival = ArrivalSpec::from_json(a).map_err(|e| anyhow!("{e}"))?;
+            }
+            get_usize(s, "serve", "mean_decode", &mut spec.serve.mean_decode)?;
+            get_usize(s, "serve", "max_decode", &mut spec.serve.max_decode)?;
+            if let Some(t) = s.get("eos") {
+                spec.serve.eos = match t {
+                    Json::Null => None,
+                    _ => Some(as_int(t, "serve", "eos")? as i32),
+                };
+            }
+            get_bool(s, "serve", "backfill", &mut spec.serve.backfill)?;
+            if let Some(t) = s.get("kv_slots") {
+                spec.serve.kv_slots = match t {
+                    Json::Null => None,
+                    _ => Some(as_uint(t, "serve", "kv_slots")? as usize),
+                };
+            }
+            if let Some(t) = s.get("kv_budget_bytes") {
+                spec.serve.kv_budget_bytes = match t {
+                    Json::Null => None,
+                    _ => Some(as_uint(t, "serve", "kv_budget_bytes")? as usize),
+                };
+            }
+        }
+        if let Some(s) = v.get("scenario") {
+            check_keys(s, &["model", "testbed", "prompt_len", "decode_len"], "scenario")?;
+            if let Some(m) = s.get("model").and_then(Json::as_str) {
+                spec.scenario.model = m.to_string();
+            }
+            if let Some(t) = s.get("testbed").and_then(Json::as_str) {
+                spec.scenario.testbed = t.to_string();
+            }
+            get_usize(s, "scenario", "prompt_len", &mut spec.scenario.prompt_len)?;
+            get_usize(s, "scenario", "decode_len", &mut spec.scenario.decode_len)?;
+        }
+        if let Some(s) = v.get("strategy") {
+            spec.strategy = match s {
+                Json::Str(tag) => StrategySource::parse_tag(tag).ok_or_else(|| {
+                    anyhow!(
+                        "spec: unknown strategy source {tag:?}; try defaults|search or an \
+                         explicit {{\"decode\": {{...}}}} object"
+                    )
+                })?,
+                Json::Obj(_) => {
+                    check_keys(s, &["decode", "prefill"], "strategy")?;
+                    let decode = Strategy::from_json(
+                        s.get("decode")
+                            .ok_or_else(|| anyhow!("strategy: explicit source needs \"decode\""))?,
+                    )
+                    .map_err(|e| anyhow!("{e}"))?;
+                    let prefill = match s.get("prefill") {
+                        None | Some(Json::Null) => None,
+                        Some(p) => Some(Strategy::from_json(p).map_err(|e| anyhow!("{e}"))?),
+                    };
+                    StrategySource::Explicit { decode, prefill }
+                }
+                _ => return Err(anyhow!("spec: \"strategy\" must be a string or object")),
+            };
+        }
+        if let Some(b) = v.get("search_basis") {
+            let s = b.as_str().ok_or_else(|| anyhow!("spec: \"search_basis\" must be a string"))?;
+            spec.search_basis = SearchBasis::parse(s)
+                .ok_or_else(|| anyhow!("spec: unknown search_basis {s:?}; try auto|measured|analytic"))?;
+        }
+        if let Some(t) = v.get("table").and_then(Json::as_str) {
+            spec.table = t.to_string();
+        }
+        if let Some(b) = v.get("bench_log") {
+            spec.bench_log = match b {
+                Json::Null => None,
+                Json::Str(p) => Some(PathBuf::from(p)),
+                _ => return Err(anyhow!("spec: bench_log must be a path string or null")),
+            };
+        }
+        Ok(spec)
+    }
+
+    pub fn load(path: &Path) -> Result<JobSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        text.parse().with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.dump())
+            .with_context(|| format!("writing config {}", path.display()))
+    }
+}
+
+impl std::str::FromStr for JobSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<JobSpec> {
+        let v = Json::parse(s).map_err(|e| anyhow!("config is not valid JSON: {e}"))?;
+        JobSpec::from_json(&v)
+    }
+}
+
+fn check_keys(v: &Json, allowed: &[&str], ctx: &str) -> Result<()> {
+    let Json::Obj(m) = v else {
+        return Err(anyhow!("{ctx}: expected a JSON object"));
+    };
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            let hint = crate::cli::closest(k, allowed)
+                .map(|s| format!(" — did you mean {s:?}?"))
+                .unwrap_or_default();
+            return Err(anyhow!(
+                "{ctx}: unknown key {k:?}{hint} (valid: {})",
+                allowed.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Strict field decoding: a config typo must not silently become a
+/// different experiment, so wrong types, negative or fractional values
+/// where an integer is required are errors, never coercions.
+fn as_uint(t: &Json, ctx: &str, k: &str) -> Result<u64> {
+    let n = t.as_f64().ok_or_else(|| anyhow!("{ctx}: {k} must be a number"))?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 {
+        return Err(anyhow!("{ctx}: {k} must be a non-negative integer, got {n}"));
+    }
+    Ok(n as u64)
+}
+
+fn as_int(t: &Json, ctx: &str, k: &str) -> Result<i64> {
+    let n = t.as_f64().ok_or_else(|| anyhow!("{ctx}: {k} must be a number"))?;
+    if !n.is_finite() || n.fract() != 0.0 {
+        return Err(anyhow!("{ctx}: {k} must be an integer, got {n}"));
+    }
+    Ok(n as i64)
+}
+
+fn get_usize(v: &Json, ctx: &str, k: &str, out: &mut usize) -> Result<()> {
+    if let Some(t) = v.get(k) {
+        *out = as_uint(t, ctx, k)? as usize;
+    }
+    Ok(())
+}
+
+fn get_f64(v: &Json, ctx: &str, k: &str, out: &mut f64) -> Result<()> {
+    if let Some(t) = v.get(k) {
+        *out = t.as_f64().ok_or_else(|| anyhow!("{ctx}: {k} must be a number"))?;
+    }
+    Ok(())
+}
+
+fn get_bool(v: &Json, ctx: &str, k: &str, out: &mut bool) -> Result<()> {
+    if let Some(t) = v.get(k) {
+        *out = t.as_bool().ok_or_else(|| anyhow!("{ctx}: {k} must be a boolean"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::str::FromStr;
+
+    use super::*;
+    use crate::workload::ArrivalMode;
+
+    /// A spec with every field off its default — the round-trip witness.
+    fn full_spec() -> JobSpec {
+        JobSpec {
+            kind: JobKind::Serve,
+            eng: EngineConfig {
+                artifacts_dir: PathBuf::from("custom-artifacts"),
+                policy: Policy::Continuous,
+                omega: 0.3,
+                max_batch: 96,
+                attn_micro: 12,
+                throttle_htod: Some(300e6),
+                prefetch: false,
+                weight_cache_bytes: 123_456,
+                weight_reuse: 4.0,
+                baseline_micro_batch: 6,
+                seed: 42,
+                verbose: true,
+            },
+            workload: WorkloadSpec { num_requests: 17, mean_prompt: 9, max_prompt: 33, steps: 5 },
+            serve: ServeSpec {
+                arrival: ArrivalSpec { mode: ArrivalMode::Bursty { mean_gap: 6.5, burst: 4 }, seed: 9 },
+                mean_decode: 3,
+                max_decode: 7,
+                eos: Some(11),
+                backfill: false,
+                kv_slots: Some(24),
+                kv_budget_bytes: Some(1 << 20),
+            },
+            scenario: ScenarioSpec {
+                model: "deepseek-v2".into(),
+                testbed: "c1".into(),
+                prompt_len: 128,
+                decode_len: 64,
+            },
+            strategy: StrategySource::Explicit {
+                decode: Strategy {
+                    b: 96, b_a: 12, b_e: 256, omega: 0.25,
+                    s_expert: 1024, s_params: 2048, reuse: 2.0,
+                },
+                prefill: Some(Strategy {
+                    b: 4096, b_a: 4, b_e: 512, omega: 0.0,
+                    s_expert: 0, s_params: 0, reuse: 1.0,
+                }),
+            },
+            search_basis: SearchBasis::Measured,
+            table: "9".into(),
+            bench_log: None,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        for spec in [JobSpec::default(), full_spec()] {
+            let dumped = spec.dump();
+            let back = JobSpec::from_str(&dumped).unwrap();
+            assert_eq!(back, spec, "dump→load must be identity:\n{dumped}");
+        }
+    }
+
+    #[test]
+    fn partial_config_fills_defaults() {
+        let spec = JobSpec::from_str(
+            r#"{"job": "run", "engine": {"omega": 0.5}, "workload": {"num_requests": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.kind, JobKind::Run);
+        assert_eq!(spec.eng.omega, 0.5);
+        assert_eq!(spec.workload.num_requests, 3);
+        assert_eq!(spec.eng.max_batch, EngineConfig::default().max_batch);
+        assert_eq!(spec.serve, ServeSpec::default());
+    }
+
+    #[test]
+    fn unknown_keys_rejected_with_hint() {
+        let err = JobSpec::from_str(r#"{"job": "run", "engine": {"omgea": 0.5}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("omgea"), "{err}");
+        assert!(err.contains("omega"), "hint expected: {err}");
+        assert!(JobSpec::from_str(r#"{"jbo": "run"}"#).is_err());
+        assert!(JobSpec::from_str("not json").is_err());
+    }
+
+    #[test]
+    fn config_numbers_are_strict() {
+        // Coercion would silently run a different experiment — reject.
+        assert!(JobSpec::from_str(r#"{"workload": {"steps": 2.9}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"seed": -1}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"max_batch": -5}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"prefetch": 1}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"serve": {"eos": 1.5}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"serve": {"kv_slots": 2.5}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"throttle_htod": "fast"}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"bench_log": true}"#).is_err());
+        // Null clears optionals; integral values (negative eos included) pass.
+        let ok = JobSpec::from_str(
+            r#"{"engine": {"seed": 3, "throttle_htod": null}, "serve": {"eos": -1}}"#,
+        )
+        .unwrap();
+        assert_eq!(ok.eng.seed, 3);
+        assert_eq!(ok.eng.throttle_htod, None);
+        assert_eq!(ok.serve.eos, Some(-1));
+    }
+
+    #[test]
+    fn validate_rejects_bad_states() {
+        let ok = JobSpec::default();
+        assert!(ok.validate().is_ok());
+        let mut bad = JobSpec::default();
+        bad.eng.omega = 1.5;
+        assert!(bad.validate().is_err(), "omega out of range");
+        let mut bad = JobSpec::default();
+        bad.eng.attn_micro = bad.eng.max_batch + 1;
+        assert!(bad.validate().is_err(), "b_a > B");
+        let mut bad = JobSpec::default();
+        bad.workload.num_requests = 0;
+        assert!(bad.validate().is_err(), "empty workload");
+        let mut bad = JobSpec::default();
+        bad.workload.mean_prompt = 100;
+        bad.workload.max_prompt = 50;
+        assert!(bad.validate().is_err(), "mean > max prompt");
+        let mut bad = JobSpec { kind: JobKind::Serve, ..JobSpec::default() };
+        bad.eng.policy = Policy::ModelBased;
+        assert!(bad.validate().is_err(), "serve is module|continuous only");
+        let mut bad = JobSpec::default();
+        bad.serve.kv_slots = Some(0);
+        assert!(bad.validate().is_err(), "zero admission slots");
+        let mut bad = JobSpec::default();
+        bad.scenario.model = "mixtral-9x9b".into();
+        assert!(bad.validate().is_err(), "unknown model name");
+        let bad = JobSpec {
+            strategy: StrategySource::Explicit {
+                decode: Strategy {
+                    b: 8, b_a: 16, b_e: 32, omega: 0.0, s_expert: 0, s_params: 0, reuse: 1.0,
+                },
+                prefill: None,
+            },
+            ..JobSpec::default()
+        };
+        assert!(bad.validate().is_err(), "explicit strategy with b_a > B");
+        let mut bad = JobSpec::default();
+        bad.serve.mean_decode = 9;
+        bad.serve.max_decode = 4;
+        assert!(bad.validate().is_err(), "mean_decode > max_decode");
+        let mut bad = JobSpec::default();
+        bad.serve.arrival =
+            ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: -2.0 }, seed: 0 };
+        assert!(bad.validate().is_err(), "negative arrival gap must fail at build time");
+    }
+
+    #[test]
+    fn serve_config_projection_carries_every_knob() {
+        let spec = full_spec();
+        let sc = spec.serve_config();
+        assert_eq!(sc.eng, spec.eng);
+        assert_eq!(sc.arrival, spec.serve.arrival);
+        assert_eq!(sc.num_requests, spec.workload.num_requests);
+        assert_eq!(sc.mean_prompt, spec.workload.mean_prompt);
+        assert_eq!(sc.max_prompt, spec.workload.max_prompt);
+        assert_eq!(sc.mean_decode, spec.serve.mean_decode);
+        assert_eq!(sc.max_decode, spec.serve.max_decode);
+        assert_eq!(sc.eos, spec.serve.eos);
+        assert_eq!(sc.backfill, spec.serve.backfill);
+        assert_eq!(sc.kv_slots, spec.serve.kv_slots);
+        assert_eq!(sc.kv_budget_bytes, spec.serve.kv_budget_bytes);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("moe_gen_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job.json");
+        let spec = full_spec();
+        spec.save(&path).unwrap();
+        assert_eq!(JobSpec::load(&path).unwrap(), spec);
+        let _ = std::fs::remove_file(&path);
+    }
+}

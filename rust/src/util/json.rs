@@ -1,11 +1,17 @@
-//! Minimal JSON parser — substrate for reading `artifacts/manifest.json`
-//! and engine config files (no serde_json available offline).
+//! Minimal JSON parser *and serializer* — substrate for reading
+//! `artifacts/manifest.json`, for the [`crate::spec::JobSpec`] config
+//! files (`moe-gen <cmd> --config job.json`), and for the `BENCH_live.json`
+//! trajectory records (no serde_json available offline).
 //!
-//! Supports the full JSON grammar needed by the manifest: objects, arrays,
-//! strings (with escapes), numbers, booleans, null.
+//! Supports the full JSON grammar needed by those surfaces: objects,
+//! arrays, strings (with escapes), numbers, booleans, null. [`Json::dump`]
+//! prints numbers through Rust's shortest round-trip `Display`, so
+//! `Json::parse(v.dump()) == v` holds for every finite value — the
+//! property the spec layer's dump→load→identical contract rests on.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::fmt::Write as _;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -92,6 +98,103 @@ impl Json {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
             .unwrap_or_default()
+    }
+
+    /// Serialize with stable formatting: 2-space indentation, object keys
+    /// in `BTreeMap` order, numbers via Rust's shortest round-trip
+    /// `Display` (integers print without a trailing `.0`). Ends without a
+    /// newline; callers writing files append one.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // Integral f64s up to 2^53 print exactly ("42", not
+                    // "42.0"); everything else uses shortest round-trip.
+                    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                        let _ = write!(out, "{}", *n as i64);
+                    } else {
+                        let _ = write!(out, "{n}");
+                    }
+                } else {
+                    // JSON has no Inf/NaN; degrade to null rather than
+                    // emit an unparseable document.
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => Self::write_str(s, out),
+            Json::Arr(a) => {
+                if a.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    Self::pad(out, indent + 1);
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                Self::pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    Self::pad(out, indent + 1);
+                    Self::write_str(k, out);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                Self::pad(out, indent);
+                out.push('}');
+            }
+        }
+    }
+
+    fn pad(out: &mut String, indent: usize) {
+        for _ in 0..indent {
+            out.push_str("  ");
+        }
+    }
+
+    fn write_str(s: &str, out: &mut String) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                '\u{8}' => out.push_str("\\b"),
+                '\u{c}' => out.push_str("\\f"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
     }
 }
 
@@ -312,6 +415,37 @@ mod tests {
     fn usize_arr_helper() {
         let v = Json::parse("[8, 32, 128]").unwrap();
         assert_eq!(v.usize_arr(), vec![8, 32, 128]);
+    }
+
+    #[test]
+    fn dump_parse_roundtrip() {
+        let src = r#"{"a": [1, 2.5, {"b": "c\nd"}], "e": false, "f": null, "g": -1500, "big": 268435456}"#;
+        let v = Json::parse(src).unwrap();
+        let dumped = v.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), v, "dump must round-trip:\n{dumped}");
+        // Integers print without a trailing .0 (stable config diffs).
+        assert!(dumped.contains("268435456"));
+        assert!(!dumped.contains("268435456.0"));
+        assert!(dumped.contains("2.5"));
+    }
+
+    #[test]
+    fn dump_escapes_strings() {
+        let v = Json::Str("a\"b\\c\nd\u{1}".into());
+        let dumped = v.dump();
+        assert_eq!(dumped, "\"a\\\"b\\\\c\\nd\\u0001\"");
+        assert_eq!(Json::parse(&dumped).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_is_deterministic_and_sorted() {
+        let v = Json::parse(r#"{"z": 1, "a": 2}"#).unwrap();
+        let d = v.dump();
+        assert_eq!(d, v.dump());
+        assert!(d.find("\"a\"").unwrap() < d.find("\"z\"").unwrap(), "keys sorted: {d}");
+        // Empty containers stay compact.
+        assert_eq!(Json::Arr(vec![]).dump(), "[]");
+        assert_eq!(Json::Obj(BTreeMap::new()).dump(), "{}");
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //! requests reach the server over time (the open-system regime MoE-Lens
 //! analyzes, vs. the closed offline drivers of the throughput tables).
 
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// How requests arrive at the server over virtual time. Ticks are
@@ -40,9 +43,168 @@ pub struct ArrivalSpec {
     pub seed: u64,
 }
 
+impl ArrivalMode {
+    /// Canonical machine-readable name (the CLI `--arrival` vocabulary
+    /// and the [`crate::spec`] JSON encoding).
+    pub fn slug(&self) -> &'static str {
+        match self {
+            ArrivalMode::AtTimeZero => "t0",
+            ArrivalMode::OpenLoop { .. } => "open",
+            ArrivalMode::Bursty { .. } => "bursty",
+            ArrivalMode::ClosedLoop { .. } => "closed",
+        }
+    }
+
+    /// The single owner of the mode vocabulary and per-mode knob
+    /// defaults — both the CLI (`--arrival` + `--gap`/`--burst`/
+    /// `--concurrency`) and the JSON decoding build modes through this,
+    /// so they cannot drift apart. A knob the mode does not use is an
+    /// error, not a silent no-op: `--arrival t0 --gap 3` must fail
+    /// loudly instead of measuring the wrong regime.
+    pub fn from_parts(
+        name: &str,
+        mean_gap: Option<f64>,
+        burst: Option<usize>,
+        concurrency: Option<usize>,
+    ) -> Result<ArrivalMode, String> {
+        let reject = |knob: &str, mode: &str| {
+            Err(format!("arrival mode {mode} does not take {knob} (it would be ignored)"))
+        };
+        Ok(match name {
+            "t0" | "zero" | "offline" => {
+                if mean_gap.is_some() {
+                    return reject("a gap", "t0");
+                }
+                if burst.is_some() {
+                    return reject("a burst", "t0");
+                }
+                if concurrency.is_some() {
+                    return reject("a concurrency", "t0");
+                }
+                ArrivalMode::AtTimeZero
+            }
+            "open" => {
+                if burst.is_some() {
+                    return reject("a burst", "open");
+                }
+                if concurrency.is_some() {
+                    return reject("a concurrency", "open");
+                }
+                ArrivalMode::OpenLoop { mean_gap: mean_gap.unwrap_or(1.0) }
+            }
+            "bursty" => {
+                if concurrency.is_some() {
+                    return reject("a concurrency", "bursty");
+                }
+                ArrivalMode::Bursty {
+                    mean_gap: mean_gap.unwrap_or(4.0),
+                    burst: burst.unwrap_or(8),
+                }
+            }
+            "closed" => {
+                if mean_gap.is_some() {
+                    return reject("a gap", "closed");
+                }
+                if burst.is_some() {
+                    return reject("a burst", "closed");
+                }
+                ArrivalMode::ClosedLoop { concurrency: concurrency.unwrap_or(16) }
+            }
+            other => {
+                return Err(format!("unknown arrival mode {other:?}; try t0|open|bursty|closed"))
+            }
+        })
+    }
+
+    /// Build-time sanity of the mode's knobs — called from
+    /// [`crate::spec::JobSpec::validate`] so a negative gap fails before
+    /// an engine exists instead of panicking inside the arrival RNG.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ArrivalMode::AtTimeZero => {}
+            ArrivalMode::OpenLoop { mean_gap } | ArrivalMode::Bursty { mean_gap, .. } => {
+                if !mean_gap.is_finite() || mean_gap < 0.0 {
+                    return Err(format!(
+                        "arrival: mean_gap must be a non-negative number, got {mean_gap}"
+                    ));
+                }
+            }
+            ArrivalMode::ClosedLoop { concurrency } => {
+                if concurrency == 0 {
+                    return Err("arrival: closed-loop concurrency must be >= 1".into());
+                }
+            }
+        }
+        if let ArrivalMode::Bursty { burst, .. } = *self {
+            if burst == 0 {
+                return Err("arrival: burst must be >= 1".into());
+            }
+        }
+        Ok(())
+    }
+}
+
 impl ArrivalSpec {
     pub fn at_time_zero() -> Self {
         ArrivalSpec { mode: ArrivalMode::AtTimeZero, seed: 0 }
+    }
+
+    /// JSON encoding (`{"mode": "bursty", "mean_gap": 4, "burst": 8,
+    /// "seed": 0}`); mode-irrelevant knobs are omitted.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("mode".to_string(), Json::Str(self.mode.slug().to_string()));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        match self.mode {
+            ArrivalMode::AtTimeZero => {}
+            ArrivalMode::OpenLoop { mean_gap } => {
+                m.insert("mean_gap".to_string(), Json::Num(mean_gap));
+            }
+            ArrivalMode::Bursty { mean_gap, burst } => {
+                m.insert("mean_gap".to_string(), Json::Num(mean_gap));
+                m.insert("burst".to_string(), Json::Num(burst as f64));
+            }
+            ArrivalMode::ClosedLoop { concurrency } => {
+                m.insert("concurrency".to_string(), Json::Num(concurrency as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`to_json`](ArrivalSpec::to_json). Missing knobs take
+    /// the CLI defaults ([`ArrivalMode::from_parts`]); an unknown
+    /// `mode`, a wrong-typed knob, or a negative/fractional integer
+    /// field is an error — a config typo must not silently run a
+    /// different trace.
+    pub fn from_json(v: &Json) -> Result<ArrivalSpec, String> {
+        let mode_s = v
+            .get("mode")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "arrival: missing \"mode\"".to_string())?;
+        let num = |k: &str| -> Result<Option<f64>, String> {
+            match v.get(k) {
+                None => Ok(None),
+                Some(t) => match t.as_f64() {
+                    Some(n) => Ok(Some(n)),
+                    None => Err(format!("arrival: {k} must be a number")),
+                },
+            }
+        };
+        let uint = |k: &str| -> Result<Option<u64>, String> {
+            match num(k)? {
+                None => Ok(None),
+                Some(n) if n.is_finite() && n >= 0.0 && n.fract() == 0.0 => Ok(Some(n as u64)),
+                Some(n) => Err(format!("arrival: {k} must be a non-negative integer, got {n}")),
+            }
+        };
+        let mode = ArrivalMode::from_parts(
+            mode_s,
+            num("mean_gap")?,
+            uint("burst")?.map(|n| n as usize),
+            uint("concurrency")?.map(|n| n as usize),
+        )
+        .map_err(|e| format!("arrival: {e}"))?;
+        Ok(ArrivalSpec { mode, seed: uint("seed")?.unwrap_or(0) })
     }
 
     /// Arrival tick per request (non-decreasing, deterministic in the
@@ -240,6 +402,49 @@ mod tests {
         let distinct: std::collections::HashSet<u64> = ticks.iter().copied().collect();
         assert!(distinct.len() <= 4 + 1, "expected ~4 bursts, got {}", distinct.len());
         assert!(distinct.len() > 1, "bursts must be separated in time");
+    }
+
+    #[test]
+    fn arrival_spec_json_roundtrip() {
+        let specs = [
+            ArrivalSpec::at_time_zero(),
+            ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 2.5 }, seed: 7 },
+            ArrivalSpec { mode: ArrivalMode::Bursty { mean_gap: 8.0, burst: 32 }, seed: 1 },
+            ArrivalSpec { mode: ArrivalMode::ClosedLoop { concurrency: 16 }, seed: 3 },
+        ];
+        for s in specs {
+            let back = ArrivalSpec::from_json(&s.to_json()).unwrap();
+            assert_eq!(back, s);
+        }
+        assert!(ArrivalSpec::from_json(&Json::parse(r#"{"mode": "warp"}"#).unwrap()).is_err());
+        assert!(ArrivalSpec::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_knobs_the_mode_cannot_use() {
+        assert!(ArrivalMode::from_parts("t0", Some(3.0), None, None).is_err());
+        assert!(ArrivalMode::from_parts("open", None, Some(8), None).is_err());
+        assert!(ArrivalMode::from_parts("closed", Some(1.0), None, None).is_err());
+        assert!(ArrivalMode::from_parts("bursty", None, None, Some(4)).is_err());
+        assert_eq!(
+            ArrivalMode::from_parts("bursty", Some(2.0), Some(4), None),
+            Ok(ArrivalMode::Bursty { mean_gap: 2.0, burst: 4 })
+        );
+        // Strict numbers in the JSON decoding too.
+        let bad = Json::parse(r#"{"mode": "bursty", "burst": -8}"#).unwrap();
+        assert!(ArrivalSpec::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"mode": "open", "mean_gap": "fast"}"#).unwrap();
+        assert!(ArrivalSpec::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn arrival_mode_validate_catches_bad_knobs() {
+        assert!(ArrivalMode::OpenLoop { mean_gap: -2.0 }.validate().is_err());
+        assert!(ArrivalMode::OpenLoop { mean_gap: f64::NAN }.validate().is_err());
+        assert!(ArrivalMode::Bursty { mean_gap: 1.0, burst: 0 }.validate().is_err());
+        assert!(ArrivalMode::ClosedLoop { concurrency: 0 }.validate().is_err());
+        assert!(ArrivalMode::AtTimeZero.validate().is_ok());
+        assert!(ArrivalMode::OpenLoop { mean_gap: 0.0 }.validate().is_ok());
     }
 
     #[test]

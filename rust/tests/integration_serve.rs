@@ -14,7 +14,12 @@
 //! * **slot lifecycle** — no slot leaks, and a recycled slot's successor
 //!   reproduces a fresh run's tokens exactly.
 //!
-//! Everything runs hermetically on the reference backend.
+//! Everything runs hermetically on the reference backend. The legacy
+//! one-shot entrypoints (`run_offline`, `serve::serve`) are exercised on
+//! purpose: they are deprecated thin wrappers over the session layer and
+//! must stay behaviour-identical until removal
+//! (tests/integration_spec.rs pins wrapper ≡ session).
+#![allow(deprecated)]
 
 use moe_gen::config::{EngineConfig, Policy};
 use moe_gen::serve::{self, Request, ServeConfig};

@@ -1,0 +1,212 @@
+//! Integration: the typed `JobSpec`/`Session` public API (DESIGN.md §8).
+//!
+//! The contracts this file pins:
+//!
+//! * **round-trip** — `dump → load` is the identity on a fully
+//!   non-default spec (the `--config`/`--dump-config` CLI contract);
+//! * **validation** — bad states (ω ∉ [0,1], `b_a > B`, …) fail at
+//!   build time with field-naming errors, never deep in the pipeline;
+//! * **the closed loop** — `profile → search → apply → run` executes the
+//!   searched strategy: the engine's active `Plan` equals the searched
+//!   strategy's projection, and the tokens are bit-identical to an
+//!   explicit `set_strategy` run of the same strategy (batch-composition
+//!   invariance, the pipeline's core contract);
+//! * **wrapper equivalence** — the deprecated one-shot free functions
+//!   (`server::run_offline`, `serve::serve`) remain behaviour-identical
+//!   to the session path until removal.
+//!
+//! Everything runs hermetically on the reference backend.
+
+use moe_gen::config::Policy;
+use moe_gen::engine::Engine;
+use moe_gen::exec::Plan;
+use moe_gen::server;
+use moe_gen::session::{Session, StrategyBasis};
+use moe_gen::spec::{JobKind, JobSpec, SearchBasis, StrategySource, WorkloadSpec};
+use moe_gen::workload;
+
+fn small_spec() -> JobSpec {
+    JobSpec {
+        workload: WorkloadSpec { num_requests: 6, mean_prompt: 10, max_prompt: 24, steps: 4 },
+        bench_log: None,
+        ..JobSpec::default()
+    }
+}
+
+// -- round-trip ---------------------------------------------------------------
+
+#[test]
+fn dump_load_identity_for_cli_built_specs() {
+    // The shapes the CLI actually produces: defaults, a serve job, and a
+    // searched-strategy run.
+    let mut serve = small_spec();
+    serve.kind = JobKind::Serve;
+    serve.eng.policy = Policy::Continuous;
+    serve.serve.eos = Some(3);
+    let mut searched = small_spec();
+    searched.strategy = StrategySource::Searched;
+    searched.search_basis = SearchBasis::Measured;
+    for spec in [JobSpec::default(), small_spec(), serve, searched] {
+        let reloaded: JobSpec = spec.dump().parse().unwrap();
+        assert_eq!(reloaded, spec);
+    }
+}
+
+#[test]
+fn validate_catches_bad_states_before_any_engine_exists() {
+    let cases: Vec<(&str, Box<dyn Fn(&mut JobSpec)>)> = vec![
+        ("omega", Box::new(|s| s.eng.omega = 7.0)),
+        ("b_a > B", Box::new(|s| s.eng.attn_micro = s.eng.max_batch * 2)),
+        ("zero workload", Box::new(|s| s.workload.num_requests = 0)),
+        ("zero steps", Box::new(|s| s.workload.steps = 0)),
+        ("unknown model", Box::new(|s| s.scenario.model = "granite-13b".into())),
+        ("unknown testbed", Box::new(|s| s.scenario.testbed = "c9".into())),
+        ("serve policy", Box::new(|s| {
+            s.kind = JobKind::Serve;
+            s.eng.policy = Policy::FlexGen;
+        })),
+        ("decode budgets", Box::new(|s| {
+            s.serve.mean_decode = 10;
+            s.serve.max_decode = 2;
+        })),
+    ];
+    for (name, mutate) in cases {
+        let mut spec = small_spec();
+        mutate(&mut spec);
+        let err = spec.validate();
+        assert!(err.is_err(), "{name}: must be rejected");
+        // And the session constructor enforces it too.
+        assert!(Session::open(spec).is_err(), "{name}: Session::open must reject");
+    }
+}
+
+// -- the closed loop ----------------------------------------------------------
+
+#[test]
+fn profile_search_apply_run_executes_the_searched_strategy() {
+    let mut spec = small_spec();
+    spec.strategy = StrategySource::Searched;
+    spec.search_basis = SearchBasis::Measured;
+    let mut session = Session::open(spec).unwrap();
+
+    // profile → search: the cost model is the measured module profile.
+    assert!(!session.profile().unwrap().is_empty());
+    let outcome = session.search().unwrap();
+    assert_eq!(outcome.basis, StrategyBasis::MeasuredProfile);
+    assert!(outcome.decode.validate().is_ok(), "searched strategy: {:?}", outcome.decode);
+
+    // apply: the engine's live plan IS the searched strategy's projection.
+    let plan = session.apply().unwrap();
+    let expected = Plan::from_strategy(
+        &outcome.decode,
+        outcome.prefill.as_ref(),
+        session.engine().model_cfg(),
+        session.spec().eng.max_batch,
+    );
+    assert_eq!(plan, expected, "applied plan must equal the searched strategy");
+    assert_eq!(session.plan(), expected, "the session's engine runs on it");
+
+    // run: tokens bit-identical to an explicit set_strategy run of the
+    // same strategy on a fresh engine (strategy flows, tokens invariant).
+    let prompts = workload::generate_prompts(6, 10, 24, 512, 9);
+    let report = session.run_prompts(&prompts, 4).unwrap();
+
+    let mut eng = Engine::new(session.spec().eng.clone()).unwrap();
+    eng.warmup().unwrap();
+    eng.set_strategy(&outcome.decode, outcome.prefill.as_ref());
+    assert_eq!(eng.plan(), expected);
+    let explicit = eng.generate(&prompts, 4).unwrap();
+    assert_eq!(report.tokens, explicit, "searched-run tokens must match explicit set_strategy");
+}
+
+#[test]
+fn explicit_strategy_source_applies_verbatim() {
+    let decode = moe_gen::sched::Strategy {
+        b: 16, b_a: 4, b_e: 32, omega: 0.0, s_expert: 1 << 20, s_params: 1 << 22, reuse: 2.0,
+    };
+    let mut spec = small_spec();
+    spec.strategy = StrategySource::Explicit { decode, prefill: None };
+    let mut session = Session::open(spec).unwrap();
+    let plan = session.apply().unwrap();
+    assert_eq!(plan.accum_batch, 16);
+    assert_eq!(plan.attn_micro, 4);
+    assert_eq!(plan.expert_micro, 32);
+    // Residency fields went live on the engine.
+    assert_eq!(session.engine().weights.cache.budget(), 1 << 22);
+    assert_eq!(session.engine().weights.sched.buffer_bytes, Some(1 << 20));
+}
+
+#[test]
+fn analytic_fallback_produces_an_executable_strategy() {
+    let mut spec = small_spec();
+    spec.strategy = StrategySource::Searched;
+    spec.search_basis = SearchBasis::Analytic;
+    let mut session = Session::open(spec).unwrap();
+    let outcome = session.search().unwrap();
+    assert_eq!(outcome.basis, StrategyBasis::AnalyticModel);
+    // A paper-scale strategy applies to the tiny engine: B caps at the
+    // engine budget, micro-batches clamp at launch, and the run works.
+    session.apply().unwrap();
+    assert!(session.plan().accum_batch <= session.spec().eng.max_batch);
+    let report = session.run().unwrap();
+    assert_eq!(report.tokens.len(), 6);
+}
+
+// -- strategy invariance across sources --------------------------------------
+
+#[test]
+fn tokens_invariant_across_strategy_sources() {
+    // Defaults vs searched vs explicit: batching strategy must never
+    // change greedy tokens (so `--strategy search` is always safe).
+    let prompts = workload::generate_prompts(5, 8, 20, 512, 21);
+    let mut tokens: Vec<Vec<Vec<i32>>> = Vec::new();
+    for strategy in [
+        StrategySource::EngineDefaults,
+        StrategySource::Searched,
+        StrategySource::Explicit {
+            decode: moe_gen::sched::Strategy {
+                b: 8, b_a: 2, b_e: 16, omega: 0.5, s_expert: 0, s_params: 0, reuse: 1.0,
+            },
+            prefill: None,
+        },
+    ] {
+        let mut spec = small_spec();
+        spec.strategy = strategy;
+        let mut session = Session::open(spec).unwrap();
+        tokens.push(session.run_prompts(&prompts, 4).unwrap().tokens);
+    }
+    assert_eq!(tokens[0], tokens[1], "searched strategy changed tokens");
+    assert_eq!(tokens[0], tokens[2], "explicit strategy changed tokens");
+}
+
+// -- wrapper equivalence ------------------------------------------------------
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_run_offline_matches_session_run() {
+    let prompts = workload::generate_prompts(6, 10, 24, 512, 5);
+    let spec = small_spec();
+    let legacy = server::run_offline(spec.eng.clone(), &prompts, 4).unwrap();
+    let mut session = Session::open(spec).unwrap();
+    let rep = session.run_prompts(&prompts, 4).unwrap();
+    assert_eq!(legacy.tokens, rep.tokens);
+    assert_eq!(legacy.prefill_tokens, rep.prefill_tokens);
+    assert_eq!(legacy.decode_tokens, rep.decode_tokens);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_serve_matches_session_serve() {
+    let mut spec = small_spec();
+    spec.kind = JobKind::Serve;
+    spec.serve.mean_decode = 2;
+    spec.serve.max_decode = 4;
+    let scfg = spec.serve_config();
+    let requests = moe_gen::serve::synth_requests(&scfg, 512);
+    let legacy = moe_gen::serve::serve(&scfg, requests.clone()).unwrap();
+    let mut session = Session::open(spec).unwrap();
+    let rep = session.serve_requests(requests).unwrap();
+    assert_eq!(legacy.tokens, rep.tokens);
+    assert_eq!(legacy.finished_eos, rep.finished_eos);
+    assert_eq!(legacy.finished_max, rep.finished_max);
+}

@@ -6,7 +6,10 @@
 //! configuration the cache must actually work: nonzero hit-rate, issued
 //! predictive prefetches consumed in flight, budget never exceeded.
 //!
-//! Everything runs hermetically on the reference backend.
+//! Everything runs hermetically on the reference backend. `run_offline`
+//! is exercised on purpose: it is a deprecated thin wrapper over the
+//! session layer and must stay behaviour-identical until removal.
+#![allow(deprecated)]
 
 use moe_gen::config::{EngineConfig, Policy};
 use moe_gen::engine::Engine;
