@@ -101,12 +101,15 @@ fn live_json() -> String {
         "{{\"backend\": \"ref-cpu\", \"sequences\": {}, \"steps\": 6, \
          \"decode_tps\": {:.3}, \"weight_cache_hit_rate\": {:.4}, \
          \"htod_overlap_fraction\": {:.4}, \"weight_evictions\": {}, \
+         \"timeline_makespan_ms\": {:.3}, \"timeline_overlap_fraction\": {:.4}, \
          \"wall_ms\": {:.3}}}",
         rep.sequences,
         rep.decode_tp,
         rep.weight_hit_rate,
         rep.htod_overlap_fraction,
         rep.weight_evictions,
+        rep.timeline.makespan_secs * 1e3,
+        rep.timeline.overlap_fraction(),
         t0.elapsed().as_secs_f64() * 1e3,
     )
 }

@@ -36,7 +36,8 @@ use std::sync::{Arc, RwLock};
 use anyhow::Result;
 
 use crate::config::EngineConfig;
-use crate::exec::{ExecCtx, Pipeline, Plan};
+use crate::exec::{ExecCtx, Pipeline, Plan, Timeline};
+use crate::hw;
 use crate::kv::KvCache;
 use crate::memory::{MemoryPool, TransferEngine, TransferHandle};
 use crate::metrics::Metrics;
@@ -57,6 +58,14 @@ pub struct Engine {
     /// The engine owns the cache budget (`cfg.weight_cache_bytes`, or a
     /// searched strategy's `S_Params` via [`Engine::set_strategy`]).
     pub weights: WeightResidency,
+    /// The virtual multi-stream timeline every phase's launches and
+    /// transfers accumulate on ([`crate::exec::timeline`]). Reset by the
+    /// run/serve drivers per experiment; `metrics.timeline` snapshots it
+    /// after each phase. Transfers are priced at `cfg.throttle_htod`
+    /// when set, the PCIe-class [`crate::hw`] defaults otherwise; with
+    /// `cfg.prefetch` off it runs serialized (the on-demand baselines'
+    /// zero-overlap schedule).
+    pub timeline: Timeline,
     cpu_threads: usize,
     /// Outstanding overlapped transfers not owned by the weight cache
     /// (drained at phase ends).
@@ -105,6 +114,11 @@ impl Engine {
         plan.cache_bytes = None;
         let weights =
             WeightResidency::new(WeightSizes::from_cfg(backend.cfg()), cfg.weight_cache_bytes);
+        let mut timeline = Timeline::new(
+            cfg.throttle_htod.unwrap_or(hw::VIRTUAL_HTOD_BW),
+            hw::VIRTUAL_DTOH_BW,
+        );
+        timeline.set_serialized(!cfg.prefetch);
         Ok(Engine {
             backend,
             cfg,
@@ -113,6 +127,7 @@ impl Engine {
             dtoh,
             host_pool,
             weights,
+            timeline,
             cpu_threads,
             pending_fetch: Vec::new(),
             plan,
@@ -180,6 +195,10 @@ impl Engine {
     }
 
     fn exec_ctx(&mut self) -> ExecCtx<'_> {
+        // Keep the timeline's schedule model in lockstep with the
+        // prefetch knob (policies flip it before the engine is built,
+        // but nothing stops a caller from toggling `cfg.prefetch`).
+        self.timeline.set_serialized(!self.cfg.prefetch);
         ExecCtx {
             backend: self.backend.as_mut(),
             metrics: &mut self.metrics,
@@ -187,10 +206,29 @@ impl Engine {
             dtoh: &self.dtoh,
             pending: &mut self.pending_fetch,
             weights: &mut self.weights,
+            timeline: &mut self.timeline,
             prefetch: self.cfg.prefetch,
             reuse_rounds: (self.plan.reuse.max(1.0).round() as u32).saturating_sub(1),
             cpu_threads: self.cpu_threads,
+            fetch_ev: None,
+            input_ev: None,
+            next_deps: Vec::new(),
         }
+    }
+
+    /// Overlapped transfers still in flight — the pending list plus the
+    /// weight cache's in-flight prefetches. Every phase ends with a
+    /// drain, so this reads zero at phase boundaries (asserted by the
+    /// integration tests).
+    pub fn outstanding_transfers(&self) -> usize {
+        self.pending_fetch.len() + self.weights.cache.in_flight_len()
+    }
+
+    /// Reset the accumulated metrics *and* the virtual timeline — one
+    /// experiment, one schedule (the run/serve drivers call this).
+    pub fn reset_accounting(&mut self) {
+        self.metrics = Metrics::new();
+        self.timeline.reset();
     }
 
     // -- phases --------------------------------------------------------------
@@ -248,14 +286,18 @@ impl Engine {
     ) -> Result<(Vec<usize>, Vec<usize>, Vec<i32>)> {
         let pipeline = Pipeline::new(self.plan);
         let mut cx = self.exec_ctx();
-        pipeline.prefill_into(&mut cx, kv, prompts)
+        let out = pipeline.prefill_into(&mut cx, kv, prompts);
+        self.metrics.timeline = self.timeline.stats();
+        out
     }
 
     /// One decode step for all sequences in `state`; returns next tokens.
     pub fn decode_step(&mut self, state: &mut BatchState) -> Result<Vec<i32>> {
         let pipeline = Pipeline::new(self.plan);
         let mut cx = self.exec_ctx();
-        pipeline.decode_step(&mut cx, state)
+        let out = pipeline.decode_step(&mut cx, state);
+        self.metrics.timeline = self.timeline.stats();
+        out
     }
 
     /// Greedy-decode `steps` tokens for a batch of prompts, waving through
@@ -329,11 +371,22 @@ impl Engine {
 
     /// Live per-stage latency at every bucket (the paper's offline
     /// workload profiling, App. B) — feeds the strategy search. One row
-    /// per pipeline stage × bucket.
-    pub fn profile_modules(&mut self) -> Result<Vec<(String, usize, f64)>> {
+    /// per pipeline stage × bucket; each probe averages `reps` launches
+    /// (the `JobSpec::profile_reps` / `--profile-reps` knob).
+    ///
+    /// Probes acquire weights through the live residency layer, which
+    /// enqueues their fetches on the timeline — so the wave timeline is
+    /// restored wholesale afterwards: profiling must not fold synthetic
+    /// probe traffic into the schedule a later run reports.
+    pub fn profile_modules(&mut self, reps: usize) -> Result<Vec<(String, usize, f64)>> {
         let pipeline = Pipeline::new(self.plan);
-        let mut cx = self.exec_ctx();
-        pipeline.profile_modules(&mut cx)
+        let saved = self.timeline.clone();
+        let out = {
+            let mut cx = self.exec_ctx();
+            pipeline.profile_modules(&mut cx, reps)
+        };
+        self.timeline = saved;
+        out
     }
 }
 
@@ -411,6 +464,29 @@ mod tests {
         assert_eq!(cut[0].len(), p0 + 1, "sequence 0 retires at its first EOS");
         assert!(cut[0].len() <= 3);
         assert_eq!(eng2.host_pool.used(), 0, "wave KV released after early exit");
+    }
+
+    #[test]
+    fn timeline_accumulates_overlap_and_drains_per_phase() {
+        let mut eng = engine();
+        let prompts = vec![vec![1, 2, 3], vec![4, 5]];
+        let _ = eng.generate(&prompts, 3).unwrap();
+        assert!(!eng.timeline.is_empty());
+        eng.timeline.verify().unwrap();
+        let st = eng.timeline.stats();
+        assert!(st.makespan_secs > 0.0);
+        assert!(
+            st.busy_total() > st.makespan_secs,
+            "streams must overlap under prefetch: busy {} vs makespan {}",
+            st.busy_total(),
+            st.makespan_secs
+        );
+        assert!(st.overlap_fraction() > 0.0);
+        assert_eq!(eng.metrics.timeline, st, "metrics snapshot the live timeline");
+        assert_eq!(eng.outstanding_transfers(), 0, "phases end drained");
+        eng.reset_accounting();
+        assert!(eng.timeline.is_empty());
+        assert_eq!(eng.metrics.decode_tokens, 0);
     }
 
     #[test]

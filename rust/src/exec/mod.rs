@@ -18,7 +18,13 @@
 //!   acquire/release their weight keys through the byte-budgeted GPU
 //!   cache, the pipeline streams the next layer's dense weights during
 //!   attention, and the router's output predictively prefetches the next
-//!   layer's hot experts.
+//!   layer's hot experts;
+//! * [`timeline`] — the virtual multi-stream timeline ([`Timeline`]):
+//!   four streams (GPU compute / CPU attention / HtoD / DtoH) over which
+//!   the pipeline enqueues every launch and transfer with explicit
+//!   dependencies, yielding makespan, per-stream busy/idle time and the
+//!   overlap fraction the reports publish. The simulator's DAGs replay
+//!   through the same scheduler ([`crate::dag::Dag::to_timeline`]).
 //!
 //! The `Engine` is a facade over this subsystem; the simulator's DAG
 //! builders label their nodes with the same [`ModuleKind`] vocabulary, so
@@ -27,7 +33,9 @@
 pub mod modules;
 pub mod pipeline;
 pub mod tensor;
+pub mod timeline;
 
 pub use modules::{ExpertSel, Module, ModuleKind};
 pub use pipeline::{BatchState, ExecCtx, Pipeline, Plan};
 pub use tensor::{Accumulator, HostTensor};
+pub use timeline::{EventId, Stream, Timeline, TimelineStats};

@@ -11,9 +11,14 @@
 //! * the [`Module`] trait — name, strategy-driven micro-batch size and an
 //!   order-of-magnitude flop/byte footprint (what the cost model sees);
 //! * an inherent `run` method — the live execution: pick the bucket, pad,
-//!   launch on the [`crate::runtime::Backend`], meter time and link
-//!   traffic, unpad. These wrap what used to be inline `Engine` methods.
+//!   launch on the [`crate::runtime::Backend`] through
+//!   [`ExecCtx::launch`], which meters time and link traffic *and*
+//!   enqueues the launch (with its inbound/outbound transfers and true
+//!   dependencies) on the virtual multi-stream timeline
+//!   ([`crate::exec::timeline`]), then unpad. These wrap what used to be
+//!   inline `Engine` methods.
 
+use std::ops::Range;
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
@@ -23,6 +28,7 @@ use crate::batching::{add_assign, group_by_expert, micro_batches};
 use crate::cpu_attn::{decode_attention_t, SeqAttn};
 use crate::exec::pipeline::{ExecCtx, Plan};
 use crate::exec::tensor::{Accumulator, HostTensor};
+use crate::exec::timeline::{EventId, Stream};
 use crate::kv::KvCache;
 use crate::runtime::RtConfig;
 use crate::util::pick_bucket;
@@ -153,13 +159,9 @@ impl Embed {
                 let n = r.len();
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
                 let ids_b = pad_i32(&ids[r], bucket);
-                let t0 = Instant::now();
-                let y = cx.backend.embed(&ids_b)?;
-                cx.metrics
-                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-                let wb = cx.backend.take_uploaded_bytes();
-                cx.note_backend_upload(wb);
-                cx.account(bucket * 4, bucket * h * 4);
+                let y = cx.launch(ModuleKind::Embed, n, bucket, bucket * 4, bucket * h * 4, |be| {
+                    be.embed(&ids_b)
+                })?;
                 out.push_rows(&y.data[..n * h]);
             }
             Ok(())
@@ -205,13 +207,14 @@ impl PreAttention {
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
                 let x_b = x.padded(r.clone(), bucket);
                 let pos_b = pad_i32(&pos[r], bucket);
-                let t0 = Instant::now();
-                let (qb, kb, vb) = cx.backend.pre_attention(layer, &x_b, &pos_b)?;
-                cx.metrics
-                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-                let wb = cx.backend.take_uploaded_bytes();
-                cx.note_backend_upload(wb);
-                cx.account(bucket * (h + 1) * 4, bucket * (qd + 2 * kvd) * 4);
+                let (qb, kb, vb) = cx.launch(
+                    ModuleKind::PreAttention,
+                    n,
+                    bucket,
+                    bucket * (h + 1) * 4,
+                    bucket * (qd + 2 * kvd) * 4,
+                    |be| be.pre_attention(layer, &x_b, &pos_b),
+                )?;
                 q.push_rows(&qb.data[..n * qd]);
                 k.push_rows(&kb.data[..n * kvd]);
                 v.push_rows(&vb.data[..n * kvd]);
@@ -243,55 +246,52 @@ impl Module for AttentionPrefill {
 }
 
 impl AttentionPrefill {
-    /// Causal attention over `b` prompts padded to `seq`, micro-batched at
-    /// the strategy's prefill `b_a`. `q`/`k`/`v` are flat per-token
-    /// tensors (`b*seq` rows); returns ctx as flat `[b*seq, q_dim]`.
+    /// One causal-attention launch over the prompt micro-batch `r` of a
+    /// wave of `seq`-padded prompts. `q`/`k`/`v` are the *wave's* flat
+    /// per-token tensors; returns this micro-batch's ctx as
+    /// `[r.len(), seq*q_dim]`. The micro-batch loop lives in
+    /// [`crate::exec::Pipeline::prefill_into`], which interleaves each
+    /// micro-batch's KV writeback with the next one's launch (the
+    /// software pipeline); outputs accumulate there until the wave's
+    /// full batch is assembled (paper Fig. 2).
     #[allow(clippy::too_many_arguments)]
-    pub fn run(
+    pub fn run_micro(
         &self,
         cx: &mut ExecCtx<'_>,
-        plan: &Plan,
         q: &HostTensor,
         k: &HostTensor,
         v: &HostTensor,
         lens: &[usize],
         seq: usize,
+        r: Range<usize>,
     ) -> Result<HostTensor> {
         let c = cx.backend.cfg().clone();
         let (qd, kvd) = (c.q_dim(), c.kv_dim());
-        let b = lens.len();
-        assert_eq!(q.rows, b * seq);
-        let micro = self.micro_batch(plan, &c);
-        // Attention outputs accumulate in host memory until the wave's
-        // full batch is assembled (paper Fig. 2).
-        let mut acc = Accumulator::new(seq * qd, b);
-        for r in micro_batches(b, micro) {
-            let nb = r.len();
-            let bucket = pick_bucket(nb, &c.prefill_batch_buckets).unwrap();
-            let pack = |src: &HostTensor, dim: usize| -> HostTensor {
-                let mut out = HostTensor::zeros(bucket, seq * dim);
-                out.data[..nb * seq * dim]
-                    .copy_from_slice(src.rows_slice(r.start * seq..r.end * seq));
-                out
-            };
-            let q_b = pack(q, qd);
-            let k_b = pack(k, kvd);
-            let v_b = pack(v, kvd);
-            let mut lens_i = vec![0i32; bucket];
-            for (i, bi) in r.clone().enumerate() {
-                lens_i[i] = lens[bi] as i32;
-            }
-            let t0 = Instant::now();
-            let ctx = cx.backend.attn_prefill(&q_b, &k_b, &v_b, &lens_i, seq)?;
-            cx.metrics
-                .record_module(self.name(), t0.elapsed().as_secs_f64(), nb, bucket);
-            let wb = cx.backend.take_uploaded_bytes();
-            cx.note_backend_upload(wb);
-            cx.account(bucket * seq * (qd + 2 * kvd + 1) * 4, bucket * seq * qd * 4);
-            acc.push_rows(&ctx.data[..nb * seq * qd]);
+        debug_assert!(r.end * seq <= q.rows);
+        let nb = r.len();
+        let bucket = pick_bucket(nb, &c.prefill_batch_buckets).unwrap();
+        let pack = |src: &HostTensor, dim: usize| -> HostTensor {
+            let mut out = HostTensor::zeros(bucket, seq * dim);
+            out.data[..nb * seq * dim]
+                .copy_from_slice(src.rows_slice(r.start * seq..r.end * seq));
+            out
+        };
+        let q_b = pack(q, qd);
+        let k_b = pack(k, kvd);
+        let v_b = pack(v, kvd);
+        let mut lens_i = vec![0i32; bucket];
+        for (i, bi) in r.clone().enumerate() {
+            lens_i[i] = lens[bi] as i32;
         }
-        debug_assert!(acc.is_ready());
-        Ok(HostTensor::from_vec(acc.take().data, qd))
+        let ctx = cx.launch(
+            ModuleKind::AttnPrefill,
+            nb,
+            bucket,
+            bucket * seq * (qd + 2 * kvd + 1) * 4,
+            bucket * seq * qd * 4,
+            |be| be.attn_prefill(&q_b, &k_b, &v_b, &lens_i, seq),
+        )?;
+        Ok(HostTensor::from_vec(ctx.data[..nb * seq * qd].to_vec(), seq * qd))
     }
 }
 
@@ -314,12 +314,19 @@ impl Module for AttentionDecode {
 }
 
 impl AttentionDecode {
-    /// One decode step's attention for `b` sequences under the ω split:
-    /// the first `⌊ωb⌋` sequences run on the CPU kernel reading the host
-    /// cache in place; the rest go through HtoD-staged KV windows in
-    /// `b_a`-sized micro-batches, overlapping the window gather (HtoD
-    /// engine thread) with the CPU share. Outputs accumulate in batch
-    /// order; returns ctx `[b, q_dim]`.
+    /// One decode step's attention for `b` sequences under the ω split,
+    /// software-pipelined at `b_a`-sequence micro-batches: the first
+    /// `⌊ωb⌋` sequences run on the CPU kernel (CpuAttn stream) reading
+    /// the host cache in place, the rest go through HtoD-staged KV
+    /// windows whose gathers are all submitted up front — micro-batch
+    /// *i*'s staged launch executes while micro-batch *i+1*'s window is
+    /// still crossing the link and the CPU share grinds in parallel.
+    /// Every op lands on the timeline with its true dependencies (gather
+    /// → staged launch; pre-attention → everything), and the CPU share's
+    /// events are handed to [`ExecCtx::next_deps`] so the *next* module
+    /// launch — the first consumer of the wave's assembled output —
+    /// depends on them. Outputs accumulate in batch order; returns ctx
+    /// `[b, q_dim]`.
     #[allow(clippy::too_many_arguments)]
     pub fn run(
         &self,
@@ -338,6 +345,14 @@ impl AttentionDecode {
         assert_eq!(q.rows, b);
         let n_cpu = ((plan.omega * b as f64).floor() as usize).min(b);
         let micro = self.micro_batch(plan, &c);
+        // Wave-entry dependencies: this step's q/k/v exist once
+        // pre-attention landed, and the staged windows additionally read
+        // the rows the KV-append writeback is carrying (handed in via
+        // `next_deps` by the pipeline) — gathers and CPU chunks key off
+        // both.
+        cx.input_ev = cx.timeline.last_on(Stream::GpuCompute);
+        let mut pre_ev: Vec<EventId> = std::mem::take(&mut cx.next_deps);
+        pre_ev.extend(cx.input_ev);
 
         let mut acc = Accumulator::new(qd, b);
 
@@ -352,56 +367,62 @@ impl AttentionDecode {
             let bytes: usize = ln.iter().map(|&l| l * kvd * 4).sum();
             let kv_k = Arc::clone(kv);
             let (sl2, ln2) = (sl.clone(), ln.clone());
-            let hk = cx.htod.submit(bytes, move || {
+            let (hk, ev_k) = cx.stage_htod("kv_gather", bytes, &pre_ev, move || {
                 kv_k.read().unwrap().gather_side(layer, &sl2, &ln2, bucket, true)
             });
             let kv_v = Arc::clone(kv);
             let ln3 = ln.clone();
-            let hv = cx.htod.submit(bytes, move || {
+            let (hv, ev_v) = cx.stage_htod("kv_gather", bytes, &pre_ev, move || {
                 kv_v.read().unwrap().gather_side(layer, &sl, &ln3, bucket, false)
             });
             // Staged-window gathers run on the HtoD engine thread,
             // overlapping the CPU attention share below.
-            cx.metrics.htod_bytes += (2 * bytes) as u64;
-            cx.metrics.htod_overlapped_bytes += (2 * bytes) as u64;
-            handles.push((abs, nb, bucket, ln, hk, hv));
+            handles.push((abs, nb, bucket, ln, hk, hv, [ev_k, ev_v]));
         }
 
-        // -- CPU share: kernel over in-place cache slices (overlaps with
-        //    the staging jobs above) -----------------------------------
+        // -- CPU share: kernel over in-place cache slices in b_a-sized
+        //    chunks on the CpuAttn stream (overlaps the staging jobs
+        //    above and the staged launches below) ----------------------
+        let mut cpu_evs: Vec<EventId> = Vec::new();
         if n_cpu > 0 {
             let numerics = cx.backend.cpu_attn_numerics();
-            let cpu_ctx = {
-                let kvr = kv.read().unwrap();
-                let seqs: Vec<SeqAttn<'_>> = (0..n_cpu)
-                    .map(|i| {
-                        let (ks, vs) = kvr.slices_n(layer, slots[i], lens_now[i]);
-                        SeqAttn { q: q.row(i), k: ks, v: vs, len: lens_now[i] }
-                    })
-                    .collect();
-                let t0 = Instant::now();
-                let ctx = decode_attention_t(
-                    &seqs,
-                    c.num_heads,
-                    c.num_kv_heads,
-                    c.head_dim,
-                    numerics,
-                    cx.cpu_threads,
-                );
-                cx.metrics.record_module(
+            for r in micro_batches(n_cpu, micro) {
+                let nb = r.len();
+                let (cpu_ctx, secs) = {
+                    let kvr = kv.read().unwrap();
+                    let seqs: Vec<SeqAttn<'_>> = r
+                        .clone()
+                        .map(|i| {
+                            let (ks, vs) = kvr.slices_n(layer, slots[i], lens_now[i]);
+                            SeqAttn { q: q.row(i), k: ks, v: vs, len: lens_now[i] }
+                        })
+                        .collect();
+                    let t0 = Instant::now();
+                    let ctx = decode_attention_t(
+                        &seqs,
+                        c.num_heads,
+                        c.num_kv_heads,
+                        c.head_dim,
+                        numerics,
+                        cx.cpu_threads,
+                    );
+                    (ctx, t0.elapsed().as_secs_f64())
+                };
+                cx.metrics.record_module(ModuleKind::CpuAttn.name(), secs, nb, nb);
+                cx.metrics.cpu_attn_seqs += nb as u64;
+                cpu_evs.push(cx.timeline.record(
+                    Stream::CpuAttn,
                     ModuleKind::CpuAttn.name(),
-                    t0.elapsed().as_secs_f64(),
-                    n_cpu,
-                    n_cpu,
-                );
-                cx.metrics.cpu_attn_seqs += n_cpu as u64;
-                ctx
-            };
-            acc.push(&cpu_ctx);
+                    secs,
+                    &pre_ev,
+                ));
+                acc.push(&cpu_ctx);
+            }
         }
 
-        // -- GPU share: execute the staged micro-batches -----------------
-        for (abs, nb, bucket, ln, hk, hv) in handles {
+        // -- GPU share: execute the staged micro-batches as their
+        //    windows land --------------------------------------------
+        for (abs, nb, bucket, ln, hk, hv, gather_evs) in handles {
             let ks = HostTensor::from_vec(hk.wait(), cap * kvd);
             let vs = HostTensor::from_vec(hv.wait(), cap * kvd);
             let q_b = q.padded(abs, bucket);
@@ -409,18 +430,24 @@ impl AttentionDecode {
             for (j, &l) in ln.iter().enumerate() {
                 lens_i[j] = l as i32;
             }
-            let t0 = Instant::now();
-            let ctx = cx.backend.attn_decode(&q_b, &ks, &vs, &lens_i)?;
-            cx.metrics
-                .record_module(self.name(), t0.elapsed().as_secs_f64(), nb, bucket);
-            let wb = cx.backend.take_uploaded_bytes();
-            cx.note_backend_upload(wb);
             // The staged KV windows were metered at submit time above;
-            // only the queries and lengths stream here.
-            cx.account(bucket * (qd + 1) * 4, bucket * qd * 4);
+            // only the queries and lengths stream here. The launch
+            // depends on both gather events (next_deps).
+            cx.next_deps.extend(gather_evs);
+            let ctx = cx.launch(
+                ModuleKind::AttnDecode,
+                nb,
+                bucket,
+                bucket * (qd + 1) * 4,
+                bucket * qd * 4,
+                |be| be.attn_decode(&q_b, &ks, &vs, &lens_i),
+            )?;
             cx.metrics.gpu_attn_seqs += nb as u64;
             acc.push_rows(&ctx.data[..nb * qd]);
         }
+        // The wave's attention output is complete only once the CPU
+        // share lands: the next launch consuming it depends on it.
+        cx.next_deps.extend(cpu_evs);
         debug_assert!(acc.is_ready());
         Ok(acc.take())
     }
@@ -462,13 +489,14 @@ impl PostAttention {
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
                 let ctx_b = ctx_t.padded(r.clone(), bucket);
                 let res_b = resid.padded(r, bucket);
-                let t0 = Instant::now();
-                let y = cx.backend.post_attention(layer, &ctx_b, &res_b)?;
-                cx.metrics
-                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-                let wb = cx.backend.take_uploaded_bytes();
-                cx.note_backend_upload(wb);
-                cx.account(bucket * (qd + h) * 4, bucket * h * 4);
+                let y = cx.launch(
+                    ModuleKind::PostAttention,
+                    n,
+                    bucket,
+                    bucket * (qd + h) * 4,
+                    bucket * h * 4,
+                    |be| be.post_attention(layer, &ctx_b, &res_b),
+                )?;
                 out.push_rows(&y.data[..n * h]);
             }
             Ok(())
@@ -519,13 +547,14 @@ impl Router {
                 let n = r.len();
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
                 let x_b = x.padded(r, bucket);
-                let t0 = Instant::now();
-                let (xn_b, idx_b, wts_b) = cx.backend.router(layer, &x_b)?;
-                cx.metrics
-                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-                let wb = cx.backend.take_uploaded_bytes();
-                cx.note_backend_upload(wb);
-                cx.account(bucket * h * 4, bucket * (h + 2 * k) * 4);
+                let (xn_b, idx_b, wts_b) = cx.launch(
+                    ModuleKind::Router,
+                    n,
+                    bucket,
+                    bucket * h * 4,
+                    bucket * (h + 2 * k) * 4,
+                    |be| be.router(layer, &x_b),
+                )?;
                 xn.push_rows(&xn_b.data[..n * h]);
                 idx.extend_from_slice(&idx_b[..n * k]);
                 wts.push_rows(&wts_b.data[..n * k]);
@@ -577,28 +606,31 @@ impl Experts {
         let n = x.rows;
         let (xn, idx, wts) = Router.run(cx, layer, &x)?;
         let micro = self.micro_batch(plan, &c);
+        // Every expert group's gathered input comes from the *router's*
+        // output, not from the previous group's kernel — re-anchor each
+        // group's uploads there (acquire_weights stamps input_ev with
+        // the latest kernel at pin time, which inside this loop would be
+        // the previous expert and would falsely serialize fetch→compute
+        // across the expert phase).
+        let moe_ev = cx.timeline.last_on(Stream::GpuCompute);
 
         let mut acc = HostTensor::zeros(n, h);
         for g in group_by_expert(&idx, &wts.data, n, k, ne) {
             cx.with_weights(WeightKey::Expert(layer, g.expert), |cx| {
+                cx.input_ev = moe_ev;
                 for r in micro_batches(g.rows.len(), micro) {
                     let rows = &g.rows[r.clone()];
                     let w = &g.weights[r];
                     let bucket = pick_bucket(rows.len(), &c.expert_buckets).unwrap();
                     let gathered = xn.gather(rows, bucket);
-                    let t0 = Instant::now();
-                    let y = cx
-                        .backend
-                        .expert_ffn(layer, ExpertSel::Routed(g.expert), &gathered)?;
-                    cx.metrics.record_module(
-                        self.name(),
-                        t0.elapsed().as_secs_f64(),
+                    let y = cx.launch(
+                        ModuleKind::ExpertFfn,
                         rows.len(),
                         bucket,
-                    );
-                    let wb = cx.backend.take_uploaded_bytes();
-                    cx.note_backend_upload(wb);
-                    cx.account(bucket * h * 4, bucket * h * 4);
+                        bucket * h * 4,
+                        bucket * h * 4,
+                        |be| be.expert_ffn(layer, ExpertSel::Routed(g.expert), &gathered),
+                    )?;
                     acc.scatter_add(rows, w, &y);
                 }
                 Ok(())
@@ -606,21 +638,19 @@ impl Experts {
         }
         if c.use_shared_expert {
             cx.with_weights(WeightKey::Shared(layer), |cx| {
+                cx.input_ev = moe_ev;
                 for r in micro_batches(n, micro) {
                     let rows = r.len();
                     let bucket = pick_bucket(rows, &c.expert_buckets).unwrap();
                     let x_b = xn.padded(r.clone(), bucket);
-                    let t0 = Instant::now();
-                    let ys = cx.backend.expert_ffn(layer, ExpertSel::Shared, &x_b)?;
-                    cx.metrics.record_module(
-                        ModuleKind::SharedExpert.name(),
-                        t0.elapsed().as_secs_f64(),
+                    let ys = cx.launch(
+                        ModuleKind::SharedExpert,
                         rows,
                         bucket,
-                    );
-                    let wb = cx.backend.take_uploaded_bytes();
-                    cx.note_backend_upload(wb);
-                    cx.account(bucket * h * 4, bucket * h * 4);
+                        bucket * h * 4,
+                        bucket * h * 4,
+                        |be| be.expert_ffn(layer, ExpertSel::Shared, &x_b),
+                    )?;
                     add_assign(acc.rows_slice_mut(r), &ys.data[..rows * h]);
                 }
                 Ok(())
@@ -664,13 +694,9 @@ impl LmHead {
                 let n = r.len();
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
                 let x_b = x.padded(r, bucket);
-                let t0 = Instant::now();
-                let ids = cx.backend.lm_head(&x_b)?;
-                cx.metrics
-                    .record_module(self.name(), t0.elapsed().as_secs_f64(), n, bucket);
-                let wb = cx.backend.take_uploaded_bytes();
-                cx.note_backend_upload(wb);
-                cx.account(bucket * h * 4, bucket * 4);
+                let ids = cx.launch(ModuleKind::LmHead, n, bucket, bucket * h * 4, bucket * 4, |be| {
+                    be.lm_head(&x_b)
+                })?;
                 out.extend_from_slice(&ids[..n]);
             }
             Ok(())

@@ -4,10 +4,16 @@
 //! [`crate::sched::Strategy`]: the accumulated batch `B`, the attention
 //! micro-batch `b_a` (prefill and decode), the expert micro-batch `b_e`
 //! and the CPU-attention split ω. [`Pipeline`] drives one prefill wave or
-//! one decode step through the module layer ([`crate::exec::modules`]),
-//! draining each module's host-side accumulator at the plan's micro-batch
-//! sizes and overlapping KV staging (HtoD engine) with CPU attention and
-//! device compute.
+//! one decode step through the module layer ([`crate::exec::modules`]) as
+//! a *software pipeline* over the virtual multi-stream timeline
+//! ([`crate::exec::timeline`]): each wave splits into `Plan`-sized
+//! micro-batches whose KV window gathers ride the HtoD stream, whose ω
+//! share runs on the CpuAttn stream while staged launches execute on
+//! GpuCompute, and whose KV appends/writebacks ride the DtoH stream
+//! asynchronously — nothing in the wave stalls on a writeback. Every op
+//! is enqueued with its true data dependencies, so the timeline's
+//! makespan, per-stream busy time and overlap fraction describe the
+//! schedule that actually ran.
 //!
 //! The `Engine` is a thin facade over this type; the batching schedule
 //! lives *here*, sourced from the strategy — nowhere else.
@@ -17,11 +23,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::batching::micro_batches;
 use crate::exec::modules::{
-    AttentionDecode, AttentionPrefill, Embed, Experts, ExpertSel, LmHead, ModuleKind,
+    AttentionDecode, AttentionPrefill, Embed, Experts, ExpertSel, LmHead, Module, ModuleKind,
     PostAttention, PreAttention,
 };
-use crate::exec::tensor::HostTensor;
+use crate::exec::tensor::{Accumulator, HostTensor};
+use crate::exec::timeline::{EventId, Stream, Timeline};
 use crate::kv::KvCache;
 use crate::memory::{TransferEngine, TransferHandle};
 use crate::metrics::Metrics;
@@ -140,49 +148,146 @@ impl BatchState {
 
 /// Everything a module launch needs, borrowed from the engine: the
 /// execution backend, the metrics sink, the two link engines, the
-/// weight-residency layer and the outstanding-transfer list.
+/// weight-residency layer, the outstanding-transfer list and the virtual
+/// multi-stream timeline every launch and transfer is scheduled on.
 pub struct ExecCtx<'a> {
     pub backend: &'a mut dyn Backend,
     pub metrics: &'a mut Metrics,
     pub htod: &'a TransferEngine,
     pub dtoh: &'a TransferEngine,
     /// Outstanding overlapped transfers not owned by the weight cache
-    /// (activation streams, bypassed weight fetches); drained at phase
-    /// ends. In-flight *cached* prefetches live inside
-    /// [`crate::weights::WeightCache`] — the outstanding-prefetch list
-    /// is cache-aware.
+    /// (activation streams, bypassed weight fetches, async KV
+    /// writebacks); drained at phase ends. In-flight *cached* prefetches
+    /// live inside [`crate::weights::WeightCache`] — the
+    /// outstanding-prefetch list is cache-aware.
     pub pending: &'a mut Vec<TransferHandle>,
     /// The GPU weight-residency layer: byte-budgeted cache + predictive
     /// prefetch scheduler ([`crate::weights`]).
     pub weights: &'a mut WeightResidency,
+    /// The virtual timeline ([`crate::exec::timeline`]) this phase's ops
+    /// accumulate on: kernels on `GpuCompute` at their measured wall
+    /// time, the ω split on `CpuAttn`, transfers on `HtoD`/`DtoH` at the
+    /// modeled link bandwidth. Makespan, per-stream busy time and the
+    /// overlap fraction in every report derive from it.
+    pub timeline: &'a mut Timeline,
     /// `true`: weight fetches queue on the HtoD engine and overlap with
     /// compute (MoE-Gen prefetch); `false`: every launch stalls until its
-    /// weights crossed the link (on-demand, the baselines' behaviour).
+    /// weights crossed the link (on-demand, the baselines' behaviour —
+    /// the timeline then runs serialized and reports zero overlap).
     pub prefetch: bool,
     /// Extra launches each weight fetch stays resident for (the plan's
     /// reuse factor minus one; 0 = plain LRU).
     pub reuse_rounds: u32,
     pub cpu_threads: usize,
+    /// Timeline event of the currently pinned weight fetch — every
+    /// launch under the pin depends on it (set by
+    /// [`acquire_weights`](ExecCtx::acquire_weights), cleared on
+    /// release).
+    pub fetch_ev: Option<EventId>,
+    /// The kernel event that produced the *current module's input*
+    /// (the last GpuCompute op at module entry — captured by
+    /// [`acquire_weights`](ExecCtx::acquire_weights) and by the
+    /// attention driver). Inbound activation transfers depend on it:
+    /// bytes cannot cross the link before the producing kernel emitted
+    /// them, but they may overlap the same module's *earlier*
+    /// micro-batch kernels.
+    pub input_ev: Option<EventId>,
+    /// Cross-stream dependencies the *next* launch consumes (staged KV
+    /// window gathers, the CPU attention share a later module needs).
+    /// Drained by [`launch`](ExecCtx::launch), or collected wholesale by
+    /// the attention driver as its wave-entry dependencies.
+    pub next_deps: Vec<EventId>,
 }
 
 impl ExecCtx<'_> {
-    /// Meter non-weight module traffic: `htod_bytes` (activations in)
-    /// queue on the HtoD engine under prefetch overlap or stall the
-    /// launch on-demand; `dtoh_bytes` (outputs) are metered only.
-    pub fn account(&mut self, htod_bytes: usize, dtoh_bytes: usize) {
-        self.metrics.htod_bytes += htod_bytes as u64;
-        self.metrics.dtoh_bytes += dtoh_bytes as u64;
-        if htod_bytes == 0 {
-            return;
+    /// Run one module launch through the full accounting stack: the
+    /// inbound activation bytes ride the HtoD engine (queued under
+    /// prefetch overlap, stalling on-demand) and are enqueued on the
+    /// timeline's HtoD stream ahead of the kernel; the kernel itself is
+    /// timed, metered into [`Metrics`] and enqueued on `GpuCompute`
+    /// depending on its inbound transfer, the pinned weight fetch and
+    /// any [`next_deps`](ExecCtx::next_deps); the outbound bytes ride
+    /// the DtoH stream behind the kernel.
+    pub fn launch<T>(
+        &mut self,
+        kind: ModuleKind,
+        rows: usize,
+        bucket: usize,
+        htod_bytes: usize,
+        dtoh_bytes: usize,
+        f: impl FnOnce(&mut dyn Backend) -> Result<T>,
+    ) -> Result<T> {
+        let mut deps = std::mem::take(&mut self.next_deps);
+        deps.extend(self.fetch_ev);
+        if htod_bytes > 0 {
+            self.metrics.htod_bytes += htod_bytes as u64;
+            // Inbound bytes exist only once the producing module's last
+            // kernel emitted them (input_ev); the copy may still overlap
+            // this module's earlier micro-batch kernels.
+            let produced: Vec<EventId> = self.input_ev.into_iter().collect();
+            deps.push(self.timeline.xfer_htod(kind.name(), htod_bytes, &produced));
+            let h = self.htod.account(htod_bytes);
+            if self.prefetch {
+                self.metrics.htod_overlapped_bytes += htod_bytes as u64;
+                self.pending.push(h);
+            } else {
+                self.metrics.htod_stalled_bytes += htod_bytes as u64;
+                h.wait();
+            }
         }
-        let h = self.htod.account(htod_bytes);
-        if self.prefetch {
-            self.metrics.htod_overlapped_bytes += htod_bytes as u64;
-            self.pending.push(h);
-        } else {
-            self.metrics.htod_stalled_bytes += htod_bytes as u64;
-            h.wait();
+        let t0 = Instant::now();
+        let out = f(&mut *self.backend)?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.metrics.record_module(kind.name(), secs, rows, bucket);
+        let up = self.backend.take_uploaded_bytes();
+        self.note_backend_upload(up);
+        let kernel = self.timeline.record(Stream::GpuCompute, kind.name(), secs, &deps);
+        if dtoh_bytes > 0 {
+            self.metrics.dtoh_bytes += dtoh_bytes as u64;
+            self.timeline.xfer_dtoh(kind.name(), dtoh_bytes, &[kernel]);
         }
+        Ok(out)
+    }
+
+    /// Submit a host-side staging job (KV window gather) to the HtoD
+    /// engine thread and enqueue it on the timeline's HtoD stream.
+    /// Returns the real completion handle and the virtual event the
+    /// consuming launch must depend on.
+    pub fn stage_htod<F>(
+        &mut self,
+        label: &'static str,
+        bytes: usize,
+        deps: &[EventId],
+        job: F,
+    ) -> (TransferHandle, EventId)
+    where
+        F: FnOnce() -> Vec<f32> + Send + 'static,
+    {
+        self.metrics.htod_bytes += bytes as u64;
+        self.metrics.htod_overlapped_bytes += bytes as u64;
+        let ev = self.timeline.xfer_htod(label, bytes, deps);
+        (self.htod.submit(bytes, job), ev)
+    }
+
+    /// Meter a device→host writeback (KV append / prompt-KV flush) on
+    /// the DtoH engine *asynchronously*: the accounting job queues on
+    /// the link thread (drained at the phase end, never stalling the
+    /// wave) and the bytes ride the timeline's DtoH stream behind
+    /// `deps`. Returns the transfer's event so consumers of the written
+    /// rows (this step's KV window gathers) can depend on it.
+    pub fn writeback(
+        &mut self,
+        label: &'static str,
+        bytes: usize,
+        deps: &[EventId],
+    ) -> Option<EventId> {
+        if bytes == 0 {
+            return None;
+        }
+        self.metrics.dtoh_bytes += bytes as u64;
+        let ev = self.timeline.xfer_dtoh(label, bytes, deps);
+        self.pending.push(self.dtoh.account(bytes));
+        Some(ev)
     }
 
     /// Record weight bytes the backend itself moved to the device (PJRT
@@ -193,10 +298,14 @@ impl ExecCtx<'_> {
 
     /// Ensure `key`'s weights are device-resident for a launch: a cache
     /// hit costs nothing, an in-flight prefetch is completed (its bytes
-    /// were metered, overlapped, at issue), and a miss streams the bytes
-    /// across the link (overlapped or stalling per `prefetch`). Pins the
-    /// entry until [`release_weights`](ExecCtx::release_weights).
+    /// were metered, overlapped, at issue — the launch inherits its
+    /// timeline event), and a miss streams the bytes across the link
+    /// (overlapped or stalling per `prefetch`). Pins the entry until
+    /// [`release_weights`](ExecCtx::release_weights).
     pub fn acquire_weights(&mut self, key: WeightKey) {
+        // A module acquires its weights before any launch: the latest
+        // kernel right now is the producer of this module's input.
+        self.input_ev = self.timeline.last_on(Stream::GpuCompute);
         let bytes = self.weights.sizes.bytes(key);
         if bytes == 0 {
             return;
@@ -206,15 +315,29 @@ impl ExecCtx<'_> {
         // counts set_budget shrinks); mirror it wholesale.
         self.metrics.weight_evictions = self.weights.cache.stats().evictions;
         match outcome {
-            Acquire::Hit => self.metrics.weight_hits += 1,
-            Acquire::HitInFlight(h) => {
+            Acquire::Hit => {
+                self.metrics.weight_hits += 1;
+                self.fetch_ev = None;
+            }
+            Acquire::HitInFlight(h, ev) => {
                 h.wait();
                 self.metrics.weight_hits += 1;
                 self.metrics.prefetch_hits += 1;
+                self.fetch_ev = ev;
             }
             Acquire::Miss | Acquire::Bypass => {
                 self.metrics.weight_misses += 1;
-                self.account(bytes, 0);
+                self.metrics.htod_bytes += bytes as u64;
+                let ev = self.timeline.xfer_htod("weight_fetch", bytes, &[]);
+                self.fetch_ev = Some(ev);
+                let h = self.htod.account(bytes);
+                if self.prefetch {
+                    self.metrics.htod_overlapped_bytes += bytes as u64;
+                    self.pending.push(h);
+                } else {
+                    self.metrics.htod_stalled_bytes += bytes as u64;
+                    h.wait();
+                }
             }
         }
     }
@@ -222,6 +345,7 @@ impl ExecCtx<'_> {
     /// Unpin `key` after its launch (consumes one reuse round).
     pub fn release_weights(&mut self, key: WeightKey) {
         self.weights.cache.release(key);
+        self.fetch_ev = None;
     }
 
     /// Run `f` with `key`'s weights acquired; always releases the pin,
@@ -269,12 +393,17 @@ impl ExecCtx<'_> {
         self.metrics.prefetch_issued += 1;
         self.metrics.htod_bytes += bytes as u64;
         self.metrics.htod_overlapped_bytes += bytes as u64;
+        let ev = self.timeline.xfer_htod("weight_prefetch", bytes, &[]);
         let h = self.htod.account(bytes);
-        self.weights.cache.fulfill_prefetch(key, h);
+        // The event rides the cache entry: the launch that consumes this
+        // prefetch in flight depends on it (Acquire::HitInFlight).
+        self.weights.cache.fulfill_prefetch(key, h, Some(ev));
     }
 
     /// Synchronize all outstanding transfers — the pending list and the
-    /// cache's in-flight prefetches (phase boundary).
+    /// cache's in-flight prefetches (phase boundary). After this,
+    /// nothing is in flight: the engine's `outstanding_transfers()`
+    /// reads zero.
     pub fn drain_fetches(&mut self) {
         for h in self.pending.drain(..) {
             h.wait();
@@ -357,19 +486,36 @@ impl Pipeline {
             // Stream the next layer's dense weights while this layer's
             // attention computes (overlapped on the HtoD engine thread).
             cx.prefetch_dense(layer + 1);
-            let ctx_t = AttentionPrefill.run(cx, &self.plan, &q, &k, &v, &lens, s)?;
-            // Write prompt K/V to the host cache (DtoH writeback).
-            {
+            // This layer's K/V rows exist once pre-attention lands — the
+            // writebacks below key off that event on the DtoH stream,
+            // and it anchors the attention micro-batches' q/k/v uploads
+            // (AttentionPrefill launches without a weight acquire, so
+            // the input anchor is set here).
+            let pre_ev: Vec<EventId> =
+                cx.timeline.last_on(Stream::GpuCompute).into_iter().collect();
+            cx.input_ev = cx.timeline.last_on(Stream::GpuCompute);
+            // Software-pipelined attention wave: micro-batch i's prompt-KV
+            // writeback rides the DtoH stream (queued, never waited)
+            // while micro-batch i+1's causal attention computes. The old
+            // full-wave `dtoh.account(bytes).wait()` stall is gone.
+            let micro = AttentionPrefill.micro_batch(&self.plan, &c);
+            let mut acc = Accumulator::new(s * c.q_dim(), b);
+            for r in micro_batches(b, micro) {
+                let ctx_mb = AttentionPrefill.run_micro(cx, &q, &k, &v, &lens, s, r.clone())?;
                 let mut bytes = 0usize;
-                let mut kvw = kv.write().unwrap();
-                for (i, &slot) in slots.iter().enumerate() {
-                    let l = lens[i];
-                    kvw.write_prefill_t(layer, slot, &k, &v, i * s..i * s + l);
-                    bytes += 2 * l * kvd * 4;
+                {
+                    let mut kvw = kv.write().unwrap();
+                    for i in r.clone() {
+                        let l = lens[i];
+                        kvw.write_prefill_t(layer, slots[i], &k, &v, i * s..i * s + l);
+                        bytes += 2 * l * kvd * 4;
+                    }
                 }
-                cx.metrics.dtoh_bytes += bytes as u64;
-                cx.dtoh.account(bytes).wait();
+                cx.writeback("kv_writeback", bytes, &pre_ev);
+                acc.push(&ctx_mb);
             }
+            debug_assert!(acc.is_ready());
+            let ctx_t = HostTensor::from_vec(acc.take().data, c.q_dim());
             x = PostAttention.run(cx, layer, &ctx_t, &x)?;
             x = Experts.run(cx, &self.plan, layer, x)?;
         }
@@ -416,14 +562,23 @@ impl Pipeline {
             // attention (the staged-window gathers and the CPU share are
             // the long pole; the HtoD engine thread carries the fetch).
             cx.prefetch_dense(layer + 1);
-            // Append this step's K/V (per sequence) before attention.
+            let pre_ev: Vec<EventId> =
+                cx.timeline.last_on(Stream::GpuCompute).into_iter().collect();
+            // Append this step's K/V (per sequence) before attention; the
+            // writeback is metered on the DtoH engine and rides the DtoH
+            // stream asynchronously (these appends used to bump a byte
+            // counter without ever touching the transfer engine).
             {
                 let mut kvw = state.kv.write().unwrap();
                 for (i, &slot) in state.slots.iter().enumerate() {
                     kvw.append_t(layer, slot, &k, &v, i);
                 }
-                cx.metrics.dtoh_bytes += (2 * b * kvd * 4) as u64;
             }
+            // The staged window gathers read the rows this append wrote:
+            // hand the writeback event to the attention driver so its
+            // gathers (and CPU chunks) depend on it.
+            let wb_ev = cx.writeback("kv_append", 2 * b * kvd * 4, &pre_ev);
+            cx.next_deps.extend(wb_ev);
             let lens_now: Vec<usize> = state.lens.iter().map(|&l| l + 1).collect();
 
             let ctx_t = AttentionDecode.run(
@@ -457,10 +612,22 @@ impl Pipeline {
     /// Measure live per-stage latency at every bucket (the paper's offline
     /// workload profiling, App. B) — one row per pipeline stage × bucket,
     /// recorded through the same metrics sink the live pipeline uses.
-    pub fn profile_modules(&self, cx: &mut ExecCtx<'_>) -> Result<Vec<(String, usize, f64)>> {
+    /// Each probe launches `reps` times and reports the mean (the
+    /// `JobSpec::profile_reps` / `--profile-reps` knob; must be ≥ 1).
+    /// Probes launch the backend directly but acquire weights through
+    /// the live residency layer, which records their fetches on the
+    /// timeline — `Engine::profile_modules` restores the wave timeline
+    /// afterwards so probe traffic never appears in a reported schedule.
+    pub fn profile_modules(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        reps: usize,
+    ) -> Result<Vec<(String, usize, f64)>> {
+        if reps == 0 {
+            bail!("profile reps must be >= 1");
+        }
         let c = cx.backend.cfg().clone();
         let (h, qd, kvd, cap) = (c.hidden_size, c.q_dim(), c.kv_dim(), c.max_context);
-        let reps = 3;
         let mut out: Vec<(String, usize, f64)> = Vec::new();
         let push = |cx: &mut ExecCtx<'_>,
                         out: &mut Vec<(String, usize, f64)>,

@@ -10,6 +10,13 @@
 
 use crate::model::ModelDesc;
 
+/// Virtual link bandwidths (B/s) the live executor's timeline prices
+/// transfers at when no HtoD throttle is configured — PCIe 4.0 x16-class
+/// achievable rates, matching the paper testbeds below so the executed
+/// timeline and the simulator's DAG costs describe the same machine.
+pub const VIRTUAL_HTOD_BW: f64 = 26e9;
+pub const VIRTUAL_DTOH_BW: f64 = 24e9;
+
 /// One device/host/link configuration (paper Table 3: C1, C2, C3).
 #[derive(Debug, Clone)]
 pub struct HwProfile {

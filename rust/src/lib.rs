@@ -23,7 +23,13 @@
 //!   vocabulary ([`exec::ModuleKind`]), so a searched strategy is
 //!   directly executable by [`engine::Engine::generate`] — including its
 //!   weight-residency fields (`S_Expert`, `S_Params`, reuse), which
-//!   configure the live cache, not just the simulator.
+//!   configure the live cache, not just the simulator. The wave executor
+//!   runs as a software pipeline over a virtual multi-stream timeline
+//!   ([`exec::timeline`]: GPU compute / CPU attention / HtoD / DtoH
+//!   streams, events, makespan and per-stream busy accounting); the
+//!   search, the simulator and the live reports all derive their overlap
+//!   numbers from that one scheduling model
+//!   ([`dag::Dag::to_timeline`]).
 //! * **Layer 2** — the MoE model, written in JAX as *separately lowered
 //!   modules* (`python/compile/model.py`), AOT-compiled to HLO text.
 //! * **Layer 1** — Pallas kernels for the expert FFN and flash attention

@@ -23,6 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use moe_gen::cli::{self, switch, val, Flag};
 use moe_gen::config::Policy;
+use moe_gen::exec::Stream;
 use moe_gen::sched::{self, Knobs};
 use moe_gen::session::Session;
 use moe_gen::sim::{self, tables};
@@ -53,6 +54,7 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
     let strategy = [
         val("strategy", "defaults|search — what the engine executes"),
         val("search-basis", "auto|measured|analytic cost model for --strategy search"),
+        val("profile-reps", "launches averaged per module-profile probe (default 3)"),
     ];
     let scenario = [
         val("model", "paper model (mixtral-8x7b, deepseek-v2, ...)"),
@@ -95,6 +97,7 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
         }
         JobKind::Profile => {
             f.push(val("artifacts", "artifacts dir"));
+            f.push(val("profile-reps", "launches averaged per module-profile probe (default 3)"));
         }
     }
     f
@@ -176,6 +179,9 @@ fn overlay(spec: &mut JobSpec, flags: &std::collections::HashMap<String, String>
     if let Some(s) = flags.get("search-basis") {
         spec.search_basis = SearchBasis::parse(s)
             .ok_or_else(|| anyhow!("unknown --search-basis {s:?}; try auto|measured|analytic"))?;
+    }
+    if let Some(v) = num::<usize>(flags, "profile-reps")? {
+        spec.profile_reps = v;
     }
     if let Some(m) = flags.get("model") {
         spec.scenario.model = m.clone();
@@ -321,6 +327,17 @@ fn main() -> Result<()> {
                 "[run] executed plan: B={} b_a={} b_e={} ω={:.2}",
                 p.accum_batch, p.attn_micro, p.expert_micro, p.omega
             );
+            let tl = &report.timeline;
+            println!(
+                "[run] timeline: makespan={:.3}ms busy[gpu={:.3} cpu={:.3} htod={:.3} \
+                 dtoh={:.3}]ms overlap={:.4}",
+                1e3 * tl.makespan_secs,
+                1e3 * tl.busy(Stream::GpuCompute),
+                1e3 * tl.busy(Stream::CpuAttn),
+                1e3 * tl.busy(Stream::HtoD),
+                1e3 * tl.busy(Stream::DtoH),
+                tl.overlap_fraction(),
+            );
         }
         JobKind::Serve => {
             println!(
@@ -388,15 +405,30 @@ fn main() -> Result<()> {
                 "scenario: {} on {} (prompt {}, decode {})",
                 scn.model.name, scn.hw.name, scn.prompt_len, scn.decode_len
             );
-            println!("{:<16} {:>12} {:>12}", "system", "decode tok/s", "prefill tok/s");
-            for (name, d, p) in sim::system_rows(&scn) {
+            println!(
+                "{:<16} {:>12} {:>13} {:>9}",
+                "system", "decode tok/s", "prefill tok/s", "overlap"
+            );
+            for sys in sim::System::table_order() {
+                // One pass per system: the MoE-Gen strategy search runs
+                // once and feeds both the throughput and overlap cells.
+                let (tp, overlap) = sim::decode_row(&scn, sys);
                 println!(
-                    "{:<16} {:>12} {:>12}",
-                    name,
-                    d.map(|x| format!("{x:.1}")).unwrap_or_else(|| "Fail".into()),
-                    p.map(|x| format!("{x:.1}")).unwrap_or_else(|| "Fail".into()),
+                    "{:<16} {:>12} {:>13} {:>9}",
+                    sys.name(),
+                    tp.map(|x| format!("{x:.1}")).unwrap_or_else(|| "Fail".into()),
+                    sim::prefill_tp(&scn, sys)
+                        .map(|x| format!("{x:.1}"))
+                        .unwrap_or_else(|| "Fail".into()),
+                    overlap
+                        .map(|o| format!("{:.1}%", 100.0 * o))
+                        .unwrap_or_else(|| "-".into()),
                 );
             }
+            println!(
+                "(overlap: decode-phase overlap fraction predicted from the same \
+                 virtual timeline the live executor reports)"
+            );
         }
         JobKind::Profile => {
             let mut s = Session::open(spec)?;

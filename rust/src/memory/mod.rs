@@ -16,6 +16,13 @@
 //!   with accelerator compute, and it meters bytes/busy-time. An optional
 //!   bandwidth throttle emulates a PCIe-class link for experiments.
 //!
+//! The transfer engines carry the *real* work; the schedule-level view —
+//! what overlapped what, makespan, per-stream idle — lives on the virtual
+//! multi-stream timeline ([`crate::exec::timeline`]), which the pipeline
+//! feeds one op per submitted transfer. Raw byte counters here remain
+//! the traffic ground truth; overlap fractions are derived from the
+//! timeline, not from these counters.
+//!
 //! PJRT handles (client/executables/literals) are not `Send`, so device
 //! upload itself happens on the engine thread at launch; the transfer
 //! engines own everything that is legal to move off-thread.

@@ -4,6 +4,8 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::exec::timeline::{Stream, TimelineStats};
+
 /// Accumulated per-module timing.
 #[derive(Debug, Default, Clone)]
 pub struct ModuleStat {
@@ -87,6 +89,13 @@ pub struct Metrics {
     pub prefetch_hits: u64,
     pub cpu_attn_seqs: u64,
     pub gpu_attn_seqs: u64,
+    /// Snapshot of the engine's virtual multi-stream timeline
+    /// ([`crate::exec::timeline`]) after the latest phase: makespan and
+    /// per-stream busy time of the schedule that actually ran. The
+    /// overlap fractions the reports publish derive from *this*, not
+    /// from the byte counters above (which remain as raw traffic
+    /// accounting).
+    pub timeline: TimelineStats,
 }
 
 impl Metrics {
@@ -142,8 +151,19 @@ impl Metrics {
         }
     }
 
+    /// Timeline-derived overlap: the fraction of total stream busy time
+    /// hidden by cross-stream overlap in the schedule that actually ran
+    /// (`1 − makespan / Σ busy`). This is the acceptance quantity —
+    /// nonzero under the module policy, exactly zero under the
+    /// serialized on-demand baselines.
+    pub fn timeline_overlap_fraction(&self) -> f64 {
+        self.timeline.overlap_fraction()
+    }
+
     /// Fraction of HtoD bytes that crossed the link overlapped with
-    /// compute rather than stalling a launch.
+    /// compute rather than stalling a launch (byte-counter view; see
+    /// [`timeline_overlap_fraction`](Metrics::timeline_overlap_fraction)
+    /// for the schedule-derived one).
     pub fn htod_overlap_fraction(&self) -> f64 {
         let total = self.htod_overlapped_bytes + self.htod_stalled_bytes;
         if total > 0 {
@@ -235,6 +255,19 @@ impl Metrics {
                 self.cpu_attn_seqs, self.gpu_attn_seqs
             ));
         }
+        if self.timeline.ops > 0 {
+            s.push_str(&format!(
+                "timeline: {} ops, makespan {:.3}ms | busy gpu {:.3} cpu {:.3} htod {:.3} \
+                 dtoh {:.3} ms | overlap {:.1}%\n",
+                self.timeline.ops,
+                1e3 * self.timeline.makespan_secs,
+                1e3 * self.timeline.busy(Stream::GpuCompute),
+                1e3 * self.timeline.busy(Stream::CpuAttn),
+                1e3 * self.timeline.busy(Stream::HtoD),
+                1e3 * self.timeline.busy(Stream::DtoH),
+                100.0 * self.timeline_overlap_fraction(),
+            ));
+        }
         s.push_str("stage                  calls   avg-rows  pad%   total-s\n");
         for (name, m) in self.pipeline_stages() {
             s.push_str(&format!(
@@ -297,6 +330,22 @@ mod tests {
         let r = m.report();
         assert!(r.contains("hit-rate 75.0%"));
         assert!(r.contains("90.0% overlapped"));
+    }
+
+    #[test]
+    fn timeline_section_reports_from_schedule() {
+        let mut m = Metrics::new();
+        assert_eq!(m.timeline_overlap_fraction(), 0.0, "no schedule → zero overlap");
+        assert!(!m.report().contains("timeline:"), "empty timeline stays silent");
+        m.timeline = TimelineStats {
+            ops: 4,
+            makespan_secs: 0.006,
+            busy_secs: [0.004, 0.0, 0.004, 0.0],
+        };
+        assert!((m.timeline_overlap_fraction() - 0.25).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("timeline: 4 ops"), "{r}");
+        assert!(r.contains("overlap 25.0%"), "{r}");
     }
 
     #[test]

@@ -11,9 +11,14 @@
 //! ```
 //!
 //! Each candidate is scored by building the offloading DAG of one decode
-//! step (or one prefill wave) — Fig. 6 — and solving its critical path
-//! with the Eq.-4 DP ([`crate::dag`]). P-D disaggregation: prefill DAGs
-//! carry no HtoD KV copy; decode DAGs carry every node class.
+//! step (or one prefill wave) — Fig. 6 — and replaying it onto the
+//! executor's virtual multi-stream timeline
+//! ([`crate::dag::Dag::to_timeline`]; equal to the Eq.-4 longest-path DP
+//! on the resource-chained DAGs the builders emit). The replay also
+//! yields the policy's *predicted* overlap fraction
+//! ([`predicted_overlap`]) from the same model the live pipeline reports
+//! its measured overlap from. P-D disaggregation: prefill DAGs carry no
+//! HtoD KV copy; decode DAGs carry every node class.
 //!
 //! The same builders serve the baseline policies through [`Knobs`]
 //! (prefetch off = DeepSpeed-style on-demand fetch; `reuse` > 1 =
@@ -435,19 +440,12 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
     g
 }
 
-/// Fix-up for the on-demand (no-prefetch) policy: the placeholder edges in
-/// `build_decode_dag` are approximated by simply serializing HtoD with GPU
-/// through `simulate()`-style scoring. To avoid dangling edges we build
-/// no-prefetch DAGs through this wrapper which post-hoc strips nothing but
-/// relies on chained structure (fetch chain + exec chain + fetch→exec
-/// deps) — the DP then underestimates on-demand stalls, so on-demand
-/// policies are scored with `simulate()` (resource-exclusive greedy),
-/// which *does* capture them.
+/// One decode step's modeled cost for a strategy under policy `knobs`.
 pub fn decode_step_time(scn: &Scenario, s: &Strategy, k: &Knobs) -> f64 {
     // Steady-state per-layer time from a 3-layer window (captures
     // cross-layer pipelining), extrapolated to the full depth.
-    let t1 = score_dag(&build_decode_dag(scn, s, k, 1), k);
-    let t3 = score_dag(&build_decode_dag(scn, s, k, 3), k);
+    let t1 = score_dag(&build_decode_dag(scn, s, k, 1));
+    let t3 = score_dag(&build_decode_dag(scn, s, k, 3));
     let per_layer = ((t3 - t1) / 2.0).max(1e-12);
     let layers = scn.model.num_layers as f64;
     // lm_head + embed epilogue.
@@ -459,14 +457,29 @@ pub fn decode_step_time(scn: &Scenario, s: &Strategy, k: &Knobs) -> f64 {
     t1 + per_layer * (layers - 1.0) + epilogue
 }
 
-fn score_dag(g: &Dag, k: &Knobs) -> f64 {
-    if k.prefetch {
-        g.critical_path()
+/// Every candidate — prefetching or on-demand — is scored by replaying
+/// its DAG through the executor's virtual multi-stream timeline
+/// ([`Dag::to_timeline`]): one scheduling model for the search, the
+/// simulator and the live pipeline. For the prefetch policies the
+/// builders chain every resource, so this equals the Eq.-4 longest-path
+/// DP; for on-demand policies the replay additionally captures the
+/// fetch→compute stalls the DP cannot see.
+fn score_dag(g: &Dag) -> f64 {
+    g.to_timeline().makespan()
+}
+
+/// Predicted overlap fraction of one modeled phase — the strategy's DAG
+/// (3-layer steady-state window) replayed onto the same timeline the
+/// live executor reports from, so searched and executed overlap are one
+/// quantity. `decode` selects the decode-step DAG; otherwise the
+/// prefill-wave DAG.
+pub fn predicted_overlap(scn: &Scenario, s: &Strategy, k: &Knobs, decode: bool) -> f64 {
+    let g = if decode {
+        build_decode_dag(scn, s, k, 3)
     } else {
-        // On-demand fetch policies stall on resource exclusivity that the
-        // pure longest-path DP cannot see.
-        g.simulate()
-    }
+        build_prefill_dag(scn, s, k, 3)
+    };
+    g.to_timeline().overlap_fraction()
 }
 
 /// Prefill wave: B accumulated *tokens* (from b_a-sequence micro-batches)
@@ -554,8 +567,8 @@ pub fn build_prefill_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize)
 }
 
 pub fn prefill_wave_time(scn: &Scenario, s: &Strategy, k: &Knobs) -> f64 {
-    let t1 = score_dag(&build_prefill_dag(scn, s, k, 1), k);
-    let t3 = score_dag(&build_prefill_dag(scn, s, k, 3), k);
+    let t1 = score_dag(&build_prefill_dag(scn, s, k, 1));
+    let t3 = score_dag(&build_prefill_dag(scn, s, k, 3));
     let per_layer = ((t3 - t1) / 2.0).max(1e-12);
     t1 + per_layer * (scn.model.num_layers as f64 - 1.0)
 }
@@ -823,6 +836,31 @@ mod tests {
             t_pre < t_ond,
             "prefetch {t_pre} must beat on-demand {t_ond}"
         );
+    }
+
+    #[test]
+    fn predicted_overlap_tracks_policy_structure() {
+        // The prefetching policy must hide transfer time under compute;
+        // the on-demand wiring (fetch serialized after the previous
+        // expert) must overlap strictly less — same timeline model the
+        // live executor reports from.
+        let scn = scn_8x7b();
+        let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0 };
+        let with = Knobs {
+            prefetch: true, reuse: 1.0, kv_on_gpu: true,
+            cpu_attention: false, fetch_all_experts: true,
+        };
+        let without = Knobs { prefetch: false, ..with };
+        let o_pre = predicted_overlap(&scn, &s, &with, true);
+        let o_ond = predicted_overlap(&scn, &s, &without, true);
+        assert!(o_pre > 0.0, "prefetch policy must predict overlap");
+        assert!(
+            o_ond < o_pre,
+            "on-demand ({o_ond}) must overlap less than prefetch ({o_pre})"
+        );
+        let o_prefill = predicted_overlap(&scn, &s, &Knobs::moe_gen_gpu_only(), false);
+        assert!((0.0..1.0).contains(&o_prefill));
     }
 
     #[test]

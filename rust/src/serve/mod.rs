@@ -40,6 +40,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{EngineConfig, Policy};
 use crate::engine::Engine;
+use crate::exec::TimelineStats;
 use crate::metrics::LatencyStats;
 use crate::server::apply_policy_residency;
 use crate::util::Stopwatch;
@@ -118,6 +119,10 @@ pub struct ServeReport {
     /// a single arrival burst).
     pub backfilled: u64,
     pub decode_waves: u64,
+    /// The experiment's virtual-timeline schedule
+    /// ([`crate::exec::timeline`]): makespan, per-stream busy time;
+    /// `timeline.overlap_fraction()` is the schedule-derived overlap.
+    pub timeline: TimelineStats,
     /// Greedy token streams, indexed by request id.
     pub tokens: Vec<Vec<i32>>,
 }
@@ -127,7 +132,8 @@ impl ServeReport {
         format!(
             "{:<14} reqs={:<5} wall={:>7.2}s total={:>8.1} tok/s \
              ttft(p50/p99)={:>6.1}/{:<6.1}ms tpot(p50/p99)={:>5.2}/{:<5.2}ms \
-             expert-avg-bsz={:>6.1} eos={} max={} peak-slots={} backfilled={}",
+             expert-avg-bsz={:>6.1} eos={} max={} peak-slots={} backfilled={} \
+             tl-overlap={:>5.1}%",
             self.policy.name(),
             self.requests,
             self.wall_secs,
@@ -141,6 +147,7 @@ impl ServeReport {
             self.finished_max,
             self.peak_slots,
             self.backfilled,
+            100.0 * self.timeline.overlap_fraction(),
         )
     }
 }
@@ -167,7 +174,7 @@ pub fn synth_requests(cfg: &ServeConfig, vocab: usize) -> Vec<Request> {
 /// engine's accumulated metrics first so the report covers this
 /// experiment only.
 pub fn execute(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Result<ServeReport> {
-    eng.metrics = crate::metrics::Metrics::new();
+    eng.reset_accounting();
     serve_on(eng, cfg, requests)
 }
 
@@ -303,6 +310,7 @@ fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Resu
         leaked_slots,
         backfilled: out.backfilled,
         decode_waves: out.decode_waves,
+        timeline: eng.timeline.stats(),
         tokens: out.logs.into_iter().map(|l| l.tokens).collect(),
     })
 }
@@ -452,6 +460,11 @@ mod tests {
             leaked_slots: 0,
             backfilled: 4,
             decode_waves: 20,
+            timeline: TimelineStats {
+                ops: 8,
+                makespan_secs: 0.75,
+                busy_secs: [0.5, 0.25, 0.25, 0.0],
+            },
             tokens: vec![],
         };
         let s = r.summary();
@@ -461,6 +474,7 @@ mod tests {
         assert!(s.contains("eos=3"));
         assert!(s.contains("peak-slots=16"));
         assert!(s.contains("backfilled=4"));
+        assert!(s.contains("tl-overlap= 25.0%"), "{s}");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::baselines::{run_model_based, ContinuousRunner};
 use crate::config::{EngineConfig, Policy};
 use crate::engine::Engine;
-use crate::metrics::Metrics;
+use crate::exec::TimelineStats;
 use crate::sched::Knobs;
 use crate::util::Stopwatch;
 
@@ -34,9 +34,15 @@ pub struct RunReport {
     /// Fraction of weight fetches served from the GPU weight cache
     /// ([`crate::weights`]).
     pub weight_hit_rate: f64,
-    /// Fraction of HtoD bytes that overlapped compute (vs. stalling).
+    /// Fraction of HtoD bytes that overlapped compute (vs. stalling) —
+    /// the raw byte-counter view.
     pub htod_overlap_fraction: f64,
     pub weight_evictions: u64,
+    /// The run's virtual-timeline schedule: makespan, per-stream busy
+    /// time ([`crate::exec::timeline`]). `timeline.overlap_fraction()`
+    /// is the acceptance quantity — nonzero under the module policy,
+    /// zero under the serialized on-demand baselines.
+    pub timeline: TimelineStats,
     /// Greedy token streams (for cross-policy agreement checks).
     pub tokens: Vec<Vec<i32>>,
 }
@@ -46,7 +52,7 @@ impl RunReport {
         format!(
             "{:<14} seqs={:<5} wall={:>7.2}s prefill={:>8.1} tok/s decode={:>8.1} tok/s \
              total={:>8.1} tok/s expert-avg-bsz={:>6.1} pad={:>4.1}% HtoD={} DtoH={} \
-             cache-hit={:>5.1}% overlap={:>5.1}%",
+             cache-hit={:>5.1}% overlap={:>5.1}% tl-overlap={:>5.1}%",
             self.policy.name(),
             self.sequences,
             self.wall_secs,
@@ -59,6 +65,7 @@ impl RunReport {
             crate::util::fmt_bytes(self.dtoh_bytes as f64),
             100.0 * self.weight_hit_rate,
             100.0 * self.htod_overlap_fraction,
+            100.0 * self.timeline.overlap_fraction(),
         )
     }
 }
@@ -91,7 +98,7 @@ pub fn apply_policy_residency(cfg: &mut EngineConfig) {
 /// does). Resets the engine's accumulated metrics first, so a session can
 /// execute several phases without cross-contaminating reports.
 pub fn execute(eng: &mut Engine, prompts: &[Vec<i32>], steps: usize) -> Result<RunReport> {
-    eng.metrics = Metrics::new();
+    eng.reset_accounting();
     let policy = eng.cfg.policy;
     let micro = eng.cfg.baseline_micro_batch.max(1);
     let sw = Stopwatch::start();
@@ -122,6 +129,7 @@ pub fn execute(eng: &mut Engine, prompts: &[Vec<i32>], steps: usize) -> Result<R
         weight_hit_rate: m.weight_hit_rate(),
         htod_overlap_fraction: m.htod_overlap_fraction(),
         weight_evictions: m.weight_evictions,
+        timeline: eng.timeline.stats(),
         tokens,
     })
 }
@@ -166,6 +174,11 @@ mod tests {
             weight_hit_rate: 0.875,
             htod_overlap_fraction: 0.9,
             weight_evictions: 3,
+            timeline: TimelineStats {
+                ops: 10,
+                makespan_secs: 1.5,
+                busy_secs: [1.0, 0.0, 0.5, 0.5],
+            },
             tokens: vec![],
         };
         let s = r.summary();
@@ -174,5 +187,7 @@ mod tests {
         assert!(s.contains("25.0%"));
         assert!(s.contains("cache-hit= 87.5%"));
         assert!(s.contains("overlap= 90.0%"));
+        // 1.5s makespan over 2.0s of stream work → 25% hidden.
+        assert!(s.contains("tl-overlap= 25.0%"), "{s}");
     }
 }

@@ -34,8 +34,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Policy;
 use crate::engine::Engine;
-use crate::exec::{ModuleKind, Plan};
-use crate::metrics::Metrics;
+use crate::exec::{ModuleKind, Plan, Stream, TimelineStats};
 use crate::sched::{self, Knobs, Strategy};
 use crate::serve::{self, Request, ServeReport};
 use crate::server::{self, RunReport};
@@ -177,10 +176,12 @@ impl Session {
 
     /// Live per-module latency profile across buckets (paper App. B),
     /// measured once per session and cached — both the `profile` job and
-    /// the measured strategy search consume it.
+    /// the measured strategy search consume it. Each probe averages the
+    /// spec's `profile_reps` launches (`--profile-reps`).
     pub fn profile(&mut self) -> Result<&ModuleProfile> {
         if self.profile.is_none() {
-            let rows = self.eng.profile_modules()?;
+            let reps = self.spec.profile_reps;
+            let rows = self.eng.profile_modules(reps)?;
             self.profile = Some(ModuleProfile { rows });
         }
         Ok(self.profile.as_ref().unwrap())
@@ -446,6 +447,7 @@ impl Session {
         m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
         m.insert("weight_cache_hit_rate".into(), Json::Num(r.weight_hit_rate));
         m.insert("htod_overlap_fraction".into(), Json::Num(r.htod_overlap_fraction));
+        m.insert("timeline".into(), timeline_json(&r.timeline));
         append_bench_record(&path, Json::Obj(m));
     }
 
@@ -460,14 +462,29 @@ impl Session {
         m.insert("tpot_p99_ms".into(), Json::Num(r.tpot_p99 * 1e3));
         m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
         m.insert("backfilled".into(), Json::Num(r.backfilled as f64));
+        m.insert("timeline".into(), timeline_json(&r.timeline));
         append_bench_record(&path, Json::Obj(m));
     }
 
-    /// Reset the engine's accumulated metrics (each `execute` does this
-    /// itself; exposed for callers interleaving phases manually).
+    /// Reset the engine's accumulated metrics and virtual timeline (each
+    /// `execute` does this itself; exposed for callers interleaving
+    /// phases manually).
     pub fn reset_metrics(&mut self) {
-        self.eng.metrics = Metrics::new();
+        self.eng.reset_accounting();
     }
+}
+
+/// The virtual-timeline block every BENCH_live record carries:
+/// `{makespan_ms, busy per stream in ms, overlap_fraction}` — the
+/// schedule-derived overlap next to the throughput numbers.
+fn timeline_json(st: &TimelineStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("makespan_ms".into(), Json::Num(st.makespan_secs * 1e3));
+    for s in Stream::ALL {
+        m.insert(format!("busy_{}_ms", s.name()), Json::Num(st.busy(s) * 1e3));
+    }
+    m.insert("overlap_fraction".into(), Json::Num(st.overlap_fraction()));
+    Json::Obj(m)
 }
 
 /// How the analytic DAG is wired for each live policy.
@@ -700,6 +717,16 @@ mod tests {
         assert_eq!(runs[0].req("job").as_str(), Some("run"));
         assert!(runs[0].req("decode_tps").as_f64().unwrap() >= 0.0);
         assert_eq!(runs[0].req("plan").req("b").as_usize(), Some(128));
+        // Every record carries the schedule-derived timeline block.
+        let tl = runs[0].req("timeline");
+        assert!(tl.req("makespan_ms").as_f64().unwrap() > 0.0);
+        assert!(tl.req("busy_gpu_ms").as_f64().is_some());
+        assert!(tl.req("busy_dtoh_ms").as_f64().is_some());
+        let ov = tl.req("overlap_fraction").as_f64().unwrap();
+        assert!(
+            ov > 0.0 && ov < 1.0,
+            "module policy must report timeline overlap in (0,1), got {ov}"
+        );
 
         // A file that is not a trajectory must never be clobbered.
         std::fs::write(&path, "definitely not json").unwrap();

@@ -134,6 +134,48 @@ fn continuous_batch(scn: &Scenario) -> usize {
 // Decode throughput (tokens/s) — Table 6 / Table 1 decode columns
 // ---------------------------------------------------------------------------
 
+/// The decode-phase strategy and DAG wiring one system runs with —
+/// shared by the throughput scorer and the overlap predictor so both
+/// describe the same modeled configuration. `None` for llama.cpp, whose
+/// CPU-only path has no offloading DAG.
+fn decode_setup(scn: &Scenario, sys: System) -> Option<(Strategy, Knobs)> {
+    let mk = |b: usize, omega: f64, k: Knobs| {
+        (
+            Strategy { b, b_a: b, b_e: 8192, omega, s_expert: 0, s_params: 0, reuse: k.reuse },
+            k,
+        )
+    };
+    match sys {
+        System::LlamaCpp => None,
+        System::Vllm => Some(mk(continuous_batch(scn), 0.0, Knobs::vllm())),
+        System::DeepSpeed => Some(mk(model_based_batch(scn), 0.0, Knobs::deepspeed())),
+        System::FlexGen => Some(mk(model_based_batch(scn), 0.0, Knobs::flexgen())),
+        System::MoeLightning => {
+            let omega = if scn.model.kv_upproj_factor > 4.0 { 0.0 } else { 0.3 };
+            Some(mk(model_based_batch(scn), omega, Knobs::moe_lightning()))
+        }
+        System::MoeGen(v) => {
+            let knobs = match v {
+                MoeGenVariant::G => Knobs::moe_gen_gpu_only(),
+                MoeGenVariant::H => Knobs::moe_gen(),
+            };
+            Some((sched::search_decode(scn, &knobs).strategy, knobs))
+        }
+    }
+}
+
+/// Predicted decode-phase overlap fraction for one system: its modeled
+/// strategy's offloading DAG replayed onto the same virtual timeline the
+/// live executor reports from ([`sched::predicted_overlap`]). `None` for
+/// infeasible cells and for llama.cpp (no offloading DAG to overlap).
+pub fn decode_overlap(scn: &Scenario, sys: System) -> Option<f64> {
+    if !feasible(scn, sys) {
+        return None;
+    }
+    let (s, k) = decode_setup(scn, sys)?;
+    Some(sched::predicted_overlap(scn, &s, &k, true))
+}
+
 pub fn decode_tp(scn: &Scenario, sys: System) -> Option<f64> {
     if !feasible(scn, sys) {
         return None;
@@ -151,47 +193,42 @@ pub fn decode_tp(scn: &Scenario, sys: System) -> Option<f64> {
             let eff_bw = hw.cpu_mem_bw * 0.5;
             Some(eff_bw / active)
         }
-        System::Vllm => {
-            let b = continuous_batch(scn);
-            // Offloaded weights stream on demand each step; no reuse.
-            let k = Knobs::vllm();
-            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0,
-                               reuse: k.reuse };
+        System::Vllm | System::DeepSpeed | System::FlexGen | System::MoeLightning => {
+            // Offloaded weights stream per the policy's Knobs; the batch
+            // bound and ω come from the shared per-system setup.
+            let (s, k) = decode_setup(scn, sys).expect("DAG-scored system");
             let t = decode_step_time(scn, &s, &k);
-            Some(b as f64 / t)
+            Some(s.b as f64 / t)
         }
-        System::DeepSpeed => {
-            let b = model_based_batch(scn);
-            let k = Knobs::deepspeed();
-            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0,
-                               reuse: k.reuse };
+        System::MoeGen(_) => {
+            // Shared setup runs the strategy search; re-scoring the
+            // winner with decode_step_time reproduces the search's own
+            // objective (throughput = B / step time).
+            let (s, k) = decode_setup(scn, sys).expect("searchable system");
             let t = decode_step_time(scn, &s, &k);
-            Some(b as f64 / t)
+            Some(s.b as f64 / t)
         }
-        System::FlexGen => {
-            let b = model_based_batch(scn);
-            let k = Knobs::flexgen();
-            let s = Strategy { b, b_a: b, b_e: 8192, omega: 0.0, s_expert: 0, s_params: 0,
-                               reuse: k.reuse };
+    }
+}
+
+/// Decode throughput *and* predicted overlap in one pass: the
+/// per-system setup — including MoE-Gen's strategy search, the
+/// expensive part — runs once and feeds both numbers. This is
+/// `moe-gen simulate`'s row source; [`decode_tp`]/[`decode_overlap`]
+/// remain as the single-quantity APIs.
+pub fn decode_row(scn: &Scenario, sys: System) -> (Option<f64>, Option<f64>) {
+    if !feasible(scn, sys) {
+        return (None, None);
+    }
+    match decode_setup(scn, sys) {
+        // llama.cpp: analytic CPU path, no offloading DAG to overlap.
+        None => (decode_tp(scn, sys), None),
+        Some((s, k)) => {
             let t = decode_step_time(scn, &s, &k);
-            Some(b as f64 / t)
-        }
-        System::MoeLightning => {
-            let b = model_based_batch(scn);
-            let omega = if m.kv_upproj_factor > 4.0 { 0.0 } else { 0.3 };
-            let k = Knobs::moe_lightning();
-            let s = Strategy { b, b_a: b, b_e: 8192, omega, s_expert: 0, s_params: 0,
-                               reuse: k.reuse };
-            let t = decode_step_time(scn, &s, &k);
-            Some(b as f64 / t)
-        }
-        System::MoeGen(v) => {
-            let knobs = match v {
-                MoeGenVariant::G => Knobs::moe_gen_gpu_only(),
-                MoeGenVariant::H => Knobs::moe_gen(),
-            };
-            let res = sched::search_decode(scn, &knobs);
-            Some(res.throughput)
+            (
+                Some(s.b as f64 / t),
+                Some(sched::predicted_overlap(scn, &s, &k, true)),
+            )
         }
     }
 }
@@ -395,8 +432,9 @@ pub fn table1_row(scn: &Scenario, sys: System, prefill: bool) -> Option<(f64, f6
 }
 
 /// One `(system name, decode tok/s, prefill tok/s)` row per system in
-/// table order — the structured payload behind `moe-gen simulate` and the
-/// spec layer's `Simulate` job (`None` = the paper's "Fail" cells).
+/// table order — the structured per-scenario payload for library
+/// consumers (`None` = the paper's "Fail" cells). `moe-gen simulate`
+/// additionally prints each system's [`decode_overlap`] column.
 pub fn system_rows(scn: &Scenario) -> Vec<(&'static str, Option<f64>, Option<f64>)> {
     System::table_order()
         .iter()
@@ -467,6 +505,45 @@ mod tests {
             "sparse model must gain more: mixtral {g_mix:.2}x vs deepseek {g_dsv:.2}x"
         );
         assert!(g_mix >= 0.9, "MoE-Gen should not lose on dense-ish prefill");
+    }
+
+    #[test]
+    fn decode_row_matches_split_apis() {
+        let s = scn(model::mixtral_8x7b());
+        let (tp, ov) = decode_row(&s, System::DeepSpeed);
+        assert_eq!(tp, decode_tp(&s, System::DeepSpeed));
+        assert_eq!(ov, decode_overlap(&s, System::DeepSpeed));
+        let (tp_l, ov_l) = decode_row(&s, System::LlamaCpp);
+        assert!(tp_l.is_some() && ov_l.is_none(), "llama.cpp has no DAG overlap");
+        let r1 = scn(model::deepseek_r1());
+        assert_eq!(decode_row(&r1, System::Vllm), (None, None), "Fail cells stay None");
+    }
+
+    #[test]
+    fn system_rows_cover_table_order() {
+        let s = scn(model::mixtral_8x7b());
+        let rows = system_rows(&s);
+        assert_eq!(rows.len(), System::table_order().len());
+        assert_eq!(rows[0].0, System::LlamaCpp.name());
+        assert!(rows.iter().any(|(n, d, _)| n.starts_with("MoE-Gen") && d.is_some()));
+    }
+
+    #[test]
+    fn decode_overlap_prediction_orders_policies() {
+        // Predicted from the same timeline model the live executor
+        // reports from: the prefetching module policy hides transfers
+        // under compute; the on-demand model-based policy serializes
+        // most of its fetch traffic.
+        let s = scn(model::mixtral_8x7b());
+        let mg = decode_overlap(&s, System::MoeGen(MoeGenVariant::H)).unwrap();
+        let ds = decode_overlap(&s, System::DeepSpeed).unwrap();
+        assert!(mg > 0.0, "MoE-Gen must predict nonzero overlap");
+        assert!(mg < 1.0);
+        assert!(ds < mg, "on-demand ({ds}) must overlap less than MoE-Gen ({mg})");
+        assert!(decode_overlap(&s, System::LlamaCpp).is_none(), "no offloading DAG");
+        // Fail cells stay None.
+        let r1 = scn(model::deepseek_r1());
+        assert!(decode_overlap(&r1, System::Vllm).is_none());
     }
 
     #[test]

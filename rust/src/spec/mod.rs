@@ -272,6 +272,10 @@ pub struct JobSpec {
     pub search_basis: SearchBasis,
     /// Table selector for [`JobKind::Tables`].
     pub table: String,
+    /// Launches averaged per probe in the module profile (paper App. B;
+    /// `Session::profile`, `--profile-reps`). More reps smooth noisy
+    /// measured latencies at profiling-time cost. Must be ≥ 1.
+    pub profile_reps: usize,
     /// Where `Session::run`/`serve` append their trajectory record;
     /// `None` disables recording.
     pub bench_log: Option<PathBuf>,
@@ -288,6 +292,7 @@ impl Default for JobSpec {
             strategy: StrategySource::EngineDefaults,
             search_basis: SearchBasis::Auto,
             table: "all".to_string(),
+            profile_reps: 3,
             bench_log: Some(default_bench_log()),
         }
     }
@@ -352,6 +357,15 @@ impl JobSpec {
         }
         if self.table.is_empty() {
             return Err(anyhow!("table selector must not be empty (try \"all\")"));
+        }
+        if self.profile_reps == 0 {
+            return Err(anyhow!("profile_reps must be >= 1 (each probe needs a launch)"));
+        }
+        if self.profile_reps > 1000 {
+            return Err(anyhow!(
+                "profile_reps = {} is unreasonably large (max 1000)",
+                self.profile_reps
+            ));
         }
         // Scenario names resolve eagerly so `--model mixtrall-8x7b`
         // fails here, not after a 30 s profile when the analytic
@@ -452,6 +466,7 @@ impl JobSpec {
         top.insert("strategy".into(), strategy);
         top.insert("search_basis".into(), Json::Str(self.search_basis.slug().into()));
         top.insert("table".into(), Json::Str(self.table.clone()));
+        top.insert("profile_reps".into(), Json::Num(self.profile_reps as f64));
         top.insert(
             "bench_log".into(),
             self.bench_log
@@ -480,7 +495,7 @@ impl JobSpec {
             v,
             &[
                 "job", "engine", "workload", "serve", "scenario", "strategy", "search_basis",
-                "table", "bench_log",
+                "table", "profile_reps", "bench_log",
             ],
             "spec",
         )?;
@@ -610,6 +625,7 @@ impl JobSpec {
         if let Some(t) = v.get("table").and_then(Json::as_str) {
             spec.table = t.to_string();
         }
+        get_usize(v, "spec", "profile_reps", &mut spec.profile_reps)?;
         if let Some(b) = v.get("bench_log") {
             spec.bench_log = match b {
                 Json::Null => None,
@@ -752,6 +768,7 @@ mod tests {
             },
             search_basis: SearchBasis::Measured,
             table: "9".into(),
+            profile_reps: 7,
             bench_log: None,
         }
     }
@@ -800,6 +817,7 @@ mod tests {
         assert!(JobSpec::from_str(r#"{"serve": {"kv_slots": 2.5}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"throttle_htod": "fast"}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"bench_log": true}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"profile_reps": 2.5}"#).is_err());
         // Null clears optionals; integral values (negative eos included) pass.
         let ok = JobSpec::from_str(
             r#"{"engine": {"seed": 3, "throttle_htod": null}, "serve": {"eos": -1}}"#,
@@ -833,6 +851,12 @@ mod tests {
         let mut bad = JobSpec::default();
         bad.serve.kv_slots = Some(0);
         assert!(bad.validate().is_err(), "zero admission slots");
+        let bad = JobSpec { profile_reps: 0, ..JobSpec::default() };
+        assert!(bad.validate().is_err(), "zero profile reps");
+        let bad = JobSpec { profile_reps: 100_000, ..JobSpec::default() };
+        assert!(bad.validate().is_err(), "absurd profile reps");
+        let ok = JobSpec { profile_reps: 10, ..JobSpec::default() };
+        assert!(ok.validate().is_ok());
         let mut bad = JobSpec::default();
         bad.scenario.model = "mixtral-9x9b".into();
         assert!(bad.validate().is_err(), "unknown model name");

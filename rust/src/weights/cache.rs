@@ -17,6 +17,7 @@
 
 use std::collections::HashMap;
 
+use crate::exec::timeline::EventId;
 use crate::memory::{MemoryPool, TransferHandle};
 use crate::runtime::RtConfig;
 
@@ -95,8 +96,10 @@ enum Residency {
     /// Space reserved; the transfer job is about to be attached.
     Reserved,
     /// An overlapped prefetch is crossing the link; the handle completes
-    /// it when the weight is first used (or at a phase drain).
-    InFlight(TransferHandle),
+    /// it when the weight is first used (or at a phase drain). The event
+    /// is the transfer's op on the virtual timeline
+    /// ([`crate::exec::timeline`]) — a consuming launch depends on it.
+    InFlight(TransferHandle, Option<EventId>),
 }
 
 struct Entry {
@@ -130,8 +133,9 @@ pub enum Acquire {
     /// Resident — no link traffic needed.
     Hit,
     /// An overlapped prefetch was in flight for this key; the caller
-    /// completes it by waiting the handle (bytes were metered at issue).
-    HitInFlight(TransferHandle),
+    /// completes it by waiting the handle (bytes were metered at issue)
+    /// and makes its launch depend on the transfer's timeline event.
+    HitInFlight(TransferHandle, Option<EventId>),
     /// Not resident; space is reserved — the caller must transfer the
     /// weight's bytes across the link.
     Miss,
@@ -213,9 +217,9 @@ impl WeightCache {
             e.pins += 1;
             self.stats.hits += 1;
             return match std::mem::replace(&mut e.state, Residency::Resident) {
-                Residency::InFlight(h) => {
+                Residency::InFlight(h, ev) => {
                     self.stats.prefetch_useful += 1;
-                    Acquire::HitInFlight(h)
+                    Acquire::HitInFlight(h, ev)
                 }
                 _ => Acquire::Hit,
             };
@@ -264,14 +268,23 @@ impl WeightCache {
         true
     }
 
-    /// Attach the in-flight transfer handle to a reservation made by
+    /// Attach the in-flight transfer handle (and its virtual-timeline
+    /// event) to a reservation made by
     /// [`reserve_prefetch`](WeightCache::reserve_prefetch).
-    pub fn fulfill_prefetch(&mut self, key: WeightKey, handle: TransferHandle) {
+    pub fn fulfill_prefetch(&mut self, key: WeightKey, handle: TransferHandle, ev: Option<EventId>) {
         if let Some(e) = self.entries.get_mut(&key) {
             if matches!(e.state, Residency::Reserved) {
-                e.state = Residency::InFlight(handle);
+                e.state = Residency::InFlight(handle, ev);
             }
         }
+    }
+
+    /// Overlapped prefetches still crossing the link.
+    pub fn in_flight_len(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| matches!(e.state, Residency::InFlight(..)))
+            .count()
     }
 
     /// Complete every outstanding in-flight prefetch (phase boundary).
@@ -280,13 +293,13 @@ impl WeightCache {
         let keys: Vec<WeightKey> = self
             .entries
             .iter()
-            .filter(|(_, e)| matches!(e.state, Residency::InFlight(_)))
+            .filter(|(_, e)| matches!(e.state, Residency::InFlight(..)))
             .map(|(k, _)| *k)
             .collect();
         let mut n = 0;
         for k in keys {
             if let Some(e) = self.entries.get_mut(&k) {
-                if let Residency::InFlight(h) =
+                if let Residency::InFlight(h, _) =
                     std::mem::replace(&mut e.state, Residency::Resident)
                 {
                     h.wait();
@@ -354,7 +367,7 @@ impl WeightCache {
         match victim {
             Some(k) => {
                 let e = self.entries.remove(&k).expect("victim exists");
-                if let Residency::InFlight(h) = e.state {
+                if let Residency::InFlight(h, _) = e.state {
                     h.wait();
                 }
                 self.pool.free(e.bytes);
@@ -440,13 +453,16 @@ mod tests {
         let k = WeightKey::Dense(1);
         assert!(c.reserve_prefetch(k, 300));
         assert!(!c.reserve_prefetch(k, 300), "double-issue suppressed");
-        c.fulfill_prefetch(k, eng.account(300));
+        c.fulfill_prefetch(k, eng.account(300), None);
+        assert_eq!(c.in_flight_len(), 1);
         match c.acquire(k, 300, 0) {
-            Acquire::HitInFlight(h) => {
+            Acquire::HitInFlight(h, ev) => {
+                assert_eq!(ev, None);
                 h.wait();
             }
             _ => panic!("expected an in-flight hit"),
         }
+        assert_eq!(c.in_flight_len(), 0);
         c.release(k);
         assert_eq!(c.stats().prefetch_issued, 1);
         assert_eq!(c.stats().prefetch_useful, 1);

@@ -25,6 +25,14 @@
 //!   multi-round weight reuse), so a searched
 //!   [`crate::sched::Strategy`] configures the live residency layer.
 //!
+//! Residency rides the virtual multi-stream timeline
+//! ([`crate::exec::timeline`]): every demand fetch and overlapped
+//! prefetch is enqueued on the HtoD stream at issue time, an in-flight
+//! prefetch carries its timeline event inside the cache entry
+//! ([`cache::Acquire::HitInFlight`]), and the launch that consumes it
+//! depends on that event — so the reported overlap fraction reflects the
+//! schedule the residency layer actually produced.
+//!
 //! Residency is a transfer/placement policy only — it never touches
 //! module math, so greedy tokens are bit-identical with the cache on or
 //! off (asserted in `tests/integration_weights.rs`).

@@ -156,7 +156,7 @@ fn rejects_oversized_and_empty_prompts() {
 #[test]
 fn profile_modules_covers_buckets() {
     let mut eng = engine(0.0);
-    let prof = eng.profile_modules().unwrap();
+    let prof = eng.profile_modules(3).unwrap();
     let experts: Vec<usize> = prof
         .iter()
         .filter(|(n, _, _)| n == "expert_ffn")
@@ -166,4 +166,9 @@ fn profile_modules_covers_buckets() {
     for (_, _, secs) in &prof {
         assert!(*secs > 0.0);
     }
+    // The reps knob is validated, and a single-rep profile still covers
+    // the same stage × bucket grid.
+    assert!(eng.profile_modules(0).is_err(), "zero reps must be rejected");
+    let prof1 = eng.profile_modules(1).unwrap();
+    assert_eq!(prof1.len(), prof.len(), "reps must not change profile coverage");
 }

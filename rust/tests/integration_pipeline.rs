@@ -288,7 +288,7 @@ fn kv_memory_accounted_and_released() {
 #[test]
 fn profile_modules_covers_pipeline_stages_and_buckets() {
     let mut eng = ref_engine(EngineConfig::default());
-    let prof = eng.profile_modules().unwrap();
+    let prof = eng.profile_modules(3).unwrap();
     let experts: Vec<usize> = prof
         .iter()
         .filter(|(n, _, _)| n == "expert_ffn")
@@ -316,6 +316,93 @@ fn profile_modules_covers_pipeline_stages_and_buckets() {
     }
     // Profiling records through the same metrics sink the pipeline uses.
     assert!(!eng.metrics.pipeline_stages().is_empty());
+}
+
+#[test]
+fn pipelined_executor_overlaps_and_matches_sequential_reference() {
+    // The tentpole acceptance: under the module policy the wave executor
+    // reports, from the virtual timeline, a makespan strictly below the
+    // sum of per-stream busy time (overlap fraction > 0) — while greedy
+    // tokens stay bit-identical to the sequential monolithic reference.
+    let steps = 5;
+    let want = RefMonolith::new().generate(&prompts(), steps);
+    let mut eng = ref_engine(EngineConfig::default());
+    let got = eng.generate(&prompts(), steps).unwrap();
+    assert_eq!(got, want, "pipelined executor changed greedy tokens");
+    eng.timeline.verify().unwrap();
+    let st = eng.timeline.stats();
+    assert!(st.ops > 0);
+    for s in moe_gen::exec::Stream::ALL {
+        assert!(
+            st.busy(s) <= st.makespan_secs + 1e-9,
+            "{} busy exceeds makespan",
+            s.name()
+        );
+    }
+    assert!(
+        st.makespan_secs < st.busy_total(),
+        "module policy must overlap streams: makespan {} vs busy {}",
+        st.makespan_secs,
+        st.busy_total()
+    );
+    assert!(st.overlap_fraction() > 0.0);
+    assert_eq!(
+        eng.metrics.timeline, st,
+        "reported overlap must come from the timeline, not ad-hoc counters"
+    );
+}
+
+#[test]
+fn on_demand_policy_serializes_timeline_with_identical_tokens() {
+    // The stall-per-launch baseline (prefetch off, cache off — what
+    // `--policy deepspeed` maps to): the schedule degenerates to fully
+    // serial, so the timeline reports exactly zero overlap; tokens still
+    // match the reference bit-for-bit.
+    let steps = 4;
+    let want = RefMonolith::new().generate(&prompts(), steps);
+    let mut eng = ref_engine(EngineConfig {
+        prefetch: false,
+        weight_cache_bytes: 0,
+        ..EngineConfig::default()
+    });
+    let got = eng.generate(&prompts(), steps).unwrap();
+    assert_eq!(got, want, "on-demand execution changed greedy tokens");
+    eng.timeline.verify().unwrap();
+    let st = eng.timeline.stats();
+    assert!(st.ops > 0);
+    assert!(
+        (st.makespan_secs - st.busy_total()).abs() < 1e-6 * st.busy_total().max(1.0),
+        "on-demand schedule must be fully serial: makespan {} vs busy {}",
+        st.makespan_secs,
+        st.busy_total()
+    );
+    assert_eq!(st.overlap_fraction(), 0.0);
+}
+
+#[test]
+fn omega_split_rides_the_cpu_stream() {
+    // With ω > 0 the CPU share lands on the CpuAttn stream and overlaps
+    // the staged GPU attention — busy time on both compute streams.
+    let mut eng = ref_engine(EngineConfig { omega: 0.5, ..EngineConfig::default() });
+    let _ = eng.generate(&prompts(), 4).unwrap();
+    let st = eng.timeline.stats();
+    assert!(st.busy(moe_gen::exec::Stream::CpuAttn) > 0.0, "ω share missing from timeline");
+    assert!(st.busy(moe_gen::exec::Stream::GpuCompute) > 0.0);
+    assert!(st.busy(moe_gen::exec::Stream::DtoH) > 0.0, "KV appends must ride DtoH");
+    assert!(st.overlap_fraction() > 0.0);
+}
+
+#[test]
+fn phases_drain_all_outstanding_transfers() {
+    // Every phase ends with a drain: nothing may remain in flight — not
+    // in the pending list, not inside the weight cache.
+    let mut eng = ref_engine(EngineConfig::default());
+    let (mut state, _) = eng.prefill(&prompts()).unwrap();
+    assert_eq!(eng.outstanding_transfers(), 0, "prefill left transfers in flight");
+    let _ = eng.decode_step(&mut state).unwrap();
+    assert_eq!(eng.outstanding_transfers(), 0, "decode left transfers in flight");
+    let bytes = state.kv.read().unwrap().host_bytes();
+    eng.host_pool.free(bytes);
 }
 
 #[test]
