@@ -1,26 +1,44 @@
 //! `cargo bench --bench hotpath` — micro-benchmarks of the coordinator's
 //! hot paths (the §Perf targets in EXPERIMENTS.md):
 //!
-//!   * cpu_attn        — rust GQA attention kernel (the ω split's CPU side)
-//!   * gather/scatter  — the module-batching boundary
-//!   * kv_gather       — staging-window pack (HtoD engine job body)
-//!   * dag_dp          — critical-path DP on a DeepSeek-sized DAG
-//!   * search          — full decode strategy search
-//!   * module_exec     — one expert_ffn execution on PJRT (needs artifacts)
+//!   * cpu_attn          — rust GQA attention kernel (the ω split's CPU side)
+//!   * grouped_batch     — counting-sort grouping of an accumulated batch
+//!   * gather_scatter    — the legacy per-group batching boundary
+//!   * grouped_vs_gather — grouped hot path vs legacy gather/scatter at
+//!                         1K/4K/8K tokens; prints `speedup=` lines and
+//!                         appends a machine-readable record per shape to
+//!                         `BENCH_live.json` (the CI smoke step greps the
+//!                         4K line and fails if grouped is slower)
+//!   * kv_gather         — staging-window pack (HtoD engine job body)
+//!   * dag_dp            — critical-path DP on a DeepSeek-sized DAG
+//!   * search            — full decode strategy search
+//!   * module_exec       — one expert_ffn execution on PJRT (needs artifacts)
 //!
 //! Hand-rolled harness (criterion unavailable offline): N timed iters,
-//! reports min/mean.
+//! reports min/mean. Positional args filter by substring, so
+//! `cargo bench --bench hotpath -- grouped_vs_gather` runs one section.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use moe_gen::batching::{gather_rows, group_by_expert, scatter_add};
+use moe_gen::batching::{gather_rows, micro_batches, scatter_add, GroupedBatch};
 use moe_gen::cpu_attn::{decode_attention, Numerics, SeqAttn};
+use moe_gen::exec::TensorArena;
 use moe_gen::kv::KvCache;
+use moe_gen::runtime::RtConfig;
 use moe_gen::sched::{self, Knobs, Scenario, Strategy};
+use moe_gen::session::append_bench_record;
+use moe_gen::util::json::Json;
+use moe_gen::util::pick_bucket;
 use moe_gen::util::rng::Rng;
 use moe_gen::{hw, model};
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn enabled(filters: &[String], name: &str) -> bool {
+    filters.is_empty() || filters.iter().any(|f| name.contains(f.as_str()))
+}
+
+/// Timed loop: returns (min, mean) seconds over `iters` after one warm-up.
+fn time_secs<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64) {
     f(); // warm-up
     let mut best = f64::INFINITY;
     let mut sum = 0.0;
@@ -31,14 +49,111 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         best = best.min(dt);
         sum += dt;
     }
+    (best, sum / iters as f64)
+}
+
+fn bench<F: FnMut()>(filters: &[String], name: &str, iters: usize, f: F) {
+    if !enabled(filters, name) {
+        return;
+    }
+    let (best, mean) = time_secs(iters, f);
     println!(
         "bench: {name:<22} min {:>10.3} ms   mean {:>10.3} ms   ({iters} iters)",
         best * 1e3,
-        sum / iters as f64 * 1e3
+        mean * 1e3
     );
 }
 
+/// Random routed batch: `n` tokens × `k` distinct experts of `e`, with
+/// normalized-ish weights — the shape the expert phase consumes.
+fn routed_batch(rng: &mut Rng, n: usize, k: usize, e: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut idx = Vec::with_capacity(n * k);
+    let mut w = Vec::with_capacity(n * k);
+    for _ in 0..n {
+        let a = rng.below(e);
+        let mut b = rng.below(e);
+        if b == a {
+            b = (b + 1) % e;
+        }
+        idx.extend([a as i32, b as i32]);
+        let wa = rng.f64() as f32 * 0.8 + 0.1;
+        w.extend([wa, 1.0 - wa]);
+    }
+    (idx, w)
+}
+
+/// Legacy batching boundary: per-expert row lists, a fresh bucket-padded
+/// gather per micro-batch, weighted scatter back (the pre-grouped hot
+/// path this PR replaced — kept as the comparison baseline).
+#[allow(deprecated, clippy::too_many_arguments)]
+fn gather_scatter_wave(
+    acc: &mut [f32],
+    x: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    n: usize,
+    k: usize,
+    e: usize,
+    dim: usize,
+    micro: usize,
+    buckets: &[usize],
+) {
+    for g in moe_gen::batching::group_by_expert(idx, w, n, k, e) {
+        for r in micro_batches(g.rows.len(), micro) {
+            let rows = &g.rows[r.clone()];
+            let ws = &g.weights[r];
+            let bucket = pick_bucket(rows.len(), buckets).expect("micro clamped to max bucket");
+            let gathered = gather_rows(x, dim, rows, bucket);
+            scatter_add(acc, dim, rows, ws, &gathered);
+        }
+    }
+}
+
+/// Grouped hot path: counting-sort permutation into a reused scratch
+/// buffer, contiguous per-expert segments consumed zero-copy at full
+/// buckets (pad copies only for sub-bucket tails), weighted scatter.
+#[allow(clippy::too_many_arguments)]
+fn grouped_wave(
+    acc: &mut [f32],
+    x: &[f32],
+    idx: &[i32],
+    w: &[f32],
+    n: usize,
+    k: usize,
+    e: usize,
+    dim: usize,
+    micro: usize,
+    buckets: &[usize],
+    arena: &mut TensorArena,
+) {
+    let g = GroupedBatch::build(idx, w, n, k, e);
+    let mut sorted = arena.take(n * k, dim);
+    for (slot, &t) in g.perm.iter().enumerate() {
+        sorted.row_mut(slot).copy_from_slice(&x[t * dim..(t + 1) * dim]);
+    }
+    for ex in 0..e {
+        let seg = g.segment(ex);
+        for r in micro_batches(seg.len(), micro) {
+            let abs = seg.start + r.start..seg.start + r.end;
+            let rows = &g.perm[abs.clone()];
+            let ws = &g.weights[abs.clone()];
+            let bucket = pick_bucket(rows.len(), buckets).expect("micro clamped to max bucket");
+            if bucket == rows.len() {
+                // Zero-copy: the segment slice *is* the kernel input.
+                scatter_add(acc, dim, rows, ws, sorted.rows_slice(abs));
+            } else {
+                let mut pad = arena.take_zeroed(bucket, dim);
+                pad.data[..rows.len() * dim].copy_from_slice(sorted.rows_slice(abs));
+                scatter_add(acc, dim, rows, ws, &pad.data);
+                arena.put(pad);
+            }
+        }
+    }
+    arena.put(sorted);
+}
+
 fn main() {
+    let filters: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let mut rng = Rng::new(1);
 
     // -- cpu_attn: 64 seqs, ctx 128, 4 heads (tiny-MoE shape) ------------
@@ -51,33 +166,73 @@ fn main() {
         let seqs: Vec<SeqAttn<'_>> =
             data.iter().map(|(q, k, v)| SeqAttn { q, k, v, len }).collect();
         let mut out = vec![Vec::new(); b];
-        bench("cpu_attn_b64_ctx128", 50, || {
+        bench(&filters, "cpu_attn_b64_ctx128", 50, || {
             decode_attention(&seqs, nh, nkv, hd, Numerics::Bf16Consistent, &mut out, 8);
         });
-        bench("cpu_attn_1thread", 50, || {
+        bench(&filters, "cpu_attn_1thread", 50, || {
             decode_attention(&seqs, nh, nkv, hd, Numerics::Bf16Consistent, &mut out, 1);
         });
     }
 
-    // -- expert gather/scatter over a 4096-token accumulated batch ------
+    // -- expert batching boundary over a 4096-token accumulated batch ----
+    // Bucket geometry comes from the engine's own config: pick_bucket over
+    // the tiny model's expert_buckets, micro-batched at the largest bucket
+    // (an expert sees ~n*k/e ≈ 1024 rows here — above the 512 max).
+    let c = RtConfig::tiny();
+    let micro = *c.expert_buckets.last().unwrap();
     {
-        let (n, k, e, dim) = (4096usize, 2usize, 8usize, 64usize);
+        let (n, k, e, dim) = (4096usize, 2usize, 8usize, c.hidden_size);
         let x = rng.normal_vec(n * dim);
-        let idx: Vec<i32> = (0..n * k).map(|_| rng.below(e) as i32).collect();
-        let w: Vec<f32> = (0..n * k).map(|_| 0.5f32).collect();
-        bench("group_by_expert_4k", 100, || {
-            let g = group_by_expert(&idx, &w, n, k, e);
-            std::hint::black_box(g.len());
+        let (idx, w) = routed_batch(&mut rng, n, k, e);
+        bench(&filters, "grouped_batch_build_4k", 100, || {
+            let g = GroupedBatch::build(&idx, &w, n, k, e);
+            std::hint::black_box(g.perm.len());
         });
-        let groups = group_by_expert(&idx, &w, n, k, e);
         let mut acc = vec![0.0f32; n * dim];
-        bench("gather_scatter_4k", 50, || {
-            for g in &groups {
-                let bucket = g.rows.len().next_power_of_two();
-                let gathered = gather_rows(&x, dim, &g.rows, bucket);
-                scatter_add(&mut acc, dim, &g.rows, &g.weights, &gathered);
-            }
+        bench(&filters, "gather_scatter_4k", 50, || {
+            gather_scatter_wave(&mut acc, &x, &idx, &w, n, k, e, dim, micro, &c.expert_buckets);
         });
+    }
+
+    // -- grouped hot path vs legacy gather/scatter across batch sizes ----
+    // The tentpole's acceptance bench: one `speedup=` line per shape
+    // (CI asserts grouped >= gather at n=4096) and one machine-readable
+    // record per shape appended to the BENCH_live.json trajectory.
+    if enabled(&filters, "grouped_vs_gather") {
+        let (k, e, dim) = (2usize, 8usize, c.hidden_size);
+        let mut arena = TensorArena::new();
+        let bench_path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_live.json");
+        for n in [1024usize, 4096, 8192] {
+            let x = rng.normal_vec(n * dim);
+            let (idx, w) = routed_batch(&mut rng, n, k, e);
+            let mut acc = vec![0.0f32; n * dim];
+            let iters = if n >= 8192 { 20 } else { 40 };
+            let (_, gather_mean) = time_secs(iters, || {
+                gather_scatter_wave(&mut acc, &x, &idx, &w, n, k, e, dim, micro, &c.expert_buckets);
+            });
+            let (_, grouped_mean) = time_secs(iters, || {
+                grouped_wave(
+                    &mut acc, &x, &idx, &w, n, k, e, dim, micro, &c.expert_buckets, &mut arena,
+                );
+            });
+            let speedup = gather_mean / grouped_mean;
+            println!(
+                "bench: grouped_vs_gather n={n} gather {:>8.3} ms   grouped {:>8.3} ms   \
+                 speedup={speedup:.3}",
+                gather_mean * 1e3,
+                grouped_mean * 1e3
+            );
+            let mut m = BTreeMap::new();
+            m.insert("bench_name".into(), Json::Str("hotpath_grouped_vs_gather".into()));
+            m.insert("n_tokens".into(), Json::Num(n as f64));
+            m.insert("top_k".into(), Json::Num(k as f64));
+            m.insert("num_experts".into(), Json::Num(e as f64));
+            m.insert("gather_ms".into(), Json::Num(gather_mean * 1e3));
+            m.insert("grouped_ms".into(), Json::Num(grouped_mean * 1e3));
+            m.insert("speedup".into(), Json::Num(speedup));
+            append_bench_record(&bench_path, Json::Obj(m));
+        }
     }
 
     // -- KV staging-window gather (128 seqs, cap 128) --------------------
@@ -90,14 +245,14 @@ fn main() {
             kv.set_len(s, 100);
         }
         let lens = vec![100usize; 128];
-        bench("kv_gather_b128", 50, || {
+        bench(&filters, "kv_gather_b128", 50, || {
             let k = kv.gather_side(0, &slots, &lens, 128, true);
             std::hint::black_box(k.len());
         });
     }
 
     // -- DAG DP on a DeepSeek-scale decode DAG ---------------------------
-    {
+    if enabled(&filters, "dag") {
         let scn = Scenario::new(model::deepseek_v2(), hw::c2(), 512, 256);
         let s = Strategy {
             b: 1024, b_a: 64, b_e: 8192, omega: 0.0,
@@ -105,26 +260,26 @@ fn main() {
         };
         let g = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 3);
         println!("(dag nodes: {})", g.len());
-        bench("dag_critical_path", 100, || {
+        bench(&filters, "dag_critical_path", 100, || {
             std::hint::black_box(g.critical_path());
         });
-        bench("dag_simulate", 100, || {
+        bench(&filters, "dag_simulate", 100, || {
             std::hint::black_box(g.simulate());
         });
-        bench("dag_build_3layers", 50, || {
+        bench(&filters, "dag_build_3layers", 50, || {
             let g = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 3);
             std::hint::black_box(g.len());
         });
     }
 
     // -- full decode strategy search --------------------------------------
-    {
+    if enabled(&filters, "search") {
         let scn = Scenario::new(model::mixtral_8x7b(), hw::c2(), 512, 256);
-        bench("search_decode_8x7b", 5, || {
+        bench(&filters, "search_decode_8x7b", 5, || {
             std::hint::black_box(sched::search_decode(&scn, &Knobs::moe_gen()).throughput);
         });
         let scn2 = Scenario::new(model::deepseek_v2(), hw::c2(), 512, 256);
-        bench("search_decode_dsv2", 3, || {
+        bench(&filters, "search_decode_dsv2", 3, || {
             std::hint::black_box(sched::search_decode(&scn2, &Knobs::moe_gen()).throughput);
         });
     }
@@ -143,7 +298,7 @@ fn main() {
             let wd = rt.weights.get("l0.e0.wd").unwrap();
             let spec = rt.artifacts.variant("expert_ffn", b).unwrap().clone();
             let _ = rt.execute(&spec, &[wg.as_ref(), wu.as_ref(), wd.as_ref(), &x]);
-            bench(&format!("pjrt_expert_ffn_b{b}"), 30, || {
+            bench(&filters, &format!("pjrt_expert_ffn_b{b}"), 30, || {
                 let out = rt
                     .execute(&spec, &[wg.as_ref(), wu.as_ref(), wd.as_ref(), &x])
                     .unwrap();
@@ -155,7 +310,7 @@ fn main() {
             let (bg, _) = rt.weight_buffer("l0.e0.wg").unwrap();
             let (bu, _) = rt.weight_buffer("l0.e0.wu").unwrap();
             let (bd, _) = rt.weight_buffer("l0.e0.wd").unwrap();
-            bench(&format!("pjrt_expert_cached_b{b}"), 30, || {
+            bench(&filters, &format!("pjrt_expert_cached_b{b}"), 30, || {
                 let xb = rt.upload(&x).unwrap();
                 let out = rt
                     .execute_b(&spec, &[bg.as_ref(), bu.as_ref(), bd.as_ref(), &xb])

@@ -6,13 +6,20 @@
 //! * attention runs in micro-batches of `b_a` sequences;
 //! * their outputs **accumulate** in host memory ([`Accumulator`]);
 //! * the router assigns the accumulated tokens to experts, and each expert
-//!   runs once over *all* tokens routed to it ([`group_by_expert`] →
-//!   gather → expert kernel → [`scatter_add`]), turning the per-expert
-//!   batch from `b·k/E` into `B·k/E` tokens.
+//!   runs once over *all* tokens routed to it ([`GroupedBatch`] →
+//!   contiguous segment → expert kernel → [`scatter_add`]), turning the
+//!   per-expert batch from `b·k/E` into `B·k/E` tokens.
 //!
-//! The gather/scatter pair is the module-batching boundary itself, so its
-//! invariants are heavily tested: grouping is a partition of the (token,
-//! rank) assignment set, and scatter is the exact adjoint of gather.
+//! [`GroupedBatch::build`] is a counting sort over the router output: one
+//! pass counts tokens per expert, a prefix sum turns the counts into
+//! `offsets`, and a second stable pass places every (token, rank)
+//! assignment so expert *e*'s tokens are the contiguous slice
+//! `perm[offsets[e]..offsets[e+1]]` — exactly the `(permutation, offsets,
+//! counts)` descriptor a fused grouped-GEMM kernel consumes (DESIGN.md
+//! §10). The gather/scatter pair is the module-batching boundary itself,
+//! so its invariants are heavily tested: grouping is a partition of the
+//! (token, rank) assignment set, and scatter is the exact adjoint of
+//! gather.
 //!
 //! These are the slice-level kernels; the typed layer lives in
 //! [`crate::exec::tensor`] — `HostTensor::gather`/`scatter_add` wrap them,
@@ -29,10 +36,99 @@ pub struct ExpertGroup {
     pub weights: Vec<f32>,
 }
 
+/// Counting-sort token permutation over one router output: the layout a
+/// grouped per-expert GEMM consumes.
+///
+/// Built in one pass over the `n × k` routing (plus a prefix sum), it
+/// holds a flat permutation of all `n·k` (token, rank) assignments sorted
+/// by expert, with `offsets[e]..offsets[e+1]` bounding expert *e*'s
+/// contiguous segment. Within a segment tokens keep ascending row order
+/// (the sort is stable), preserving the combine-order contract shared
+/// with `python/compile/engine_ref.py`: experts ascending, tokens
+/// ascending within each expert — so the grouped path is bit-identical to
+/// the legacy per-group gather path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupedBatch {
+    pub num_experts: usize,
+    /// Source token row per sorted slot (`n·k` entries, expert-major).
+    pub perm: Vec<usize>,
+    /// Routing weight per sorted slot (parallel to `perm`).
+    pub weights: Vec<f32>,
+    /// `offsets[e]..offsets[e+1]` is expert `e`'s segment; `num_experts
+    /// + 1` entries, `offsets[num_experts] == n·k`.
+    pub offsets: Vec<usize>,
+}
+
+impl GroupedBatch {
+    /// Build from router output `(idx, weights)`, both `n × k` row-major.
+    pub fn build(idx: &[i32], weights: &[f32], n: usize, k: usize, num_experts: usize) -> Self {
+        assert_eq!(idx.len(), n * k);
+        assert_eq!(weights.len(), n * k);
+        let mut counts = vec![0usize; num_experts];
+        for &e in idx {
+            assert!(
+                (0..num_experts as i32).contains(&e),
+                "router produced expert id {e} out of range"
+            );
+            counts[e as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(num_experts + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for &c in &counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        // Stable placement pass: token-ascending, rank-ascending within
+        // each expert segment.
+        let mut cursor: Vec<usize> = offsets[..num_experts].to_vec();
+        let mut perm = vec![0usize; n * k];
+        let mut w = vec![0.0f32; n * k];
+        for t in 0..n {
+            for r in 0..k {
+                let e = idx[t * k + r] as usize;
+                let slot = cursor[e];
+                cursor[e] += 1;
+                perm[slot] = t;
+                w[slot] = weights[t * k + r];
+            }
+        }
+        GroupedBatch { num_experts, perm, weights: w, offsets }
+    }
+
+    /// Expert `e`'s contiguous slot range in `perm`/`weights`.
+    pub fn segment(&self, e: usize) -> std::ops::Range<usize> {
+        self.offsets[e]..self.offsets[e + 1]
+    }
+
+    /// Number of (token, rank) assignments routed to expert `e`.
+    pub fn count(&self, e: usize) -> usize {
+        self.offsets[e + 1] - self.offsets[e]
+    }
+
+    /// Token rows routed to expert `e`, ascending.
+    pub fn rows(&self, e: usize) -> &[usize] {
+        &self.perm[self.segment(e)]
+    }
+
+    /// Routing weights parallel to [`rows`](Self::rows).
+    pub fn weights_of(&self, e: usize) -> &[f32] {
+        &self.weights[self.segment(e)]
+    }
+
+    /// Total assignments (`n·k`).
+    pub fn assignments(&self) -> usize {
+        self.perm.len()
+    }
+}
+
 /// Partition router output `(idx, weights)` — both `n × k` row-major —
 /// into per-expert groups. Experts are visited in ascending id and tokens
-/// in ascending row order (the combine-order contract shared with
-/// `python/compile/engine_ref.py`). Empty experts are omitted.
+/// in ascending row order. Empty experts are omitted.
+#[deprecated(
+    since = "0.4.0",
+    note = "build a GroupedBatch and iterate its contiguous per-expert segments instead"
+)]
 pub fn group_by_expert(
     idx: &[i32],
     weights: &[f32],
@@ -40,24 +136,15 @@ pub fn group_by_expert(
     k: usize,
     num_experts: usize,
 ) -> Vec<ExpertGroup> {
-    assert_eq!(idx.len(), n * k);
-    assert_eq!(weights.len(), n * k);
-    let mut groups: Vec<ExpertGroup> = (0..num_experts)
-        .map(|e| ExpertGroup { expert: e, rows: Vec::new(), weights: Vec::new() })
-        .collect();
-    for t in 0..n {
-        for r in 0..k {
-            let e = idx[t * k + r];
-            assert!(
-                (0..num_experts as i32).contains(&e),
-                "router produced expert id {e} out of range"
-            );
-            groups[e as usize].rows.push(t);
-            groups[e as usize].weights.push(weights[t * k + r]);
-        }
-    }
-    groups.retain(|g| !g.rows.is_empty());
-    groups
+    let g = GroupedBatch::build(idx, weights, n, k, num_experts);
+    (0..num_experts)
+        .filter(|&e| g.count(e) > 0)
+        .map(|e| ExpertGroup {
+            expert: e,
+            rows: g.rows(e).to_vec(),
+            weights: g.weights_of(e).to_vec(),
+        })
+        .collect()
 }
 
 /// Gather `rows` of an `n × dim` row-major matrix into a `bucket × dim`
@@ -140,32 +227,119 @@ mod tests {
         let mut rng = Rng::new(0);
         let (n, k, e) = (50, 2, 8);
         let (idx, w) = random_routing(&mut rng, n, k, e);
-        let groups = group_by_expert(&idx, &w, n, k, e);
-        let total: usize = groups.iter().map(|g| g.rows.len()).sum();
+        let g = GroupedBatch::build(&idx, &w, n, k, e);
+        assert_eq!(g.assignments(), n * k);
+        assert_eq!(*g.offsets.last().unwrap(), n * k);
+        let total: usize = (0..e).map(|x| g.count(x)).sum();
         assert_eq!(total, n * k);
         // Each (token, expert) pair appears exactly once.
         let mut seen = std::collections::HashSet::new();
-        for g in &groups {
-            for &r in &g.rows {
-                assert!(seen.insert((g.expert, r)), "duplicate assignment");
+        for ex in 0..e {
+            for &r in g.rows(ex) {
+                assert!(seen.insert((ex, r)), "duplicate assignment");
             }
         }
     }
 
     #[test]
-    fn groups_ordered_and_nonempty() {
+    fn segments_contiguous_and_token_ordered() {
         let idx = vec![1, 0, 1, 2];
         let w = vec![0.5, 0.5, 0.7, 0.3];
-        let groups = group_by_expert(&idx, &w, 2, 2, 4);
-        let experts: Vec<usize> = groups.iter().map(|g| g.expert).collect();
-        assert_eq!(experts, vec![0, 1, 2]); // ascending, expert 3 omitted
-        assert_eq!(groups[1].rows, vec![0, 1]); // ascending token order
+        let g = GroupedBatch::build(&idx, &w, 2, 2, 4);
+        assert_eq!(g.offsets, vec![0, 1, 3, 4, 4]); // expert 3 empty
+        assert_eq!(g.rows(0), &[0]);
+        assert_eq!(g.rows(1), &[0, 1]); // ascending token order
+        assert_eq!(g.rows(2), &[1]);
+        assert_eq!(g.count(3), 0);
+        assert!(g.segment(3).is_empty());
+        assert_eq!(g.weights_of(1), &[0.5, 0.7]);
+        // perm is expert-major: segments tile 0..n*k without gaps.
+        assert_eq!(g.segment(1), 1..3);
     }
 
     #[test]
     #[should_panic(expected = "out of range")]
     fn rejects_bad_expert_id() {
-        group_by_expert(&[5], &[1.0], 1, 1, 4);
+        GroupedBatch::build(&[5], &[1.0], 1, 1, 4);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrapper_matches_grouped_batch() {
+        let mut rng = Rng::new(7);
+        let (n, k, e) = (23, 2, 6);
+        let (idx, w) = random_routing(&mut rng, n, k, e);
+        let g = GroupedBatch::build(&idx, &w, n, k, e);
+        let groups = group_by_expert(&idx, &w, n, k, e);
+        let mut gi = 0;
+        for ex in 0..e {
+            if g.count(ex) == 0 {
+                continue;
+            }
+            assert_eq!(groups[gi].expert, ex);
+            assert_eq!(groups[gi].rows, g.rows(ex));
+            assert_eq!(groups[gi].weights, g.weights_of(ex));
+            gi += 1;
+        }
+        assert_eq!(gi, groups.len());
+    }
+
+    #[test]
+    fn prop_grouped_path_bit_identical_to_legacy_gather() {
+        // The tentpole contract: running experts over contiguous segments
+        // of the counting-sort permutation must be *bit-identical* to the
+        // legacy per-group gather path, because segment order (experts
+        // ascending) and within-segment order (tokens ascending) match
+        // the old combine order exactly. The surrogate expert is order-
+        // sensitive (scales by expert id + 1); f32 accumulation order
+        // differences would show up as bit differences.
+        prop_check(100, |rng| {
+            let n = rng.range(1, 60);
+            let k = rng.range(1, 3);
+            let e = rng.range(k, 9); // small n vs e leaves experts empty
+            let dim = rng.range(1, 8);
+            let (idx, w) = random_routing(rng, n, k, e);
+            let x = rng.normal_vec(n * dim);
+            let expert = |v: &mut [f32], ex: usize| {
+                for f in v.iter_mut() {
+                    *f *= (ex + 1) as f32;
+                }
+            };
+
+            // Legacy: per-expert row-list gather into a padded bucket.
+            let g = GroupedBatch::build(&idx, &w, n, k, e);
+            let mut legacy = vec![0.0f32; n * dim];
+            for ex in 0..e {
+                let rows = g.rows(ex);
+                if rows.is_empty() {
+                    continue;
+                }
+                let bucket = rows.len().next_power_of_two();
+                let mut y = gather_rows(&x, dim, rows, bucket);
+                expert(&mut y, ex);
+                scatter_add(&mut legacy, dim, rows, g.weights_of(ex), &y);
+            }
+
+            // Grouped: permute once, run each expert on its contiguous
+            // slice, unpermute-scatter with the slot weights.
+            let mut sorted = vec![0.0f32; n * k * dim];
+            for (slot, &t) in g.perm.iter().enumerate() {
+                sorted[slot * dim..(slot + 1) * dim]
+                    .copy_from_slice(&x[t * dim..(t + 1) * dim]);
+            }
+            let mut grouped = vec![0.0f32; n * dim];
+            for ex in 0..e {
+                let seg = g.segment(ex);
+                if seg.is_empty() {
+                    continue;
+                }
+                let mut y = sorted[seg.start * dim..seg.end * dim].to_vec();
+                expert(&mut y, ex);
+                scatter_add(&mut grouped, dim, g.rows(ex), g.weights_of(ex), &y);
+            }
+
+            assert_eq!(legacy, grouped, "grouped path must be bit-identical");
+        });
     }
 
     #[test]
@@ -198,12 +372,17 @@ mod tests {
             let dim = rng.range(1, 8);
             let (idx, w) = random_routing(rng, n, k, e);
             let x = rng.normal_vec(n * dim);
+            let g = GroupedBatch::build(&idx, &w, n, k, e);
             let mut acc = vec![0.0f32; n * dim];
-            for g in group_by_expert(&idx, &w, n, k, e) {
-                let bucket = g.rows.len().next_power_of_two();
-                let gathered = gather_rows(&x, dim, &g.rows, bucket);
+            for ex in 0..e {
+                let rows = g.rows(ex);
+                if rows.is_empty() {
+                    continue;
+                }
+                let bucket = rows.len().next_power_of_two();
+                let gathered = gather_rows(&x, dim, rows, bucket);
                 // identity "expert"
-                scatter_add(&mut acc, dim, &g.rows, &g.weights, &gathered);
+                scatter_add(&mut acc, dim, rows, g.weights_of(ex), &gathered);
             }
             for t in 0..n {
                 for d in 0..dim {
@@ -253,14 +432,19 @@ mod tests {
             let dim = rng.range(1, 8);
             let (idx, w) = random_routing(rng, n, k, e);
             let x = rng.normal_vec(n * dim);
+            let g = GroupedBatch::build(&idx, &w, n, k, e);
             let mut acc = vec![0.0f32; n * dim];
-            for g in group_by_expert(&idx, &w, n, k, e) {
-                let bucket = g.rows.len().next_power_of_two();
-                let mut y = gather_rows(&x, dim, &g.rows, bucket);
-                for v in y.iter_mut() {
-                    *v *= (g.expert + 1) as f32;
+            for ex in 0..e {
+                let rows = g.rows(ex);
+                if rows.is_empty() {
+                    continue;
                 }
-                scatter_add(&mut acc, dim, &g.rows, &g.weights, &y);
+                let bucket = rows.len().next_power_of_two();
+                let mut y = gather_rows(&x, dim, rows, bucket);
+                for v in y.iter_mut() {
+                    *v *= (ex + 1) as f32;
+                }
+                scatter_add(&mut acc, dim, rows, g.weights_of(ex), &y);
             }
             // Oracle: per-token weighted sum over its own (expert, weight)
             // assignments, in rank order.

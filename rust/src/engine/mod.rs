@@ -36,7 +36,7 @@ use std::sync::{Arc, RwLock};
 use anyhow::Result;
 
 use crate::config::EngineConfig;
-use crate::exec::{ExecCtx, Pipeline, Plan, Timeline};
+use crate::exec::{ExecCtx, Pipeline, Plan, TensorArena, Timeline};
 use crate::hw;
 use crate::kv::KvCache;
 use crate::memory::{MemoryPool, TransferEngine, TransferHandle};
@@ -71,6 +71,11 @@ pub struct Engine {
     /// (drained at phase ends).
     pending_fetch: Vec<TransferHandle>,
     plan: Plan,
+    /// Scratch arena recycling bucket-shaped host tensors through the
+    /// expert/projection hot paths (DESIGN.md §10). Owned here so buffers
+    /// stay warm across waves; `reset_accounting` clears its counters but
+    /// keeps the pool, so steady-state runs report a near-1.0 hit rate.
+    arena: TensorArena,
 }
 
 impl Engine {
@@ -131,6 +136,7 @@ impl Engine {
             cpu_threads,
             pending_fetch: Vec::new(),
             plan,
+            arena: TensorArena::new(),
         })
     }
 
@@ -201,6 +207,7 @@ impl Engine {
         self.timeline.set_serialized(!self.cfg.prefetch);
         ExecCtx {
             backend: self.backend.as_mut(),
+            arena: &mut self.arena,
             metrics: &mut self.metrics,
             htod: &self.htod,
             dtoh: &self.dtoh,
@@ -225,10 +232,13 @@ impl Engine {
     }
 
     /// Reset the accumulated metrics *and* the virtual timeline — one
-    /// experiment, one schedule (the run/serve drivers call this).
+    /// experiment, one schedule (the run/serve drivers call this). The
+    /// scratch arena's counters reset too, but its pooled buffers stay
+    /// warm: the next wave re-checks them out as hits.
     pub fn reset_accounting(&mut self) {
         self.metrics = Metrics::new();
         self.timeline.reset();
+        self.arena.reset_stats();
     }
 
     // -- phases --------------------------------------------------------------
@@ -288,6 +298,7 @@ impl Engine {
         let mut cx = self.exec_ctx();
         let out = pipeline.prefill_into(&mut cx, kv, prompts);
         self.metrics.timeline = self.timeline.stats();
+        self.metrics.arena = self.arena.stats();
         out
     }
 
@@ -297,6 +308,7 @@ impl Engine {
         let mut cx = self.exec_ctx();
         let out = pipeline.decode_step(&mut cx, state);
         self.metrics.timeline = self.timeline.stats();
+        self.metrics.arena = self.arena.stats();
         out
     }
 

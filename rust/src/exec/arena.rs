@@ -1,0 +1,191 @@
+//! Scratch arena for [`HostTensor`] buffers.
+//!
+//! The expert and projection hot paths run the same bucketed shapes every
+//! wave (DESIGN.md §10): each micro-batch is padded to a static bucket, so
+//! the set of (rows, dim) shapes the executor touches is small and repeats
+//! across layers and decode steps. [`TensorArena`] exploits that: callers
+//! *check out* a buffer with [`TensorArena::take`] / [`take_zeroed`]
+//! (recycling a previously returned allocation of the exact shape when one
+//! is free) and *return* it with [`TensorArena::put`] once the data has
+//! been copied out. A checked-out tensor is owned by the caller — the
+//! arena keeps no reference to it, so live checkouts can never alias.
+//!
+//! After one warm-up wave, every take in the steady-state decode loop is a
+//! hit and the expert phase performs zero fresh heap allocations; the
+//! hit/miss/bytes-recycled counters surface in [`crate::metrics::Metrics`]
+//! as the `[run] arena:` report line.
+//!
+//! [`take_zeroed`]: TensorArena::take_zeroed
+
+use std::collections::HashMap;
+
+use crate::exec::tensor::HostTensor;
+
+/// Checkout counters for a [`TensorArena`], snapshotted into
+/// [`crate::metrics::Metrics`] at phase boundaries.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct ArenaStats {
+    /// Checkouts served by recycling a returned buffer.
+    pub hits: u64,
+    /// Checkouts that had to allocate a fresh buffer.
+    pub misses: u64,
+    /// Bytes that hits avoided re-allocating.
+    pub recycled_bytes: u64,
+}
+
+impl ArenaStats {
+    /// Fraction of checkouts served without allocating (0.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Pool of reusable `rows × dim` buffers keyed by exact shape.
+///
+/// Shapes are bucket-padded by the executor before they reach the arena,
+/// so exact-shape keying is enough — a (32, 64) request never wants a
+/// (33, 64) buffer.
+#[derive(Debug, Default)]
+pub struct TensorArena {
+    free: HashMap<(usize, usize), Vec<Vec<f32>>>,
+    stats: ArenaStats,
+}
+
+impl TensorArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out a `rows × dim` buffer with **unspecified contents** (a
+    /// recycled buffer keeps its stale data). Only for outputs every
+    /// element of which is overwritten before being read — rmsnorm
+    /// outputs, the permuted expert scratch. Accumulating kernels must
+    /// use [`take_zeroed`](Self::take_zeroed).
+    pub fn take(&mut self, rows: usize, dim: usize) -> HostTensor {
+        if let Some(data) = self.free.get_mut(&(rows, dim)).and_then(Vec::pop) {
+            self.stats.hits += 1;
+            self.stats.recycled_bytes += (data.len() * std::mem::size_of::<f32>()) as u64;
+            return HostTensor { data, rows, dim };
+        }
+        self.stats.misses += 1;
+        HostTensor::zeros(rows, dim)
+    }
+
+    /// Check out a zeroed `rows × dim` buffer. Safe default: required for
+    /// matmul outputs (the reference kernel accumulates with `+=`) and
+    /// for bucket pads (stale rows past the real batch must read 0).
+    pub fn take_zeroed(&mut self, rows: usize, dim: usize) -> HostTensor {
+        let mut t = self.take(rows, dim);
+        t.data.fill(0.0);
+        t
+    }
+
+    /// Return a checked-out buffer for reuse. Tensors whose storage does
+    /// not match their `rows * dim` shape are dropped rather than pooled.
+    pub fn put(&mut self, t: HostTensor) {
+        if t.data.len() != t.rows * t.dim {
+            return;
+        }
+        self.free.entry((t.rows, t.dim)).or_default().push(t.data);
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Zero the counters while keeping pooled buffers warm — called by
+    /// `Engine::reset_accounting` so a measured run after warm-up starts
+    /// at a ~100% hit rate instead of re-paying first-touch misses.
+    pub fn reset_stats(&mut self) {
+        self.stats = ArenaStats::default();
+    }
+
+    /// Number of buffers currently pooled (free, not checked out).
+    pub fn pooled(&self) -> usize {
+        self.free.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_hit_recycles_the_same_allocation() {
+        let mut a = TensorArena::new();
+        let t = a.take_zeroed(8, 4);
+        assert_eq!(a.stats().misses, 1);
+        let ptr = t.data.as_ptr();
+        a.put(t);
+        assert_eq!(a.pooled(), 1);
+        let t2 = a.take_zeroed(8, 4);
+        assert_eq!(t2.data.as_ptr(), ptr, "hit must recycle the buffer");
+        assert_eq!(a.stats().hits, 1);
+        assert_eq!(a.stats().recycled_bytes, 8 * 4 * 4);
+        assert!(t2.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_miss() {
+        let mut a = TensorArena::new();
+        a.put(HostTensor::zeros(8, 4));
+        let t = a.take_zeroed(4, 8); // same element count, different shape
+        assert_eq!(t.rows, 4);
+        assert_eq!(a.stats().hits, 0);
+        assert_eq!(a.stats().misses, 1);
+        assert_eq!(a.pooled(), 1, "the (8,4) buffer stays pooled");
+    }
+
+    #[test]
+    fn live_checkouts_never_alias() {
+        let mut a = TensorArena::new();
+        let t1 = a.take_zeroed(8, 4);
+        let t2 = a.take_zeroed(8, 4); // t1 still checked out
+        assert_ne!(t1.data.as_ptr(), t2.data.as_ptr());
+        a.put(t1);
+        a.put(t2);
+        let t3 = a.take_zeroed(8, 4);
+        let t4 = a.take_zeroed(8, 4);
+        assert_ne!(t3.data.as_ptr(), t4.data.as_ptr());
+    }
+
+    #[test]
+    fn take_zeroed_clears_recycled_contents() {
+        let mut a = TensorArena::new();
+        let mut t = a.take(2, 2);
+        t.data.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        a.put(t);
+        let t = a.take_zeroed(2, 2);
+        assert_eq!(t.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn mismatched_storage_is_not_pooled() {
+        let mut a = TensorArena::new();
+        a.put(HostTensor { data: vec![0.0; 5], rows: 8, dim: 4 });
+        assert_eq!(a.pooled(), 0);
+    }
+
+    #[test]
+    fn reset_stats_keeps_buffers_warm() {
+        let mut a = TensorArena::new();
+        let t = a.take_zeroed(8, 4);
+        a.put(t);
+        a.reset_stats();
+        assert_eq!(a.stats(), ArenaStats::default());
+        a.take_zeroed(8, 4);
+        assert_eq!(a.stats().hits, 1, "pool survives a stats reset");
+    }
+
+    #[test]
+    fn hit_rate_reports_fraction() {
+        let s = ArenaStats { hits: 9, misses: 1, recycled_bytes: 0 };
+        assert!((s.hit_rate() - 0.9).abs() < 1e-12);
+        assert_eq!(ArenaStats::default().hit_rate(), 0.0);
+    }
+}

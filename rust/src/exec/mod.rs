@@ -19,6 +19,9 @@
 //!   cache, the pipeline streams the next layer's dense weights during
 //!   attention, and the router's output predictively prefetches the next
 //!   layer's hot experts;
+//! * [`arena`] — the scratch arena ([`TensorArena`]) that recycles
+//!   bucket-shaped [`HostTensor`] buffers through the expert and
+//!   projection hot paths so steady-state decode waves allocate nothing;
 //! * [`timeline`] — the virtual multi-stream timeline ([`Timeline`]):
 //!   four streams (GPU compute / CPU attention / HtoD / DtoH) over which
 //!   the pipeline enqueues every launch and transfer with explicit
@@ -30,12 +33,14 @@
 //! builders label their nodes with the same [`ModuleKind`] vocabulary, so
 //! the modeled graph and the executed graph are one.
 
+pub mod arena;
 pub mod modules;
 pub mod pipeline;
 pub mod tensor;
 pub mod timeline;
 
+pub use arena::{ArenaStats, TensorArena};
 pub use modules::{ExpertSel, Module, ModuleKind};
 pub use pipeline::{BatchState, ExecCtx, Pipeline, Plan};
-pub use tensor::{Accumulator, HostTensor};
+pub use tensor::{Accumulator, HostTensor, TensorView};
 pub use timeline::{EventId, Stream, Timeline, TimelineStats};

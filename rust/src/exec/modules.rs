@@ -24,7 +24,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::batching::{add_assign, group_by_expert, micro_batches};
+use crate::batching::{add_assign, micro_batches, GroupedBatch};
 use crate::cpu_attn::{decode_attention_t, SeqAttn};
 use crate::exec::pipeline::{ExecCtx, Plan};
 use crate::exec::tensor::{Accumulator, HostTensor};
@@ -159,7 +159,7 @@ impl Embed {
                 let n = r.len();
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
                 let ids_b = pad_i32(&ids[r], bucket);
-                let y = cx.launch(ModuleKind::Embed, n, bucket, bucket * 4, bucket * h * 4, |be| {
+                let y = cx.launch(ModuleKind::Embed, n, bucket, bucket * 4, bucket * h * 4, |be, _ar| {
                     be.embed(&ids_b)
                 })?;
                 out.push_rows(&y.data[..n * h]);
@@ -205,7 +205,8 @@ impl PreAttention {
             for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
                 let n = r.len();
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-                let x_b = x.padded(r.clone(), bucket);
+                let mut x_b = cx.arena.take_zeroed(bucket, h);
+                x_b.data[..n * h].copy_from_slice(x.rows_slice(r.clone()));
                 let pos_b = pad_i32(&pos[r], bucket);
                 let (qb, kb, vb) = cx.launch(
                     ModuleKind::PreAttention,
@@ -213,11 +214,14 @@ impl PreAttention {
                     bucket,
                     bucket * (h + 1) * 4,
                     bucket * (qd + 2 * kvd) * 4,
-                    |be| be.pre_attention(layer, &x_b, &pos_b),
+                    |be, ar| be.pre_attention(layer, &x_b, &pos_b, ar),
                 )?;
                 q.push_rows(&qb.data[..n * qd]);
                 k.push_rows(&kb.data[..n * kvd]);
                 v.push_rows(&vb.data[..n * kvd]);
+                for t in [x_b, qb, kb, vb] {
+                    cx.arena.put(t);
+                }
             }
             Ok(())
         })?;
@@ -289,7 +293,7 @@ impl AttentionPrefill {
             bucket,
             bucket * seq * (qd + 2 * kvd + 1) * 4,
             bucket * seq * qd * 4,
-            |be| be.attn_prefill(&q_b, &k_b, &v_b, &lens_i, seq),
+            |be, _ar| be.attn_prefill(&q_b, &k_b, &v_b, &lens_i, seq),
         )?;
         Ok(HostTensor::from_vec(ctx.data[..nb * seq * qd].to_vec(), seq * qd))
     }
@@ -440,7 +444,7 @@ impl AttentionDecode {
                 bucket,
                 bucket * (qd + 1) * 4,
                 bucket * qd * 4,
-                |be| be.attn_decode(&q_b, &ks, &vs, &lens_i),
+                |be, _ar| be.attn_decode(&q_b, &ks, &vs, &lens_i),
             )?;
             cx.metrics.gpu_attn_seqs += nb as u64;
             acc.push_rows(&ctx.data[..nb * qd]);
@@ -487,17 +491,22 @@ impl PostAttention {
             for r in micro_batches(resid.rows, max_bucket(&c.token_buckets)) {
                 let n = r.len();
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-                let ctx_b = ctx_t.padded(r.clone(), bucket);
-                let res_b = resid.padded(r, bucket);
+                let mut ctx_b = cx.arena.take_zeroed(bucket, qd);
+                ctx_b.data[..n * qd].copy_from_slice(ctx_t.rows_slice(r.clone()));
+                let mut res_b = cx.arena.take_zeroed(bucket, h);
+                res_b.data[..n * h].copy_from_slice(resid.rows_slice(r));
                 let y = cx.launch(
                     ModuleKind::PostAttention,
                     n,
                     bucket,
                     bucket * (qd + h) * 4,
                     bucket * h * 4,
-                    |be| be.post_attention(layer, &ctx_b, &res_b),
+                    |be, ar| be.post_attention(layer, &ctx_b, &res_b, ar),
                 )?;
                 out.push_rows(&y.data[..n * h]);
+                for t in [ctx_b, res_b, y] {
+                    cx.arena.put(t);
+                }
             }
             Ok(())
         })?;
@@ -546,18 +555,22 @@ impl Router {
             for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
                 let n = r.len();
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-                let x_b = x.padded(r, bucket);
+                let mut x_b = cx.arena.take_zeroed(bucket, h);
+                x_b.data[..n * h].copy_from_slice(x.rows_slice(r));
                 let (xn_b, idx_b, wts_b) = cx.launch(
                     ModuleKind::Router,
                     n,
                     bucket,
                     bucket * h * 4,
                     bucket * (h + 2 * k) * 4,
-                    |be| be.router(layer, &x_b),
+                    |be, ar| be.router(layer, &x_b, ar),
                 )?;
                 xn.push_rows(&xn_b.data[..n * h]);
                 idx.extend_from_slice(&idx_b[..n * k]);
                 wts.push_rows(&wts_b.data[..n * k]);
+                for t in [x_b, xn_b, wts_b] {
+                    cx.arena.put(t);
+                }
             }
             Ok(())
         })?;
@@ -571,7 +584,8 @@ impl Router {
 }
 
 // ---------------------------------------------------------------------------
-// Experts (gather → expert kernel → weighted scatter, + shared expert)
+// Experts (counting-sort permute → contiguous expert kernels → weighted
+// unpermute-scatter, + shared expert)
 // ---------------------------------------------------------------------------
 
 pub struct Experts;
@@ -590,10 +604,21 @@ impl Module for Experts {
 
 impl Experts {
     /// Sparse-MoE phase over the full accumulated batch: router →
-    /// per-expert gather/kernel/scatter (micro-batched at the strategy's
-    /// `b_e`) → shared expert → residual. This is module-based batching's
-    /// expert phase (paper Fig. 2): every expert sees the tokens of the
-    /// *whole* accumulated batch, not of one attention micro-batch.
+    /// counting-sort permutation → per-expert contiguous kernel →
+    /// weighted unpermute-scatter (micro-batched at the strategy's `b_e`)
+    /// → shared expert → residual. This is module-based batching's expert
+    /// phase (paper Fig. 2): every expert sees the tokens of the *whole*
+    /// accumulated batch, not of one attention micro-batch.
+    ///
+    /// The grouped hot path (DESIGN.md §10): [`GroupedBatch::build`]
+    /// sorts the `n·k` (token, rank) assignments by expert in one pass,
+    /// the batch is permuted *once* into an arena scratch tensor, and
+    /// each expert's micro-batches launch as zero-copy views of its
+    /// contiguous segment — a fresh padded copy is made only when a
+    /// segment chunk is under its bucket (padding at the GEMM boundary).
+    /// Combine order is unchanged from the legacy per-group gather path
+    /// (experts ascending, tokens ascending within each expert), so the
+    /// output is bit-identical.
     pub fn run(
         &self,
         cx: &mut ExecCtx<'_>,
@@ -606,32 +631,67 @@ impl Experts {
         let n = x.rows;
         let (xn, idx, wts) = Router.run(cx, layer, &x)?;
         let micro = self.micro_batch(plan, &c);
-        // Every expert group's gathered input comes from the *router's*
-        // output, not from the previous group's kernel — re-anchor each
-        // group's uploads there (acquire_weights stamps input_ev with
-        // the latest kernel at pin time, which inside this loop would be
-        // the previous expert and would falsely serialize fetch→compute
+        // Every expert group's input comes from the *router's* output,
+        // not from the previous group's kernel — re-anchor each group's
+        // uploads there (acquire_weights stamps input_ev with the latest
+        // kernel at pin time, which inside this loop would be the
+        // previous expert and would falsely serialize fetch→compute
         // across the expert phase).
         let moe_ev = cx.timeline.last_on(Stream::GpuCompute);
 
-        let mut acc = HostTensor::zeros(n, h);
-        for g in group_by_expert(&idx, &wts.data, n, k, ne) {
-            cx.with_weights(WeightKey::Expert(layer, g.expert), |cx| {
+        let grouped = GroupedBatch::build(&idx, &wts.data, n, k, ne);
+        cx.arena.put(wts);
+        // One permutation pass: expert e's tokens become the contiguous
+        // rows sorted[offsets[e]..offsets[e+1]]. Every row is written, so
+        // the uninit-content arena checkout is safe.
+        let mut sorted = cx.arena.take(n * k, h);
+        for (slot, &t) in grouped.perm.iter().enumerate() {
+            sorted.row_mut(slot).copy_from_slice(xn.row(t));
+        }
+
+        let mut acc = cx.arena.take_zeroed(n, h);
+        for e in 0..ne {
+            let seg = grouped.segment(e);
+            if seg.is_empty() {
+                continue;
+            }
+            cx.with_weights(WeightKey::Expert(layer, e), |cx| {
                 cx.input_ev = moe_ev;
-                for r in micro_batches(g.rows.len(), micro) {
-                    let rows = &g.rows[r.clone()];
-                    let w = &g.weights[r];
+                for r in micro_batches(seg.len(), micro) {
+                    let abs = seg.start + r.start..seg.start + r.end;
+                    let rows = &grouped.perm[abs.clone()];
+                    let w = &grouped.weights[abs.clone()];
                     let bucket = pick_bucket(rows.len(), &c.expert_buckets).unwrap();
-                    let gathered = xn.gather(rows, bucket);
-                    let y = cx.launch(
-                        ModuleKind::ExpertFfn,
-                        rows.len(),
-                        bucket,
-                        bucket * h * 4,
-                        bucket * h * 4,
-                        |be| be.expert_ffn(layer, ExpertSel::Routed(g.expert), &gathered),
-                    )?;
+                    let y = if rows.len() == bucket {
+                        // Full bucket: zero-copy view of the segment.
+                        let input = sorted.view_rows(abs.clone());
+                        cx.launch(
+                            ModuleKind::ExpertFfn,
+                            rows.len(),
+                            bucket,
+                            bucket * h * 4,
+                            bucket * h * 4,
+                            |be, ar| be.expert_ffn(layer, ExpertSel::Routed(e), input, ar),
+                        )?
+                    } else {
+                        // Partial chunk: pad at the GEMM boundary only.
+                        let mut pad = cx.arena.take_zeroed(bucket, h);
+                        pad.data[..rows.len() * h].copy_from_slice(sorted.rows_slice(abs.clone()));
+                        let y = cx.launch(
+                            ModuleKind::ExpertFfn,
+                            rows.len(),
+                            bucket,
+                            bucket * h * 4,
+                            bucket * h * 4,
+                            |be, ar| be.expert_ffn(layer, ExpertSel::Routed(e), pad.view(), ar),
+                        )?;
+                        cx.arena.put(pad);
+                        y
+                    };
+                    // Unpermute-scatter: routing weights applied on the
+                    // way back into the accumulator, original token order.
                     acc.scatter_add(rows, w, &y);
+                    cx.arena.put(y);
                 }
                 Ok(())
             })?;
@@ -642,22 +702,43 @@ impl Experts {
                 for r in micro_batches(n, micro) {
                     let rows = r.len();
                     let bucket = pick_bucket(rows, &c.expert_buckets).unwrap();
-                    let x_b = xn.padded(r.clone(), bucket);
-                    let ys = cx.launch(
-                        ModuleKind::SharedExpert,
-                        rows,
-                        bucket,
-                        bucket * h * 4,
-                        bucket * h * 4,
-                        |be| be.expert_ffn(layer, ExpertSel::Shared, &x_b),
-                    )?;
+                    let ys = if rows == bucket {
+                        // The shared expert reads xn's rows in order:
+                        // full buckets launch straight off the batch.
+                        let input = xn.view_rows(r.clone());
+                        cx.launch(
+                            ModuleKind::SharedExpert,
+                            rows,
+                            bucket,
+                            bucket * h * 4,
+                            bucket * h * 4,
+                            |be, ar| be.expert_ffn(layer, ExpertSel::Shared, input, ar),
+                        )?
+                    } else {
+                        let mut x_b = cx.arena.take_zeroed(bucket, h);
+                        x_b.data[..rows * h].copy_from_slice(xn.rows_slice(r.clone()));
+                        let ys = cx.launch(
+                            ModuleKind::SharedExpert,
+                            rows,
+                            bucket,
+                            bucket * h * 4,
+                            bucket * h * 4,
+                            |be, ar| be.expert_ffn(layer, ExpertSel::Shared, x_b.view(), ar),
+                        )?;
+                        cx.arena.put(x_b);
+                        ys
+                    };
                     add_assign(acc.rows_slice_mut(r), &ys.data[..rows * h]);
+                    cx.arena.put(ys);
                 }
                 Ok(())
             })?;
         }
         let mut out = x;
         out.add_assign(&acc); // residual: out = x + acc
+        for t in [acc, sorted, xn] {
+            cx.arena.put(t);
+        }
         Ok(out)
     }
 }
@@ -693,11 +774,13 @@ impl LmHead {
             for r in micro_batches(x.rows, max_bucket(&c.token_buckets)) {
                 let n = r.len();
                 let bucket = pick_bucket(n, &c.token_buckets).unwrap();
-                let x_b = x.padded(r, bucket);
-                let ids = cx.launch(ModuleKind::LmHead, n, bucket, bucket * h * 4, bucket * 4, |be| {
+                let mut x_b = cx.arena.take_zeroed(bucket, h);
+                x_b.data[..n * h].copy_from_slice(x.rows_slice(r));
+                let ids = cx.launch(ModuleKind::LmHead, n, bucket, bucket * h * 4, bucket * 4, |be, _ar| {
                     be.lm_head(&x_b)
                 })?;
                 out.extend_from_slice(&ids[..n]);
+                cx.arena.put(x_b);
             }
             Ok(())
         })?;

@@ -24,6 +24,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::batching::micro_batches;
+use crate::exec::arena::TensorArena;
 use crate::exec::modules::{
     AttentionDecode, AttentionPrefill, Embed, Experts, ExpertSel, LmHead, Module, ModuleKind,
     PostAttention, PreAttention,
@@ -197,6 +198,11 @@ pub struct ExecCtx<'a> {
     /// Drained by [`launch`](ExecCtx::launch), or collected wholesale by
     /// the attention driver as its wave-entry dependencies.
     pub next_deps: Vec<EventId>,
+    /// Scratch arena the hot path checks bucket-shaped buffers out of
+    /// ([`crate::exec::arena`]): launch closures hand it to the backend,
+    /// modules recycle pads and drained outputs through it. Owned by the
+    /// engine so the pool stays warm across waves and decode steps.
+    pub arena: &'a mut TensorArena,
 }
 
 impl ExecCtx<'_> {
@@ -215,7 +221,7 @@ impl ExecCtx<'_> {
         bucket: usize,
         htod_bytes: usize,
         dtoh_bytes: usize,
-        f: impl FnOnce(&mut dyn Backend) -> Result<T>,
+        f: impl FnOnce(&mut dyn Backend, &mut TensorArena) -> Result<T>,
     ) -> Result<T> {
         let mut deps = std::mem::take(&mut self.next_deps);
         deps.extend(self.fetch_ev);
@@ -236,7 +242,7 @@ impl ExecCtx<'_> {
             }
         }
         let t0 = Instant::now();
-        let out = f(&mut *self.backend)?;
+        let out = f(&mut *self.backend, &mut *self.arena)?;
         let secs = t0.elapsed().as_secs_f64();
         self.metrics.record_module(kind.name(), secs, rows, bucket);
         let up = self.backend.take_uploaded_bytes();
@@ -662,7 +668,7 @@ impl Pipeline {
             cx.acquire_weights(WeightKey::Dense(0));
             let t0 = Instant::now();
             for _ in 0..reps {
-                cx.backend.pre_attention(0, &x, &pos)?;
+                cx.backend.pre_attention(0, &x, &pos, &mut *cx.arena)?;
             }
             push(
                 cx,
@@ -674,7 +680,7 @@ impl Pipeline {
 
             let t0 = Instant::now();
             for _ in 0..reps {
-                cx.backend.post_attention(0, &ctx_t, &x)?;
+                cx.backend.post_attention(0, &ctx_t, &x, &mut *cx.arena)?;
             }
             push(
                 cx,
@@ -686,7 +692,7 @@ impl Pipeline {
 
             let t0 = Instant::now();
             for _ in 0..reps {
-                cx.backend.router(0, &x)?;
+                cx.backend.router(0, &x, &mut *cx.arena)?;
             }
             push(cx, &mut out, ModuleKind::Router, bkt, t0.elapsed().as_secs_f64() / reps as f64);
             cx.release_weights(WeightKey::Dense(0));
@@ -706,7 +712,7 @@ impl Pipeline {
             cx.acquire_weights(WeightKey::Expert(0, 0));
             let t0 = Instant::now();
             for _ in 0..reps {
-                cx.backend.expert_ffn(0, ExpertSel::Routed(0), &x)?;
+                cx.backend.expert_ffn(0, ExpertSel::Routed(0), x.view(), &mut *cx.arena)?;
             }
             push(
                 cx,

@@ -115,6 +115,39 @@ impl HostTensor {
     pub fn is_empty(&self) -> bool {
         self.rows == 0
     }
+
+    /// Borrowed view of the whole tensor (zero-copy launch input).
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView { data: &self.data, rows: self.rows, dim: self.dim }
+    }
+
+    /// Borrowed view of a contiguous row range — how the grouped expert
+    /// path (DESIGN.md §10) launches an expert's segment of the permuted
+    /// scratch tensor without gathering a padded copy.
+    pub fn view_rows(&self, r: Range<usize>) -> TensorView<'_> {
+        TensorView { data: self.rows_slice(r.clone()), rows: r.len(), dim: self.dim }
+    }
+}
+
+/// A borrowed `rows × dim` row-major matrix: [`HostTensor`] minus
+/// ownership. Backend entry points on the hot path take views so callers
+/// can launch directly out of a larger buffer (an expert's contiguous
+/// segment of the permuted batch) instead of gathering a fresh copy.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    pub data: &'a [f32],
+    pub rows: usize,
+    pub dim: usize,
+}
+
+impl TensorView<'_> {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
 }
 
 /// Host-side token accumulator for one module boundary (paper Fig. 2,
@@ -210,6 +243,21 @@ mod tests {
         let t = HostTensor::zeros(8, 2).truncated(3);
         assert_eq!(t.rows, 3);
         assert_eq!(t.data.len(), 6);
+    }
+
+    #[test]
+    fn views_borrow_without_copying() {
+        let t = HostTensor::from_vec((0..12).map(|i| i as f32).collect(), 3);
+        let v = t.view();
+        assert_eq!(v.rows, 4);
+        assert_eq!(v.dim, 3);
+        assert_eq!(v.data.as_ptr(), t.data.as_ptr());
+        let w = t.view_rows(1..3);
+        assert_eq!(w.rows, 2);
+        assert_eq!(w.row(0), t.row(1));
+        assert_eq!(w.row(1), t.row(2));
+        assert!(!w.is_empty());
+        assert!(t.view_rows(0..0).is_empty());
     }
 
     #[test]

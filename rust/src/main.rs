@@ -338,6 +338,11 @@ fn main() -> Result<()> {
                 1e3 * tl.busy(Stream::DtoH),
                 tl.overlap_fraction(),
             );
+            println!(
+                "[run] arena: hit-rate={:.4} recycled={}",
+                report.arena_hit_rate,
+                util::fmt_bytes(report.arena_recycled_bytes as f64),
+            );
         }
         JobKind::Serve => {
             println!(

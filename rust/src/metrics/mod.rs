@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::exec::arena::ArenaStats;
 use crate::exec::timeline::{Stream, TimelineStats};
 
 /// Accumulated per-module timing.
@@ -96,6 +97,11 @@ pub struct Metrics {
     /// from the byte counters above (which remain as raw traffic
     /// accounting).
     pub timeline: TimelineStats,
+    /// Snapshot of the scratch arena's checkout ledger
+    /// ([`crate::exec::arena`]) after the latest phase: hits are buffer
+    /// reuses, misses are fresh heap allocations. Steady-state decode
+    /// waves report a hit rate near 1.0 (DESIGN.md §10).
+    pub arena: ArenaStats,
 }
 
 impl Metrics {
@@ -149,6 +155,12 @@ impl Metrics {
         } else {
             0.0
         }
+    }
+
+    /// Fraction of scratch-tensor checkouts served from the arena's pool
+    /// rather than fresh heap allocations (0.0 before any checkout).
+    pub fn arena_hit_rate(&self) -> f64 {
+        self.arena.hit_rate()
     }
 
     /// Timeline-derived overlap: the fraction of total stream busy time
@@ -268,6 +280,15 @@ impl Metrics {
                 100.0 * self.timeline_overlap_fraction(),
             ));
         }
+        if self.arena.hits + self.arena.misses > 0 {
+            s.push_str(&format!(
+                "arena: hit-rate {:.1}% ({} hits / {} misses), {} recycled\n",
+                100.0 * self.arena_hit_rate(),
+                self.arena.hits,
+                self.arena.misses,
+                crate::util::fmt_bytes(self.arena.recycled_bytes as f64),
+            ));
+        }
         s.push_str("stage                  calls   avg-rows  pad%   total-s\n");
         for (name, m) in self.pipeline_stages() {
             s.push_str(&format!(
@@ -346,6 +367,17 @@ mod tests {
         let r = m.report();
         assert!(r.contains("timeline: 4 ops"), "{r}");
         assert!(r.contains("overlap 25.0%"), "{r}");
+    }
+
+    #[test]
+    fn arena_section_reports_hit_rate() {
+        let mut m = Metrics::new();
+        assert_eq!(m.arena_hit_rate(), 0.0, "idle arena -> rate 0");
+        assert!(!m.report().contains("arena:"), "idle arena stays silent");
+        m.arena = ArenaStats { hits: 9, misses: 1, recycled_bytes: 4096 };
+        assert!((m.arena_hit_rate() - 0.9).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("arena: hit-rate 90.0% (9 hits / 1 misses)"), "{r}");
     }
 
     #[test]

@@ -20,8 +20,9 @@
 use anyhow::{anyhow, Result};
 
 use crate::cpu_attn::Numerics;
+use crate::exec::arena::TensorArena;
 use crate::exec::modules::ExpertSel;
-use crate::exec::tensor::HostTensor;
+use crate::exec::tensor::{HostTensor, TensorView};
 use crate::util::json::Json;
 
 pub mod refback;
@@ -132,6 +133,13 @@ impl RtConfig {
 /// device cache on the PJRT path); [`Backend::take_uploaded_bytes`]
 /// reports the weight bytes that crossed the host→device link since the
 /// last call so the pipeline can meter traffic.
+///
+/// Hot-path entry points (`pre_attention`, `post_attention`, `router`,
+/// `expert_ffn`) receive the executor's [`TensorArena`]: backends check
+/// intermediates *and outputs* out of it and the module layer returns the
+/// outputs once drained, so steady-state decode waves allocate nothing
+/// (DESIGN.md §10). A backend that does not pool host buffers (the PJRT
+/// path keeps its staging on-device) may ignore the arena.
 pub trait Backend {
     fn name(&self) -> &'static str;
 
@@ -147,6 +155,7 @@ pub trait Backend {
         layer: usize,
         x: &HostTensor,
         pos: &[i32],
+        arena: &mut TensorArena,
     ) -> Result<(HostTensor, HostTensor, HostTensor)>;
 
     /// Causal prefill attention over `seq`-padded prompts, packed per
@@ -179,15 +188,29 @@ pub trait Backend {
         layer: usize,
         ctx: &HostTensor,
         resid: &HostTensor,
+        arena: &mut TensorArena,
     ) -> Result<HostTensor>;
 
     /// Pre-MoE norm + top-k router: `x [bucket, hidden]` →
     /// `(xn [bucket, hidden], idx bucket*k, weights [bucket, k])`.
-    fn router(&mut self, layer: usize, x: &HostTensor)
-        -> Result<(HostTensor, Vec<i32>, HostTensor)>;
+    fn router(
+        &mut self,
+        layer: usize,
+        x: &HostTensor,
+        arena: &mut TensorArena,
+    ) -> Result<(HostTensor, Vec<i32>, HostTensor)>;
 
-    /// One expert's SwiGLU FFN over its gathered micro-batch.
-    fn expert_ffn(&mut self, layer: usize, sel: ExpertSel, x: &HostTensor) -> Result<HostTensor>;
+    /// One expert's SwiGLU FFN over a bucket-sized micro-batch. The input
+    /// is a *view* so the grouped path can launch an expert's contiguous
+    /// segment of the permuted batch zero-copy (padding only happens at
+    /// the GEMM boundary, when the segment chunk is under the bucket).
+    fn expert_ffn(
+        &mut self,
+        layer: usize,
+        sel: ExpertSel,
+        x: TensorView<'_>,
+        arena: &mut TensorArena,
+    ) -> Result<HostTensor>;
 
     /// Final norm + greedy argmax: `x [bucket, hidden]` → ids (bucket).
     fn lm_head(&mut self, x: &HostTensor) -> Result<Vec<i32>>;

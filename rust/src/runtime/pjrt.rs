@@ -22,8 +22,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use xla::FromRawBytes;
 
 use crate::cpu_attn::Numerics;
+use crate::exec::arena::TensorArena;
 use crate::exec::modules::ExpertSel;
-use crate::exec::tensor::HostTensor;
+use crate::exec::tensor::{HostTensor, TensorView};
 use crate::runtime::{Backend, RtConfig};
 use crate::util::json::Json;
 
@@ -406,6 +407,7 @@ impl Backend for PjRtBackend {
         layer: usize,
         x: &HostTensor,
         pos: &[i32],
+        _arena: &mut TensorArena,
     ) -> Result<(HostTensor, HostTensor, HostTensor)> {
         let c = self.rt.cfg().clone();
         let (h, qd, kvd) = (c.hidden_size, c.q_dim(), c.kv_dim());
@@ -472,6 +474,7 @@ impl Backend for PjRtBackend {
         layer: usize,
         ctx: &HostTensor,
         resid: &HostTensor,
+        _arena: &mut TensorArena,
     ) -> Result<HostTensor> {
         let c = self.rt.cfg().clone();
         let (h, qd) = (c.hidden_size, c.q_dim());
@@ -490,6 +493,7 @@ impl Backend for PjRtBackend {
         &mut self,
         layer: usize,
         x: &HostTensor,
+        _arena: &mut TensorArena,
     ) -> Result<(HostTensor, Vec<i32>, HostTensor)> {
         let c = self.rt.cfg().clone();
         let (h, k) = (c.hidden_size, c.top_k);
@@ -508,7 +512,13 @@ impl Backend for PjRtBackend {
         ))
     }
 
-    fn expert_ffn(&mut self, layer: usize, sel: ExpertSel, x: &HostTensor) -> Result<HostTensor> {
+    fn expert_ffn(
+        &mut self,
+        layer: usize,
+        sel: ExpertSel,
+        x: TensorView<'_>,
+        _arena: &mut TensorArena,
+    ) -> Result<HostTensor> {
         let h = self.rt.cfg().hidden_size;
         let bucket = x.rows;
         let p = match sel {
@@ -516,7 +526,7 @@ impl Backend for PjRtBackend {
             ExpertSel::Shared => format!("l{layer}.se."),
         };
         let w = self.weight_bufs(&[format!("{p}wg"), format!("{p}wu"), format!("{p}wd")])?;
-        let x_b = self.rt.upload_f32(&x.data, &[bucket, h])?;
+        let x_b = self.rt.upload_f32(x.data, &[bucket, h])?;
         let spec = self.rt.artifacts.variant("expert_ffn", bucket)?.clone();
         let outs = self
             .rt

@@ -21,8 +21,9 @@ use std::collections::{HashMap, HashSet};
 use anyhow::{anyhow, bail, Result};
 
 use crate::cpu_attn::{decode_attention, Numerics, SeqAttn};
+use crate::exec::arena::TensorArena;
 use crate::exec::modules::ExpertSel;
-use crate::exec::tensor::HostTensor;
+use crate::exec::tensor::{HostTensor, TensorView};
 use crate::runtime::{Backend, RtConfig};
 use crate::util::rng::Rng;
 
@@ -32,6 +33,9 @@ pub struct RefBackend {
     resident: HashSet<String>,
     uploaded_bytes: usize,
     total_bytes: usize,
+    /// Router softmax scratch, reused across tokens and calls (one
+    /// allocation for the backend's lifetime instead of two per token).
+    probs_scratch: Vec<f32>,
 }
 
 impl RefBackend {
@@ -42,7 +46,14 @@ impl RefBackend {
     pub fn new(cfg: RtConfig, seed: u64) -> Self {
         let weights = gen_weights(&cfg, seed);
         let total_bytes = weights.values().map(|w| w.len() * 4).sum();
-        RefBackend { cfg, weights, resident: HashSet::new(), uploaded_bytes: 0, total_bytes }
+        RefBackend {
+            cfg,
+            weights,
+            resident: HashSet::new(),
+            uploaded_bytes: 0,
+            total_bytes,
+            probs_scratch: Vec::new(),
+        }
     }
 
     fn weight(&self, name: &str) -> Result<&[f32]> {
@@ -98,6 +109,7 @@ impl Backend for RefBackend {
         layer: usize,
         x: &HostTensor,
         pos: &[i32],
+        arena: &mut TensorArena,
     ) -> Result<(HostTensor, HostTensor, HostTensor)> {
         let c = self.cfg.clone();
         let (h, qd, kvd, hd) = (c.hidden_size, c.q_dim(), c.kv_dim(), c.head_dim);
@@ -108,10 +120,11 @@ impl Backend for RefBackend {
             ["ln1", "wq", "wk", "wv"].iter().map(|s| format!("{p}{s}")).collect();
         self.touch(&names);
 
-        let xn = rmsnorm(x, self.weight(&names[0])?, c.rms_eps);
-        let mut q = matmul(&xn, self.weight(&names[1])?, qd);
-        let mut k = matmul(&xn, self.weight(&names[2])?, kvd);
-        let v = matmul(&xn, self.weight(&names[3])?, kvd);
+        let xn = rmsnorm_arena(x, self.weight(&names[0])?, c.rms_eps, arena);
+        let mut q = matmul_view(xn.view(), self.weight(&names[1])?, qd, arena);
+        let mut k = matmul_view(xn.view(), self.weight(&names[2])?, kvd, arena);
+        let v = matmul_view(xn.view(), self.weight(&names[3])?, kvd, arena);
+        arena.put(xn);
         rope(&mut q, pos, hd, c.rope_theta);
         rope(&mut k, pos, hd, c.rope_theta);
         Ok((q, k, v))
@@ -221,11 +234,12 @@ impl Backend for RefBackend {
         layer: usize,
         ctx: &HostTensor,
         resid: &HostTensor,
+        arena: &mut TensorArena,
     ) -> Result<HostTensor> {
         let name = format!("l{layer}.wo");
         self.touch(std::slice::from_ref(&name));
         assert_eq!(ctx.rows, resid.rows);
-        let mut out = matmul(ctx, self.weight(&name)?, self.cfg.hidden_size);
+        let mut out = matmul_view(ctx.view(), self.weight(&name)?, self.cfg.hidden_size, arena);
         for (o, r) in out.data.iter_mut().zip(&resid.data) {
             *o += r;
         }
@@ -236,6 +250,7 @@ impl Backend for RefBackend {
         &mut self,
         layer: usize,
         x: &HostTensor,
+        arena: &mut TensorArena,
     ) -> Result<(HostTensor, Vec<i32>, HostTensor)> {
         let c = self.cfg.clone();
         let (e, k) = (c.num_experts, c.top_k);
@@ -243,43 +258,56 @@ impl Backend for RefBackend {
         let names = vec![format!("{p}ln2"), format!("{p}wr")];
         self.touch(&names);
 
-        let xn = rmsnorm(x, self.weight(&names[0])?, c.rms_eps);
-        let logits = matmul(&xn, self.weight(&names[1])?, e);
+        let xn = rmsnorm_arena(x, self.weight(&names[0])?, c.rms_eps, arena);
+        let logits = matmul_view(xn.view(), self.weight(&names[1])?, e, arena);
         let n = x.rows;
         let mut idx = Vec::with_capacity(n * k);
-        let mut wts = HostTensor::zeros(n, k);
+        let mut wts = arena.take_zeroed(n, k);
+        // One scratch buffer for the softmax, reused across tokens and
+        // calls — the top-k writes straight into `idx`/`wts`, so the loop
+        // allocates nothing.
+        let mut probs = std::mem::take(&mut self.probs_scratch);
         for t in 0..n {
             // softmax over experts
             let row = logits.row(t);
             let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut probs: Vec<f32> = row.iter().map(|&l| (l - max).exp()).collect();
+            probs.clear();
+            probs.extend(row.iter().map(|&l| (l - max).exp()));
             let denom: f32 = probs.iter().sum();
             for pv in probs.iter_mut() {
                 *pv /= denom;
             }
             // top-k by iterative argmax (stable first-max tie break, the
             // same contract as python's topk_by_argmax).
-            let mut picked = Vec::with_capacity(k);
-            for _ in 0..k {
+            let wrow = wts.row_mut(t);
+            for r in 0..k {
                 let mut best = 0usize;
                 for j in 1..e {
                     if probs[j] > probs[best] {
                         best = j;
                     }
                 }
-                picked.push((best, probs[best]));
+                idx.push(best as i32);
+                wrow[r] = probs[best];
                 probs[best] = f32::NEG_INFINITY;
             }
-            let sum: f32 = picked.iter().map(|&(_, w)| w).sum();
-            for (r, (j, w)) in picked.into_iter().enumerate() {
-                idx.push(j as i32);
-                wts.row_mut(t)[r] = w / sum;
+            let sum: f32 = wrow.iter().sum();
+            for w in wrow.iter_mut() {
+                *w /= sum;
             }
         }
+        self.probs_scratch = probs;
+        arena.put(logits);
         Ok((xn, idx, wts))
     }
 
-    fn expert_ffn(&mut self, layer: usize, sel: ExpertSel, x: &HostTensor) -> Result<HostTensor> {
+    fn expert_ffn(
+        &mut self,
+        layer: usize,
+        sel: ExpertSel,
+        x: TensorView<'_>,
+        arena: &mut TensorArena,
+    ) -> Result<HostTensor> {
         let p = self.expert_prefix(layer, sel);
         let names = vec![format!("{p}wg"), format!("{p}wu"), format!("{p}wd")];
         self.touch(&names);
@@ -287,13 +315,17 @@ impl Backend for RefBackend {
             ExpertSel::Routed(_) => self.cfg.ffn_inter,
             ExpertSel::Shared => self.cfg.shared_inter,
         };
-        let g = matmul(x, self.weight(&names[0])?, inter);
-        let u = matmul(x, self.weight(&names[1])?, inter);
-        let mut hmid = HostTensor::zeros(x.rows, inter);
+        let g = matmul_view(x, self.weight(&names[0])?, inter, arena);
+        let u = matmul_view(x, self.weight(&names[1])?, inter, arena);
+        let mut hmid = arena.take(x.rows, inter);
         for i in 0..g.data.len() {
             hmid.data[i] = silu(g.data[i]) * u.data[i];
         }
-        Ok(matmul(&hmid, self.weight(&names[2])?, self.cfg.hidden_size))
+        let out = matmul_view(hmid.view(), self.weight(&names[2])?, self.cfg.hidden_size, arena);
+        arena.put(g);
+        arena.put(u);
+        arena.put(hmid);
+        Ok(out)
     }
 
     fn lm_head(&mut self, x: &HostTensor) -> Result<Vec<i32>> {
@@ -334,33 +366,47 @@ impl Backend for RefBackend {
 // Module math (mirrors python/compile/kernels/ref.py)
 // ---------------------------------------------------------------------------
 
-/// RMSNorm per row: `x * rsqrt(mean(x^2) + eps) * g`.
-fn rmsnorm(x: &HostTensor, g: &[f32], eps: f32) -> HostTensor {
-    assert_eq!(x.dim, g.len());
-    let mut out = HostTensor::zeros(x.rows, x.dim);
-    for t in 0..x.rows {
-        let row = x.row(t);
+/// RMSNorm core: every element of `out` is overwritten.
+fn rmsnorm_into(x: &[f32], rows: usize, dim: usize, g: &[f32], eps: f32, out: &mut [f32]) {
+    assert_eq!(dim, g.len());
+    assert_eq!(out.len(), rows * dim);
+    for t in 0..rows {
+        let row = &x[t * dim..(t + 1) * dim];
         let mut ss = 0.0f32;
         for &v in row {
             ss += v * v;
         }
-        let inv = 1.0 / (ss / x.dim as f32 + eps).sqrt();
-        let o = out.row_mut(t);
+        let inv = 1.0 / (ss / dim as f32 + eps).sqrt();
+        let o = &mut out[t * dim..(t + 1) * dim];
         for d in 0..row.len() {
             o[d] = row[d] * inv * g[d];
         }
     }
+}
+
+/// RMSNorm per row: `x * rsqrt(mean(x^2) + eps) * g`.
+fn rmsnorm(x: &HostTensor, g: &[f32], eps: f32) -> HostTensor {
+    let mut out = HostTensor::zeros(x.rows, x.dim);
+    rmsnorm_into(&x.data, x.rows, x.dim, g, eps, &mut out.data);
     out
 }
 
-/// Row-major matmul: `x [n, a] @ w [a, m] -> [n, m]`.
-fn matmul(x: &HostTensor, w: &[f32], m: usize) -> HostTensor {
-    let a = x.dim;
+/// RMSNorm into an arena checkout. The output is fully overwritten, so
+/// the uninit-content [`TensorArena::take`] is safe here.
+fn rmsnorm_arena(x: &HostTensor, g: &[f32], eps: f32, arena: &mut TensorArena) -> HostTensor {
+    let mut out = arena.take(x.rows, x.dim);
+    rmsnorm_into(&x.data, x.rows, x.dim, g, eps, &mut out.data);
+    out
+}
+
+/// Matmul core: accumulates `+=` into `out`, which must arrive zeroed.
+fn matmul_into(x: &[f32], rows: usize, a: usize, w: &[f32], m: usize, out: &mut [f32]) {
     assert_eq!(w.len(), a * m, "weight shape mismatch: {} vs {a}x{m}", w.len());
-    let mut out = HostTensor::zeros(x.rows, m);
-    for t in 0..x.rows {
-        let row = x.row(t);
-        let o = out.row_mut(t);
+    assert_eq!(x.len(), rows * a);
+    assert_eq!(out.len(), rows * m);
+    for t in 0..rows {
+        let row = &x[t * a..(t + 1) * a];
+        let o = &mut out[t * m..(t + 1) * m];
         for (i, &xv) in row.iter().enumerate() {
             if xv == 0.0 {
                 continue;
@@ -371,6 +417,21 @@ fn matmul(x: &HostTensor, w: &[f32], m: usize) -> HostTensor {
             }
         }
     }
+}
+
+/// Row-major matmul: `x [n, a] @ w [a, m] -> [n, m]`.
+fn matmul(x: &HostTensor, w: &[f32], m: usize) -> HostTensor {
+    let mut out = HostTensor::zeros(x.rows, m);
+    matmul_into(&x.data, x.rows, x.dim, w, m, &mut out.data);
+    out
+}
+
+/// Matmul from a borrowed view into an arena checkout (the hot-path
+/// variant: zero-copy input, recycled output). The accumulating core
+/// requires a zeroed output, hence [`TensorArena::take_zeroed`].
+fn matmul_view(x: TensorView<'_>, w: &[f32], m: usize, arena: &mut TensorArena) -> HostTensor {
+    let mut out = arena.take_zeroed(x.rows, m);
+    matmul_into(x.data, x.rows, x.dim, w, m, &mut out.data);
     out
 }
 
@@ -506,7 +567,8 @@ mod tests {
             (0..3 * 64).map(|i| (i as f32 * 0.11).cos()).collect(),
             64,
         );
-        let (xn, idx, wts) = b.router(0, &x).unwrap();
+        let mut ar = TensorArena::new();
+        let (xn, idx, wts) = b.router(0, &x, &mut ar).unwrap();
         assert_eq!(xn.rows, 3);
         assert_eq!(idx.len(), 6);
         for t in 0..3 {
@@ -515,6 +577,26 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-5, "weights renormalize to 1");
             assert!(wts.row(t)[0] >= wts.row(t)[1], "descending weights");
         }
+    }
+
+    #[test]
+    fn router_output_independent_of_arena_state() {
+        // The scratch-probs reuse and arena recycling must not leak state
+        // between calls: a warm arena produces bit-identical routing.
+        let mut b = backend();
+        let x = HostTensor::from_vec(
+            (0..5 * 64).map(|i| (i as f32 * 0.31).sin()).collect(),
+            64,
+        );
+        let mut ar = TensorArena::new();
+        let (xn1, idx1, wts1) = b.router(0, &x, &mut ar).unwrap();
+        ar.put(xn1.clone());
+        ar.put(wts1.clone());
+        let (xn2, idx2, wts2) = b.router(0, &x, &mut ar).unwrap();
+        assert_eq!(xn1.data, xn2.data);
+        assert_eq!(idx1, idx2);
+        assert_eq!(wts1.data, wts2.data);
+        assert!(ar.stats().hits > 0, "warm call must recycle buffers");
     }
 
     #[test]
@@ -562,10 +644,29 @@ mod tests {
         let x1 = HostTensor::from_vec(row.clone(), h);
         let mut padded = HostTensor::zeros(8, h);
         padded.row_mut(0).copy_from_slice(&row);
-        let y1 = b.expert_ffn(0, ExpertSel::Routed(0), &x1).unwrap();
-        let y8 = b.expert_ffn(0, ExpertSel::Routed(0), &padded).unwrap();
+        let mut ar = TensorArena::new();
+        let y1 = b.expert_ffn(0, ExpertSel::Routed(0), x1.view(), &mut ar).unwrap();
+        let y8 = b.expert_ffn(0, ExpertSel::Routed(0), padded.view(), &mut ar).unwrap();
         assert_eq!(y1.row(0), y8.row(0));
         assert!(y8.row(3).iter().all(|&v| v == 0.0), "zero rows stay zero");
+    }
+
+    #[test]
+    fn expert_ffn_steady_state_allocates_nothing() {
+        // After one warm-up call per shape, every checkout the expert FFN
+        // makes (g, u, hmid, out) must be an arena hit.
+        let mut b = backend();
+        let h = b.cfg().hidden_size;
+        let x = HostTensor::from_vec((0..8 * h).map(|i| (i as f32 * 0.05).cos()).collect(), h);
+        let mut ar = TensorArena::new();
+        let y = b.expert_ffn(0, ExpertSel::Routed(1), x.view(), &mut ar).unwrap();
+        ar.put(y);
+        ar.reset_stats();
+        let y = b.expert_ffn(0, ExpertSel::Routed(2), x.view(), &mut ar).unwrap();
+        ar.put(y);
+        let s = ar.stats();
+        assert_eq!(s.misses, 0, "steady state must not allocate: {s:?}");
+        assert_eq!(s.hits, 4, "g, u, hmid and the output recycle");
     }
 
     #[test]

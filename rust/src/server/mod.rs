@@ -43,6 +43,11 @@ pub struct RunReport {
     /// is the acceptance quantity — nonzero under the module policy,
     /// zero under the serialized on-demand baselines.
     pub timeline: TimelineStats,
+    /// Fraction of scratch-tensor checkouts the arena served from its
+    /// pool ([`crate::exec::arena`]); near 1.0 in steady-state decode.
+    pub arena_hit_rate: f64,
+    /// Heap bytes the arena's buffer reuse avoided re-allocating.
+    pub arena_recycled_bytes: u64,
     /// Greedy token streams (for cross-policy agreement checks).
     pub tokens: Vec<Vec<i32>>,
 }
@@ -52,7 +57,7 @@ impl RunReport {
         format!(
             "{:<14} seqs={:<5} wall={:>7.2}s prefill={:>8.1} tok/s decode={:>8.1} tok/s \
              total={:>8.1} tok/s expert-avg-bsz={:>6.1} pad={:>4.1}% HtoD={} DtoH={} \
-             cache-hit={:>5.1}% overlap={:>5.1}% tl-overlap={:>5.1}%",
+             cache-hit={:>5.1}% overlap={:>5.1}% tl-overlap={:>5.1}% arena-hit={:>5.1}%",
             self.policy.name(),
             self.sequences,
             self.wall_secs,
@@ -66,6 +71,7 @@ impl RunReport {
             100.0 * self.weight_hit_rate,
             100.0 * self.htod_overlap_fraction,
             100.0 * self.timeline.overlap_fraction(),
+            100.0 * self.arena_hit_rate,
         )
     }
 }
@@ -130,6 +136,8 @@ pub fn execute(eng: &mut Engine, prompts: &[Vec<i32>], steps: usize) -> Result<R
         htod_overlap_fraction: m.htod_overlap_fraction(),
         weight_evictions: m.weight_evictions,
         timeline: eng.timeline.stats(),
+        arena_hit_rate: m.arena_hit_rate(),
+        arena_recycled_bytes: m.arena.recycled_bytes,
         tokens,
     })
 }
@@ -179,6 +187,8 @@ mod tests {
                 makespan_secs: 1.5,
                 busy_secs: [1.0, 0.0, 0.5, 0.5],
             },
+            arena_hit_rate: 0.95,
+            arena_recycled_bytes: 4096,
             tokens: vec![],
         };
         let s = r.summary();
@@ -189,5 +199,6 @@ mod tests {
         assert!(s.contains("overlap= 90.0%"));
         // 1.5s makespan over 2.0s of stream work → 25% hidden.
         assert!(s.contains("tl-overlap= 25.0%"), "{s}");
+        assert!(s.contains("arena-hit= 95.0%"), "{s}");
     }
 }

@@ -447,6 +447,8 @@ impl Session {
         m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
         m.insert("weight_cache_hit_rate".into(), Json::Num(r.weight_hit_rate));
         m.insert("htod_overlap_fraction".into(), Json::Num(r.htod_overlap_fraction));
+        m.insert("arena_hit_rate".into(), Json::Num(r.arena_hit_rate));
+        m.insert("arena_recycled_bytes".into(), Json::Num(r.arena_recycled_bytes as f64));
         m.insert("timeline".into(), timeline_json(&r.timeline));
         append_bench_record(&path, Json::Obj(m));
     }
@@ -550,7 +552,10 @@ fn measured_decode_step(
 /// log must not fail a run — and an existing file that cannot be parsed
 /// as a trajectory is left untouched rather than overwritten (the file
 /// exists to *accumulate* history; never erase it on a read hiccup).
-fn append_bench_record(path: &Path, record: Json) {
+///
+/// Public so out-of-session benches (`benches/hotpath.rs`) append their
+/// machine-readable records to the same trajectory the session writes.
+pub fn append_bench_record(path: &Path, record: Json) {
     let mut runs: Vec<Json> = Vec::new();
     if let Ok(text) = std::fs::read_to_string(path) {
         if !text.trim().is_empty() {

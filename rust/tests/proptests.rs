@@ -2,7 +2,7 @@
 //! scenarios, wiring the coordinator's pieces together (the per-module
 //! properties live next to each module in rust/src/*/mod.rs).
 
-use moe_gen::batching::{gather_rows, group_by_expert, micro_batches, scatter_add};
+use moe_gen::batching::{gather_rows, micro_batches, scatter_add, GroupedBatch};
 use moe_gen::dag::{Dag, Resource};
 use moe_gen::hw;
 use moe_gen::model;
@@ -132,11 +132,14 @@ fn prop_moe_combine_idempotent_under_micro_batching() {
             w.extend([wa, 1.0 - wa]);
         }
         let run = |chunk: usize| {
+            let g = GroupedBatch::build(&idx, &w, n, k, e);
             let mut acc = vec![0.0f32; n * dim];
-            for g in group_by_expert(&idx, &w, n, k, e) {
-                for r in micro_batches(g.rows.len(), chunk) {
-                    let rows = &g.rows[r.clone()];
-                    let ws = &g.weights[r];
+            for ex in 0..e {
+                let seg = g.segment(ex);
+                for r in micro_batches(seg.len(), chunk) {
+                    let abs = seg.start + r.start..seg.start + r.end;
+                    let rows = &g.perm[abs.clone()];
+                    let ws = &g.weights[abs];
                     let bucket = rows.len().next_power_of_two();
                     let gathered = gather_rows(&x, dim, rows, bucket);
                     scatter_add(&mut acc, dim, rows, ws, &gathered);
