@@ -137,6 +137,29 @@ fn main() {
         println!("bench: ablate_micro_{micro:<4}     wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
     }
 
+    println!("\n== ablation: expert-parallel n_devices (virtual topology) ==");
+    for nd in [1usize, 2, 4] {
+        let mut spec = base_spec();
+        spec.eng.n_devices = nd;
+        spec.eng.max_batch = 48;
+        let mut s = Session::open(spec).expect("artifacts missing — run `make artifacts`");
+        let t0 = std::time::Instant::now();
+        let rep = s.run_prompts(&prompts, steps).expect("ablation run");
+        let wall = t0.elapsed().as_secs_f64();
+        check(&mut reference, "n_devices", &rep.tokens);
+        let ici_ms = 1e3 * rep.timeline.busy(moe_gen::exec::Stream::Interconnect);
+        if nd == 1 {
+            assert_eq!(ici_ms, 0.0, "single device must not touch the interconnect");
+        } else {
+            assert!(ici_ms > 0.0, "nd={nd} moved no all-to-all bytes");
+        }
+        println!(
+            "bench: ablate_ndev_{nd:<4}      wall {wall:>7.2}s decode {:>8.1} tok/s \
+             ici {ici_ms:>7.3}ms",
+            rep.decode_tp
+        );
+    }
+
     // One baseline row recorded into the perf trajectory (the sweep rows
     // above stay out of it on purpose — they ablate, they don't track).
     let mut spec = base_spec();

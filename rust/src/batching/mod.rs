@@ -196,6 +196,90 @@ pub fn micro_batches(n: usize, micro: usize) -> Vec<std::ops::Range<usize>> {
         .collect()
 }
 
+/// Expert→device assignment policy for expert-parallel scale-out
+/// (DESIGN.md §11). Placement only moves *where* an expert's FFN runs —
+/// the combine order (experts ascending, tokens ascending) is fixed by
+/// [`GroupedBatch`], so tokens are bit-identical under every placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExpertPlacement {
+    /// Expert `e` lives on device `e mod N` — interleaves hot experts.
+    RoundRobin,
+    /// Contiguous blocks of `ceil(E/N)` experts per device — the layout
+    /// a sharded checkpoint loads without reshuffling.
+    Contiguous,
+    /// Greedy longest-processing-time: experts sorted by routed-token
+    /// count, each placed on the least-loaded device — balances this
+    /// batch's actual token load. Falls back to round-robin when no
+    /// counts are available (e.g. at search time before routing).
+    PopularityAware,
+}
+
+impl ExpertPlacement {
+    pub const ALL: [ExpertPlacement; 3] = [
+        ExpertPlacement::RoundRobin,
+        ExpertPlacement::Contiguous,
+        ExpertPlacement::PopularityAware,
+    ];
+
+    pub fn slug(self) -> &'static str {
+        match self {
+            ExpertPlacement::RoundRobin => "round_robin",
+            ExpertPlacement::Contiguous => "contiguous",
+            ExpertPlacement::PopularityAware => "popularity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ExpertPlacement> {
+        match s.to_ascii_lowercase().as_str() {
+            "round_robin" | "round-robin" | "rr" => Some(ExpertPlacement::RoundRobin),
+            "contiguous" | "block" => Some(ExpertPlacement::Contiguous),
+            "popularity" | "popularity_aware" | "popularity-aware" | "lpt" => {
+                Some(ExpertPlacement::PopularityAware)
+            }
+            _ => None,
+        }
+    }
+
+    /// Assign each of `num_experts` experts to one of `n_devices`
+    /// devices; `counts` (routed (token, rank) assignments per expert,
+    /// e.g. [`GroupedBatch::count`]) feeds the popularity-aware policy.
+    /// Deterministic: ties break toward the lowest device id.
+    pub fn assign(
+        self,
+        num_experts: usize,
+        n_devices: usize,
+        counts: Option<&[usize]>,
+    ) -> Vec<usize> {
+        assert!(n_devices >= 1, "placement needs at least one device");
+        match self {
+            ExpertPlacement::RoundRobin => {
+                (0..num_experts).map(|e| e % n_devices).collect()
+            }
+            ExpertPlacement::Contiguous => {
+                let chunk = num_experts.div_ceil(n_devices.min(num_experts.max(1))).max(1);
+                (0..num_experts).map(|e| (e / chunk).min(n_devices - 1)).collect()
+            }
+            ExpertPlacement::PopularityAware => {
+                let Some(counts) = counts.filter(|c| c.iter().any(|&x| x > 0)) else {
+                    return ExpertPlacement::RoundRobin.assign(num_experts, n_devices, None);
+                };
+                assert_eq!(counts.len(), num_experts);
+                // LPT: heaviest expert first onto the least-loaded device.
+                let mut order: Vec<usize> = (0..num_experts).collect();
+                order.sort_by_key(|&e| (std::cmp::Reverse(counts[e]), e));
+                let mut load = vec![0usize; n_devices];
+                let mut dev = vec![0usize; num_experts];
+                for e in order {
+                    let d = (0..n_devices).min_by_key(|&d| (load[d], d)).unwrap();
+                    dev[e] = d;
+                    load[d] += counts[e];
+                }
+                dev
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -462,6 +546,69 @@ mod tests {
                     );
                 }
             }
+        });
+    }
+
+    #[test]
+    fn placement_policies_are_total_and_deterministic() {
+        assert_eq!(
+            ExpertPlacement::RoundRobin.assign(5, 2, None),
+            vec![0, 1, 0, 1, 0]
+        );
+        assert_eq!(
+            ExpertPlacement::Contiguous.assign(5, 2, None),
+            vec![0, 0, 0, 1, 1]
+        );
+        // Popularity: heaviest expert (2) claims a device alone.
+        assert_eq!(
+            ExpertPlacement::PopularityAware.assign(3, 2, Some(&[3, 2, 6])),
+            vec![1, 1, 0]
+        );
+        // No counts → round-robin fallback.
+        assert_eq!(
+            ExpertPlacement::PopularityAware.assign(4, 2, None),
+            ExpertPlacement::RoundRobin.assign(4, 2, None)
+        );
+        assert_eq!(
+            ExpertPlacement::PopularityAware.assign(4, 2, Some(&[0, 0, 0, 0])),
+            ExpertPlacement::RoundRobin.assign(4, 2, None)
+        );
+        for p in ExpertPlacement::ALL {
+            assert_eq!(ExpertPlacement::parse(p.slug()), Some(p), "{}", p.slug());
+            // Single device degenerates to the all-zero assignment.
+            assert!(p.assign(8, 1, Some(&[1; 8])).iter().all(|&d| d == 0));
+        }
+        assert_eq!(ExpertPlacement::parse("nope"), None);
+    }
+
+    #[test]
+    fn prop_placement_covers_every_expert_in_range() {
+        prop_check(100, |rng| {
+            let e = rng.range(1, 40);
+            let n = rng.range(1, 9);
+            let counts: Vec<usize> = (0..e).map(|_| rng.below(50)).collect();
+            for p in ExpertPlacement::ALL {
+                let dev = p.assign(e, n, Some(&counts));
+                assert_eq!(dev.len(), e);
+                assert!(dev.iter().all(|&d| d < n), "{:?}: device out of range", p);
+            }
+            // Contiguous really is contiguous: device ids non-decreasing.
+            let c = ExpertPlacement::Contiguous.assign(e, n, None);
+            assert!(c.windows(2).all(|w| w[0] <= w[1]));
+            // Popularity LPT never loads a device more than round-robin's
+            // worst device plus the heaviest single expert (weak but
+            // deterministic balance bound).
+            let lpt = ExpertPlacement::PopularityAware.assign(e, n, Some(&counts));
+            let load = |dev: &[usize]| {
+                let mut l = vec![0usize; n];
+                for (ex, &d) in dev.iter().enumerate() {
+                    l[d] += counts[ex];
+                }
+                *l.iter().max().unwrap()
+            };
+            let total: usize = counts.iter().sum();
+            let max_c = counts.iter().copied().max().unwrap_or(0);
+            assert!(load(&lpt) <= total.div_ceil(n) + max_c);
         });
     }
 

@@ -2,6 +2,8 @@
 
 use std::path::PathBuf;
 
+use crate::batching::ExpertPlacement;
+
 /// Which batching policy drives the live engine / simulator.
 ///
 /// * `ModuleBased` — the paper's contribution: attention and expert modules
@@ -113,6 +115,13 @@ pub struct EngineConfig {
     /// paper's Fig. 2 contrasts with module-based accumulation). Sweeps
     /// set it from the CLI (`--micro-batch`) and the ablations bench.
     pub baseline_micro_batch: usize,
+    /// Virtual expert-parallel devices the executor's timeline models
+    /// (1 = classic single-device offloading). Experts shard across
+    /// devices by `placement`; all-to-all traffic rides the shared
+    /// interconnect stream.
+    pub n_devices: usize,
+    /// Expert→device placement policy used when `n_devices > 1`.
+    pub placement: ExpertPlacement,
     pub seed: u64,
     /// Print per-phase diagnostics.
     pub verbose: bool,
@@ -151,6 +160,13 @@ impl EngineConfig {
                 return Err(format!("throttle_htod must be a positive bandwidth, got {bw}"));
             }
         }
+        let max_dev = crate::exec::MAX_DEVICES;
+        if self.n_devices == 0 || self.n_devices > max_dev {
+            return Err(format!(
+                "n_devices must be in 1..={max_dev}, got {}",
+                self.n_devices
+            ));
+        }
         Ok(())
     }
 }
@@ -168,6 +184,8 @@ impl Default for EngineConfig {
             weight_cache_bytes: 256 << 20,
             weight_reuse: 1.0,
             baseline_micro_batch: 8,
+            n_devices: 1,
+            placement: ExpertPlacement::RoundRobin,
             seed: 0,
             verbose: false,
         }
@@ -219,6 +237,8 @@ mod tests {
             EngineConfig { weight_reuse: 0.5, ..EngineConfig::default() },
             EngineConfig { throttle_htod: Some(0.0), ..EngineConfig::default() },
             EngineConfig { throttle_htod: Some(-1.0), ..EngineConfig::default() },
+            EngineConfig { n_devices: 0, ..EngineConfig::default() },
+            EngineConfig { n_devices: crate::exec::MAX_DEVICES + 1, ..EngineConfig::default() },
         ];
         for cfg in bad {
             assert!(cfg.validate().is_err(), "must reject {cfg:?}");
@@ -234,5 +254,7 @@ mod tests {
         assert!(c.weight_cache_bytes > 0, "caching on by default");
         assert!(c.weight_reuse >= 1.0);
         assert_eq!(c.baseline_micro_batch, 8, "paper-default baseline micro-batch");
+        assert_eq!(c.n_devices, 1, "single-device offloading by default");
+        assert_eq!(c.placement, ExpertPlacement::RoundRobin);
     }
 }

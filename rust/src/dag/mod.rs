@@ -21,17 +21,49 @@
 //! is a lower bound on any resource-feasible schedule and equals the
 //! replay when chains fully serialize each resource.
 
-use crate::exec::timeline::{EventId, Stream, Timeline};
+use crate::exec::timeline::{EventId, Stream, Timeline, Topology};
 
-/// Which engine a job occupies.
+/// Which engine a job occupies. The plain compute/copy variants name
+/// device 0's engines (the single-GPU paper setting); the `*On(d)`
+/// variants pin a job to virtual device `d`'s engine for expert-parallel
+/// DAGs, and `Interconnect` is the shared all-to-all link (DESIGN.md
+/// §11).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Resource {
     GpuCompute,
     CpuCompute,
     HtoD,
     DtoH,
+    /// Device `d`'s GPU compute engine (`GpuOn(0)` ≡ `GpuCompute`).
+    GpuOn(usize),
+    /// Device `d`'s HtoD copy engine (`HtoDOn(0)` ≡ `HtoD`).
+    HtoDOn(usize),
+    /// The shared inter-device all-to-all stream.
+    Interconnect,
     /// Synchronization / zero-cost marker nodes.
     None,
+}
+
+impl Resource {
+    /// Canonical form: device-0 pinned variants fold into the plain
+    /// single-device names, so `GpuOn(0)` and `GpuCompute` denote the
+    /// same physical engine everywhere (replay, busy accounting).
+    pub fn canon(self) -> Resource {
+        match self {
+            Resource::GpuOn(0) => Resource::GpuCompute,
+            Resource::HtoDOn(0) => Resource::HtoD,
+            r => r,
+        }
+    }
+
+    /// Virtual device whose engine this job occupies, if device-scoped.
+    fn device(self) -> Option<usize> {
+        match self {
+            Resource::GpuOn(d) | Resource::HtoDOn(d) => Some(d),
+            Resource::GpuCompute | Resource::HtoD | Resource::DtoH => Some(0),
+            _ => Option::None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -163,15 +195,30 @@ impl Dag {
     /// the replay additionally exposes per-stream busy time and the
     /// overlap fraction, not just the makespan.
     pub fn to_timeline(&self) -> Timeline {
+        self.to_timeline_mode(false)
+    }
+
+    /// [`to_timeline`](Dag::to_timeline) with the timeline's serialized
+    /// (on-demand) mode selectable — the honest baseline when comparing
+    /// an overlapped schedule against "same ops, no overlap".
+    pub fn to_timeline_mode(&self, serialized: bool) -> Timeline {
         let order = self.topo_order().expect("offloading DAG has a cycle");
+        let devices = self
+            .nodes
+            .iter()
+            .filter_map(|n| n.resource.device())
+            .max()
+            .unwrap_or(0)
+            + 1;
         // Bandwidths are irrelevant here: DAG node costs are already
         // seconds; transfers are recorded through `record`, not `xfer`.
-        let mut tl = Timeline::new(1.0, 1.0);
+        let mut tl = Timeline::with_topology(1.0, 1.0, Topology::new(devices, 1.0));
+        tl.set_serialized(serialized);
         let mut ev: Vec<Option<EventId>> = vec![None; self.nodes.len()];
         for &v in &order {
             let deps: Vec<EventId> = self.preds[v].iter().map(|&u| ev[u].unwrap()).collect();
             let n = &self.nodes[v];
-            ev[v] = Some(match n.resource {
+            ev[v] = Some(match n.resource.canon() {
                 Resource::None => tl.record_free(n.name.clone(), n.cost, &deps),
                 Resource::GpuCompute => {
                     tl.record(Stream::GpuCompute, n.name.clone(), n.cost, &deps)
@@ -179,6 +226,15 @@ impl Dag {
                 Resource::CpuCompute => tl.record(Stream::CpuAttn, n.name.clone(), n.cost, &deps),
                 Resource::HtoD => tl.record(Stream::HtoD, n.name.clone(), n.cost, &deps),
                 Resource::DtoH => tl.record(Stream::DtoH, n.name.clone(), n.cost, &deps),
+                Resource::GpuOn(d) => {
+                    tl.record_on(d, Stream::GpuCompute, n.name.clone(), n.cost, &deps)
+                }
+                Resource::HtoDOn(d) => {
+                    tl.record_on(d, Stream::HtoD, n.name.clone(), n.cost, &deps)
+                }
+                Resource::Interconnect => {
+                    tl.record(Stream::Interconnect, n.name.clone(), n.cost, &deps)
+                }
             });
         }
         tl
@@ -195,11 +251,12 @@ impl Dag {
     }
 
     /// Sum of costs per resource — aggregate busy time (for idle-fraction
-    /// metrics: `1 - busy/makespan`).
+    /// metrics: `1 - busy/makespan`). Compares canonically, so
+    /// `GpuOn(0)` and `GpuCompute` pool together.
     pub fn busy_time(&self, r: Resource) -> f64 {
         self.nodes
             .iter()
-            .filter(|n| n.resource == r)
+            .filter(|n| n.resource.canon() == r.canon())
             .map(|n| n.cost)
             .sum()
     }
@@ -372,14 +429,15 @@ mod tests {
             std::collections::HashMap::new();
         for &v in &order {
             let ready = g.preds[v].iter().map(|&u| finish[u]).fold(0.0f64, f64::max);
-            let start = if g.nodes[v].resource == Resource::None {
+            let r = g.nodes[v].resource.canon();
+            let start = if r == Resource::None {
                 ready
             } else {
-                ready.max(resource_free.get(&g.nodes[v].resource).copied().unwrap_or(0.0))
+                ready.max(resource_free.get(&r).copied().unwrap_or(0.0))
             };
             finish[v] = start + g.nodes[v].cost;
-            if g.nodes[v].resource != Resource::None {
-                resource_free.insert(g.nodes[v].resource, finish[v]);
+            if r != Resource::None {
+                resource_free.insert(r, finish[v]);
             }
         }
         finish.into_iter().fold(0.0, f64::max)
@@ -422,5 +480,41 @@ mod tests {
         assert_eq!(g.busy_time(Resource::GpuCompute), 2.0);
         assert_eq!(g.busy_time(Resource::CpuCompute), 5.0);
         assert_eq!(g.busy_time(Resource::DtoH), 0.0);
+    }
+
+    #[test]
+    fn device_pinned_resources_replay_on_per_device_lanes() {
+        // EPS-MoE shape: dispatch on the interconnect overlaps device 0's
+        // FFN; device 1's FFN then overlaps the combine of device 0.
+        let mut g = Dag::new();
+        let router = g.add("router", 1.0, Resource::GpuCompute);
+        let disp = g.add("dispatch@1", 2.0, Resource::Interconnect);
+        let ffn0 = g.add("ffn@0", 4.0, Resource::GpuOn(0));
+        let ffn1 = g.add("ffn@1", 4.0, Resource::GpuOn(1));
+        let comb = g.add("combine@1", 2.0, Resource::Interconnect);
+        let merge = g.add("merge", 0.0, Resource::None);
+        g.edge(router, disp);
+        g.edge(router, ffn0); // GpuOn(0) ≡ GpuCompute: same lane as router
+        g.edge(disp, ffn1);
+        g.edge(ffn1, comb);
+        g.edge(ffn0, merge);
+        g.edge(comb, merge);
+        let tl = g.to_timeline();
+        tl.verify().unwrap();
+        assert_eq!(tl.devices(), 2);
+        // router(0..1) → ffn0(1..5) on dev0 while dispatch(1..3) →
+        // ffn1(3..7) → combine(7..9).
+        assert_eq!(tl.makespan(), 9.0);
+        assert_eq!(tl.busy(crate::exec::Stream::Interconnect), 4.0);
+        assert_eq!(tl.busy_on(0, crate::exec::Stream::GpuCompute), 5.0);
+        assert_eq!(tl.busy_on(1, crate::exec::Stream::GpuCompute), 4.0);
+        assert!(tl.overlap_fraction() > 0.0, "expert-parallel overlap priced");
+        assert_eq!(g.busy_time(Resource::GpuOn(0)), 5.0, "canon pools GpuOn(0)+GpuCompute");
+        // The serialized replay of the same DAG shows zero overlap — the
+        // comparison the multidev CI smoke makes.
+        let ser = g.to_timeline_mode(true);
+        ser.verify().unwrap();
+        assert_eq!(ser.overlap_fraction(), 0.0);
+        assert!(ser.makespan() > tl.makespan());
     }
 }

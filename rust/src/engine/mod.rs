@@ -36,7 +36,7 @@ use std::sync::{Arc, RwLock};
 use anyhow::Result;
 
 use crate::config::EngineConfig;
-use crate::exec::{ExecCtx, Pipeline, Plan, TensorArena, Timeline};
+use crate::exec::{ExecCtx, Pipeline, Plan, TensorArena, Timeline, Topology};
 use crate::hw;
 use crate::kv::KvCache;
 use crate::memory::{MemoryPool, TransferEngine, TransferHandle};
@@ -106,6 +106,8 @@ impl Engine {
                 s_expert: 0,
                 s_params: 0,
                 reuse: cfg.weight_reuse,
+                n_devices: cfg.n_devices,
+                placement: cfg.placement,
             },
             None,
             backend.cfg(),
@@ -119,9 +121,10 @@ impl Engine {
         plan.cache_bytes = None;
         let weights =
             WeightResidency::new(WeightSizes::from_cfg(backend.cfg()), cfg.weight_cache_bytes);
-        let mut timeline = Timeline::new(
+        let mut timeline = Timeline::with_topology(
             cfg.throttle_htod.unwrap_or(hw::VIRTUAL_HTOD_BW),
             hw::VIRTUAL_DTOH_BW,
+            Topology { devices: cfg.n_devices, interconnect_bw: hw::VIRTUAL_ICI_BW },
         );
         timeline.set_serialized(!cfg.prefetch);
         Ok(Engine {
@@ -217,6 +220,7 @@ impl Engine {
             prefetch: self.cfg.prefetch,
             reuse_rounds: (self.plan.reuse.max(1.0).round() as u32).saturating_sub(1),
             cpu_threads: self.cpu_threads,
+            device: 0,
             fetch_ev: None,
             input_ev: None,
             next_deps: Vec::new(),
@@ -428,6 +432,7 @@ mod tests {
         let dec = Strategy {
             b: 64, b_a: 16, b_e: 32, omega: 0.5,
             s_expert: 500_000, s_params: 1_000_000, reuse: 2.0,
+            n_devices: 2, placement: crate::batching::ExpertPlacement::Contiguous,
         };
         eng.set_strategy(&dec, None);
         let p = eng.plan();
@@ -435,6 +440,8 @@ mod tests {
         assert_eq!(p.attn_micro, 16);
         assert_eq!(p.expert_micro, 32);
         assert!((p.omega - 0.5).abs() < 1e-12);
+        assert_eq!(p.n_devices, 2);
+        assert_eq!(p.placement, crate::batching::ExpertPlacement::Contiguous);
         // Residency fields go live: S_Params re-budgets the cache,
         // S_Expert sizes the predictive-prefetch buffer.
         assert_eq!(eng.weights.cache.budget(), 1_000_000);
@@ -499,6 +506,31 @@ mod tests {
         eng.reset_accounting();
         assert!(eng.timeline.is_empty());
         assert_eq!(eng.metrics.decode_tokens, 0);
+    }
+
+    #[test]
+    fn multidev_engine_reproduces_single_device_tokens() {
+        // Expert-parallel sharding is a timeline/topology concern only:
+        // the numeric expert loop is untouched, so tokens are bit-equal,
+        // while the schedule gains interconnect traffic.
+        let prompts: Vec<Vec<i32>> =
+            (0..8).map(|i| vec![i + 1, 2 * i + 3, 5 * i + 7]).collect();
+        let mut base = engine();
+        let want = base.generate(&prompts, 4).unwrap();
+        let cfg = EngineConfig { n_devices: 2, ..EngineConfig::default() };
+        let mut eng = Engine::new(cfg).unwrap();
+        let got = eng.generate(&prompts, 4).unwrap();
+        assert_eq!(got, want, "sharding must not change tokens");
+        eng.timeline.verify().unwrap();
+        assert!(
+            eng.timeline.busy(crate::exec::Stream::Interconnect) > 0.0,
+            "sharded run must carry all-to-all traffic"
+        );
+        assert_eq!(
+            base.timeline.busy(crate::exec::Stream::Interconnect),
+            0.0,
+            "single-device run never touches the interconnect"
+        );
     }
 
     #[test]

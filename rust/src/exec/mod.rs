@@ -22,12 +22,15 @@
 //! * [`arena`] — the scratch arena ([`TensorArena`]) that recycles
 //!   bucket-shaped [`HostTensor`] buffers through the expert and
 //!   projection hot paths so steady-state decode waves allocate nothing;
-//! * [`timeline`] — the virtual multi-stream timeline ([`Timeline`]):
-//!   four streams (GPU compute / CPU attention / HtoD / DtoH) over which
-//!   the pipeline enqueues every launch and transfer with explicit
-//!   dependencies, yielding makespan, per-stream busy/idle time and the
-//!   overlap fraction the reports publish. The simulator's DAGs replay
-//!   through the same scheduler ([`crate::dag::Dag::to_timeline`]).
+//! * [`timeline`] — the virtual multi-stream timeline ([`Timeline`])
+//!   over a [`Topology`] of N virtual devices: per-device GPU compute /
+//!   HtoD / DtoH streams plus a shared CPU-attention stream and a shared
+//!   interconnect stream carrying expert-parallel all-to-all traffic.
+//!   The pipeline enqueues every launch and transfer with explicit
+//!   dependencies, yielding makespan, per-stream (and per-device)
+//!   busy/idle time and the overlap fraction the reports publish. The
+//!   simulator's DAGs replay through the same scheduler
+//!   ([`crate::dag::Dag::to_timeline`]).
 //!
 //! The `Engine` is a facade over this subsystem; the simulator's DAG
 //! builders label their nodes with the same [`ModuleKind`] vocabulary, so
@@ -43,4 +46,4 @@ pub use arena::{ArenaStats, TensorArena};
 pub use modules::{ExpertSel, Module, ModuleKind};
 pub use pipeline::{BatchState, ExecCtx, Pipeline, Plan};
 pub use tensor::{Accumulator, HostTensor, TensorView};
-pub use timeline::{EventId, Stream, Timeline, TimelineStats};
+pub use timeline::{EventId, Stream, Timeline, TimelineStats, Topology, MAX_DEVICES};

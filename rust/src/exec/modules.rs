@@ -619,6 +619,20 @@ impl Experts {
     /// Combine order is unchanged from the legacy per-group gather path
     /// (experts ascending, tokens ascending within each expert), so the
     /// output is bit-identical.
+    ///
+    /// Expert parallelism (DESIGN.md §11): when `plan.n_devices > 1`,
+    /// the plan's placement assigns each expert a virtual device from
+    /// this batch's routed-token counts. Per non-resident device one
+    /// *dispatch* all-to-all rides the shared interconnect stream behind
+    /// the router (overlapping earlier devices' FFN compute — the
+    /// EPS-MoE software pipeline), that device's expert launches anchor
+    /// on their dispatch, and one *combine* all-to-all per device
+    /// re-anchors the unpermute-scatter: its events land in
+    /// [`ExecCtx::next_deps`], so the next consumer of the batch depends
+    /// on every device's tokens having returned. Only timeline
+    /// *placement* changes — the numeric loop below runs in the same
+    /// global expert-ascending order on every topology, so tokens are
+    /// bit-identical across `n_devices` and placements.
     pub fn run(
         &self,
         cx: &mut ExecCtx<'_>,
@@ -649,14 +663,44 @@ impl Experts {
             sorted.row_mut(slot).copy_from_slice(xn.row(t));
         }
 
+        // Expert→device placement (identity on one device). The timeline
+        // caps the device count; the numeric loop below is topology-blind.
+        let nd = plan.n_devices.clamp(1, cx.timeline.devices());
+        let mut dev_of = vec![0usize; ne];
+        let mut dev_rows = vec![0usize; nd];
+        let mut dispatch_ev: Vec<Option<EventId>> = vec![None; nd];
+        if nd > 1 {
+            let counts: Vec<usize> = (0..ne).map(|e| grouped.count(e)).collect();
+            dev_of = plan.placement.assign(ne, nd, Some(&counts));
+            for e in 0..ne {
+                dev_rows[dev_of[e]] += counts[e];
+            }
+            // Dispatch: each non-resident device's routed rows cross the
+            // shared interconnect behind the router, overlapping earlier
+            // devices' FFN compute (EPS-MoE software pipeline).
+            let router_deps: Vec<EventId> = moe_ev.into_iter().collect();
+            for (d, ev) in dispatch_ev.iter_mut().enumerate().skip(1) {
+                if dev_rows[d] > 0 {
+                    *ev = Some(cx.timeline.xfer_ici(
+                        "moe_dispatch",
+                        dev_rows[d] * h * 4,
+                        &router_deps,
+                    ));
+                }
+            }
+        }
+
         let mut acc = cx.arena.take_zeroed(n, h);
         for e in 0..ne {
             let seg = grouped.segment(e);
             if seg.is_empty() {
                 continue;
             }
+            cx.device = dev_of[e];
             cx.with_weights(WeightKey::Expert(layer, e), |cx| {
-                cx.input_ev = moe_ev;
+                // A sharded expert's input arrives with its device's
+                // dispatch; resident experts anchor on the router.
+                cx.input_ev = dispatch_ev[dev_of[e]].or(moe_ev);
                 for r in micro_batches(seg.len(), micro) {
                     let abs = seg.start + r.start..seg.start + r.end;
                     let rows = &grouped.perm[abs.clone()];
@@ -696,6 +740,29 @@ impl Experts {
                 Ok(())
             })?;
         }
+        cx.device = 0;
+        // Combine: every sharded device's expert outputs return over the
+        // interconnect behind that device's last FFN launch. Issued
+        // *before* the shared expert runs so the shared expert's device-0
+        // compute overlaps the combine transfers (the tail of the EPS-MoE
+        // pipeline); the events are collected here and pushed into
+        // next_deps *after* the shared expert, so the next consumer of
+        // the batch — not the shared expert itself — re-anchors on them.
+        let mut combine_evs: Vec<EventId> = Vec::new();
+        for d in 1..nd {
+            if dev_rows[d] > 0 {
+                let deps: Vec<EventId> = cx
+                    .timeline
+                    .last_on_device(d, Stream::GpuCompute)
+                    .into_iter()
+                    .collect();
+                combine_evs.push(cx.timeline.xfer_ici(
+                    "moe_combine",
+                    dev_rows[d] * h * 4,
+                    &deps,
+                ));
+            }
+        }
         if c.use_shared_expert {
             cx.with_weights(WeightKey::Shared(layer), |cx| {
                 cx.input_ev = moe_ev;
@@ -734,6 +801,9 @@ impl Experts {
                 Ok(())
             })?;
         }
+        // The batch is whole only once every device's tokens combined:
+        // the next launch consuming it depends on the combine transfers.
+        cx.next_deps.extend(combine_evs);
         let mut out = x;
         out.add_assign(&acc); // residual: out = x + acc
         for t in [acc, sorted, xn] {
@@ -814,6 +884,8 @@ mod tests {
             prefetch_bytes: None,
             cache_bytes: None,
             reuse: 1.0,
+            n_devices: 1,
+            placement: crate::batching::ExpertPlacement::RoundRobin,
         };
         // Strategy-driven modules clamp the searched value to the bucket
         // range; flat-token modules pool at the largest bucket.

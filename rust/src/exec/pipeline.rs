@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::batching::micro_batches;
+use crate::batching::{micro_batches, ExpertPlacement};
 use crate::exec::arena::TensorArena;
 use crate::exec::modules::{
     AttentionDecode, AttentionPrefill, Embed, Experts, ExpertSel, LmHead, Module, ModuleKind,
@@ -69,6 +69,12 @@ pub struct Plan {
     /// many launches before becoming LRU-evictable (FlexGen /
     /// MoE-Lightning multi-round reuse; 1.0 = plain LRU).
     pub reuse: f64,
+    /// Virtual devices experts shard across (1 = the single-GPU paper
+    /// setting: no dispatch/combine ops, bit-identical to the
+    /// pre-sharding path).
+    pub n_devices: usize,
+    /// Expert→device assignment policy when `n_devices > 1`.
+    pub placement: ExpertPlacement,
 }
 
 impl Plan {
@@ -93,6 +99,8 @@ impl Plan {
             prefetch_bytes: Some(dec.s_expert),
             cache_bytes: Some(dec.s_params),
             reuse: dec.reuse.max(1.0),
+            n_devices: dec.n_devices.max(1),
+            placement: dec.placement,
         }
     }
 }
@@ -203,6 +211,11 @@ pub struct ExecCtx<'a> {
     /// modules recycle pads and drained outputs through it. Owned by the
     /// engine so the pool stays warm across waves and decode steps.
     pub arena: &'a mut TensorArena,
+    /// Virtual device this context's launches and transfers are scoped
+    /// to on the timeline. 0 everywhere except inside the expert loop
+    /// when experts shard across devices ([`crate::exec::modules`] sets
+    /// it per expert from the plan's placement and restores 0 after).
+    pub device: usize,
 }
 
 impl ExecCtx<'_> {
@@ -231,7 +244,12 @@ impl ExecCtx<'_> {
             // kernel emitted them (input_ev); the copy may still overlap
             // this module's earlier micro-batch kernels.
             let produced: Vec<EventId> = self.input_ev.into_iter().collect();
-            deps.push(self.timeline.xfer_htod(kind.name(), htod_bytes, &produced));
+            deps.push(self.timeline.xfer_htod_on(
+                self.device,
+                kind.name(),
+                htod_bytes,
+                &produced,
+            ));
             let h = self.htod.account(htod_bytes);
             if self.prefetch {
                 self.metrics.htod_overlapped_bytes += htod_bytes as u64;
@@ -247,10 +265,12 @@ impl ExecCtx<'_> {
         self.metrics.record_module(kind.name(), secs, rows, bucket);
         let up = self.backend.take_uploaded_bytes();
         self.note_backend_upload(up);
-        let kernel = self.timeline.record(Stream::GpuCompute, kind.name(), secs, &deps);
+        let kernel =
+            self.timeline
+                .record_on(self.device, Stream::GpuCompute, kind.name(), secs, &deps);
         if dtoh_bytes > 0 {
             self.metrics.dtoh_bytes += dtoh_bytes as u64;
-            self.timeline.xfer_dtoh(kind.name(), dtoh_bytes, &[kernel]);
+            self.timeline.xfer_dtoh_on(self.device, kind.name(), dtoh_bytes, &[kernel]);
         }
         Ok(out)
     }
@@ -310,8 +330,10 @@ impl ExecCtx<'_> {
     /// [`release_weights`](ExecCtx::release_weights).
     pub fn acquire_weights(&mut self, key: WeightKey) {
         // A module acquires its weights before any launch: the latest
-        // kernel right now is the producer of this module's input.
-        self.input_ev = self.timeline.last_on(Stream::GpuCompute);
+        // kernel on this context's device right now is the producer of
+        // this module's input. (The sharded expert loop overrides
+        // input_ev with the dispatch event after acquiring.)
+        self.input_ev = self.timeline.last_on_device(self.device, Stream::GpuCompute);
         let bytes = self.weights.sizes.bytes(key);
         if bytes == 0 {
             return;
@@ -329,12 +351,18 @@ impl ExecCtx<'_> {
                 h.wait();
                 self.metrics.weight_hits += 1;
                 self.metrics.prefetch_hits += 1;
-                self.fetch_ev = ev;
+                // Prefetches are issued on device 0's link (the router
+                // runs there). A launch pinned to another device cannot
+                // depend on a device-0 copy without routing through the
+                // interconnect — and the bytes are host-resident anyway,
+                // so the cross-device case drops the virtual event
+                // (sharded expert residency is modeled as device-local).
+                self.fetch_ev = if self.device == 0 { ev } else { None };
             }
             Acquire::Miss | Acquire::Bypass => {
                 self.metrics.weight_misses += 1;
                 self.metrics.htod_bytes += bytes as u64;
-                let ev = self.timeline.xfer_htod("weight_fetch", bytes, &[]);
+                let ev = self.timeline.xfer_htod_on(self.device, "weight_fetch", bytes, &[]);
                 self.fetch_ev = Some(ev);
                 let h = self.htod.account(bytes);
                 if self.prefetch {
@@ -777,10 +805,12 @@ mod tests {
         let dec = Strategy {
             b: 28_000, b_a: 256, b_e: 8192, omega: 0.6,
             s_expert: 123, s_params: 456, reuse: 4.0,
+            n_devices: 2, placement: ExpertPlacement::Contiguous,
         };
         let pre = Strategy {
             b: 8192, b_a: 4, b_e: 2048, omega: 0.0,
             s_expert: 0, s_params: 0, reuse: 1.0,
+            n_devices: 1, placement: ExpertPlacement::RoundRobin,
         };
         let p = Plan::from_strategy(&dec, Some(&pre), &cfg, 128);
         assert_eq!(p.accum_batch, 128, "B capped by engine budget");
@@ -791,6 +821,8 @@ mod tests {
         assert_eq!(p.prefetch_bytes, Some(123), "S_Expert becomes the live prefetch buffer");
         assert_eq!(p.cache_bytes, Some(456), "S_Params becomes the live cache budget");
         assert!((p.reuse - 4.0).abs() < 1e-12, "reuse factor is executable");
+        assert_eq!(p.n_devices, 2, "expert sharding projects into the plan");
+        assert_eq!(p.placement, ExpertPlacement::Contiguous);
 
         let p2 = Plan::from_strategy(&dec, None, &cfg, 128);
         assert_eq!(p2.prefill_attn_micro, 16, "defaults to largest prefill bucket");

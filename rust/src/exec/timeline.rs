@@ -3,12 +3,15 @@
 //! The paper's throughput claim is that per-module batch sizes can be
 //! chosen "to fully overlap GPU computation and communication" (§4.3).
 //! Making that *measurable* needs an explicit model of the machine's
-//! concurrent engines. [`Timeline`] is that model: four virtual streams
-//! ([`Stream`]) — GPU compute, CPU attention, and the two PCIe copy
-//! engines — over which the live pipeline enqueues every module launch,
-//! weight fetch, KV window gather, KV writeback and activation transfer
-//! as an [`Op`] with explicit dependencies ([`EventId`]s of earlier
-//! ops).
+//! concurrent engines. [`Timeline`] is that model, generalized to a
+//! [`Topology`] of `N` virtual devices: every device owns a GPU-compute
+//! stream and two PCIe copy engines (HtoD / DtoH), and the whole topology
+//! shares one CPU-attention stream and one **interconnect** stream — the
+//! all-to-all link expert-parallel dispatch/combine traffic rides
+//! (EPS-MoE-style, DESIGN.md §11). Over these streams the live pipeline
+//! enqueues every module launch, weight fetch, KV window gather, KV
+//! writeback, activation transfer and all-to-all as an [`Op`] with
+//! explicit dependencies ([`EventId`]s of earlier ops).
 //!
 //! Scheduling is deterministic list scheduling: each stream executes its
 //! ops FIFO in enqueue order, an op starts at the later of (a) its
@@ -17,22 +20,33 @@
 //!
 //! * **makespan** — when the last op finishes;
 //! * **per-stream busy time** — Σ op durations per stream (idle =
-//!   makespan − busy);
+//!   makespan − busy), reported both per device and aggregated per
+//!   stream kind;
 //! * **overlap fraction** — `1 − makespan / Σ busy`: the share of total
 //!   stream work hidden under other streams' work. 0 means fully serial
 //!   execution; the theoretical maximum approaches `1 − 1/S` when all
-//!   `S` streams are busy the whole time.
+//!   `S` streams are busy the whole time. [`TimelineStats`] exposes the
+//!   aggregate and a per-device variant.
 //!
 //! Durations are virtual: compute ops carry their *measured* wall time
 //! (the pipeline times every launch anyway), transfers are priced at a
 //! modeled link bandwidth (bytes / B-per-sec — the engine's HtoD
 //! throttle when configured, PCIe-4.0-class defaults from [`crate::hw`]
-//! otherwise). The timeline therefore answers "what would this exact op
-//! sequence cost on a machine with dedicated engines?" — the same
-//! question the simulator's offloading DAG answers analytically, and
+//! otherwise; all-to-all ops at the topology's interconnect bandwidth).
+//! The timeline therefore answers "what would this exact op sequence
+//! cost on a machine with dedicated engines?" — the same question the
+//! simulator's offloading DAG answers analytically, and
 //! [`crate::dag::Dag::to_timeline`] replays DAGs through this very
 //! scheduler so simulated, searched and executed overlap agree by
 //! construction.
+//!
+//! **Device scoping.** Ops on the per-device streams carry a device
+//! scope; ops on the shared streams (CPU attention, interconnect) and
+//! free markers carry none. [`Timeline::verify`] enforces the
+//! expert-parallel data-movement law: an op scoped to device *d* may
+//! only depend on events scoped to *d* or unscoped events — cross-device
+//! data must route through the interconnect stream (whose ops are
+//! unscoped and may depend on any device).
 //!
 //! **Serialized mode** ([`Timeline::set_serialized`]) models the
 //! on-demand baselines (DeepSpeed-style fetch→compute serialization):
@@ -43,22 +57,34 @@
 //! `--policy deepspeed` reports zero — from the timeline, not from
 //! hand-kept byte counters.
 
-/// One virtual execution engine.
+use crate::hw;
+
+/// One virtual execution engine kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Stream {
-    /// Accelerator kernels (module launches).
+    /// Accelerator kernels (module launches) — one per device.
     GpuCompute,
-    /// The ω-split CPU attention kernel.
+    /// The ω-split CPU attention kernel (shared across devices).
     CpuAttn,
-    /// Host→device copy engine (weights, activations, KV windows).
+    /// Host→device copy engine (weights, activations, KV windows) — one
+    /// per device.
     HtoD,
-    /// Device→host copy engine (KV appends/writebacks, outputs).
+    /// Device→host copy engine (KV appends/writebacks, outputs) — one
+    /// per device.
     DtoH,
+    /// Shared inter-device all-to-all link: expert-parallel dispatch and
+    /// combine traffic (DESIGN.md §11).
+    Interconnect,
 }
 
 impl Stream {
-    pub const ALL: [Stream; 4] =
-        [Stream::GpuCompute, Stream::CpuAttn, Stream::HtoD, Stream::DtoH];
+    pub const ALL: [Stream; 5] = [
+        Stream::GpuCompute,
+        Stream::CpuAttn,
+        Stream::HtoD,
+        Stream::DtoH,
+        Stream::Interconnect,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -66,16 +92,66 @@ impl Stream {
             Stream::CpuAttn => "cpu_attn",
             Stream::HtoD => "htod",
             Stream::DtoH => "dtoh",
+            Stream::Interconnect => "ici",
         }
     }
 
+    /// Index in [`Stream::ALL`] order (the `busy_secs` layout).
     fn idx(self) -> usize {
         match self {
             Stream::GpuCompute => 0,
             Stream::CpuAttn => 1,
             Stream::HtoD => 2,
             Stream::DtoH => 3,
+            Stream::Interconnect => 4,
         }
+    }
+
+    /// Device-scoped stream kinds exist once per virtual device; the CPU
+    /// attention kernel and the interconnect are shared by the topology.
+    pub fn per_device(self) -> bool {
+        matches!(self, Stream::GpuCompute | Stream::HtoD | Stream::DtoH)
+    }
+}
+
+/// Upper bound on virtual devices a [`Topology`] may declare — keeps
+/// [`TimelineStats`] a flat `Copy` snapshot (fixed per-device arrays).
+pub const MAX_DEVICES: usize = 8;
+
+/// The virtual machine shape a [`Timeline`] schedules for: `devices`
+/// replicas of the per-device streams plus one shared interconnect
+/// priced at `interconnect_bw` bytes/sec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    pub devices: usize,
+    /// All-to-all interconnect bandwidth (B/s) for
+    /// [`Timeline::xfer_ici`] pricing.
+    pub interconnect_bw: f64,
+}
+
+impl Topology {
+    pub fn new(devices: usize, interconnect_bw: f64) -> Self {
+        assert!(
+            (1..=MAX_DEVICES).contains(&devices),
+            "topology must have 1..={MAX_DEVICES} devices, got {devices}"
+        );
+        assert!(
+            interconnect_bw > 0.0 && interconnect_bw.is_finite(),
+            "bad interconnect bandwidth {interconnect_bw}"
+        );
+        Topology { devices, interconnect_bw }
+    }
+
+    /// The degenerate single-device topology every pre-sharding timeline
+    /// used implicitly.
+    pub fn single() -> Self {
+        Topology::new(1, hw::VIRTUAL_ICI_BW)
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::single()
     }
 }
 
@@ -93,6 +169,9 @@ pub struct Op {
     /// `None` for synchronization markers (no engine occupied — used by
     /// the DAG replay for `Resource::None` nodes).
     pub stream: Option<Stream>,
+    /// Device scope: `Some(d)` for ops on per-device streams, `None` for
+    /// the shared streams (CPU attention, interconnect) and free markers.
+    pub device: Option<usize>,
     pub secs: f64,
     pub start: f64,
     pub finish: f64,
@@ -108,27 +187,52 @@ pub const HISTORY_CAP: usize = 1 << 17;
 
 /// Snapshot of a timeline's aggregate accounting — what `Metrics`,
 /// `RunReport`/`ServeReport` and the BENCH_live records carry.
-#[derive(Debug, Default, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TimelineStats {
     pub ops: usize,
     pub makespan_secs: f64,
-    /// Busy seconds per stream, indexed in [`Stream::ALL`] order.
-    pub busy_secs: [f64; 4],
+    /// Devices in the schedule's [`Topology`].
+    pub devices: usize,
+    /// Busy seconds per stream *kind*, indexed in [`Stream::ALL`] order;
+    /// per-device kinds are summed across devices.
+    pub busy_secs: [f64; 5],
+    /// Busy seconds per device: `[gpu, htod, dtoh]` for each of the
+    /// first [`MAX_DEVICES`] devices (unused entries stay zero).
+    pub device_busy: [[f64; 3]; MAX_DEVICES],
+}
+
+impl Default for TimelineStats {
+    fn default() -> Self {
+        TimelineStats {
+            ops: 0,
+            makespan_secs: 0.0,
+            devices: 1,
+            busy_secs: [0.0; 5],
+            device_busy: [[0.0; 3]; MAX_DEVICES],
+        }
+    }
 }
 
 impl TimelineStats {
+    /// Aggregate busy time of one stream kind (summed over devices for
+    /// the per-device kinds).
     pub fn busy(&self, s: Stream) -> f64 {
         self.busy_secs[s.idx()]
     }
 
-    /// Σ busy over all four streams.
+    /// Σ busy over every stream of every device (plus the shared ones).
     pub fn busy_total(&self) -> f64 {
         self.busy_secs.iter().sum()
     }
 
-    /// Idle time of one stream under this schedule.
+    /// Idle time of one stream kind under this schedule.
     pub fn idle(&self, s: Stream) -> f64 {
         (self.makespan_secs - self.busy(s)).max(0.0)
+    }
+
+    /// Σ busy over device `d`'s three streams (gpu + htod + dtoh).
+    pub fn device_busy_total(&self, d: usize) -> f64 {
+        self.device_busy[d].iter().sum()
     }
 
     /// `1 − makespan / Σ busy`, clamped at 0 — the fraction of stream
@@ -137,11 +241,22 @@ impl TimelineStats {
     /// makespan and busy total are the same sum taken in different
     /// orders, and float noise must not read as "some overlap".
     pub fn overlap_fraction(&self) -> f64 {
-        let total = self.busy_total();
+        Self::overlap(self.makespan_secs, self.busy_total())
+    }
+
+    /// Per-device overlap fraction: the share of device `d`'s own stream
+    /// work hidden under the schedule (same `1 − makespan / Σ busy` law
+    /// restricted to the device's three streams; 0 when the device's
+    /// work fits serially inside the makespan).
+    pub fn device_overlap_fraction(&self, d: usize) -> f64 {
+        Self::overlap(self.makespan_secs, self.device_busy_total(d))
+    }
+
+    fn overlap(makespan: f64, total: f64) -> f64 {
         if total <= 0.0 {
             return 0.0;
         }
-        let f = 1.0 - self.makespan_secs / total;
+        let f = 1.0 - makespan / total;
         if f <= 1e-12 {
             0.0
         } else {
@@ -157,35 +272,69 @@ pub struct Timeline {
     finish: Vec<f64>,
     /// Detailed op history, capped at [`HISTORY_CAP`].
     ops: Vec<Op>,
-    /// Next-free time per stream (FIFO within a stream).
-    clock: [f64; 4],
-    busy: [f64; 4],
+    /// Next-free time per lane (FIFO within a lane). Lane layout: device
+    /// `d` owns lanes `3d..3d+3` (gpu, htod, dtoh); then the shared CPU
+    /// lane; then the shared interconnect lane.
+    clock: Vec<f64>,
+    busy: Vec<f64>,
     makespan: f64,
-    last: [Option<EventId>; 4],
+    last: Vec<Option<EventId>>,
     last_any: Option<EventId>,
     /// On-demand mode: chain every op on the previously enqueued one.
     serialized: bool,
     htod_bw: f64,
     dtoh_bw: f64,
+    topo: Topology,
 }
 
 impl Timeline {
-    /// A timeline pricing HtoD / DtoH transfers at the given bandwidths
-    /// (bytes per second; must be positive and finite).
+    /// A single-device timeline pricing HtoD / DtoH transfers at the
+    /// given bandwidths (bytes per second; must be positive and finite).
     pub fn new(htod_bw: f64, dtoh_bw: f64) -> Self {
+        Self::with_topology(htod_bw, dtoh_bw, Topology::default())
+    }
+
+    /// A timeline over an explicit [`Topology`] — `topo.devices` sets of
+    /// per-device streams plus the shared CPU and interconnect lanes.
+    pub fn with_topology(htod_bw: f64, dtoh_bw: f64, topo: Topology) -> Self {
         assert!(htod_bw > 0.0 && htod_bw.is_finite(), "bad HtoD bandwidth {htod_bw}");
         assert!(dtoh_bw > 0.0 && dtoh_bw.is_finite(), "bad DtoH bandwidth {dtoh_bw}");
+        // Re-assert the topology invariants (a Topology built via struct
+        // literal must not smuggle in a zero-device machine).
+        let topo = Topology::new(topo.devices, topo.interconnect_bw);
+        let lanes = topo.devices * 3 + 2;
         Timeline {
             finish: Vec::new(),
             ops: Vec::new(),
-            clock: [0.0; 4],
-            busy: [0.0; 4],
+            clock: vec![0.0; lanes],
+            busy: vec![0.0; lanes],
             makespan: 0.0,
-            last: [None; 4],
+            last: vec![None; lanes],
             last_any: None,
             serialized: false,
             htod_bw,
             dtoh_bw,
+            topo,
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    pub fn devices(&self) -> usize {
+        self.topo.devices
+    }
+
+    /// Lane index for (`device`, `stream`). Shared streams ignore the
+    /// device argument.
+    fn lane(&self, device: usize, s: Stream) -> usize {
+        match s {
+            Stream::GpuCompute => device * 3,
+            Stream::HtoD => device * 3 + 1,
+            Stream::DtoH => device * 3 + 2,
+            Stream::CpuAttn => self.topo.devices * 3,
+            Stream::Interconnect => self.topo.devices * 3 + 1,
         }
     }
 
@@ -199,7 +348,8 @@ impl Timeline {
         self.serialized
     }
 
-    /// Enqueue one op on `stream`. The op starts at the latest of the
+    /// Enqueue one op on device 0's `stream` (the single-device API every
+    /// pre-sharding call site uses). The op starts at the latest of the
     /// stream's clock, every dependency's finish, and — in serialized
     /// mode — the previously enqueued op's finish.
     pub fn record(
@@ -209,7 +359,20 @@ impl Timeline {
         secs: f64,
         deps: &[EventId],
     ) -> EventId {
-        self.push(Some(stream), label.into(), secs, deps)
+        self.push(Some(stream), 0, label.into(), secs, deps)
+    }
+
+    /// Enqueue one op on `device`'s `stream` (shared streams ignore the
+    /// device).
+    pub fn record_on(
+        &mut self,
+        device: usize,
+        stream: Stream,
+        label: impl Into<std::borrow::Cow<'static, str>>,
+        secs: f64,
+        deps: &[EventId],
+    ) -> EventId {
+        self.push(Some(stream), device, label.into(), secs, deps)
     }
 
     /// Enqueue a synchronization marker bound to no stream (starts at
@@ -220,41 +383,92 @@ impl Timeline {
         secs: f64,
         deps: &[EventId],
     ) -> EventId {
-        self.push(None, label.into(), secs, deps)
+        self.push(None, 0, label.into(), secs, deps)
     }
 
-    /// Enqueue a host→device transfer priced at the link model.
+    /// Enqueue a host→device transfer priced at the link model (device
+    /// 0's copy engine).
     pub fn xfer_htod(
         &mut self,
         label: impl Into<std::borrow::Cow<'static, str>>,
         bytes: usize,
         deps: &[EventId],
     ) -> EventId {
-        let secs = bytes as f64 / self.htod_bw;
-        self.record(Stream::HtoD, label, secs, deps)
+        self.xfer_htod_on(0, label, bytes, deps)
     }
 
-    /// Enqueue a device→host transfer priced at the link model.
+    /// Enqueue a host→device transfer on `device`'s copy engine.
+    pub fn xfer_htod_on(
+        &mut self,
+        device: usize,
+        label: impl Into<std::borrow::Cow<'static, str>>,
+        bytes: usize,
+        deps: &[EventId],
+    ) -> EventId {
+        let secs = bytes as f64 / self.htod_bw;
+        self.record_on(device, Stream::HtoD, label, secs, deps)
+    }
+
+    /// Enqueue a device→host transfer priced at the link model (device
+    /// 0's copy engine).
     pub fn xfer_dtoh(
         &mut self,
         label: impl Into<std::borrow::Cow<'static, str>>,
         bytes: usize,
         deps: &[EventId],
     ) -> EventId {
+        self.xfer_dtoh_on(0, label, bytes, deps)
+    }
+
+    /// Enqueue a device→host transfer on `device`'s copy engine.
+    pub fn xfer_dtoh_on(
+        &mut self,
+        device: usize,
+        label: impl Into<std::borrow::Cow<'static, str>>,
+        bytes: usize,
+        deps: &[EventId],
+    ) -> EventId {
         let secs = bytes as f64 / self.dtoh_bw;
-        self.record(Stream::DtoH, label, secs, deps)
+        self.record_on(device, Stream::DtoH, label, secs, deps)
+    }
+
+    /// Enqueue an all-to-all transfer on the shared interconnect stream,
+    /// priced at the topology's interconnect bandwidth. Interconnect ops
+    /// are unscoped, so they may depend on (and feed) any device — this
+    /// is the only legal cross-device bridge under [`Timeline::verify`].
+    pub fn xfer_ici(
+        &mut self,
+        label: impl Into<std::borrow::Cow<'static, str>>,
+        bytes: usize,
+        deps: &[EventId],
+    ) -> EventId {
+        let secs = bytes as f64 / self.topo.interconnect_bw;
+        self.push(Some(Stream::Interconnect), 0, label.into(), secs, deps)
     }
 
     fn push(
         &mut self,
         stream: Option<Stream>,
+        device: usize,
         label: std::borrow::Cow<'static, str>,
         secs: f64,
         deps: &[EventId],
     ) -> EventId {
         assert!(secs >= 0.0 && secs.is_finite(), "bad op duration {secs}");
+        let scope = match stream {
+            Some(s) if s.per_device() => {
+                assert!(
+                    device < self.topo.devices,
+                    "device {device} out of topology range ({} devices)",
+                    self.topo.devices
+                );
+                Some(device)
+            }
+            _ => None,
+        };
         let id = EventId(self.finish.len());
-        let mut ready = stream.map(|s| self.clock[s.idx()]).unwrap_or(0.0);
+        let lane = stream.map(|s| self.lane(device, s));
+        let mut ready = lane.map(|l| self.clock[l]).unwrap_or(0.0);
         for &EventId(d) in deps {
             assert!(d < id.0, "dependency on a future event");
             ready = ready.max(self.finish[d]);
@@ -265,23 +479,41 @@ impl Timeline {
             }
         }
         let finish = ready + secs;
-        if let Some(s) = stream {
-            self.clock[s.idx()] = finish;
-            self.busy[s.idx()] += secs;
-            self.last[s.idx()] = Some(id);
+        if let Some(l) = lane {
+            // Uniform accounting: every streamed op — zero-duration and
+            // empty-label ones included — advances its lane's FIFO clock
+            // and contributes to busy, so op history, busy and idle can
+            // never disagree about what the schedule contains (the
+            // degenerate-op reconciliation `verify()` re-checks).
+            self.clock[l] = finish;
+            self.busy[l] += secs;
+            self.last[l] = Some(id);
         }
         self.makespan = self.makespan.max(finish);
         self.last_any = Some(id);
         self.finish.push(finish);
         if self.ops.len() < HISTORY_CAP {
-            self.ops.push(Op { label, stream, secs, start: ready, finish, deps: deps.to_vec() });
+            self.ops.push(Op {
+                label,
+                stream,
+                device: scope,
+                secs,
+                start: ready,
+                finish,
+                deps: deps.to_vec(),
+            });
         }
         id
     }
 
-    /// The most recently enqueued op on `stream`, if any.
+    /// The most recently enqueued op on device 0's `stream`, if any.
     pub fn last_on(&self, s: Stream) -> Option<EventId> {
-        self.last[s.idx()]
+        self.last_on_device(0, s)
+    }
+
+    /// The most recently enqueued op on `device`'s `stream`, if any.
+    pub fn last_on_device(&self, device: usize, s: Stream) -> Option<EventId> {
+        self.last[self.lane(device, s)]
     }
 
     /// Total events enqueued (not bounded by the history cap).
@@ -302,8 +534,19 @@ impl Timeline {
         self.makespan
     }
 
+    /// Aggregate busy time of one stream kind (summed over devices for
+    /// the per-device kinds).
     pub fn busy(&self, s: Stream) -> f64 {
-        self.busy[s.idx()]
+        if s.per_device() {
+            (0..self.topo.devices).map(|d| self.busy[self.lane(d, s)]).sum()
+        } else {
+            self.busy[self.lane(0, s)]
+        }
+    }
+
+    /// Busy time of `device`'s `stream`.
+    pub fn busy_on(&self, device: usize, s: Stream) -> f64 {
+        self.busy[self.lane(device, s)]
     }
 
     pub fn busy_total(&self) -> f64 {
@@ -316,36 +559,57 @@ impl Timeline {
     }
 
     pub fn stats(&self) -> TimelineStats {
+        let mut device_busy = [[0.0; 3]; MAX_DEVICES];
+        for (d, row) in device_busy.iter_mut().enumerate().take(self.topo.devices) {
+            row[0] = self.busy[self.lane(d, Stream::GpuCompute)];
+            row[1] = self.busy[self.lane(d, Stream::HtoD)];
+            row[2] = self.busy[self.lane(d, Stream::DtoH)];
+        }
         TimelineStats {
             ops: self.finish.len(),
             makespan_secs: self.makespan,
-            busy_secs: self.busy,
+            devices: self.topo.devices,
+            busy_secs: [
+                self.busy(Stream::GpuCompute),
+                self.busy(Stream::CpuAttn),
+                self.busy(Stream::HtoD),
+                self.busy(Stream::DtoH),
+                self.busy(Stream::Interconnect),
+            ],
+            device_busy,
         }
     }
 
-    /// Clear the schedule (bandwidths and serialization mode survive).
+    /// Clear the schedule (topology, bandwidths and serialization mode
+    /// survive).
     pub fn reset(&mut self) {
         self.finish.clear();
         self.ops.clear();
-        self.clock = [0.0; 4];
-        self.busy = [0.0; 4];
+        self.clock.iter_mut().for_each(|c| *c = 0.0);
+        self.busy.iter_mut().for_each(|b| *b = 0.0);
         self.makespan = 0.0;
-        self.last = [None; 4];
+        self.last.iter_mut().for_each(|l| *l = None);
         self.last_any = None;
     }
 
     /// Check every schedule invariant; returns the first violation.
     /// Acyclicity is by construction (deps reference earlier ids only),
     /// re-verified here alongside the timing laws the property tests
-    /// assert: dep-respecting starts, per-stream FIFO without overlap,
-    /// `max busy ≤ makespan = max finish ≤ Σ durations`. The detailed
-    /// per-op checks cover the retained history; past [`HISTORY_CAP`]
-    /// only the aggregate laws are checkable.
+    /// assert: dep-respecting starts, per-lane FIFO without overlap,
+    /// `max busy ≤ makespan = max finish ≤ Σ durations`, degenerate-op
+    /// reconciliation (every streamed op in the history — zero-duration
+    /// and empty-label ops included — is present in the lane busy
+    /// accumulators), and the cross-device law: an op scoped to device
+    /// `d` may only depend on events scoped to `d` or unscoped events
+    /// (cross-device data must route through the interconnect stream).
+    /// The detailed per-op checks cover the retained history; past
+    /// [`HISTORY_CAP`] only the aggregate laws are checkable.
     pub fn verify(&self) -> Result<(), String> {
+        let lanes = self.clock.len();
         let mut max_finish = 0.0f64;
         let mut total_secs = 0.0f64;
-        let mut busy = [0.0f64; 4];
-        let mut stream_prev: [Option<f64>; 4] = [None; 4];
+        let mut busy = vec![0.0f64; lanes];
+        let mut lane_prev: Vec<Option<f64>> = vec![None; lanes];
         for (i, op) in self.ops.iter().enumerate() {
             if (op.finish - (op.start + op.secs)).abs() > 1e-12 {
                 return Err(format!("op {i} ({}): finish != start + secs", op.label));
@@ -360,9 +624,19 @@ impl Timeline {
                 if op.start + 1e-12 < self.finish[d] {
                     return Err(format!("op {i} ({}): starts before dep {d} finishes", op.label));
                 }
+                if let (Some(my_dev), Some(dep_dev)) = (op.device, self.ops[d].device) {
+                    if my_dev != dep_dev {
+                        return Err(format!(
+                            "op {i} ({}): device {my_dev} depends on device {dep_dev} op {d} \
+                             without routing through the interconnect stream",
+                            op.label
+                        ));
+                    }
+                }
             }
             if let Some(s) = op.stream {
-                if let Some(prev_finish) = stream_prev[s.idx()] {
+                let l = self.lane(op.device.unwrap_or(0), s);
+                if let Some(prev_finish) = lane_prev[l] {
                     if op.start + 1e-12 < prev_finish {
                         return Err(format!(
                             "op {i} ({}): overlaps its predecessor on {}",
@@ -371,8 +645,8 @@ impl Timeline {
                         ));
                     }
                 }
-                stream_prev[s.idx()] = Some(op.finish);
-                busy[s.idx()] += op.secs;
+                lane_prev[l] = Some(op.finish);
+                busy[l] += op.secs;
             }
             max_finish = max_finish.max(op.finish);
             total_secs += op.secs;
@@ -382,9 +656,12 @@ impl Timeline {
             if (self.makespan - max_finish).abs() > 1e-9 {
                 return Err(format!("makespan {} != max finish {max_finish}", self.makespan));
             }
-            for s in Stream::ALL {
-                if (self.busy[s.idx()] - busy[s.idx()]).abs() > 1e-9 {
-                    return Err(format!("busy accounting drifted on {}", s.name()));
+            // Degenerate-op reconciliation: the lane busy recomputed
+            // from op history (which retains zero-duration, empty-label
+            // ops) must match the live accumulators exactly.
+            for l in 0..lanes {
+                if (self.busy[l] - busy[l]).abs() > 1e-9 {
+                    return Err(format!("busy accounting drifted on lane {l}"));
                 }
             }
             if self.makespan > total_secs + 1e-9 {
@@ -394,9 +671,9 @@ impl Timeline {
                 ));
             }
         }
-        for s in Stream::ALL {
-            if self.busy[s.idx()] > self.makespan + 1e-9 {
-                return Err(format!("{} busy exceeds makespan", s.name()));
+        for l in 0..lanes {
+            if self.busy[l] > self.makespan + 1e-9 {
+                return Err(format!("lane {l} busy exceeds makespan"));
             }
         }
         Ok(())
@@ -410,6 +687,10 @@ mod tests {
 
     fn tl() -> Timeline {
         Timeline::new(1e9, 1e9)
+    }
+
+    fn tl_multi(devices: usize) -> Timeline {
+        Timeline::with_topology(1e9, 1e9, Topology::new(devices, 1e9))
     }
 
     #[test]
@@ -464,11 +745,13 @@ mod tests {
 
     #[test]
     fn transfers_priced_at_link_bandwidth() {
-        let mut t = Timeline::new(100.0, 50.0);
+        let mut t = Timeline::with_topology(100.0, 50.0, Topology::new(1, 25.0));
         t.xfer_htod("up", 200, &[]);
         t.xfer_dtoh("down", 100, &[]);
+        t.xfer_ici("a2a", 50, &[]);
         assert_eq!(t.busy(Stream::HtoD), 2.0);
         assert_eq!(t.busy(Stream::DtoH), 2.0);
+        assert_eq!(t.busy(Stream::Interconnect), 2.0);
         assert_eq!(t.makespan(), 2.0);
     }
 
@@ -484,16 +767,17 @@ mod tests {
     }
 
     #[test]
-    fn reset_clears_schedule_but_keeps_mode() {
-        let mut t = tl();
+    fn reset_clears_schedule_but_keeps_mode_and_topology() {
+        let mut t = tl_multi(2);
         t.set_serialized(true);
-        t.record(Stream::GpuCompute, "a", 1.0, &[]);
+        t.record_on(1, Stream::GpuCompute, "a", 1.0, &[]);
         t.reset();
         assert!(t.is_empty());
         assert_eq!(t.makespan(), 0.0);
         assert_eq!(t.busy_total(), 0.0);
         assert!(t.serialized(), "serialization mode survives reset");
-        assert_eq!(t.last_on(Stream::GpuCompute), None);
+        assert_eq!(t.devices(), 2, "topology survives reset");
+        assert_eq!(t.last_on_device(1, Stream::GpuCompute), None);
     }
 
     #[test]
@@ -504,24 +788,132 @@ mod tests {
         let st = t.stats();
         assert_eq!(st.ops, 2);
         assert_eq!(st.makespan_secs, 3.0);
+        assert_eq!(st.devices, 1);
         assert_eq!(st.busy(Stream::HtoD), 1.0);
         assert_eq!(st.busy_total(), 4.0);
         assert_eq!(st.idle(Stream::HtoD), 2.0);
+        assert_eq!(st.device_busy_total(0), 4.0);
         assert!((st.overlap_fraction() - 0.25).abs() < 1e-12);
         assert_eq!(TimelineStats::default().overlap_fraction(), 0.0, "empty → 0");
     }
 
     #[test]
+    fn single_device_topology_is_the_legacy_timeline() {
+        // Timeline::new and an explicit 1-device topology must produce
+        // bit-identical schedules for the same op sequence.
+        let mut a = Timeline::new(1e9, 1e9);
+        let mut b = Timeline::with_topology(1e9, 1e9, Topology::new(1, hw::VIRTUAL_ICI_BW));
+        for t in [&mut a, &mut b] {
+            let f = t.record(Stream::HtoD, "f", 2.0, &[]);
+            let x = t.record(Stream::GpuCompute, "x", 3.0, &[f]);
+            t.record(Stream::DtoH, "wb", 1.0, &[x]);
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(a.makespan(), b.makespan());
+    }
+
+    #[test]
+    fn per_device_lanes_run_concurrently() {
+        // Two devices' GPU lanes are independent engines; the shared
+        // interconnect lane is one engine.
+        let mut t = tl_multi(2);
+        t.record_on(0, Stream::GpuCompute, "e0", 4.0, &[]);
+        t.record_on(1, Stream::GpuCompute, "e1", 4.0, &[]);
+        assert_eq!(t.makespan(), 4.0, "per-device GPU lanes overlap");
+        assert_eq!(t.busy(Stream::GpuCompute), 8.0, "aggregate sums devices");
+        assert_eq!(t.busy_on(0, Stream::GpuCompute), 4.0);
+        assert_eq!(t.busy_on(1, Stream::GpuCompute), 4.0);
+        t.xfer_ici("d0", 4_000_000_000, &[]);
+        t.xfer_ici("d1", 4_000_000_000, &[]);
+        assert_eq!(t.busy(Stream::Interconnect), 8.0);
+        assert_eq!(t.makespan(), 8.0, "one interconnect engine serializes a2a");
+        t.verify().unwrap();
+        let st = t.stats();
+        assert_eq!(st.devices, 2);
+        assert_eq!(st.device_busy_total(0), 4.0);
+        assert_eq!(st.device_busy_total(1), 4.0);
+        assert!(st.overlap_fraction() > 0.0);
+        assert!(st.device_overlap_fraction(0) == 0.0, "4s of work in an 8s makespan");
+    }
+
+    #[test]
+    fn cross_device_dep_must_route_through_interconnect() {
+        // Illegal: device 1 compute depending directly on device 0
+        // compute.
+        let mut t = tl_multi(2);
+        let a = t.record_on(0, Stream::GpuCompute, "router", 1.0, &[]);
+        t.record_on(1, Stream::GpuCompute, "expert", 1.0, &[a]);
+        let err = t.verify().unwrap_err();
+        assert!(err.contains("interconnect"), "{err}");
+
+        // Legal: the same flow bridged by a dispatch all-to-all.
+        let mut t = tl_multi(2);
+        let a = t.record_on(0, Stream::GpuCompute, "router", 1.0, &[]);
+        let d = t.xfer_ici("dispatch", 1_000_000_000, &[a]);
+        let x = t.record_on(1, Stream::GpuCompute, "expert", 1.0, &[d]);
+        let c = t.xfer_ici("combine", 1_000_000_000, &[x]);
+        t.record_on(0, Stream::GpuCompute, "consume", 1.0, &[c]);
+        t.verify().unwrap();
+        assert_eq!(t.makespan(), 5.0, "dispatch→expert→combine chain serializes");
+    }
+
+    #[test]
+    fn interconnect_busy_equals_sum_of_byte_times_when_serialized() {
+        // Satellite law: under the on-demand (serialized) schedule the
+        // interconnect's busy time is exactly the sum of the enqueued
+        // all-to-all byte-times (bytes / interconnect_bw each).
+        let mut t = Timeline::with_topology(1e9, 1e9, Topology::new(4, 200.0));
+        t.set_serialized(true);
+        let sizes = [400usize, 100, 0, 300];
+        for (i, &b) in sizes.iter().enumerate() {
+            t.record_on(i % 4, Stream::GpuCompute, "ffn", 0.5, &[]);
+            t.xfer_ici(format!("a2a{i}"), b, &[]);
+        }
+        let want: f64 = sizes.iter().map(|&b| b as f64 / 200.0).sum();
+        assert!((t.busy(Stream::Interconnect) - want).abs() < 1e-12);
+        assert_eq!(t.makespan(), t.busy_total(), "serialized mode stays serial");
+        assert_eq!(t.overlap_fraction(), 0.0);
+        t.verify().unwrap();
+    }
+
+    #[test]
+    fn degenerate_empty_label_zero_duration_op_stays_reconciled() {
+        // Regression (ISSUE 7 satellite): an op with an empty label and
+        // zero duration must appear in op history AND in the aggregate
+        // busy/idle accounting identically — the schedule's stats may
+        // never disagree with its own history about degenerate ops.
+        let mut t = tl();
+        t.record(Stream::GpuCompute, "a", 2.0, &[]);
+        let z = t.record(Stream::GpuCompute, "", 0.0, &[]);
+        t.record(Stream::GpuCompute, "b", 1.0, &[z]);
+        t.record_free("", 0.0, &[]);
+        t.verify().unwrap();
+        let st = t.stats();
+        assert_eq!(st.ops, 4, "degenerate ops stay in the op count");
+        assert_eq!(t.ops().len(), 4, "…and in the retained history");
+        let from_history: f64 = t
+            .ops()
+            .iter()
+            .filter(|o| o.stream == Some(Stream::GpuCompute))
+            .map(|o| o.secs)
+            .sum();
+        assert_eq!(st.busy(Stream::GpuCompute), from_history);
+        assert_eq!(st.idle(Stream::GpuCompute), st.makespan_secs - from_history);
+        assert_eq!(st.makespan_secs, 3.0);
+    }
+
+    #[test]
     fn prop_schedule_invariants_hold() {
-        // Random op soups with random backward deps: makespan bounds and
-        // every verify() law must hold, serialized or not.
+        // Random op soups with random backward deps on one device:
+        // makespan bounds and every verify() law must hold, serialized
+        // or not.
         prop_check(150, |rng| {
             let mut t = Timeline::new(1e9, 1e9);
             t.set_serialized(rng.f64() < 0.3);
             let n = rng.range(1, 40);
             let mut ids: Vec<EventId> = Vec::new();
             for i in 0..n {
-                let s = Stream::ALL[rng.below(4)];
+                let s = Stream::ALL[rng.below(5)];
                 let mut deps = Vec::new();
                 if !ids.is_empty() {
                     for _ in 0..rng.below(3) {
@@ -538,6 +930,66 @@ mod tests {
             assert!(st.makespan_secs <= st.busy_total() + 1e-9, "serial bound violated");
             if t.serialized() {
                 assert!((st.makespan_secs - st.busy_total()).abs() < 1e-6);
+                assert_eq!(st.overlap_fraction(), 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_multidev_schedules_reconcile() {
+        // Random multi-device schedules where deps respect the
+        // cross-device law: verify() passes, per-device busy sums
+        // reconcile with the aggregate, and makespan obeys its bounds.
+        prop_check(150, |rng| {
+            let devices = rng.range(1, MAX_DEVICES + 1);
+            let mut t = Timeline::with_topology(1e9, 1e9, Topology::new(devices, 1e9));
+            t.set_serialized(rng.f64() < 0.2);
+            let n = rng.range(1, 40);
+            // (event, scope) so dep candidates can be filtered legally.
+            let mut evs: Vec<(EventId, Option<usize>)> = Vec::new();
+            for i in 0..n {
+                let s = Stream::ALL[rng.below(5)];
+                let dev = if s.per_device() { rng.below(devices) } else { 0 };
+                let scope = s.per_device().then_some(dev);
+                let legal: Vec<EventId> = evs
+                    .iter()
+                    .filter(|(_, sc)| {
+                        scope.is_none() || sc.is_none() || *sc == scope
+                    })
+                    .map(|(e, _)| *e)
+                    .collect();
+                let mut deps = Vec::new();
+                if !legal.is_empty() {
+                    for _ in 0..rng.below(3) {
+                        deps.push(legal[rng.below(legal.len())]);
+                    }
+                }
+                let ev = if s == Stream::Interconnect && rng.f64() < 0.5 {
+                    t.xfer_ici(format!("a2a{i}"), rng.below(1 << 20), &deps)
+                } else {
+                    t.record_on(dev, s, format!("op{i}"), rng.f64() * 5.0, &deps)
+                };
+                evs.push((ev, scope));
+            }
+            t.verify().unwrap();
+            let st = t.stats();
+            let per_device: f64 = (0..devices).map(|d| st.device_busy_total(d)).sum();
+            let shared = st.busy(Stream::CpuAttn) + st.busy(Stream::Interconnect);
+            assert!(
+                (per_device + shared - st.busy_total()).abs() < 1e-9,
+                "per-device + shared busy must reconcile with the aggregate"
+            );
+            assert!(st.makespan_secs <= st.busy_total() + 1e-9, "serial bound");
+            for d in 0..devices {
+                for (k, s) in [Stream::GpuCompute, Stream::HtoD, Stream::DtoH]
+                    .into_iter()
+                    .enumerate()
+                {
+                    assert!((st.device_busy[d][k] - t.busy_on(d, s)).abs() < 1e-12);
+                    assert!(t.busy_on(d, s) <= st.makespan_secs + 1e-9);
+                }
+            }
+            if t.serialized() {
                 assert_eq!(st.overlap_fraction(), 0.0);
             }
         });

@@ -16,6 +16,11 @@ use crate::model::ModelDesc;
 /// timeline and the simulator's DAG costs describe the same machine.
 pub const VIRTUAL_HTOD_BW: f64 = 26e9;
 pub const VIRTUAL_DTOH_BW: f64 = 24e9;
+/// Inter-device all-to-all bandwidth (B/s) for the expert-parallel
+/// dispatch/combine stream (DESIGN.md §11) — NVLink-bridge-class, well
+/// above PCIe so sharded experts can hide communication under FFN
+/// compute the way EPS-MoE's pipeline does.
+pub const VIRTUAL_ICI_BW: f64 = 100e9;
 
 /// One device/host/link configuration (paper Table 3: C1, C2, C3).
 #[derive(Debug, Clone)]
@@ -32,6 +37,10 @@ pub struct HwProfile {
     /// Host→device / device→host link bandwidth (B/s). PCIe 4.0 x16.
     pub htod_bw: f64,
     pub dtoh_bw: f64,
+    /// Inter-device all-to-all bandwidth (B/s) when experts shard across
+    /// several virtual devices (single-GPU testbeds still carry the
+    /// virtual figure so the search can price scale-out what-ifs).
+    pub ici_bw: f64,
     /// CPU dense-GEMM throughput (FLOP/s) across all cores.
     pub cpu_flops: f64,
     /// Host memory bandwidth (B/s) — the binding constraint for CPU
@@ -110,6 +119,7 @@ pub fn c1() -> HwProfile {
         gpu_half_sat_tokens: 128.0,
         htod_bw: 26e9, // PCIe 4.0 x16 achievable (~26 of 32 GB/s)
         dtoh_bw: 24e9,
+        ici_bw: VIRTUAL_ICI_BW,
         cpu_flops: 1.4e12, // 28 cores * AVX2 FMA @ ~3.1 GHz
         cpu_mem_bw: 190e9, // 8ch DDR4-3200
         host_mem_bytes: 256 << 30,
@@ -135,6 +145,7 @@ pub fn c3() -> HwProfile {
         gpu_half_sat_tokens: 128.0,
         htod_bw: 26e9,
         dtoh_bw: 24e9,
+        ici_bw: VIRTUAL_ICI_BW,
         cpu_flops: 0.8e12, // 16 cores
         cpu_mem_bw: 190e9,
         host_mem_bytes: 480 << 30,

@@ -21,6 +21,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use moe_gen::batching::ExpertPlacement;
 use moe_gen::cli::{self, switch, val, Flag};
 use moe_gen::config::Policy;
 use moe_gen::exec::Stream;
@@ -49,6 +50,8 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
         val("max-batch", "accumulated batch cap B"),
         val("attn-micro", "attention micro-batch b_a"),
         val("micro-batch", "baseline unified micro-batch"),
+        val("n-devices", "virtual expert-parallel devices (1 = single-device offloading)"),
+        val("placement", "expert→device placement: round_robin|contiguous|popularity"),
         val("bench-log", "trajectory file for run records, or 'none'"),
     ];
     let strategy = [
@@ -90,10 +93,14 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
         }
         JobKind::Search => {
             f.extend(scenario);
+            f.push(val("n-devices", "virtual expert-parallel devices to shard experts over"));
+            f.push(val("placement", "expert→device placement: round_robin|contiguous|popularity"));
             f.push(switch("json", "also print a config-ready strategy JSON snippet"));
         }
         JobKind::Simulate => {
             f.extend(scenario);
+            f.push(val("n-devices", "virtual expert-parallel devices to shard experts over"));
+            f.push(val("placement", "expert→device placement: round_robin|contiguous|popularity"));
         }
         JobKind::Profile => {
             f.push(val("artifacts", "artifacts dir"));
@@ -161,6 +168,14 @@ fn overlay(spec: &mut JobSpec, flags: &std::collections::HashMap<String, String>
     }
     if let Some(v) = num::<usize>(flags, "micro-batch")? {
         spec.eng.baseline_micro_batch = v;
+    }
+    if let Some(v) = num::<usize>(flags, "n-devices")? {
+        spec.eng.n_devices = v;
+    }
+    if let Some(p) = flags.get("placement") {
+        spec.eng.placement = ExpertPlacement::parse(p).ok_or_else(|| {
+            anyhow!("unknown placement {p:?}; try round_robin|contiguous|popularity")
+        })?;
     }
     if let Some(p) = flags.get("bench-log") {
         spec.bench_log = match p.as_str() {
@@ -330,14 +345,26 @@ fn main() -> Result<()> {
             let tl = &report.timeline;
             println!(
                 "[run] timeline: makespan={:.3}ms busy[gpu={:.3} cpu={:.3} htod={:.3} \
-                 dtoh={:.3}]ms overlap={:.4}",
+                 dtoh={:.3} ici={:.3}]ms overlap={:.4}",
                 1e3 * tl.makespan_secs,
                 1e3 * tl.busy(Stream::GpuCompute),
                 1e3 * tl.busy(Stream::CpuAttn),
                 1e3 * tl.busy(Stream::HtoD),
                 1e3 * tl.busy(Stream::DtoH),
+                1e3 * tl.busy(Stream::Interconnect),
                 tl.overlap_fraction(),
             );
+            if tl.devices > 1 {
+                for d in 0..tl.devices {
+                    println!(
+                        "[run] dev{d}: busy[gpu={:.3} htod={:.3} dtoh={:.3}]ms overlap={:.4}",
+                        1e3 * tl.device_busy[d][0],
+                        1e3 * tl.device_busy[d][1],
+                        1e3 * tl.device_busy[d][2],
+                        tl.device_overlap_fraction(d),
+                    );
+                }
+            }
             println!(
                 "[run] arena: hit-rate={:.4} recycled={}",
                 report.arena_hit_rate,
@@ -374,7 +401,7 @@ fn main() -> Result<()> {
             print!("{}", tables::render(&spec.table));
         }
         JobKind::Search => {
-            let scn = spec.scenario.to_scenario()?;
+            let scn = spec.scenario.to_scenario()?.with_devices(spec.eng.n_devices);
             let dec = sched::search_decode(&scn, &Knobs::moe_gen());
             let pre = sched::search_prefill(&scn, &Knobs::moe_gen_gpu_only());
             println!("scenario: {} on {}", scn.model.name, scn.hw.name);
@@ -385,6 +412,14 @@ fn main() -> Result<()> {
                 util::fmt_bytes(dec.strategy.s_params as f64),
                 dec.throughput, dec.candidates_evaluated
             );
+            if scn.n_devices > 1 {
+                println!(
+                    "decode : sharded over n_devices={} placement={} \
+                     (all-to-all priced on the interconnect stream)",
+                    dec.strategy.n_devices,
+                    dec.strategy.placement.slug(),
+                );
+            }
             println!(
                 "prefill: B={} tokens b_a={} b_e={} → {:.1} tok/s ({} candidates)",
                 pre.strategy.b, pre.strategy.b_a, pre.strategy.b_e,
@@ -405,7 +440,7 @@ fn main() -> Result<()> {
             }
         }
         JobKind::Simulate => {
-            let scn = spec.scenario.to_scenario()?;
+            let scn = spec.scenario.to_scenario()?.with_devices(spec.eng.n_devices);
             println!(
                 "scenario: {} on {} (prompt {}, decode {})",
                 scn.model.name, scn.hw.name, scn.prompt_len, scn.decode_len
@@ -434,6 +469,24 @@ fn main() -> Result<()> {
                 "(overlap: decode-phase overlap fraction predicted from the same \
                  virtual timeline the live executor reports)"
             );
+            if scn.n_devices > 1 {
+                // Expert-parallel scale-out: the searched module-policy
+                // strategy's DAG replayed normally vs fully serialized —
+                // the CI smoke check greps this line.
+                let md = sim::multidev_summary(&scn);
+                println!(
+                    "[multidev] n_devices={} placement={} ici_busy_ms={:.3} \
+                     overlap={:.4} serialized_overlap={:.4} \
+                     makespan_ms={:.3} serialized_makespan_ms={:.3}",
+                    md.n_devices,
+                    md.placement.slug(),
+                    1e3 * md.ici_busy_secs,
+                    md.overlap,
+                    md.serialized_overlap,
+                    1e3 * md.makespan_secs,
+                    1e3 * md.serialized_makespan_secs,
+                );
+            }
         }
         JobKind::Profile => {
             let mut s = Session::open(spec)?;

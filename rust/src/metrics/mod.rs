@@ -270,15 +270,27 @@ impl Metrics {
         if self.timeline.ops > 0 {
             s.push_str(&format!(
                 "timeline: {} ops, makespan {:.3}ms | busy gpu {:.3} cpu {:.3} htod {:.3} \
-                 dtoh {:.3} ms | overlap {:.1}%\n",
+                 dtoh {:.3} ici {:.3} ms | overlap {:.1}%\n",
                 self.timeline.ops,
                 1e3 * self.timeline.makespan_secs,
                 1e3 * self.timeline.busy(Stream::GpuCompute),
                 1e3 * self.timeline.busy(Stream::CpuAttn),
                 1e3 * self.timeline.busy(Stream::HtoD),
                 1e3 * self.timeline.busy(Stream::DtoH),
+                1e3 * self.timeline.busy(Stream::Interconnect),
                 100.0 * self.timeline_overlap_fraction(),
             ));
+            if self.timeline.devices > 1 {
+                for d in 0..self.timeline.devices {
+                    s.push_str(&format!(
+                        "  dev{d}: busy gpu {:.3} htod {:.3} dtoh {:.3} ms | overlap {:.1}%\n",
+                        1e3 * self.timeline.device_busy[d][0],
+                        1e3 * self.timeline.device_busy[d][1],
+                        1e3 * self.timeline.device_busy[d][2],
+                        100.0 * self.timeline.device_overlap_fraction(d),
+                    ));
+                }
+            }
         }
         if self.arena.hits + self.arena.misses > 0 {
             s.push_str(&format!(
@@ -361,12 +373,34 @@ mod tests {
         m.timeline = TimelineStats {
             ops: 4,
             makespan_secs: 0.006,
-            busy_secs: [0.004, 0.0, 0.004, 0.0],
+            busy_secs: [0.004, 0.0, 0.004, 0.0, 0.0],
+            ..TimelineStats::default()
         };
         assert!((m.timeline_overlap_fraction() - 0.25).abs() < 1e-12);
         let r = m.report();
         assert!(r.contains("timeline: 4 ops"), "{r}");
         assert!(r.contains("overlap 25.0%"), "{r}");
+        assert!(r.contains("ici 0.000"), "interconnect busy always reported: {r}");
+        assert!(!r.contains("dev0:"), "single-device report has no per-device lines");
+    }
+
+    #[test]
+    fn multidev_report_adds_per_device_lines() {
+        let mut m = Metrics::new();
+        let mut tl = TimelineStats {
+            ops: 6,
+            makespan_secs: 0.010,
+            busy_secs: [0.006, 0.0, 0.002, 0.0, 0.001],
+            devices: 2,
+            ..TimelineStats::default()
+        };
+        tl.device_busy[0] = [0.004, 0.002, 0.0];
+        tl.device_busy[1] = [0.002, 0.0, 0.0];
+        m.timeline = tl;
+        let r = m.report();
+        assert!(r.contains("ici 1.000"), "{r}");
+        assert!(r.contains("dev0: busy gpu 4.000"), "{r}");
+        assert!(r.contains("dev1: busy gpu 2.000"), "{r}");
     }
 
     #[test]

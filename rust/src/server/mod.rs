@@ -185,7 +185,8 @@ mod tests {
             timeline: TimelineStats {
                 ops: 10,
                 makespan_secs: 1.5,
-                busy_secs: [1.0, 0.0, 0.5, 0.5],
+                busy_secs: [1.0, 0.0, 0.5, 0.5, 0.0],
+                ..TimelineStats::default()
             },
             arena_hit_rate: 0.95,
             arena_recycled_bytes: 4096,

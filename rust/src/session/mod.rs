@@ -275,6 +275,11 @@ impl Session {
                             s_expert: 2 * sizes.expert,
                             s_params: eng_cfg.weight_cache_bytes,
                             reuse: eng_cfg.weight_reuse,
+                            // Scale-out is a config decision the measured
+                            // objective carries through unchanged (the
+                            // profile has no interconnect rows to rank it).
+                            n_devices: eng_cfg.n_devices,
+                            placement: eng_cfg.placement,
                         };
                         best = Some((s, tp));
                     }
@@ -303,6 +308,9 @@ impl Session {
             s_expert: decode.s_expert,
             s_params: decode.s_params,
             reuse: decode.reuse,
+            // P-D disaggregation: prefill waves run single-device.
+            n_devices: 1,
+            placement: crate::batching::ExpertPlacement::RoundRobin,
         });
         Ok(SearchOutcome {
             decode,
@@ -316,7 +324,14 @@ impl Session {
     /// Analytic fallback: the §4.4 search over the spec's paper-scale
     /// scenario, with the DAG wired per the engine's policy.
     fn search_analytic(&mut self) -> Result<SearchOutcome> {
-        let scn = self.spec.scenario.to_scenario()?;
+        // The engine's virtual device count carries into the analytic
+        // scenario: an n_devices=2 session searches placement jointly
+        // with the batch sizes through the shared DAG→timeline replay.
+        let scn = self
+            .spec
+            .scenario
+            .to_scenario()?
+            .with_devices(self.spec.eng.n_devices);
         let knobs = knobs_for(self.spec.eng.policy);
         let dec = sched::search_decode(&scn, &knobs);
         if dec.throughput <= 0.0 {
@@ -431,6 +446,8 @@ impl Session {
         pj.insert("b_a".into(), Json::Num(plan.attn_micro as f64));
         pj.insert("b_e".into(), Json::Num(plan.expert_micro as f64));
         pj.insert("omega".into(), Json::Num(plan.omega));
+        pj.insert("n_devices".into(), Json::Num(plan.n_devices as f64));
+        pj.insert("placement".into(), Json::Str(plan.placement.slug().into()));
         m.insert("plan".into(), Json::Obj(pj));
         m.insert("wall_ms".into(), Json::Num(wall_secs * 1e3));
         m
@@ -449,6 +466,10 @@ impl Session {
         m.insert("htod_overlap_fraction".into(), Json::Num(r.htod_overlap_fraction));
         m.insert("arena_hit_rate".into(), Json::Num(r.arena_hit_rate));
         m.insert("arena_recycled_bytes".into(), Json::Num(r.arena_recycled_bytes as f64));
+        m.insert(
+            "interconnect_busy_ms".into(),
+            Json::Num(r.timeline.busy(Stream::Interconnect) * 1e3),
+        );
         m.insert("timeline".into(), timeline_json(&r.timeline));
         append_bench_record(&path, Json::Obj(m));
     }
@@ -722,11 +743,19 @@ mod tests {
         assert_eq!(runs[0].req("job").as_str(), Some("run"));
         assert!(runs[0].req("decode_tps").as_f64().unwrap() >= 0.0);
         assert_eq!(runs[0].req("plan").req("b").as_usize(), Some(128));
+        assert_eq!(runs[0].req("plan").req("n_devices").as_usize(), Some(1));
+        assert_eq!(runs[0].req("plan").req("placement").as_str(), Some("round_robin"));
+        assert_eq!(
+            runs[0].req("interconnect_busy_ms").as_f64(),
+            Some(0.0),
+            "single-device runs carry no all-to-all traffic"
+        );
         // Every record carries the schedule-derived timeline block.
         let tl = runs[0].req("timeline");
         assert!(tl.req("makespan_ms").as_f64().unwrap() > 0.0);
         assert!(tl.req("busy_gpu_ms").as_f64().is_some());
         assert!(tl.req("busy_dtoh_ms").as_f64().is_some());
+        assert!(tl.req("busy_ici_ms").as_f64().is_some());
         let ov = tl.req("overlap_fraction").as_f64().unwrap();
         assert!(
             ov > 0.0 && ov < 1.0,

@@ -28,6 +28,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::batching::ExpertPlacement;
 use crate::config::{EngineConfig, Policy};
 use crate::hw;
 use crate::model;
@@ -410,6 +411,8 @@ impl JobSpec {
         eng.insert("weight_cache_bytes".into(), Json::Num(e.weight_cache_bytes as f64));
         eng.insert("weight_reuse".into(), Json::Num(e.weight_reuse));
         eng.insert("baseline_micro_batch".into(), Json::Num(e.baseline_micro_batch as f64));
+        eng.insert("n_devices".into(), Json::Num(e.n_devices as f64));
+        eng.insert("placement".into(), Json::Str(e.placement.slug().into()));
         eng.insert("seed".into(), Json::Num(e.seed as f64));
         eng.insert("verbose".into(), Json::Bool(e.verbose));
 
@@ -511,7 +514,7 @@ impl JobSpec {
                 &[
                     "artifacts_dir", "policy", "omega", "max_batch", "attn_micro",
                     "throttle_htod", "prefetch", "weight_cache_bytes", "weight_reuse",
-                    "baseline_micro_batch", "seed", "verbose",
+                    "baseline_micro_batch", "n_devices", "placement", "seed", "verbose",
                 ],
                 "engine",
             )?;
@@ -538,6 +541,17 @@ impl JobSpec {
             get_usize(e, "engine", "weight_cache_bytes", &mut c.weight_cache_bytes)?;
             get_f64(e, "engine", "weight_reuse", &mut c.weight_reuse)?;
             get_usize(e, "engine", "baseline_micro_batch", &mut c.baseline_micro_batch)?;
+            get_usize(e, "engine", "n_devices", &mut c.n_devices)?;
+            if let Some(p) = e.get("placement") {
+                let s = p
+                    .as_str()
+                    .ok_or_else(|| anyhow!("engine: placement must be a string"))?;
+                c.placement = ExpertPlacement::parse(s).ok_or_else(|| {
+                    anyhow!(
+                        "engine: unknown placement {s:?}; try round_robin|contiguous|popularity"
+                    )
+                })?;
+            }
             if let Some(t) = e.get("seed") {
                 c.seed = as_uint(t, "engine", "seed")?;
             }
@@ -737,6 +751,8 @@ mod tests {
                 weight_cache_bytes: 123_456,
                 weight_reuse: 4.0,
                 baseline_micro_batch: 6,
+                n_devices: 2,
+                placement: ExpertPlacement::Contiguous,
                 seed: 42,
                 verbose: true,
             },
@@ -760,10 +776,12 @@ mod tests {
                 decode: Strategy {
                     b: 96, b_a: 12, b_e: 256, omega: 0.25,
                     s_expert: 1024, s_params: 2048, reuse: 2.0,
+                    n_devices: 2, placement: ExpertPlacement::PopularityAware,
                 },
                 prefill: Some(Strategy {
                     b: 4096, b_a: 4, b_e: 512, omega: 0.0,
                     s_expert: 0, s_params: 0, reuse: 1.0,
+                    n_devices: 1, placement: ExpertPlacement::RoundRobin,
                 }),
             },
             search_basis: SearchBasis::Measured,
@@ -816,6 +834,9 @@ mod tests {
         assert!(JobSpec::from_str(r#"{"serve": {"eos": 1.5}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"serve": {"kv_slots": 2.5}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"throttle_htod": "fast"}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"n_devices": 2.5}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"placement": "striped"}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"placement": 3}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"bench_log": true}"#).is_err());
         assert!(JobSpec::from_str(r#"{"profile_reps": 2.5}"#).is_err());
         // Null clears optionals; integral values (negative eos included) pass.
@@ -860,10 +881,17 @@ mod tests {
         let mut bad = JobSpec::default();
         bad.scenario.model = "mixtral-9x9b".into();
         assert!(bad.validate().is_err(), "unknown model name");
+        let mut bad = JobSpec::default();
+        bad.eng.n_devices = 0;
+        assert!(bad.validate().is_err(), "zero virtual devices");
+        let mut bad = JobSpec::default();
+        bad.eng.n_devices = crate::exec::MAX_DEVICES + 1;
+        assert!(bad.validate().is_err(), "too many virtual devices");
         let bad = JobSpec {
             strategy: StrategySource::Explicit {
                 decode: Strategy {
                     b: 8, b_a: 16, b_e: 32, omega: 0.0, s_expert: 0, s_params: 0, reuse: 1.0,
+                    n_devices: 1, placement: ExpertPlacement::RoundRobin,
                 },
                 prefill: None,
             },

@@ -1,0 +1,230 @@
+//! Integration: expert-parallel scale-out to N virtual devices.
+//!
+//! Sharding the routed experts over a `Topology` of virtual devices — with
+//! dispatch/combine all-to-all riding the shared interconnect stream — is a
+//! *schedule* change, never a numeric one. The suite pins:
+//!
+//! * single-device equivalence: `n_devices = 1` is bit-identical to the
+//!   pre-sharding path and placement is a no-op on its schedule;
+//! * sharding invariance: greedy tokens are identical across
+//!   `n_devices ∈ {1, 2, 4}` and all three placement policies, while the
+//!   sharded schedules actually move all-to-all bytes;
+//! * the dispatch→combine round trip is an identity permutation on token
+//!   rows (property-tested over random router outputs);
+//! * predicted overlap (`Dag::to_timeline()`) and the live
+//!   `Metrics.timeline` agree on the schedule's character per policy.
+//!
+//! Everything runs hermetically on the reference backend.
+
+use moe_gen::batching::{ExpertPlacement, GroupedBatch};
+use moe_gen::config::EngineConfig;
+use moe_gen::engine::Engine;
+use moe_gen::exec::Stream;
+use moe_gen::hw;
+use moe_gen::model;
+use moe_gen::runtime::{RefBackend, RtConfig};
+use moe_gen::sched::{self, Knobs, Scenario, Strategy};
+use moe_gen::util::prop::prop_check;
+use moe_gen::workload;
+
+fn engine(n_devices: usize, placement: ExpertPlacement) -> Engine {
+    let backend = Box::new(RefBackend::new(RtConfig::tiny(), RefBackend::WEIGHT_SEED));
+    Engine::with_backend(
+        EngineConfig { n_devices, placement, ..EngineConfig::default() },
+        backend,
+    )
+    .unwrap()
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    workload::generate_prompts(6, 12, 40, 512, 3)
+}
+
+fn paper_scn(n_devices: usize) -> Scenario {
+    Scenario::new(model::mixtral_8x7b(), hw::c2(), 512, 256).with_devices(n_devices)
+}
+
+#[test]
+fn single_device_run_is_bit_identical_to_pre_sharding_path() {
+    // n_devices = 1 takes the exact pre-sharding code path: no dispatch,
+    // no combine, zero interconnect traffic, and a schedule with the same
+    // op structure as the default engine's.
+    let steps = 4;
+    let mut base = engine(1, ExpertPlacement::RoundRobin);
+    let want = base.generate(&prompts(), steps).unwrap();
+    base.timeline.verify().unwrap();
+    let base_st = base.timeline.stats();
+    assert_eq!(base_st.devices, 1);
+    assert_eq!(base_st.busy(Stream::Interconnect), 0.0, "nd=1 must not touch the interconnect");
+    for placement in ExpertPlacement::ALL {
+        let mut eng = engine(1, placement);
+        let got = eng.generate(&prompts(), steps).unwrap();
+        assert_eq!(got, want, "placement {placement:?} changed tokens at nd=1");
+        let st = eng.timeline.stats();
+        assert_eq!(st.ops, base_st.ops, "placement {placement:?} changed the nd=1 schedule");
+        assert_eq!(st.busy(Stream::Interconnect), 0.0);
+    }
+}
+
+#[test]
+fn single_device_dag_makespan_is_placement_invariant() {
+    // The modeled side of the same claim, where durations are
+    // deterministic: a n_devices = 1 strategy replays to the identical
+    // makespan whatever placement it carries — placement only exists in
+    // the schedule once experts shard.
+    let scn = paper_scn(1);
+    let k = Knobs::moe_gen_gpu_only();
+    let base = sched::search_decode(&scn, &k).strategy;
+    let makespan = |placement| {
+        let s = Strategy { placement, ..base };
+        let tl = sched::build_decode_dag(&scn, &s, &k, 3).to_timeline();
+        tl.verify().unwrap();
+        (tl.makespan(), tl.busy(Stream::Interconnect))
+    };
+    let (m_rr, ici_rr) = makespan(ExpertPlacement::RoundRobin);
+    assert_eq!(ici_rr, 0.0);
+    for placement in ExpertPlacement::ALL {
+        let (m, ici) = makespan(placement);
+        assert_eq!(m, m_rr, "nd=1 makespan must be placement-invariant");
+        assert_eq!(ici, 0.0);
+    }
+}
+
+#[test]
+fn tokens_invariant_across_device_counts_and_placements() {
+    // Sharding invariance: the numeric expert loop is untouched by the
+    // topology, so greedy tokens are bit-identical across every
+    // (n_devices, placement) cell — while the nd > 1 schedules really
+    // carry all-to-all traffic on the interconnect stream.
+    let steps = 4;
+    let want = engine(1, ExpertPlacement::RoundRobin)
+        .generate(&prompts(), steps)
+        .unwrap();
+    for nd in [1usize, 2, 4] {
+        for placement in ExpertPlacement::ALL {
+            let mut eng = engine(nd, placement);
+            let got = eng.generate(&prompts(), steps).unwrap();
+            assert_eq!(got, want, "tokens diverged at nd={nd} placement={placement:?}");
+            eng.timeline.verify().unwrap();
+            let st = eng.timeline.stats();
+            assert_eq!(st.devices, nd);
+            let ici = st.busy(Stream::Interconnect);
+            if nd == 1 {
+                assert_eq!(ici, 0.0, "nd=1 must not touch the interconnect");
+            } else {
+                assert!(ici > 0.0, "nd={nd} {placement:?} moved no all-to-all bytes");
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatch_combine_round_trip_is_identity_on_token_rows() {
+    // The all-to-all pair's core contract: dispatching the grouped batch
+    // to per-device token groups and combining the results back visits
+    // every (token, rank) slot exactly once and restores the original
+    // row order — an identity permutation, for any router output, any
+    // device count and any placement.
+    prop_check(60, |rng| {
+        let n = rng.range(1, 33);
+        let k = rng.range(1, 4);
+        let num_experts = rng.range(k, 12);
+        let nd = rng.range(1, 5);
+        let placement = ExpertPlacement::ALL[rng.below(ExpertPlacement::ALL.len())];
+        let mut idx = Vec::with_capacity(n * k);
+        let mut wts = Vec::with_capacity(n * k);
+        for _ in 0..n * k {
+            idx.push(rng.below(num_experts) as i32);
+            wts.push(rng.f64() as f32);
+        }
+        let g = GroupedBatch::build(&idx, &wts, n, k, num_experts);
+        let counts: Vec<usize> = (0..num_experts).map(|e| g.count(e)).collect();
+        let dev_of = placement.assign(num_experts, nd, Some(&counts));
+        assert_eq!(dev_of.len(), num_experts);
+        // Dispatch: per device, its experts' contiguous slot segments in
+        // expert order — exactly the token groups the sharded expert
+        // loop consumes.
+        let mut dispatched: Vec<usize> = Vec::with_capacity(n * k);
+        for d in 0..nd {
+            for e in 0..num_experts {
+                if dev_of[e] == d {
+                    dispatched.extend(g.segment(e));
+                }
+            }
+        }
+        assert_eq!(dispatched.len(), n * k, "dispatch must cover every slot once");
+        // Combine: scatter each device's results back by source slot.
+        let mut back = vec![usize::MAX; n * k];
+        for (i, &slot) in dispatched.iter().enumerate() {
+            assert_eq!(back[slot], usize::MAX, "slot {slot} dispatched twice");
+            back[slot] = i;
+        }
+        let restored: Vec<usize> = back.iter().map(|&i| dispatched[i]).collect();
+        let identity: Vec<usize> = (0..n * k).collect();
+        assert_eq!(restored, identity, "dispatch→combine must be the identity");
+        // And the round trip preserves each slot's token row.
+        for (slot, &row) in g.perm.iter().enumerate() {
+            assert_eq!(g.perm[dispatched[back[slot]]], row);
+        }
+    });
+}
+
+#[test]
+fn predicted_and_live_overlap_agree_on_schedule_character() {
+    // The shared-model contract: `Dag::to_timeline()` (the search's
+    // scorer) and the live `Metrics.timeline` describe the same schedule
+    // semantics. Absolute times differ (the live run measures the tiny
+    // reference backend's wall clock), so the pin is the schedule's
+    // character: the module policy overlaps in both views, the on-demand
+    // baseline serializes in both.
+    let scn = paper_scn(1);
+    let module = Knobs::moe_gen_gpu_only();
+    let s = sched::search_decode(&scn, &module).strategy;
+    let on_demand = Knobs { prefetch: false, ..module };
+    let pred_module = sched::predicted_overlap(&scn, &s, &module, true);
+    let pred_on_demand = sched::predicted_overlap(&scn, &s, &on_demand, true);
+    assert!(pred_module > 0.0 && pred_module < 1.0);
+    assert!(pred_on_demand < pred_module, "prediction must rank on-demand below module");
+
+    let mut live_module = engine(1, ExpertPlacement::RoundRobin);
+    let _ = live_module.generate(&prompts(), 4).unwrap();
+    let o_live = live_module.metrics.timeline.overlap_fraction();
+    assert!(o_live > 0.0 && o_live < 1.0, "live module policy must overlap: {o_live}");
+
+    let backend = Box::new(RefBackend::new(RtConfig::tiny(), RefBackend::WEIGHT_SEED));
+    let mut live_od = Engine::with_backend(
+        EngineConfig { prefetch: false, weight_cache_bytes: 0, ..EngineConfig::default() },
+        backend,
+    )
+    .unwrap();
+    let _ = live_od.generate(&prompts(), 4).unwrap();
+    assert_eq!(
+        live_od.metrics.timeline.overlap_fraction(),
+        0.0,
+        "live on-demand schedule must serialize exactly"
+    );
+}
+
+#[test]
+fn searched_multidev_strategy_overlaps_interconnect_with_compute() {
+    // Acceptance: a searched n_devices = 2 strategy replays with the
+    // all-to-all priced on the interconnect stream and hidden under FFN
+    // compute — overlap strictly better than the serialized schedule of
+    // the same DAG.
+    let scn = paper_scn(2);
+    let k = Knobs::moe_gen_gpu_only();
+    let res = sched::search_decode(&scn, &k);
+    assert_eq!(res.strategy.n_devices, 2);
+    let g = sched::build_decode_dag(&scn, &res.strategy, &k, 3);
+    let tl = g.to_timeline();
+    tl.verify().unwrap();
+    assert!(tl.busy(Stream::Interconnect) > 0.0);
+    let ser = g.to_timeline_mode(true);
+    assert_eq!(ser.overlap_fraction(), 0.0);
+    assert!(
+        tl.overlap_fraction() > 0.0 && tl.makespan() < ser.makespan(),
+        "sharded schedule must overlap: {} vs serialized {}",
+        tl.makespan(),
+        ser.makespan()
+    );
+}

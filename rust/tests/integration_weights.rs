@@ -162,6 +162,8 @@ fn searched_strategy_budget_goes_live() {
         s_expert: 3 * sizes.expert,
         s_params: sizes.total(),
         reuse: 1.0,
+        n_devices: 1,
+        placement: moe_gen::batching::ExpertPlacement::RoundRobin,
     };
     eng.set_strategy(&dec, None);
     assert_eq!(eng.weights.cache.budget(), sizes.total());
