@@ -165,11 +165,18 @@ fn main() {
     let mut spec = base_spec();
     spec.eng.max_batch = 48;
     spec.bench_log = Some(moe_gen::spec::default_bench_log());
-    let (wall, dtp, toks) = run(spec, &prompts, steps);
-    check(&mut reference, "baseline_record", &toks);
+    let mut s = Session::open(spec).expect("artifacts missing — run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    let rep = s.run_prompts(&prompts, steps).expect("ablation run");
+    let wall = t0.elapsed().as_secs_f64();
+    check(&mut reference, "baseline_record", &rep.tokens);
+    // The session stamps the record with config_key/git/roofline_fraction
+    // (tools/perf_gate.py diffs consecutive same-key records).
     println!(
-        "\nbench: baseline_B48          wall {wall:>7.2}s decode {dtp:>8.1} tok/s \
-         (recorded to BENCH_live.json)"
+        "\nbench: baseline_B48          wall {wall:>7.2}s decode {:>8.1} tok/s \
+         roofline {:>5.1}% (recorded to BENCH_live.json)",
+        rep.decode_tp,
+        100.0 * rep.roofline_fraction,
     );
 
     println!("\ntoken invariance across all ablations ✓");

@@ -225,6 +225,12 @@ fn main() {
             );
             let mut m = BTreeMap::new();
             m.insert("bench_name".into(), Json::Str("hotpath_grouped_vs_gather".into()));
+            // Same-shape records compare across history under this key
+            // (tools/perf_gate.py); append_bench_record stamps "git".
+            m.insert(
+                "config_key".into(),
+                Json::Str(format!("bench/hotpath_grouped_vs_gather/n{n}")),
+            );
             m.insert("n_tokens".into(), Json::Num(n as f64));
             m.insert("top_k".into(), Json::Num(k as f64));
             m.insert("num_experts".into(), Json::Num(e as f64));

@@ -19,7 +19,10 @@
 //! ([`crate::exec::timeline`]) — one scheduling model prices overlap for
 //! the simulator, the strategy search and the executed pipeline. The DP
 //! is a lower bound on any resource-feasible schedule and equals the
-//! replay when chains fully serialize each resource.
+//! replay when chains fully serialize each resource. Because the replay
+//! produces a real [`Timeline`] op history, a simulated schedule exports
+//! through the same Chrome-trace path as a live run
+//! ([`crate::trace::ChromeTrace::from_timeline`], `simulate --trace-out`).
 
 use crate::exec::timeline::{EventId, Stream, Timeline, Topology};
 

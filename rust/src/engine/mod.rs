@@ -235,6 +235,17 @@ impl Engine {
         self.pending_fetch.len() + self.weights.cache.in_flight_len()
     }
 
+    /// Publish the engine's full observability state into a metrics
+    /// registry ([`crate::trace::Registry`]): run counters and gauges
+    /// from [`Metrics`], weight-cache accounting, and the scratch
+    /// arena's checkout counters (the arena is private — this is its
+    /// only registry path). Rendered by `moe-gen metrics`.
+    pub fn publish_registry(&self, reg: &mut crate::trace::Registry) {
+        self.metrics.publish(reg);
+        self.weights.cache.publish(reg);
+        self.arena.publish(reg);
+    }
+
     /// Reset the accumulated metrics *and* the virtual timeline — one
     /// experiment, one schedule (the run/serve drivers call this). The
     /// scratch arena's counters reset too, but its pooled buffers stay

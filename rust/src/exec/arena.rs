@@ -109,6 +109,16 @@ impl TensorArena {
     pub fn pooled(&self) -> usize {
         self.free.values().map(Vec::len).sum()
     }
+
+    /// Publish checkout counters into a metrics registry
+    /// (`moe_gen_arena_*`; DESIGN.md §12 naming).
+    pub fn publish(&self, reg: &mut crate::trace::Registry) {
+        reg.counter("moe_gen_arena_hits_total", self.stats.hits);
+        reg.counter("moe_gen_arena_misses_total", self.stats.misses);
+        reg.counter("moe_gen_arena_recycled_bytes_total", self.stats.recycled_bytes);
+        reg.gauge("moe_gen_arena_pooled_buffers", self.pooled() as f64);
+        reg.gauge("moe_gen_arena_hit_rate", self.stats.hit_rate());
+    }
 }
 
 #[cfg(test)]

@@ -571,6 +571,10 @@ impl Pipeline {
 
         cx.metrics.prefill_tokens += lens.iter().sum::<usize>() as u64;
         cx.metrics.prefill_secs += t0.elapsed().as_secs_f64();
+        // Per-wave observability sample: the Chrome trace's counter
+        // tracks (expert batch, hit rates, live KV slots) key off these.
+        cx.metrics.arena = cx.arena.stats();
+        cx.metrics.sample_wave(cx.timeline.makespan(), b as u64);
         Ok((slots, lens, first))
     }
 
@@ -640,6 +644,9 @@ impl Pipeline {
         state.last = next.clone();
         cx.metrics.decode_tokens += b as u64;
         cx.metrics.decode_secs += t0.elapsed().as_secs_f64();
+        // Per-wave observability sample (see prefill_into).
+        cx.metrics.arena = cx.arena.stats();
+        cx.metrics.sample_wave(cx.timeline.makespan(), b as u64);
         Ok(next)
     }
 

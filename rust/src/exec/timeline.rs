@@ -161,6 +161,16 @@ impl Default for Topology {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EventId(usize);
 
+impl EventId {
+    /// Position of this event in enqueue order — equal to the index of
+    /// its [`Op`] in [`Timeline::ops`] while the history is within
+    /// [`HISTORY_CAP`]. The trace exporter uses this to resolve dep
+    /// edges into flow events.
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
 /// One scheduled job on the timeline (diagnostic history; the live path
 /// labels ops with `&'static str`, so recording allocates nothing).
 #[derive(Debug, Clone)]
@@ -199,6 +209,13 @@ pub struct TimelineStats {
     /// Busy seconds per device: `[gpu, htod, dtoh]` for each of the
     /// first [`MAX_DEVICES`] devices (unused entries stay zero).
     pub device_busy: [[f64; 3]; MAX_DEVICES],
+    /// The per-op history overflowed [`HISTORY_CAP`]: aggregates above
+    /// stay exact, but `dropped_ops` ops carry no retained [`Op`] record
+    /// (surfaced by `Metrics::report` and the trace export metadata so a
+    /// partial trace is never mistaken for a complete one).
+    pub truncated: bool,
+    /// Ops past the history cap (0 when `truncated` is false).
+    pub dropped_ops: usize,
 }
 
 impl Default for TimelineStats {
@@ -209,6 +226,8 @@ impl Default for TimelineStats {
             devices: 1,
             busy_secs: [0.0; 5],
             device_busy: [[0.0; 3]; MAX_DEVICES],
+            truncated: false,
+            dropped_ops: 0,
         }
     }
 }
@@ -558,6 +577,12 @@ impl Timeline {
         self.stats().overlap_fraction()
     }
 
+    /// Ops enqueued past [`HISTORY_CAP`] whose detailed [`Op`] record was
+    /// not retained (0 while the history is complete).
+    pub fn dropped_ops(&self) -> usize {
+        self.finish.len().saturating_sub(self.ops.len())
+    }
+
     pub fn stats(&self) -> TimelineStats {
         let mut device_busy = [[0.0; 3]; MAX_DEVICES];
         for (d, row) in device_busy.iter_mut().enumerate().take(self.topo.devices) {
@@ -565,6 +590,7 @@ impl Timeline {
             row[1] = self.busy[self.lane(d, Stream::HtoD)];
             row[2] = self.busy[self.lane(d, Stream::DtoH)];
         }
+        let dropped = self.dropped_ops();
         TimelineStats {
             ops: self.finish.len(),
             makespan_secs: self.makespan,
@@ -577,6 +603,8 @@ impl Timeline {
                 self.busy(Stream::Interconnect),
             ],
             device_busy,
+            truncated: dropped > 0,
+            dropped_ops: dropped,
         }
     }
 
@@ -900,6 +928,28 @@ mod tests {
         assert_eq!(st.busy(Stream::GpuCompute), from_history);
         assert_eq!(st.idle(Stream::GpuCompute), st.makespan_secs - from_history);
         assert_eq!(st.makespan_secs, 3.0);
+    }
+
+    #[test]
+    fn history_cap_truncation_is_reported() {
+        // Satellite (ISSUE 8): overflowing the op-history cap must be
+        // loud — stats carry a truncated flag and the dropped-op count
+        // instead of quietly exporting an incomplete history.
+        let mut t = tl();
+        for _ in 0..HISTORY_CAP + 5 {
+            t.record(Stream::GpuCompute, "x", 0.0, &[]);
+        }
+        assert_eq!(t.len(), HISTORY_CAP + 5);
+        assert_eq!(t.ops().len(), HISTORY_CAP);
+        assert_eq!(t.dropped_ops(), 5);
+        let st = t.stats();
+        assert!(st.truncated);
+        assert_eq!(st.dropped_ops, 5);
+        t.verify().unwrap();
+        t.reset();
+        let st = t.stats();
+        assert!(!st.truncated, "reset clears the truncation state");
+        assert_eq!(st.dropped_ops, 0);
     }
 
     #[test]

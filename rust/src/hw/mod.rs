@@ -74,6 +74,15 @@ impl HwProfile {
         compute.max(memory)
     }
 
+    /// Classic roofline floor (s): compute at *peak* matmul throughput
+    /// vs. streaming `bytes` once through HBM — the analytic ceiling the
+    /// [`crate::trace::roofline`] model sums per module. Unlike
+    /// [`Self::gpu_time`] this applies no utilization discount: it bounds
+    /// what any schedule could achieve, not what one batch size does.
+    pub fn roofline_time(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.gpu_peak_flops).max(bytes / self.gpu_mem_bw)
+    }
+
     /// HtoD transfer time (s).
     pub fn htod_time(&self, bytes: f64) -> f64 {
         bytes / self.htod_bw

@@ -29,7 +29,10 @@
 //!   streams, events, makespan and per-stream busy accounting); the
 //!   search, the simulator and the live reports all derive their overlap
 //!   numbers from that one scheduling model
-//!   ([`dag::Dag::to_timeline`]).
+//!   ([`dag::Dag::to_timeline`]). The [`trace`] layer exports that same
+//!   timeline as a Perfetto-loadable Chrome trace (`--trace-out`),
+//!   publishes typed run metrics into a registry (`moe-gen metrics`),
+//!   and annotates every report with its analytic roofline fraction.
 //! * **Layer 2** — the MoE model, written in JAX as *separately lowered
 //!   modules* (`python/compile/model.py`), AOT-compiled to HLO text.
 //! * **Layer 1** — Pallas kernels for the expert FFN and flash attention
@@ -83,6 +86,7 @@ pub mod server;
 pub mod session;
 pub mod sim;
 pub mod spec;
+pub mod trace;
 pub mod util;
 pub mod weights;
 pub mod workload;

@@ -16,6 +16,11 @@
 //!   search    batching-strategy search for a paper model/testbed
 //!   simulate  per-system throughput for one scenario
 //!   profile   live per-module latency profile across buckets
+//!   metrics   run once and dump the metrics registry (Prometheus text)
+//!
+//! `run`, `serve` and `simulate` accept `--trace-out t.json` to export
+//! the run's virtual-timeline op history as Chrome trace-event JSON
+//! (load it at <https://ui.perfetto.dev>).
 
 use std::path::PathBuf;
 
@@ -54,6 +59,7 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
         val("placement", "expert→device placement: round_robin|contiguous|popularity"),
         val("bench-log", "trajectory file for run records, or 'none'"),
     ];
+    let trace = val("trace-out", "write a Chrome trace-event JSON (Perfetto), or 'none'");
     let strategy = [
         val("strategy", "defaults|search — what the engine executes"),
         val("search-basis", "auto|measured|analytic cost model for --strategy search"),
@@ -66,16 +72,18 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
         val("decode", "scenario decode length"),
     ];
     match kind {
-        JobKind::Run => {
+        JobKind::Run | JobKind::Metrics => {
             f.extend(engine);
             f.extend(strategy);
             f.extend(scenario);
+            f.push(trace);
             f.push(val("n", "number of sequences"));
             f.push(val("steps", "greedy decode steps per sequence"));
         }
         JobKind::Serve => {
             f.extend(engine);
             f.extend(strategy);
+            f.push(trace);
             f.push(val("n", "number of requests"));
             f.push(val("arrival", "t0|open|bursty|closed"));
             f.push(val("gap", "mean inter-arrival gap in ticks (open/bursty)"));
@@ -101,6 +109,7 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
             f.extend(scenario);
             f.push(val("n-devices", "virtual expert-parallel devices to shard experts over"));
             f.push(val("placement", "expert→device placement: round_robin|contiguous|popularity"));
+            f.push(trace);
         }
         JobKind::Profile => {
             f.push(val("artifacts", "artifacts dir"));
@@ -123,6 +132,7 @@ fn usage() -> ! {
            search    batching-strategy search for a paper model/testbed\n\
            simulate  per-system throughput for one scenario\n\
            profile   live per-module latency profile across buckets\n\
+           metrics   run once and dump the metrics registry (Prometheus text)\n\
          \n\
          Any command accepts --config job.json (typed JobSpec, see\n\
          examples/job_offline.json) and --dump-config out.json."
@@ -179,6 +189,12 @@ fn overlay(spec: &mut JobSpec, flags: &std::collections::HashMap<String, String>
     }
     if let Some(p) = flags.get("bench-log") {
         spec.bench_log = match p.as_str() {
+            "none" | "off" => None,
+            path => Some(PathBuf::from(path)),
+        };
+    }
+    if let Some(p) = flags.get("trace-out") {
+        spec.trace_out = match p.as_str() {
             "none" | "off" => None,
             path => Some(PathBuf::from(path)),
         };
@@ -354,6 +370,12 @@ fn main() -> Result<()> {
                 1e3 * tl.busy(Stream::Interconnect),
                 tl.overlap_fraction(),
             );
+            println!(
+                "[run] roofline: {:.1}% of the analytic hardware ceiling \
+                 (decode {:.1} tok/s measured)",
+                100.0 * report.roofline_fraction,
+                report.decode_tp,
+            );
             if tl.devices > 1 {
                 for d in 0..tl.devices {
                     println!(
@@ -370,6 +392,9 @@ fn main() -> Result<()> {
                 report.arena_hit_rate,
                 util::fmt_bytes(report.arena_recycled_bytes as f64),
             );
+            if let Some(p) = &s.spec().trace_out {
+                println!("[run] wrote trace {}", p.display());
+            }
         }
         JobKind::Serve => {
             println!(
@@ -396,6 +421,9 @@ fn main() -> Result<()> {
                 100.0 * report.weight_hit_rate,
                 report.leaked_slots,
             );
+            if let Some(p) = &s.spec().trace_out {
+                println!("[serve] wrote trace {}", p.display());
+            }
         }
         JobKind::Tables => {
             print!("{}", tables::render(&spec.table));
@@ -469,6 +497,19 @@ fn main() -> Result<()> {
                 "(overlap: decode-phase overlap fraction predicted from the same \
                  virtual timeline the live executor reports)"
             );
+            if let Some(path) = &spec.trace_out {
+                // The simulator replays the searched strategy's DAG onto
+                // a fresh timeline and ships it through the same Chrome
+                // exporter as live runs.
+                let tl = sim::multidev_timeline(&scn);
+                let mut tr = moe_gen::trace::ChromeTrace::from_timeline(&tl);
+                let j = moe_gen::util::json::Json::Str;
+                tr.set_meta("job", j("simulate".into()));
+                tr.set_meta("model", j(scn.model.name.to_string()));
+                tr.set_meta("testbed", j(scn.hw.name.to_string()));
+                tr.write(path)?;
+                println!("[simulate] wrote trace {}", path.display());
+            }
             if scn.n_devices > 1 {
                 // Expert-parallel scale-out: the searched module-policy
                 // strategy's DAG replayed normally vs fully serialized —
@@ -512,6 +553,13 @@ fn main() -> Result<()> {
                 util::fmt_bytes(m.htod_overlapped_bytes as f64),
                 util::fmt_bytes(m.htod_stalled_bytes as f64),
             );
+        }
+        JobKind::Metrics => {
+            // Execute the spec's offline workload once, then print the
+            // populated registry — every publisher (engine metrics,
+            // weight cache, arena) lands in one text exposition.
+            let mut s = Session::open(spec)?;
+            print!("{}", s.metrics_dump()?);
         }
     }
     Ok(())

@@ -21,14 +21,24 @@ pub struct ModuleStat {
 /// Per-request latency accumulator for the online serving subsystem
 /// ([`crate::serve`]): collects TTFT / TPOT samples and answers the
 /// percentile queries a `ServeReport` publishes (p50/p99, SLO-style).
+///
+/// The sorted view is memoized: `push` keeps `sorted` ordered with a
+/// binary insertion instead of every `percentile` call cloning and
+/// re-sorting the whole series — per-wave counter sampling in serve
+/// queries percentiles every wave, which would otherwise go quadratic.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyStats {
+    /// Samples in arrival order (the raw series).
     samples: Vec<f64>,
+    /// Memoized ascending sort of `samples`, maintained on push.
+    sorted: Vec<f64>,
 }
 
 impl LatencyStats {
     pub fn push(&mut self, secs: f64) {
         self.samples.push(secs);
+        let i = self.sorted.partition_point(|&x| x < secs);
+        self.sorted.insert(i, secs);
     }
 
     pub fn len(&self) -> usize {
@@ -48,14 +58,34 @@ impl LatencyStats {
 
     /// Nearest-rank percentile (`p` in `[0, 100]`); 0.0 when empty.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
+        if self.sorted.is_empty() {
             return 0.0;
         }
-        let mut xs = self.samples.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * xs.len() as f64).ceil() as usize;
-        xs[rank.clamp(1, xs.len()) - 1]
+        let rank = ((p / 100.0) * self.sorted.len() as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, self.sorted.len()) - 1]
     }
+
+    /// The memoized ascending sample view (what percentile indexes into).
+    pub fn sorted(&self) -> &[f64] {
+        &self.sorted
+    }
+}
+
+/// One per-wave counter sample for the trace exporter's counter tracks
+/// ([`crate::trace`]): snapshotted at the end of every prefill wave and
+/// decode step, stamped with the virtual timeline clock at that point.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct WaveSample {
+    /// Virtual-timeline makespan (seconds) when the wave finished.
+    pub t_secs: f64,
+    pub expert_avg_batch: f64,
+    pub weight_hit_rate: f64,
+    pub arena_hit_rate: f64,
+    /// Live sequences (KV slots in use) in the wave.
+    pub kv_slots: u64,
+    /// Requests waiting in the serve queue (0 for offline runs; filled
+    /// in by the serve loop after each decode wave).
+    pub queue_depth: u64,
 }
 
 /// Engine-wide metrics sink.
@@ -102,6 +132,9 @@ pub struct Metrics {
     /// reuses, misses are fresh heap allocations. Steady-state decode
     /// waves report a hit rate near 1.0 (DESIGN.md §10).
     pub arena: ArenaStats,
+    /// Per-wave counter samples (one per prefill wave / decode step),
+    /// the source of the trace exporter's counter tracks.
+    pub waves: Vec<WaveSample>,
 }
 
 impl Metrics {
@@ -115,6 +148,53 @@ impl Metrics {
         m.total_secs += secs;
         m.rows += rows as u64;
         m.padded_rows += padded as u64;
+    }
+
+    /// Append one per-wave counter sample, stamped at `t_secs` on the
+    /// virtual timeline. Called by the pipeline at the end of every
+    /// prefill wave and decode step; the serve loop patches
+    /// `queue_depth` onto the latest sample after each decode wave.
+    pub fn sample_wave(&mut self, t_secs: f64, kv_slots: u64) {
+        let sample = WaveSample {
+            t_secs,
+            expert_avg_batch: self.avg_batch("expert_ffn"),
+            weight_hit_rate: self.weight_hit_rate(),
+            arena_hit_rate: self.arena_hit_rate(),
+            kv_slots,
+            queue_depth: 0,
+        };
+        self.waves.push(sample);
+    }
+
+    /// Publish this sink's counters and gauges into a trace registry
+    /// (the `moe-gen metrics` exposition; see [`crate::trace::Registry`]).
+    pub fn publish(&self, reg: &mut crate::trace::Registry) {
+        reg.counter("moe_gen_prefill_tokens_total", self.prefill_tokens);
+        reg.counter("moe_gen_decode_tokens_total", self.decode_tokens);
+        reg.counter("moe_gen_htod_bytes_total", self.htod_bytes);
+        reg.counter("moe_gen_dtoh_bytes_total", self.dtoh_bytes);
+        reg.counter("moe_gen_weight_cache_hits_total", self.weight_hits);
+        reg.counter("moe_gen_weight_cache_misses_total", self.weight_misses);
+        reg.counter("moe_gen_weight_cache_evictions_total", self.weight_evictions);
+        reg.counter("moe_gen_prefetch_issued_total", self.prefetch_issued);
+        reg.counter("moe_gen_prefetch_hits_total", self.prefetch_hits);
+        reg.counter("moe_gen_cpu_attn_seq_steps_total", self.cpu_attn_seqs);
+        reg.counter("moe_gen_gpu_attn_seq_steps_total", self.gpu_attn_seqs);
+        reg.counter("moe_gen_timeline_dropped_ops_total", self.timeline.dropped_ops as u64);
+        reg.gauge("moe_gen_prefill_tokens_per_sec", self.prefill_throughput());
+        reg.gauge("moe_gen_decode_tokens_per_sec", self.decode_throughput());
+        reg.gauge("moe_gen_expert_avg_batch", self.avg_batch("expert_ffn"));
+        reg.gauge("moe_gen_weight_cache_hit_rate", self.weight_hit_rate());
+        reg.gauge("moe_gen_arena_hit_rate", self.arena_hit_rate());
+        reg.gauge("moe_gen_timeline_overlap_fraction", self.timeline_overlap_fraction());
+        reg.gauge("moe_gen_timeline_makespan_secs", self.timeline.makespan_secs);
+        for (name, m) in self.pipeline_stages() {
+            reg.observe_n(
+                &format!("moe_gen_module_secs/{name}"),
+                m.total_secs / m.calls.max(1) as f64,
+                m.calls,
+            );
+        }
     }
 
     /// Time a module invocation and record it.
@@ -280,6 +360,13 @@ impl Metrics {
                 1e3 * self.timeline.busy(Stream::Interconnect),
                 100.0 * self.timeline_overlap_fraction(),
             ));
+            if self.timeline.truncated {
+                s.push_str(&format!(
+                    "  WARNING: op history truncated — {} of {} ops dropped past the \
+                     history cap (aggregates exact, per-op trace incomplete)\n",
+                    self.timeline.dropped_ops, self.timeline.ops,
+                ));
+            }
             if self.timeline.devices > 1 {
                 for d in 0..self.timeline.devices {
                     s.push_str(&format!(
@@ -438,6 +525,71 @@ mod tests {
         assert_eq!(l.percentile(0.0), 1.0);
         assert_eq!(l.percentile(100.0), 5.0);
         assert!((l.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_memo_matches_fresh_sort() {
+        // Satellite (ISSUE 8): the memoized sorted buffer must answer
+        // exactly what a fresh clone+sort nearest-rank query answered
+        // before, across interleaved pushes and queries.
+        let fresh = |xs: &[f64], p: f64| -> f64 {
+            if xs.is_empty() {
+                return 0.0;
+            }
+            let mut v = xs.to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+            v[rank.clamp(1, v.len()) - 1]
+        };
+        let mut l = LatencyStats::default();
+        let mut raw: Vec<f64> = Vec::new();
+        let series = [0.9, 0.1, 0.5, 0.5, 2.0, 0.3, 1.5, 0.7, 0.2, 1.1];
+        for (i, &v) in series.iter().enumerate() {
+            l.push(v);
+            raw.push(v);
+            for p in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+                assert_eq!(l.percentile(p), fresh(&raw, p), "p{p} after {} pushes", i + 1);
+            }
+        }
+        assert!(l.sorted().windows(2).all(|w| w[0] <= w[1]), "memo stays sorted");
+        assert_eq!(l.sorted().len(), l.len());
+    }
+
+    #[test]
+    fn truncated_timeline_warns_in_report() {
+        let mut m = Metrics::new();
+        m.timeline = TimelineStats {
+            ops: 200_000,
+            makespan_secs: 1.0,
+            busy_secs: [1.0, 0.0, 0.0, 0.0, 0.0],
+            truncated: true,
+            dropped_ops: 68_928,
+            ..TimelineStats::default()
+        };
+        let r = m.report();
+        assert!(r.contains("WARNING: op history truncated"), "{r}");
+        assert!(r.contains("68928 of 200000"), "{r}");
+        m.timeline.truncated = false;
+        m.timeline.dropped_ops = 0;
+        assert!(!m.report().contains("WARNING"), "complete history stays quiet");
+    }
+
+    #[test]
+    fn wave_samples_capture_counters() {
+        let mut m = Metrics::new();
+        m.record_module("expert_ffn", 0.1, 64, 64);
+        m.weight_hits = 3;
+        m.weight_misses = 1;
+        m.sample_wave(0.5, 8);
+        m.record_module("expert_ffn", 0.1, 32, 64);
+        m.sample_wave(0.9, 6);
+        assert_eq!(m.waves.len(), 2);
+        assert_eq!(m.waves[0].kv_slots, 8);
+        assert_eq!(m.waves[0].expert_avg_batch, 64.0);
+        assert!((m.waves[0].weight_hit_rate - 0.75).abs() < 1e-12);
+        assert_eq!(m.waves[1].t_secs, 0.9);
+        assert_eq!(m.waves[1].expert_avg_batch, 48.0);
+        assert_eq!(m.waves[1].queue_depth, 0, "offline waves have no queue");
     }
 
     #[test]

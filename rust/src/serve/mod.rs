@@ -123,6 +123,10 @@ pub struct ServeReport {
     /// ([`crate::exec::timeline`]): makespan, per-stream busy time;
     /// `timeline.overlap_fraction()` is the schedule-derived overlap.
     pub timeline: TimelineStats,
+    /// Measured decode throughput as a fraction of the analytic
+    /// hardware ceiling at the experiment's peak concurrency
+    /// ([`crate::trace::roofline`]).
+    pub roofline_fraction: f64,
     /// Greedy token streams, indexed by request id.
     pub tokens: Vec<Vec<i32>>,
 }
@@ -133,7 +137,7 @@ impl ServeReport {
             "{:<14} reqs={:<5} wall={:>7.2}s total={:>8.1} tok/s \
              ttft(p50/p99)={:>6.1}/{:<6.1}ms tpot(p50/p99)={:>5.2}/{:<5.2}ms \
              expert-avg-bsz={:>6.1} eos={} max={} peak-slots={} backfilled={} \
-             tl-overlap={:>5.1}%",
+             tl-overlap={:>5.1}% roofline={:>5.1}%",
             self.policy.name(),
             self.requests,
             self.wall_secs,
@@ -148,6 +152,7 @@ impl ServeReport {
             self.peak_slots,
             self.backfilled,
             100.0 * self.timeline.overlap_fraction(),
+            100.0 * self.roofline_fraction,
         )
     }
 }
@@ -311,6 +316,11 @@ fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Resu
         backfilled: out.backfilled,
         decode_waves: out.decode_waves,
         timeline: eng.timeline.stats(),
+        roofline_fraction: crate::trace::roofline::live_fraction(
+            eng.model_cfg(),
+            peak_slots.max(1),
+            m.decode_throughput(),
+        ),
         tokens: out.logs.into_iter().map(|l| l.tokens).collect(),
     })
 }
@@ -399,6 +409,13 @@ fn serve_loop(
         if !sched.state.is_empty() {
             let next = eng.decode_step(&mut sched.state)?;
             sched.decode_waves += 1;
+            // The pipeline's per-wave sample can't see the serve queue:
+            // patch the depth onto the sample this wave just pushed, so
+            // the trace's queue_depth counter track tracks admission
+            // pressure alongside the execution counters.
+            if let Some(w) = eng.metrics.waves.last_mut() {
+                w.queue_depth = pending.len() as u64;
+            }
             for i in (0..next.len()).rev() {
                 let id = sched.ids[i];
                 let log = &mut logs[id];
@@ -463,8 +480,10 @@ mod tests {
             timeline: TimelineStats {
                 ops: 8,
                 makespan_secs: 0.75,
-                busy_secs: [0.5, 0.25, 0.25, 0.0],
+                busy_secs: [0.5, 0.25, 0.25, 0.0, 0.0],
+                ..TimelineStats::default()
             },
+            roofline_fraction: 0.33,
             tokens: vec![],
         };
         let s = r.summary();
@@ -475,6 +494,7 @@ mod tests {
         assert!(s.contains("peak-slots=16"));
         assert!(s.contains("backfilled=4"));
         assert!(s.contains("tl-overlap= 25.0%"), "{s}");
+        assert!(s.contains("roofline= 33.0%"), "{s}");
     }
 
     #[test]

@@ -112,6 +112,16 @@ impl WaveScheduler {
         let slot = self.state.swap_remove(i);
         (id, slot)
     }
+
+    /// Publish scheduling counters into a metrics registry
+    /// (`moe_gen_serve_*`; DESIGN.md §12 naming).
+    pub fn publish(&self, reg: &mut crate::trace::Registry) {
+        reg.counter("moe_gen_serve_backfilled_total", self.backfilled);
+        reg.counter("moe_gen_serve_decode_waves_total", self.decode_waves);
+        reg.gauge("moe_gen_serve_in_flight", self.in_flight() as f64);
+        reg.gauge("moe_gen_serve_max_in_flight", self.max_in_flight as f64);
+        reg.gauge("moe_gen_serve_min_backfill", self.min_backfill as f64);
+    }
 }
 
 #[cfg(test)]

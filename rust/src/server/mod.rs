@@ -48,6 +48,10 @@ pub struct RunReport {
     pub arena_hit_rate: f64,
     /// Heap bytes the arena's buffer reuse avoided re-allocating.
     pub arena_recycled_bytes: u64,
+    /// Measured decode throughput as a fraction of the analytic
+    /// hardware ceiling ([`crate::trace::roofline`]); in `(0, 1]` for
+    /// any run that decoded at least one token.
+    pub roofline_fraction: f64,
     /// Greedy token streams (for cross-policy agreement checks).
     pub tokens: Vec<Vec<i32>>,
 }
@@ -57,7 +61,8 @@ impl RunReport {
         format!(
             "{:<14} seqs={:<5} wall={:>7.2}s prefill={:>8.1} tok/s decode={:>8.1} tok/s \
              total={:>8.1} tok/s expert-avg-bsz={:>6.1} pad={:>4.1}% HtoD={} DtoH={} \
-             cache-hit={:>5.1}% overlap={:>5.1}% tl-overlap={:>5.1}% arena-hit={:>5.1}%",
+             cache-hit={:>5.1}% overlap={:>5.1}% tl-overlap={:>5.1}% arena-hit={:>5.1}% \
+             roofline={:>5.1}%",
             self.policy.name(),
             self.sequences,
             self.wall_secs,
@@ -72,6 +77,7 @@ impl RunReport {
             100.0 * self.htod_overlap_fraction,
             100.0 * self.timeline.overlap_fraction(),
             100.0 * self.arena_hit_rate,
+            100.0 * self.roofline_fraction,
         )
     }
 }
@@ -138,6 +144,11 @@ pub fn execute(eng: &mut Engine, prompts: &[Vec<i32>], steps: usize) -> Result<R
         timeline: eng.timeline.stats(),
         arena_hit_rate: m.arena_hit_rate(),
         arena_recycled_bytes: m.arena.recycled_bytes,
+        roofline_fraction: crate::trace::roofline::live_fraction(
+            eng.model_cfg(),
+            prompts.len(),
+            m.decode_throughput(),
+        ),
         tokens,
     })
 }
@@ -190,6 +201,7 @@ mod tests {
             },
             arena_hit_rate: 0.95,
             arena_recycled_bytes: 4096,
+            roofline_fraction: 0.42,
             tokens: vec![],
         };
         let s = r.summary();
@@ -201,5 +213,6 @@ mod tests {
         // 1.5s makespan over 2.0s of stream work → 25% hidden.
         assert!(s.contains("tl-overlap= 25.0%"), "{s}");
         assert!(s.contains("arena-hit= 95.0%"), "{s}");
+        assert!(s.contains("roofline= 42.0%"), "{s}");
     }
 }

@@ -399,6 +399,7 @@ impl Session {
         }
         let report = server::execute(&mut self.eng, prompts, steps)?;
         self.record_run(&report, steps);
+        self.export_trace()?;
         Ok(report)
     }
 
@@ -417,7 +418,34 @@ impl Session {
         let scfg = self.spec.serve_config();
         let report = serve::execute(&mut self.eng, &scfg, requests)?;
         self.record_serve(&report);
+        self.export_trace()?;
         Ok(report)
+    }
+
+    /// Execute the spec's offline workload once and render the populated
+    /// metrics registry in Prometheus text format (the `metrics` job:
+    /// `moe-gen metrics`). The run still records to the bench log and
+    /// exports a trace if the spec asks for them.
+    pub fn metrics_dump(&mut self) -> Result<String> {
+        self.run()?;
+        let mut reg = crate::trace::Registry::new();
+        self.eng.publish_registry(&mut reg);
+        Ok(reg.render_prometheus())
+    }
+
+    // -- trace export --------------------------------------------------------
+
+    /// Write the engine's op history as a Chrome trace-event file when
+    /// the spec carries a `trace_out` path. Unlike the bench log, trace
+    /// export is an explicit request — IO failures are errors.
+    fn export_trace(&self) -> Result<()> {
+        let Some(path) = &self.spec.trace_out else { return Ok(()) };
+        let mut tr = crate::trace::ChromeTrace::from_run(&self.eng.timeline, &self.eng.metrics);
+        tr.set_meta("job", Json::Str(self.spec.kind.slug().into()));
+        tr.set_meta("policy", Json::Str(self.spec.eng.policy.slug().into()));
+        tr.set_meta("strategy_source", Json::Str(self.spec.strategy.slug().into()));
+        tr.set_meta("git", Json::Str(git_describe()));
+        tr.write(path)
     }
 
     // -- trajectory records --------------------------------------------------
@@ -434,6 +462,20 @@ impl Session {
         m.insert("policy".into(), Json::Str(self.spec.eng.policy.slug().into()));
         m.insert("backend".into(), Json::Str(self.eng.backend_name().into()));
         m.insert("strategy_source".into(), Json::Str(self.spec.strategy.slug().into()));
+        // The perf-trajectory gate (tools/perf_gate.py) groups records by
+        // this key: only same-config runs are comparable across history.
+        m.insert(
+            "config_key".into(),
+            Json::Str(format!(
+                "{}/{}/{}/nd{}",
+                self.spec.kind.slug(),
+                self.spec.eng.policy.slug(),
+                self.spec.strategy.slug(),
+                self.spec.eng.n_devices
+            )),
+        );
+        m.insert("git".into(), Json::Str(git_describe()));
+        m.insert("n_devices".into(), Json::Num(self.spec.eng.n_devices as f64));
         m.insert(
             "search_basis".into(),
             self.outcome
@@ -466,6 +508,7 @@ impl Session {
         m.insert("htod_overlap_fraction".into(), Json::Num(r.htod_overlap_fraction));
         m.insert("arena_hit_rate".into(), Json::Num(r.arena_hit_rate));
         m.insert("arena_recycled_bytes".into(), Json::Num(r.arena_recycled_bytes as f64));
+        m.insert("roofline_fraction".into(), Json::Num(r.roofline_fraction));
         m.insert(
             "interconnect_busy_ms".into(),
             Json::Num(r.timeline.busy(Stream::Interconnect) * 1e3),
@@ -485,6 +528,7 @@ impl Session {
         m.insert("tpot_p99_ms".into(), Json::Num(r.tpot_p99 * 1e3));
         m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
         m.insert("backfilled".into(), Json::Num(r.backfilled as f64));
+        m.insert("roofline_fraction".into(), Json::Num(r.roofline_fraction));
         m.insert("timeline".into(), timeline_json(&r.timeline));
         append_bench_record(&path, Json::Obj(m));
     }
@@ -576,7 +620,18 @@ fn measured_decode_step(
 ///
 /// Public so out-of-session benches (`benches/hotpath.rs`) append their
 /// machine-readable records to the same trajectory the session writes.
+///
+/// Every appended record is stamped with the build's `git` identity (see
+/// [`git_describe`]) when the caller did not set one, so trajectory
+/// diffs can always tell which tree produced a number.
 pub fn append_bench_record(path: &Path, record: Json) {
+    let record = match record {
+        Json::Obj(mut m) => {
+            m.entry("git".to_string()).or_insert_with(|| Json::Str(git_describe()));
+            Json::Obj(m)
+        }
+        other => other,
+    };
     let mut runs: Vec<Json> = Vec::new();
     if let Ok(text) = std::fs::read_to_string(path) {
         if !text.trim().is_empty() {
@@ -609,6 +664,18 @@ pub fn append_bench_record(path: &Path, record: Json) {
     if let Err(e) = std::fs::write(path, text) {
         eprintln!("warning: could not append bench record to {}: {e}", path.display());
     }
+}
+
+/// Best-effort build identity for trajectory records and trace metadata:
+/// the `MOE_GEN_GIT_DESCRIBE` environment variable when set (CI exports
+/// `git describe --always --dirty` into it), `"untracked"` otherwise.
+/// Deliberately not a `git` subprocess — bench records must not depend
+/// on a VCS binary being present at run time.
+pub fn git_describe() -> String {
+    std::env::var("MOE_GEN_GIT_DESCRIBE")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .unwrap_or_else(|| "untracked".to_string())
 }
 
 #[cfg(test)]
@@ -714,6 +781,35 @@ mod tests {
     }
 
     #[test]
+    fn trace_export_writes_chrome_json() {
+        let dir = std::env::temp_dir().join("moe_gen_session_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let _ = std::fs::remove_file(&path);
+        let mut spec = quiet_spec();
+        spec.trace_out = Some(path.clone());
+        let mut s = Session::open(spec).unwrap();
+        s.run().unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let evs = v.req("traceEvents").as_arr().unwrap();
+        assert!(!evs.is_empty(), "a run must emit trace events");
+        let meta = v.req("otherData");
+        assert_eq!(meta.req("job").as_str(), Some("run"));
+        assert_eq!(meta.req("policy").as_str(), Some("module"));
+        assert!(meta.req("git").as_str().is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn metrics_dump_renders_prometheus_families() {
+        let mut s = Session::open(quiet_spec()).unwrap();
+        let text = s.metrics_dump().unwrap();
+        assert!(text.contains("# TYPE moe_gen_decode_tokens_total counter"), "{text}");
+        assert!(text.contains("moe_gen_arena_hit_rate"), "{text}");
+        assert!(text.contains("moe_gen_weight_cache_budget_bytes"), "{text}");
+    }
+
+    #[test]
     fn serve_job_round_trips_through_session() {
         let mut spec = quiet_spec();
         spec.kind = JobKind::Serve;
@@ -750,6 +846,13 @@ mod tests {
             Some(0.0),
             "single-device runs carry no all-to-all traffic"
         );
+        // Run metadata for the perf-trajectory gate: grouping key, build
+        // identity, roofline annotation.
+        assert_eq!(runs[0].req("config_key").as_str(), Some("run/module/defaults/nd1"));
+        assert!(runs[0].req("git").as_str().is_some(), "every record carries a git identity");
+        assert_eq!(runs[0].req("n_devices").as_usize(), Some(1));
+        let rf = runs[0].req("roofline_fraction").as_f64().unwrap();
+        assert!(rf > 0.0 && rf <= 1.0, "roofline_fraction must land in (0,1], got {rf}");
         // Every record carries the schedule-derived timeline block.
         let tl = runs[0].req("timeline");
         assert!(tl.req("makespan_ms").as_f64().unwrap() > 0.0);
@@ -761,6 +864,15 @@ mod tests {
             ov > 0.0 && ov < 1.0,
             "module policy must report timeline overlap in (0,1), got {ov}"
         );
+
+        // Records appended out-of-session (benches) get the git stamp
+        // injected by append_bench_record itself.
+        let mut raw = BTreeMap::new();
+        raw.insert("job".to_string(), Json::Str("bench".into()));
+        append_bench_record(&path, Json::Obj(raw));
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let runs = v.req("runs").as_arr().unwrap();
+        assert!(runs.last().unwrap().req("git").as_str().is_some());
 
         // A file that is not a trajectory must never be clobbered.
         std::fs::write(&path, "definitely not json").unwrap();

@@ -340,6 +340,16 @@ pub fn multidev_summary(scn: &Scenario) -> MultidevSummary {
     }
 }
 
+/// The searched module-policy strategy's decode DAG replayed onto a
+/// fresh virtual timeline — the op history `moe-gen simulate
+/// --trace-out` walks through the same Chrome-trace exporter
+/// ([`crate::trace::ChromeTrace::from_timeline`]) as live runs.
+pub fn multidev_timeline(scn: &Scenario) -> crate::exec::Timeline {
+    let knobs = Knobs::moe_gen_gpu_only();
+    let res = sched::search_decode(scn, &knobs);
+    sched::build_decode_dag(scn, &res.strategy, &knobs, 3).to_timeline()
+}
+
 // ---------------------------------------------------------------------------
 // Dataset completion time (hours) — Table 4
 // ---------------------------------------------------------------------------
@@ -718,6 +728,13 @@ mod tests {
         let r1 = multidev_summary(&scn(model::mixtral_8x7b()));
         assert_eq!(r1.n_devices, 1);
         assert_eq!(r1.ici_busy_secs, 0.0);
+    }
+
+    #[test]
+    fn multidev_timeline_replays_ops_for_trace_export() {
+        let tl = multidev_timeline(&scn(model::mixtral_8x7b()).with_devices(2));
+        assert!(!tl.ops().is_empty(), "trace export needs an op history");
+        assert!(tl.makespan() > 0.0);
     }
 
     #[test]

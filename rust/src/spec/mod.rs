@@ -53,6 +53,9 @@ pub enum JobKind {
     Profile,
     /// Render the paper's evaluation tables from the simulator.
     Tables,
+    /// Execute a short offline run and dump the populated metrics
+    /// registry ([`crate::trace::Registry`]) in Prometheus text format.
+    Metrics,
 }
 
 impl JobKind {
@@ -64,6 +67,7 @@ impl JobKind {
             JobKind::Simulate => "simulate",
             JobKind::Profile => "profile",
             JobKind::Tables => "tables",
+            JobKind::Metrics => "metrics",
         }
     }
 
@@ -75,6 +79,7 @@ impl JobKind {
             "simulate" => JobKind::Simulate,
             "profile" => JobKind::Profile,
             "tables" => JobKind::Tables,
+            "metrics" => JobKind::Metrics,
             _ => return None,
         })
     }
@@ -280,6 +285,10 @@ pub struct JobSpec {
     /// Where `Session::run`/`serve` append their trajectory record;
     /// `None` disables recording.
     pub bench_log: Option<PathBuf>,
+    /// Where to write the run's Chrome trace-event JSON
+    /// ([`crate::trace::ChromeTrace`], Perfetto-loadable); `None`
+    /// disables trace export.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for JobSpec {
@@ -295,6 +304,7 @@ impl Default for JobSpec {
             table: "all".to_string(),
             profile_reps: 3,
             bench_log: Some(default_bench_log()),
+            trace_out: None,
         }
     }
 }
@@ -477,6 +487,13 @@ impl JobSpec {
                 .map(|p| Json::Str(p.display().to_string()))
                 .unwrap_or(Json::Null),
         );
+        top.insert(
+            "trace_out".into(),
+            self.trace_out
+                .as_ref()
+                .map(|p| Json::Str(p.display().to_string()))
+                .unwrap_or(Json::Null),
+        );
         Json::Obj(top)
     }
 
@@ -498,7 +515,7 @@ impl JobSpec {
             v,
             &[
                 "job", "engine", "workload", "serve", "scenario", "strategy", "search_basis",
-                "table", "profile_reps", "bench_log",
+                "table", "profile_reps", "bench_log", "trace_out",
             ],
             "spec",
         )?;
@@ -506,7 +523,7 @@ impl JobSpec {
         if let Some(k) = v.get("job") {
             let s = k.as_str().ok_or_else(|| anyhow!("spec: \"job\" must be a string"))?;
             spec.kind = JobKind::parse(s)
-                .ok_or_else(|| anyhow!("spec: unknown job {s:?}; try run|serve|search|simulate|profile|tables"))?;
+                .ok_or_else(|| anyhow!("spec: unknown job {s:?}; try run|serve|search|simulate|profile|tables|metrics"))?;
         }
         if let Some(e) = v.get("engine") {
             check_keys(
@@ -645,6 +662,13 @@ impl JobSpec {
                 Json::Null => None,
                 Json::Str(p) => Some(PathBuf::from(p)),
                 _ => return Err(anyhow!("spec: bench_log must be a path string or null")),
+            };
+        }
+        if let Some(t) = v.get("trace_out") {
+            spec.trace_out = match t {
+                Json::Null => None,
+                Json::Str(p) => Some(PathBuf::from(p)),
+                _ => return Err(anyhow!("spec: trace_out must be a path string or null")),
             };
         }
         Ok(spec)
@@ -788,6 +812,7 @@ mod tests {
             table: "9".into(),
             profile_reps: 7,
             bench_log: None,
+            trace_out: Some(PathBuf::from("trace.json")),
         }
     }
 
@@ -838,6 +863,7 @@ mod tests {
         assert!(JobSpec::from_str(r#"{"engine": {"placement": "striped"}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"placement": 3}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"bench_log": true}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"trace_out": 3}"#).is_err());
         assert!(JobSpec::from_str(r#"{"profile_reps": 2.5}"#).is_err());
         // Null clears optionals; integral values (negative eos included) pass.
         let ok = JobSpec::from_str(

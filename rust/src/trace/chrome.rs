@@ -1,0 +1,340 @@
+//! Chrome trace-event exporter: turns the executor's op-level
+//! [`Timeline`] history into a JSON document Perfetto loads directly.
+//!
+//! Track model — one thread per virtual stream lane, mirroring the
+//! timeline's lane layout (DESIGN.md §9/§11): per device `d`, tracks
+//! `dev{d}/gpu`, `dev{d}/htod`, `dev{d}/dtoh`; then the shared
+//! `cpu_attn` and `ici` lanes. Every scheduled op becomes a complete
+//! (`ph: "X"`) duration event with microsecond timestamps; every dep
+//! edge becomes an `s`→`f` flow pair, so Perfetto draws the arrow from
+//! the prefetch that pinned a weight to the kernel that consumed it.
+//! Per-wave counter samples ([`crate::metrics::WaveSample`]) become
+//! `ph: "C"` counter tracks. Run metadata — including the HISTORY_CAP
+//! truncation flag, so an incomplete trace says so — travels in the
+//! top-level `otherData` object.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::exec::{Stream, Timeline};
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+
+/// All events live under one synthetic process.
+const PID: f64 = 1.0;
+
+/// A built trace, ready to serialize. Construct with
+/// [`ChromeTrace::from_timeline`] (simulator replays) or
+/// [`ChromeTrace::from_run`] (live runs, adds counter tracks).
+#[derive(Debug, Clone)]
+pub struct ChromeTrace {
+    events: Vec<Json>,
+    other: BTreeMap<String, Json>,
+}
+
+/// Track (thread) id for an op, mirroring the timeline's lane layout:
+/// per-device gpu/htod/dtoh, then the shared cpu_attn and ici lanes.
+fn lane(devices: usize, stream: Stream, device: Option<usize>) -> usize {
+    let d = device.unwrap_or(0).min(devices.saturating_sub(1));
+    match stream {
+        Stream::GpuCompute => 3 * d,
+        Stream::HtoD => 3 * d + 1,
+        Stream::DtoH => 3 * d + 2,
+        Stream::CpuAttn => 3 * devices,
+        Stream::Interconnect => 3 * devices + 1,
+    }
+}
+
+fn lane_name(devices: usize, l: usize) -> String {
+    if l < 3 * devices {
+        let d = l / 3;
+        let s = ["gpu", "htod", "dtoh"][l % 3];
+        format!("dev{d}/{s}")
+    } else if l == 3 * devices {
+        "cpu_attn".into()
+    } else {
+        "ici".into()
+    }
+}
+
+fn ev(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+impl ChromeTrace {
+    /// Export a bare timeline (the simulator's `Dag::to_timeline()`
+    /// replay): tracks, duration events and dep flows, no counters.
+    pub fn from_timeline(tl: &Timeline) -> Self {
+        Self::build(tl, None)
+    }
+
+    /// Export a live run: the executed timeline plus per-wave counter
+    /// tracks sampled from [`Metrics::waves`].
+    pub fn from_run(tl: &Timeline, metrics: &Metrics) -> Self {
+        Self::build(tl, Some(metrics))
+    }
+
+    fn build(tl: &Timeline, metrics: Option<&Metrics>) -> Self {
+        let devices = tl.devices().max(1);
+        let mut events = Vec::new();
+
+        // Track metadata: process name plus one thread_name/sort_index
+        // pair per lane, so Perfetto shows streams in timeline order.
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str("moe-gen".into()));
+        events.push(ev(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(PID)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::Obj(args)),
+        ]));
+        for l in 0..(3 * devices + 2) {
+            let mut args = BTreeMap::new();
+            args.insert("name".to_string(), Json::Str(lane_name(devices, l)));
+            events.push(ev(vec![
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(PID)),
+                ("tid", Json::Num(l as f64)),
+                ("args", Json::Obj(args)),
+            ]));
+            let mut args = BTreeMap::new();
+            args.insert("sort_index".to_string(), Json::Num(l as f64));
+            events.push(ev(vec![
+                ("name", Json::Str("thread_sort_index".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(PID)),
+                ("tid", Json::Num(l as f64)),
+                ("args", Json::Obj(args)),
+            ]));
+        }
+
+        // Duration events + dep flows. EventId::index() addresses the
+        // retained op history directly; ids past the HISTORY_CAP window
+        // (dropped ops) simply have no flow arrow.
+        let ops = tl.ops();
+        let mut flow_id = 0u64;
+        for op in ops {
+            let Some(stream) = op.stream else { continue };
+            let tid = lane(devices, stream, op.device) as f64;
+            events.push(ev(vec![
+                ("name", Json::Str(op.label.to_string())),
+                ("cat", Json::Str(stream.name().into())),
+                ("ph", Json::Str("X".into())),
+                ("ts", Json::Num(op.start * 1e6)),
+                ("dur", Json::Num(op.secs * 1e6)),
+                ("pid", Json::Num(PID)),
+                ("tid", Json::Num(tid)),
+            ]));
+            for dep in &op.deps {
+                let Some(src) = ops.get(dep.index()) else { continue };
+                let Some(src_stream) = src.stream else { continue };
+                // Only cross-lane edges get arrows: same-lane FIFO order
+                // is implicit and would smother the view.
+                let src_tid = lane(devices, src_stream, src.device) as f64;
+                if src_tid == tid {
+                    continue;
+                }
+                flow_id += 1;
+                events.push(ev(vec![
+                    ("name", Json::Str("dep".into())),
+                    ("cat", Json::Str("dep".into())),
+                    ("ph", Json::Str("s".into())),
+                    ("id", Json::Num(flow_id as f64)),
+                    ("ts", Json::Num(src.finish * 1e6)),
+                    ("pid", Json::Num(PID)),
+                    ("tid", Json::Num(src_tid)),
+                ]));
+                events.push(ev(vec![
+                    ("name", Json::Str("dep".into())),
+                    ("cat", Json::Str("dep".into())),
+                    ("ph", Json::Str("f".into())),
+                    ("bp", Json::Str("e".into())),
+                    ("id", Json::Num(flow_id as f64)),
+                    ("ts", Json::Num(op.start * 1e6)),
+                    ("pid", Json::Num(PID)),
+                    ("tid", Json::Num(tid)),
+                ]));
+            }
+        }
+
+        // Per-wave counter tracks.
+        if let Some(m) = metrics {
+            for w in &m.waves {
+                let ts = w.t_secs * 1e6;
+                let samples: [(&str, f64); 5] = [
+                    ("expert_avg_batch", w.expert_avg_batch),
+                    ("weight_cache_hit_rate", w.weight_hit_rate),
+                    ("arena_hit_rate", w.arena_hit_rate),
+                    ("kv_slots", w.kv_slots as f64),
+                    ("queue_depth", w.queue_depth as f64),
+                ];
+                for (name, v) in samples {
+                    let mut args = BTreeMap::new();
+                    args.insert("value".to_string(), Json::Num(v));
+                    events.push(ev(vec![
+                        ("name", Json::Str(name.into())),
+                        ("ph", Json::Str("C".into())),
+                        ("ts", Json::Num(ts)),
+                        ("pid", Json::Num(PID)),
+                        ("tid", Json::Num(0.0)),
+                        ("args", Json::Obj(args)),
+                    ]));
+                }
+            }
+        }
+
+        // Run metadata, led by the truncation state (satellite: a trace
+        // missing ops must say so instead of reading as complete).
+        let st = tl.stats();
+        let mut other = BTreeMap::new();
+        other.insert("ops_total".into(), Json::Num(st.ops as f64));
+        other.insert("ops_retained".into(), Json::Num(ops.len() as f64));
+        other.insert("truncated".into(), Json::Bool(st.truncated));
+        other.insert("dropped_ops".into(), Json::Num(st.dropped_ops as f64));
+        other.insert("devices".into(), Json::Num(devices as f64));
+        other.insert("serialized".into(), Json::Bool(tl.serialized()));
+        other.insert("makespan_secs".into(), Json::Num(tl.makespan()));
+
+        ChromeTrace { events, other }
+    }
+
+    /// Attach a metadata key to the trace's `otherData` (job kind,
+    /// policy, git describe, …).
+    pub fn set_meta(&mut self, key: &str, v: Json) {
+        self.other.insert(key.to_string(), v);
+    }
+
+    /// Number of emitted trace events (metadata included).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The complete trace document (JSON-object form, Perfetto-loadable).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("traceEvents".into(), Json::Arr(self.events.clone()));
+        root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+        root.insert("otherData".into(), Json::Obj(self.other.clone()));
+        Json::Obj(root)
+    }
+
+    /// Serialize to `path` (with trailing newline).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut s = self.to_json().dump();
+        s.push('\n');
+        std::fs::write(path, s)
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Topology;
+
+    fn demo_timeline() -> Timeline {
+        let mut tl = Timeline::new(26e9, 24e9);
+        let f = tl.xfer_htod("fetch:e0", 26_000_000, &[]);
+        let g = tl.record(Stream::GpuCompute, "expert_ffn", 0.002, &[f]);
+        tl.record(Stream::CpuAttn, "cpu_attn", 0.003, &[]);
+        tl.xfer_dtoh("kv_out", 12_000_000, &[g]);
+        tl
+    }
+
+    #[test]
+    fn trace_parses_and_has_all_tracks() {
+        let tl = demo_timeline();
+        let tr = ChromeTrace::from_timeline(&tl);
+        let doc = Json::parse(&tr.to_json().dump()).unwrap();
+        let evs = doc.req("traceEvents").as_arr().unwrap();
+        assert!(!evs.is_empty());
+        // 1 device → 5 lanes, each with thread_name metadata.
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.req("ph").as_str() == Some("M"))
+            .filter(|e| e.req("name").as_str() == Some("thread_name"))
+            .filter_map(|e| e.req("args").req("name").as_str())
+            .collect();
+        assert_eq!(names, vec!["dev0/gpu", "dev0/htod", "dev0/dtoh", "cpu_attn", "ici"]);
+        // 4 scheduled ops → 4 complete events with µs timestamps.
+        let slices: Vec<&Json> =
+            evs.iter().filter(|e| e.req("ph").as_str() == Some("X")).collect();
+        assert_eq!(slices.len(), 4);
+        assert!(slices.iter().all(|e| e.req("dur").as_f64().unwrap() > 0.0));
+    }
+
+    #[test]
+    fn flow_pairs_cross_lanes_and_share_ids() {
+        let tl = demo_timeline();
+        let tr = ChromeTrace::from_timeline(&tl);
+        let doc = tr.to_json();
+        let evs = doc.req("traceEvents").as_arr().unwrap();
+        let starts: Vec<&Json> =
+            evs.iter().filter(|e| e.req("ph").as_str() == Some("s")).collect();
+        let finishes: Vec<&Json> =
+            evs.iter().filter(|e| e.req("ph").as_str() == Some("f")).collect();
+        // fetch→expert (htod→gpu) and expert→kv_out (gpu→dtoh).
+        assert_eq!(starts.len(), 2);
+        assert_eq!(finishes.len(), 2);
+        for (s, f) in starts.iter().zip(&finishes) {
+            assert_eq!(s.req("id").as_f64(), f.req("id").as_f64());
+            assert_ne!(s.req("tid").as_f64(), f.req("tid").as_f64());
+            assert!(s.req("ts").as_f64() <= f.req("ts").as_f64());
+        }
+    }
+
+    #[test]
+    fn counters_and_meta_ride_along() {
+        let tl = demo_timeline();
+        let mut m = Metrics::default();
+        m.sample_wave(0.001, 4);
+        m.sample_wave(0.002, 4);
+        let mut tr = ChromeTrace::from_run(&tl, &m);
+        tr.set_meta("job", Json::Str("run".into()));
+        let doc = tr.to_json();
+        let evs = doc.req("traceEvents").as_arr().unwrap();
+        let counters =
+            evs.iter().filter(|e| e.req("ph").as_str() == Some("C")).count();
+        assert_eq!(counters, 2 * 5); // 2 waves × 5 series
+        let other = doc.req("otherData");
+        assert_eq!(other.req("truncated").as_bool(), Some(false));
+        assert_eq!(other.req("dropped_ops").as_f64(), Some(0.0));
+        assert_eq!(other.req("job").as_str(), Some("run"));
+        assert_eq!(other.req("devices").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn multidevice_lanes_split_per_device() {
+        let mut tl = Timeline::with_topology(26e9, 24e9, Topology::new(2, 100e9));
+        tl.record_on(0, Stream::GpuCompute, "ffn:d0", 0.001, &[]);
+        let a = tl.record_on(1, Stream::GpuCompute, "ffn:d1", 0.001, &[]);
+        tl.xfer_ici("a2a", 50_000_000, &[a]);
+        let tr = ChromeTrace::from_timeline(&tl);
+        let doc = tr.to_json();
+        let evs = doc.req("traceEvents").as_arr().unwrap();
+        let tid_of = |label: &str| {
+            evs.iter()
+                .find(|e| e.req("ph").as_str() == Some("X")
+                    && e.req("name").as_str() == Some(label))
+                .unwrap()
+                .req("tid")
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(tid_of("ffn:d0"), 0.0); // dev0/gpu
+        assert_eq!(tid_of("ffn:d1"), 3.0); // dev1/gpu
+        assert_eq!(tid_of("a2a"), 7.0); // ici = 3*2 + 1
+    }
+}

@@ -1,0 +1,36 @@
+//! Whole-run observability: Chrome-trace export, a typed metrics
+//! registry, and the analytic roofline model (DESIGN.md §12).
+//!
+//! The executor already records every op it schedules — label, stream,
+//! device, dependency edges, start/finish — on the virtual multi-stream
+//! [`crate::exec::Timeline`]. This module turns that history into
+//! first-class telemetry instead of throwing it away into scalar
+//! aggregates:
+//!
+//! * [`ChromeTrace`] walks the op history and emits Chrome trace-event
+//!   JSON that loads directly into Perfetto (`ui.perfetto.dev`): one
+//!   track per `(device, stream)` pair plus the shared CPU-attention and
+//!   interconnect lanes, duration events per op, flow arrows along
+//!   [`crate::exec::EventId`] dep edges (a prefetch visibly feeds the
+//!   kernel that pinned it), and per-wave counter tracks (expert batch,
+//!   cache hit rates, KV slots, serve queue depth).
+//! * [`Registry`] is a typed counter/gauge/histogram sink that
+//!   [`crate::metrics::Metrics`], the weight cache, the tensor arena and
+//!   the serve wave scheduler publish into; it snapshots as JSON and
+//!   renders a Prometheus-style text exposition (`moe-gen metrics`).
+//! * [`roofline`] computes the analytic tokens/s ceiling per module from
+//!   [`crate::hw`] bandwidths and [`crate::model`] FLOP/byte counts
+//!   (MoE-Lens-style), so every report carries a `roofline_fraction` —
+//!   measured throughput as a fraction of the hardware limit.
+//!
+//! Both the live engine and the simulator export through the same
+//! [`ChromeTrace`]: `--trace-out` on `run`/`serve` dumps the executed
+//! timeline, on `simulate` the predicted `Dag::to_timeline()` replay, so
+//! the two traces are diffable side-by-side in Perfetto.
+
+pub mod chrome;
+pub mod registry;
+pub mod roofline;
+
+pub use chrome::ChromeTrace;
+pub use registry::Registry;

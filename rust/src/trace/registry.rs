@@ -1,0 +1,267 @@
+//! Typed metrics registry: named counters, gauges and histograms that
+//! the subsystems publish into after a run, snapshotable as JSON and
+//! renderable as a Prometheus-style text exposition.
+//!
+//! Naming convention (DESIGN.md §12): every series is prefixed
+//! `moe_gen_`, counters end in `_total`, and a `/label` suffix on the
+//! series name (`moe_gen_module_secs/expert_ffn`) renders as a
+//! Prometheus `{module="expert_ffn"}` label so per-module families stay
+//! one metric.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Running summary of an observed series (count/sum/min/max — enough for
+/// mean and range without storing samples).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistogramStats {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for HistogramStats {
+    fn default() -> Self {
+        HistogramStats { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+}
+
+impl HistogramStats {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+}
+
+/// The registry itself. `BTreeMap` keys give deterministic iteration, so
+/// both the JSON snapshot and the text exposition are stable across runs.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, HistogramStats>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add `v` to the named monotonic counter (created at zero).
+    pub fn counter(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Increment the named counter by one.
+    pub fn inc(&mut self, name: &str) {
+        self.counter(name, 1);
+    }
+
+    /// Set the named gauge to `v` (last write wins).
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record one observation into the named histogram.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.observe_n(name, v, 1);
+    }
+
+    /// Record `count` observations of value `v` at once — the batched
+    /// form publishers use when they only kept an aggregate (e.g. mean
+    /// seconds per call over `calls` calls).
+    pub fn observe_n(&mut self, name: &str, v: f64, count: u64) {
+        if count == 0 {
+            return;
+        }
+        let h = self.histograms.entry(name.to_string()).or_default();
+        h.count += count;
+        h.sum += v * count as f64;
+        h.min = h.min.min(v);
+        h.max = h.max.max(v);
+    }
+
+    pub fn get_counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn get_gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramStats> {
+        self.histograms.get(name)
+    }
+
+    /// Number of distinct series across all three kinds.
+    pub fn len(&self) -> usize {
+        self.counters.len() + self.gauges.len() + self.histograms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the whole registry as JSON (`{"counters": {...},
+    /// "gauges": {...}, "histograms": {name: {count,sum,min,max,mean}}}`).
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in &self.counters {
+            counters.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in &self.gauges {
+            gauges.insert(k.clone(), Json::Num(*v));
+        }
+        let mut histograms = BTreeMap::new();
+        for (k, h) in &self.histograms {
+            let mut m = BTreeMap::new();
+            m.insert("count".into(), Json::Num(h.count as f64));
+            m.insert("sum".into(), Json::Num(h.sum));
+            m.insert("min".into(), Json::Num(if h.count == 0 { 0.0 } else { h.min }));
+            m.insert("max".into(), Json::Num(if h.count == 0 { 0.0 } else { h.max }));
+            m.insert("mean".into(), Json::Num(h.mean()));
+            histograms.insert(k.clone(), Json::Obj(m));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".into(), Json::Obj(counters));
+        root.insert("gauges".into(), Json::Obj(gauges));
+        root.insert("histograms".into(), Json::Obj(histograms));
+        Json::Obj(root)
+    }
+
+    /// Render a Prometheus-style text exposition. A `/label` suffix in a
+    /// series name becomes a `{module="label"}` selector; histograms
+    /// render as summaries (`_count` / `_sum`).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, v) in &self.counters {
+            let (base, sel) = split_series(name);
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} counter\n"));
+                last_base = base.clone();
+            }
+            out.push_str(&format!("{base}{sel} {v}\n"));
+        }
+        last_base.clear();
+        for (name, v) in &self.gauges {
+            let (base, sel) = split_series(name);
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} gauge\n"));
+                last_base = base.clone();
+            }
+            out.push_str(&format!("{base}{sel} {v}\n"));
+        }
+        last_base.clear();
+        for (name, h) in &self.histograms {
+            let (base, sel) = split_series(name);
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} summary\n"));
+                last_base = base.clone();
+            }
+            out.push_str(&format!("{base}_count{sel} {}\n", h.count));
+            out.push_str(&format!("{base}_sum{sel} {}\n", h.sum));
+        }
+        out
+    }
+}
+
+/// Split `"family/label"` into a sanitized metric name and a Prometheus
+/// label selector. A name with no `/` gets an empty selector.
+fn split_series(name: &str) -> (String, String) {
+    let (base, label) = match name.split_once('/') {
+        Some((b, l)) => (b, Some(l)),
+        None => (name, None),
+    };
+    let base: String = base
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    let sel = match label {
+        Some(l) => format!("{{module=\"{l}\"}}"),
+        None => String::new(),
+    };
+    (base, sel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut r = Registry::new();
+        r.counter("moe_gen_decode_tokens_total", 8);
+        r.counter("moe_gen_decode_tokens_total", 4);
+        r.inc("moe_gen_decode_tokens_total");
+        assert_eq!(r.get_counter("moe_gen_decode_tokens_total"), 13);
+        assert_eq!(r.get_counter("missing"), 0);
+
+        r.gauge("moe_gen_arena_hit_rate", 0.5);
+        r.gauge("moe_gen_arena_hit_rate", 0.75);
+        assert_eq!(r.get_gauge("moe_gen_arena_hit_rate"), Some(0.75));
+    }
+
+    #[test]
+    fn observe_n_weights_the_summary() {
+        let mut r = Registry::new();
+        r.observe("moe_gen_module_secs/attn", 2.0);
+        r.observe_n("moe_gen_module_secs/attn", 4.0, 3);
+        r.observe_n("moe_gen_module_secs/attn", 1.0, 0); // no-op
+        let h = r.histogram("moe_gen_module_secs/attn").unwrap();
+        assert_eq!(h.count, 4);
+        assert!((h.sum - 14.0).abs() < 1e-12);
+        assert!((h.mean() - 3.5).abs() < 1e-12);
+        assert_eq!(h.min, 2.0);
+        assert_eq!(h.max, 4.0);
+    }
+
+    #[test]
+    fn json_snapshot_parses_and_roundtrips() {
+        let mut r = Registry::new();
+        r.counter("moe_gen_prefill_tokens_total", 96);
+        r.gauge("moe_gen_expert_avg_batch", 12.5);
+        r.observe("moe_gen_module_secs/expert_ffn", 0.25);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(
+            parsed.req("counters").req("moe_gen_prefill_tokens_total").as_f64(),
+            Some(96.0)
+        );
+        assert_eq!(
+            parsed.req("gauges").req("moe_gen_expert_avg_batch").as_f64(),
+            Some(12.5)
+        );
+        let h = parsed.req("histograms").req("moe_gen_module_secs/expert_ffn");
+        assert_eq!(h.req("count").as_f64(), Some(1.0));
+        assert_eq!(h.req("mean").as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn prometheus_rendering_labels_and_types() {
+        let mut r = Registry::new();
+        r.counter("moe_gen_decode_tokens_total", 90);
+        r.gauge("moe_gen_weight_cache_hit_rate", 0.875);
+        r.observe_n("moe_gen_module_secs/attn", 0.001, 10);
+        r.observe_n("moe_gen_module_secs/expert_ffn", 0.002, 10);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE moe_gen_decode_tokens_total counter"));
+        assert!(text.contains("moe_gen_decode_tokens_total 90"));
+        assert!(text.contains("# TYPE moe_gen_weight_cache_hit_rate gauge"));
+        assert!(text.contains("moe_gen_weight_cache_hit_rate 0.875"));
+        // One TYPE line for the labeled family, two sample pairs.
+        assert_eq!(text.matches("# TYPE moe_gen_module_secs summary").count(), 1);
+        assert!(text.contains("moe_gen_module_secs_count{module=\"attn\"} 10"));
+        assert!(text.contains("moe_gen_module_secs_sum{module=\"expert_ffn\"} 0.02"));
+    }
+
+    #[test]
+    fn empty_registry_is_empty() {
+        let r = Registry::new();
+        assert!(r.is_empty());
+        assert_eq!(r.render_prometheus(), "");
+        assert_eq!(r.to_json().req("counters"), &Json::Obj(BTreeMap::new()));
+    }
+}

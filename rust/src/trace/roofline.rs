@@ -1,0 +1,194 @@
+//! Analytic decode roofline (MoE-Lens-style): the achievable tokens/s
+//! ceiling for a model on a hardware profile, from per-module FLOP and
+//! byte counts alone.
+//!
+//! For a decode wave of `b` tokens, every layer must at minimum (a) run
+//! the dense attention projections and the activated expert FFNs on the
+//! GPU at peak matmul throughput, and (b) stream each touched weight
+//! byte through HBM once. Each module's floor is the classic roofline
+//! `max(flops / peak_flops, bytes / mem_bw)` ([`HwProfile::roofline_time`]),
+//! and the step floor is the sum over layers — no schedule, cache or
+//! overlap trick can beat it, so `measured / roofline ≤ 1` structurally
+//! and the reported `roofline_fraction` reads as "how much of the
+//! hardware limit the run achieved". Lower-order work (embedding, LM
+//! head, attention mechanism) is deliberately dropped: omitting work can
+//! only raise the ceiling, preserving the upper-bound property.
+
+use crate::hw::HwProfile;
+use crate::model::ModelDesc;
+use crate::runtime::RtConfig;
+
+/// One module's contribution to the decode-step floor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModuleRoofline {
+    pub module: &'static str,
+    /// FLOPs per decode step across all layers.
+    pub flops: f64,
+    /// Weight bytes streamed through HBM per decode step across all layers.
+    pub bytes: f64,
+    /// Roofline floor (seconds) per decode step across all layers.
+    pub secs: f64,
+}
+
+/// The full analytic ceiling for one (model, hardware, batch) point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Roofline {
+    pub batch: usize,
+    pub modules: Vec<ModuleRoofline>,
+    /// Minimum seconds per decode step (sum of module floors).
+    pub step_secs: f64,
+    /// Achievable decode tokens/s: `batch / step_secs`.
+    pub tokens_per_sec: f64,
+}
+
+/// Compute the decode roofline for `batch` concurrent sequences.
+pub fn decode_roofline(m: &ModelDesc, hw: &HwProfile, batch: usize) -> Roofline {
+    let batch = batch.max(1);
+    let b = batch as f64;
+    let layers = m.num_layers as f64;
+
+    // Attention projections + norms + router: dense weights minus the
+    // shared experts (folded into the expert module below).
+    let attn_flops = b * m.attn_proj_flops_per_token();
+    let attn_bytes = (m.dense_bytes_per_layer() - m.shared_expert_bytes()) as f64;
+    let attn_secs = hw.roofline_time(attn_flops, attn_bytes);
+
+    // Expert FFN: every token through top_k routed experts plus the
+    // always-on shared path; bytes cover each *activated* expert once.
+    let expert_flops =
+        b * (m.top_k as f64 * m.expert_flops_per_token() + m.shared_flops_per_token());
+    let expert_bytes = m.experts_activated(batch) * m.expert_bytes() as f64
+        + m.shared_expert_bytes() as f64;
+    let expert_secs = hw.roofline_time(expert_flops, expert_bytes);
+
+    let modules = vec![
+        ModuleRoofline {
+            module: "attn",
+            flops: layers * attn_flops,
+            bytes: layers * attn_bytes,
+            secs: layers * attn_secs,
+        },
+        ModuleRoofline {
+            module: "expert_ffn",
+            flops: layers * expert_flops,
+            bytes: layers * expert_bytes,
+            secs: layers * expert_secs,
+        },
+    ];
+    let step_secs: f64 = modules.iter().map(|r| r.secs).sum();
+    Roofline { batch, modules, step_secs, tokens_per_sec: b / step_secs }
+}
+
+/// Measured throughput as a fraction of the analytic ceiling, clamped
+/// into `(0, 1]` for any positive measurement (the clamp absorbs model
+/// mismatch — e.g. a simulator run that skips work the roofline counts).
+/// Non-positive inputs report `0.0`.
+pub fn fraction(measured_tps: f64, roofline_tps: f64) -> f64 {
+    if measured_tps <= 0.0 || roofline_tps <= 0.0 {
+        return 0.0;
+    }
+    (measured_tps / roofline_tps).min(1.0)
+}
+
+/// Map the live runtime config onto a [`ModelDesc`] so live runs price
+/// against the same roofline math as the paper-scale presets. The live
+/// interpreter runs f32 end-to-end (dtype_bytes 4, weight_bits 32).
+pub fn rt_model_desc(c: &RtConfig) -> ModelDesc {
+    ModelDesc {
+        name: "live".into(),
+        num_layers: c.num_layers,
+        hidden: c.hidden_size,
+        num_heads: c.num_heads,
+        num_kv_heads: c.num_kv_heads,
+        head_dim: c.head_dim,
+        num_experts: c.num_experts,
+        top_k: c.top_k,
+        expert_inter: c.ffn_inter,
+        shared_experts: c.use_shared_expert as usize,
+        shared_inter: c.shared_inter,
+        vocab: c.vocab_size,
+        dtype_bytes: 4,
+        weight_bits: 32,
+        kv_bytes_token_layer_override: None,
+        kv_upproj_factor: 1.0,
+    }
+}
+
+/// Roofline fraction for a live run: measured decode tokens/s against
+/// the analytic limit for the engine's model at the executed batch, on
+/// the C2 profile — the same virtual machine the executor's timeline
+/// prices transfers for ([`crate::hw::VIRTUAL_HTOD_BW`]).
+pub fn live_fraction(cfg: &RtConfig, batch: usize, measured_tps: f64) -> f64 {
+    if measured_tps <= 0.0 {
+        return 0.0;
+    }
+    let rl = decode_roofline(&rt_model_desc(cfg), &crate::hw::c2(), batch);
+    fraction(measured_tps, rl.tokens_per_sec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{hw, model};
+
+    #[test]
+    fn roofline_tokens_per_sec_monotone_in_batch() {
+        // Larger waves amortize the streamed weight bytes: achievable
+        // tokens/s must be nondecreasing in batch (paper Fig. 3 logic).
+        let m = model::mixtral_8x7b();
+        let p = hw::c2();
+        let mut prev = 0.0;
+        for b in [1, 8, 64, 512, 4096, 32768] {
+            let tp = decode_roofline(&m, &p, b).tokens_per_sec;
+            assert!(tp >= prev - 1e-9, "b={b}: {tp} < {prev}");
+            assert!(tp.is_finite() && tp > 0.0);
+            prev = tp;
+        }
+    }
+
+    #[test]
+    fn small_batch_is_memory_bound_large_batch_compute_bound() {
+        let m = model::mixtral_8x7b();
+        let p = hw::c2();
+        let small = decode_roofline(&m, &p, 1);
+        let e = &small.modules[1];
+        // At batch 1 the expert floor is bytes/mem_bw, not flops/peak.
+        assert!((e.secs - e.bytes / p.gpu_mem_bw).abs() / e.secs < 1e-9);
+        let large = decode_roofline(&m, &p, 1 << 20);
+        let e = &large.modules[1];
+        assert!((e.secs - e.flops / p.gpu_peak_flops).abs() / e.secs < 1e-9);
+    }
+
+    #[test]
+    fn fraction_clamps_into_unit_interval() {
+        assert_eq!(fraction(0.0, 100.0), 0.0);
+        assert_eq!(fraction(-1.0, 100.0), 0.0);
+        assert_eq!(fraction(50.0, 0.0), 0.0);
+        assert_eq!(fraction(200.0, 100.0), 1.0);
+        let f = fraction(25.0, 100.0);
+        assert!((f - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rt_desc_mirrors_tiny_preset() {
+        let d = rt_model_desc(&RtConfig::tiny());
+        let t = model::tiny();
+        assert_eq!(d.num_layers, t.num_layers);
+        assert_eq!(d.hidden, t.hidden);
+        assert_eq!(d.num_experts, t.num_experts);
+        assert_eq!(d.top_k, t.top_k);
+        assert_eq!(d.expert_inter, t.expert_inter);
+        assert_eq!(d.shared_experts, t.shared_experts);
+        assert_eq!(d.weight_bits, 32);
+    }
+
+    #[test]
+    fn live_fraction_positive_and_clamped() {
+        let c = RtConfig::tiny();
+        let f = live_fraction(&c, 8, 500.0);
+        assert!(f > 0.0 && f <= 1.0, "f={f}");
+        assert_eq!(live_fraction(&c, 8, 0.0), 0.0);
+        // Absurdly high measurement clamps rather than exceeding 1.
+        assert_eq!(live_fraction(&c, 8, 1e18), 1.0);
+    }
+}

@@ -198,6 +198,16 @@ impl WeightCache {
         self.stats
     }
 
+    /// Publish cache accounting into a metrics registry
+    /// (`moe_gen_weight_cache_*`; DESIGN.md §12 naming).
+    pub fn publish(&self, reg: &mut crate::trace::Registry) {
+        reg.counter("moe_gen_weight_cache_bypasses_total", self.stats.bypasses);
+        reg.gauge("moe_gen_weight_cache_budget_bytes", self.budget() as f64);
+        reg.gauge("moe_gen_weight_cache_used_bytes", self.used() as f64);
+        reg.gauge("moe_gen_weight_cache_peak_bytes", self.peak_bytes() as f64);
+        reg.gauge("moe_gen_weight_cache_entries", self.len() as f64);
+    }
+
     /// Begin a launch that needs `key` (`bytes` wide). On success the
     /// entry is pinned until [`release`](WeightCache::release); a miss
     /// additionally holds the entry sticky for `sticky` further launches

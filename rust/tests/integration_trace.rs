@@ -1,0 +1,228 @@
+//! Integration: whole-run tracing (Chrome-trace export + roofline).
+//!
+//! Drives real jobs through the [`Session`] library path with a
+//! `trace_out` temp file — the same code `moe-gen run --trace-out`
+//! executes — and pins the exporter's contract:
+//!
+//! * the file parses as a Chrome trace-event JSON document;
+//! * duration-event timestamps are monotonic within every track (the
+//!   per-lane FIFO the virtual timeline guarantees must survive export);
+//! * every flow finish (`ph: "f"`) pairs with an emitted start
+//!   (`ph: "s"`) of the same id, on a different track;
+//! * live runs emit at least one counter sample per executed wave;
+//! * a serialized baseline's trace (`--policy model`, the
+//!   DeepSpeed-style on-demand regime) shows zero overlapping ops
+//!   anywhere — its makespan IS the sum of its op durations;
+//! * the analytic roofline bounds the strategy search: predicted
+//!   throughput lands in `(0, 1]` of the ceiling for every paper
+//!   model × testbed the search solves.
+//!
+//! Everything runs hermetically on the reference backend.
+
+use std::path::PathBuf;
+
+use moe_gen::config::Policy;
+use moe_gen::hw;
+use moe_gen::model;
+use moe_gen::sched::{self, Knobs, Scenario};
+use moe_gen::session::Session;
+use moe_gen::spec::{JobKind, JobSpec, WorkloadSpec};
+use moe_gen::trace::roofline;
+use moe_gen::util::json::Json;
+
+fn tmp_trace(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("moe_gen_integration_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+fn spec_with_trace(path: &std::path::Path, policy: Policy) -> JobSpec {
+    let mut spec = JobSpec {
+        workload: WorkloadSpec { num_requests: 4, mean_prompt: 8, max_prompt: 16, steps: 4 },
+        bench_log: None,
+        trace_out: Some(path.to_path_buf()),
+        ..JobSpec::default()
+    };
+    spec.eng.policy = policy;
+    spec
+}
+
+/// Run one offline job and parse the trace it exported.
+fn run_and_load(name: &str, policy: Policy) -> (Json, usize) {
+    let path = tmp_trace(name);
+    let mut s = Session::open(spec_with_trace(&path, policy)).unwrap();
+    s.run().unwrap();
+    let waves = s.engine().metrics.waves.len();
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+    (doc, waves)
+}
+
+/// The duration events (`ph: "X"`) as `(tid, ts, dur)` rows.
+fn slices(doc: &Json) -> Vec<(f64, f64, f64)> {
+    doc.req("traceEvents")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.req("ph").as_str() == Some("X"))
+        .map(|e| {
+            (
+                e.req("tid").as_f64().unwrap(),
+                e.req("ts").as_f64().unwrap(),
+                e.req("dur").as_f64().unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn module_run_trace_parses_with_monotonic_tracks() {
+    let (doc, _) = run_and_load("module.json", Policy::ModuleBased);
+    let evs = doc.req("traceEvents").as_arr().unwrap();
+    assert!(!evs.is_empty());
+    // Every event carries the minimal Chrome fields.
+    for e in evs {
+        assert!(e.req("ph").as_str().is_some());
+        assert!(e.req("pid").as_f64().is_some());
+    }
+    // Timestamps must be non-decreasing within each track, in emission
+    // order — the per-lane FIFO the timeline schedules by.
+    let rows = slices(&doc);
+    assert!(rows.len() > 10, "a real run has a real op history: {}", rows.len());
+    let mut last: std::collections::BTreeMap<i64, f64> = Default::default();
+    for (tid, ts, _) in rows {
+        let k = tid as i64;
+        if let Some(prev) = last.get(&k) {
+            assert!(ts >= *prev - 1e-6, "track {k} went backwards: {ts} after {prev}");
+        }
+        last.insert(k, ts);
+    }
+    // The run metadata block travels with the trace.
+    let other = doc.req("otherData");
+    assert_eq!(other.req("job").as_str(), Some("run"));
+    assert!(other.req("truncated").as_bool().is_some());
+    assert!(other.req("makespan_secs").as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn flow_finishes_reference_emitted_starts() {
+    let (doc, _) = run_and_load("flows.json", Policy::ModuleBased);
+    let evs = doc.req("traceEvents").as_arr().unwrap();
+    let mut starts: std::collections::BTreeMap<i64, f64> = Default::default();
+    for e in evs.iter().filter(|e| e.req("ph").as_str() == Some("s")) {
+        starts.insert(e.req("id").as_f64().unwrap() as i64, e.req("tid").as_f64().unwrap());
+    }
+    let finishes: Vec<&Json> =
+        evs.iter().filter(|e| e.req("ph").as_str() == Some("f")).collect();
+    assert!(!finishes.is_empty(), "the module policy's dep edges must draw flow arrows");
+    assert_eq!(starts.len(), finishes.len(), "every flow is one s/f pair");
+    for f in finishes {
+        let id = f.req("id").as_f64().unwrap() as i64;
+        let src_tid = starts.get(&id).expect("finish without a start");
+        assert_ne!(
+            *src_tid,
+            f.req("tid").as_f64().unwrap(),
+            "flow {id} must cross lanes (same-lane order is implicit)"
+        );
+        assert_eq!(f.req("bp").as_str(), Some("e"));
+    }
+}
+
+#[test]
+fn live_run_samples_a_counter_per_wave() {
+    let (doc, waves) = run_and_load("counters.json", Policy::ModuleBased);
+    assert!(waves >= 4, "4 decode steps must record at least 4 waves, got {waves}");
+    let evs = doc.req("traceEvents").as_arr().unwrap();
+    let batch_samples = evs
+        .iter()
+        .filter(|e| e.req("ph").as_str() == Some("C"))
+        .filter(|e| e.req("name").as_str() == Some("expert_avg_batch"))
+        .count();
+    assert_eq!(batch_samples, waves, "one expert_avg_batch sample per executed wave");
+    // All five counter series ride along.
+    for series in
+        ["expert_avg_batch", "weight_cache_hit_rate", "arena_hit_rate", "kv_slots", "queue_depth"]
+    {
+        assert!(
+            evs.iter().any(|e| e.req("ph").as_str() == Some("C")
+                && e.req("name").as_str() == Some(series)),
+            "missing counter series {series}"
+        );
+    }
+}
+
+#[test]
+fn serialized_baseline_trace_has_zero_overlap() {
+    // The model-based (DeepSpeed-style) baseline serializes every op:
+    // its exported schedule must show no two ops overlapping in time,
+    // on any pair of tracks.
+    let (doc, _) = run_and_load("serialized.json", Policy::ModelBased);
+    assert_eq!(doc.req("otherData").req("serialized").as_bool(), Some(true));
+    let mut rows = slices(&doc);
+    assert!(!rows.is_empty());
+    rows.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let mut cursor = 0.0f64;
+    for (_, ts, dur) in rows {
+        assert!(
+            ts >= cursor - 1e-3,
+            "serialized trace overlaps: op at {ts}µs starts before {cursor}µs"
+        );
+        cursor = cursor.max(ts + dur);
+    }
+}
+
+#[test]
+fn serve_trace_exports_queue_depth_counters() {
+    let path = tmp_trace("serve.json");
+    let mut spec = spec_with_trace(&path, Policy::ModuleBased);
+    spec.kind = JobKind::Serve;
+    spec.serve.mean_decode = 2;
+    spec.serve.max_decode = 4;
+    let mut s = Session::open(spec).unwrap();
+    s.serve().unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(doc.req("otherData").req("job").as_str(), Some("serve"));
+    let evs = doc.req("traceEvents").as_arr().unwrap();
+    assert!(
+        evs.iter().any(|e| e.req("ph").as_str() == Some("C")
+            && e.req("name").as_str() == Some("queue_depth")),
+        "serving traces must carry the admission queue-depth counter track"
+    );
+}
+
+#[test]
+fn roofline_bounds_the_search_on_every_paper_config() {
+    // The analytic roofline drops every lower-order term (PCIe, embed,
+    // LM head, attention arithmetic), so it upper-bounds any schedule
+    // the search can produce: predicted/ceiling must land in (0, 1].
+    let models =
+        ["mixtral-8x7b", "mixtral-8x22b", "deepseek-v2", "deepseek-v2-lite", "deepseek-r1"];
+    let testbeds = ["c1", "c2", "c3"];
+    let mut solved = 0;
+    for mn in models {
+        let Some(m) = model::by_name(mn) else { panic!("unknown paper model {mn}") };
+        for tn in testbeds {
+            let h = hw::by_name(tn).unwrap();
+            let scn = Scenario::new(m.clone(), h.clone(), 512, 256);
+            let res = sched::search_decode(&scn, &Knobs::moe_gen());
+            if res.throughput <= 0.0 {
+                continue; // infeasible pairing (model too big for testbed)
+            }
+            solved += 1;
+            let rl = roofline::decode_roofline(&scn.model, &scn.hw, res.strategy.b);
+            assert!(rl.tokens_per_sec > 0.0, "{mn}/{tn}: degenerate ceiling");
+            let f = roofline::fraction(res.throughput, rl.tokens_per_sec);
+            assert!(
+                f > 0.0 && f <= 1.0,
+                "{mn}/{tn}: roofline_fraction {f} outside (0,1] \
+                 (search {:.1} tok/s vs ceiling {:.1} tok/s)",
+                res.throughput,
+                rl.tokens_per_sec,
+            );
+        }
+    }
+    assert!(solved >= 6, "search must solve most paper configs, solved {solved}");
+}

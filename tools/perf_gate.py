@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Perf-trajectory regression gate over a BENCH_live.json trajectory.
+
+Records appended by ``session::append_bench_record`` carry a
+``config_key`` (``{job}/{policy}/{strategy_source}/nd{n_devices}`` for
+session runs, ``bench/...`` for standalone benches). Only records with
+the same key measure the same experiment, so the gate groups by key and
+diffs the **newest record against the one before it**:
+
+* throughput (first of ``total_tps``, ``decode_tps``, ``speedup``)
+  dropping more than ``--max-regression`` (default 10%) fails;
+* ``roofline_fraction`` dropping more than the same relative margin
+  fails.
+
+Keys with fewer than two records are reported and skipped — a freshly
+seeded trajectory passes trivially until history accumulates.
+
+Usage: tools/perf_gate.py [BENCH_live.json] [--max-regression 0.10]
+"""
+
+import argparse
+import json
+import sys
+
+THROUGHPUT_FIELDS = ("total_tps", "decode_tps", "speedup")
+
+
+def throughput_of(rec):
+    for f in THROUGHPUT_FIELDS:
+        v = rec.get(f)
+        if isinstance(v, (int, float)) and v > 0:
+            return f, float(v)
+    return None, None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trajectory", nargs="?", default="BENCH_live.json")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.10,
+        help="maximum tolerated relative drop (0.10 = 10%%)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trajectory) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"perf_gate: {args.trajectory} not found — nothing to gate")
+        return 0
+    runs = doc.get("runs")
+    if not isinstance(runs, list):
+        print(f"perf_gate: {args.trajectory} is not a bench trajectory", file=sys.stderr)
+        return 1
+
+    by_key = {}
+    unkeyed = 0
+    for rec in runs:
+        if not isinstance(rec, dict):
+            continue
+        key = rec.get("config_key")
+        if not key:
+            unkeyed += 1
+            continue
+        by_key.setdefault(key, []).append(rec)
+
+    floor = 1.0 - args.max_regression
+    failures = []
+    compared = 0
+    for key in sorted(by_key):
+        history = by_key[key]
+        if len(history) < 2:
+            print(f"perf_gate: {key}: only {len(history)} record(s), skipping")
+            continue
+        prev, new = history[-2], history[-1]
+        field, prev_tp = throughput_of(prev)
+        _, new_tp = throughput_of(new)
+        if prev_tp and new_tp:
+            compared += 1
+            ratio = new_tp / prev_tp
+            tag = "OK" if ratio >= floor else "FAIL"
+            print(
+                f"perf_gate: {key}: {field} {prev_tp:.1f} -> {new_tp:.1f} "
+                f"({100 * (ratio - 1):+.1f}%) [{tag}]"
+            )
+            if ratio < floor:
+                failures.append(
+                    f"{key}: {field} regressed {100 * (1 - ratio):.1f}% "
+                    f"({prev_tp:.1f} -> {new_tp:.1f}, git {prev.get('git')} -> {new.get('git')})"
+                )
+        prev_rf, new_rf = prev.get("roofline_fraction"), new.get("roofline_fraction")
+        if isinstance(prev_rf, (int, float)) and isinstance(new_rf, (int, float)) and prev_rf > 0:
+            if new_rf / prev_rf < floor:
+                failures.append(
+                    f"{key}: roofline_fraction dropped "
+                    f"{100 * (1 - new_rf / prev_rf):.1f}% ({prev_rf:.4f} -> {new_rf:.4f})"
+                )
+
+    if unkeyed:
+        print(f"perf_gate: {unkeyed} record(s) without config_key ignored")
+    if failures:
+        print(f"perf_gate: {len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"perf_gate:   {f}", file=sys.stderr)
+        return 1
+    print(f"perf_gate: pass ({compared} comparison(s), {len(by_key)} key(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
