@@ -317,6 +317,27 @@ impl Engine {
         out
     }
 
+    /// Continue the prefill of one sequence whose first `off` prompt
+    /// tokens are already cached in `slot` of `kv`, computing at most
+    /// `take` further tokens (the chunked-prefill / shared-prefix
+    /// continuation, [`Pipeline::prefill_resume`]). Returns the new
+    /// offset and the first generated token once the prompt completes.
+    pub fn prefill_resume(
+        &mut self,
+        kv: &Arc<RwLock<KvCache>>,
+        slot: usize,
+        prompt: &[i32],
+        off: usize,
+        take: usize,
+    ) -> Result<(usize, Option<i32>)> {
+        let pipeline = Pipeline::new(self.plan);
+        let mut cx = self.exec_ctx();
+        let out = pipeline.prefill_resume(&mut cx, kv, slot, prompt, off, take);
+        self.metrics.timeline = self.timeline.stats();
+        self.metrics.arena = self.arena.stats();
+        out
+    }
+
     /// One decode step for all sequences in `state`; returns next tokens.
     pub fn decode_step(&mut self, state: &mut BatchState) -> Result<Vec<i32>> {
         let pipeline = Pipeline::new(self.plan);

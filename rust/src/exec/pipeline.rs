@@ -578,6 +578,114 @@ impl Pipeline {
         Ok((slots, lens, first))
     }
 
+    /// Continue (or start, `off == 0`) the prefill of **one** sequence
+    /// whose first `off` prompt tokens are already cached in `slot` —
+    /// the chunked-prefill / shared-prefix continuation path
+    /// (DESIGN.md §13). Computes at most `take` further prompt tokens
+    /// and returns the new offset plus the first generated token once
+    /// the whole prompt is in cache.
+    ///
+    /// Bit-identity with a whole-prompt [`Pipeline::prefill_into`]:
+    /// every module is row-wise except causal attention, whose
+    /// per-query-row math (scores over keys `0..=i`, running max, exp,
+    /// weighted V sum) depends only on that row's q and the K/V rows at
+    /// or before it. The cached prefix K/V are exactly the rows a
+    /// whole-prompt prefill writes back, so the suffix rows — and
+    /// therefore the first token and the whole greedy stream — come out
+    /// bit-identical however the prompt is split.
+    pub fn prefill_resume(
+        &self,
+        cx: &mut ExecCtx<'_>,
+        kv: &Arc<RwLock<KvCache>>,
+        slot: usize,
+        prompt: &[i32],
+        off: usize,
+        take: usize,
+    ) -> Result<(usize, Option<i32>)> {
+        let c = cx.backend.cfg().clone();
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > c.prefill_seq {
+            bail!("prompt length {} exceeds prefill_seq {}", prompt.len(), c.prefill_seq);
+        }
+        if off >= prompt.len() {
+            bail!("prefill offset {off} is not inside the {}-token prompt", prompt.len());
+        }
+        if take == 0 {
+            bail!("prefill chunk must cover at least one token");
+        }
+        let t0 = Instant::now();
+        let (qd, kvd, h) = (c.q_dim(), c.kv_dim(), c.hidden_size);
+        let m = (prompt.len() - off).min(take);
+        let total = off + m;
+
+        let ids = &prompt[off..total];
+        let pos: Vec<i32> = (off..total).map(|p| p as i32).collect();
+        let mut x = Embed.run(cx, ids)?;
+        for layer in 0..c.num_layers {
+            let (q, k, v) = PreAttention.run(cx, layer, &x, &pos)?;
+            cx.prefetch_dense(layer + 1);
+            let pre_ev: Vec<EventId> =
+                cx.timeline.last_on(Stream::GpuCompute).into_iter().collect();
+            cx.input_ev = cx.timeline.last_on(Stream::GpuCompute);
+            // The chunk's K/V rows land at `off`; earlier rows (prior
+            // chunks or a shared-prefix copy) stay untouched, so the
+            // cache now holds the sequence's first `total` rows.
+            {
+                let mut kvw = kv.write().unwrap();
+                kvw.write_rows_at(layer, slot, &k, &v, 0..m, off);
+            }
+            cx.writeback("kv_writeback", 2 * m * kvd * 4, &pre_ev);
+            // Causal attention for the suffix rows over the full cached
+            // sequence. The kernel computes rows 0..total; prefix rows
+            // get zero queries and their (garbage) context is discarded
+            // below — only rows >= off feed the wave.
+            let (k_full, v_full) = {
+                let kvr = kv.read().unwrap();
+                let (ks, vs) = kvr.slices_n(layer, slot, total);
+                (
+                    HostTensor::from_vec(ks.to_vec(), total * kvd),
+                    HostTensor::from_vec(vs.to_vec(), total * kvd),
+                )
+            };
+            let mut q_full = HostTensor::zeros(1, total * qd);
+            q_full.data[off * qd..total * qd].copy_from_slice(&q.data[..m * qd]);
+            let lens_i = vec![total as i32];
+            let ctx = cx.launch(
+                ModuleKind::AttnPrefill,
+                1,
+                1,
+                total * (qd + 2 * kvd + 1) * 4,
+                total * qd * 4,
+                |be, _ar| be.attn_prefill(&q_full, &k_full, &v_full, &lens_i, total),
+            )?;
+            let ctx_sub =
+                HostTensor::from_vec(ctx.data[off * qd..total * qd].to_vec(), qd);
+            x = PostAttention.run(cx, layer, &ctx_sub, &x)?;
+            x = Experts.run(cx, &self.plan, layer, x)?;
+        }
+        {
+            let mut kvw = kv.write().unwrap();
+            kvw.set_len(slot, total);
+        }
+
+        let first = if total == prompt.len() {
+            let mut last_row = HostTensor::zeros(1, h);
+            last_row.row_mut(0).copy_from_slice(x.row(m - 1));
+            Some(LmHead.run(cx, &last_row)?[0])
+        } else {
+            None
+        };
+        cx.drain_fetches();
+
+        cx.metrics.prefill_tokens += m as u64;
+        cx.metrics.prefill_secs += t0.elapsed().as_secs_f64();
+        cx.metrics.arena = cx.arena.stats();
+        cx.metrics.sample_wave(cx.timeline.makespan(), 1);
+        Ok((total, first))
+    }
+
     /// One decode step for all sequences currently in `state` (the wave's
     /// active-slot set — membership may differ step to step as finished
     /// sequences retire and admissions backfill); returns next tokens.

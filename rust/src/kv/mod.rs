@@ -155,6 +155,46 @@ impl KvCache {
         self.write_prefill(layer, slot, k.rows_slice(rows.clone()), v.rows_slice(rows));
     }
 
+    /// Write `rows.len()` token rows of the pipeline's flat K/V tensors
+    /// at position `at` of the slot (a chunked-prefill continuation:
+    /// positions `0..at` were written by earlier chunks or copied from a
+    /// shared-prefix donor and are left untouched).
+    pub fn write_rows_at(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k: &HostTensor,
+        v: &HostTensor,
+        rows: std::ops::Range<usize>,
+        at: usize,
+    ) {
+        assert_eq!(k.dim, self.kvd);
+        let n = rows.len();
+        assert!(at + n <= self.capacity, "prompt longer than kv capacity");
+        let o = self.off(slot, at);
+        self.k[layer][o..o + n * self.kvd].copy_from_slice(k.rows_slice(rows.clone()));
+        self.v[layer][o..o + n * self.kvd].copy_from_slice(v.rows_slice(rows));
+    }
+
+    /// Copy the first `n` token positions of `src` into `dst` on every
+    /// layer and set `dst`'s length to `n` (shared-prefix dedup: the new
+    /// sequence continues from a bit-identical cached prefix instead of
+    /// recomputing it). Returns the host bytes that did *not* have to be
+    /// recomputed and written back (K and V, all layers).
+    pub fn copy_prefix(&mut self, src: usize, dst: usize, n: usize) -> usize {
+        assert!(n <= self.lens[src], "prefix longer than the donor sequence");
+        assert!(n <= self.capacity);
+        let so = self.off(src, 0);
+        let d = self.off(dst, 0);
+        let floats = n * self.kvd;
+        for layer in 0..self.num_layers {
+            self.k[layer].copy_within(so..so + floats, d);
+            self.v[layer].copy_within(so..so + floats, d);
+        }
+        self.lens[dst] = n;
+        2 * self.num_layers * n * self.kvd * 4
+    }
+
     /// Advance a sequence's length by one token (after all layers appended).
     pub fn advance(&mut self, slot: usize) {
         assert!(self.lens[slot] < self.capacity);
@@ -385,6 +425,49 @@ mod tests {
         assert_eq!(kv.slots_in_use(), 2);
         kv.free_slot(a);
         assert_eq!(kv.slots_in_use(), 1);
+    }
+
+    #[test]
+    fn write_rows_at_continues_a_chunked_prefill() {
+        let mut kv = mk();
+        let s = kv.alloc_slot().unwrap();
+        let kvd = kv.kvd;
+        let k = HostTensor::from_vec((0..5 * kvd).map(|i| i as f32).collect(), kvd);
+        let v = HostTensor::from_vec((0..5 * kvd).map(|i| -(i as f32)).collect(), kvd);
+        // First chunk: rows 0..2 at position 0; second: rows 2..5 at 2.
+        kv.write_rows_at(0, s, &k, &v, 0..2, 0);
+        kv.write_rows_at(0, s, &k, &v, 2..5, 2);
+        kv.set_len(s, 5);
+        let (ks, vs, len) = kv.slices(0, s);
+        assert_eq!(len, 5);
+        assert_eq!(ks, &k.data[..]);
+        assert_eq!(vs, &v.data[..]);
+    }
+
+    #[test]
+    fn copy_prefix_duplicates_rows_and_reports_bytes() {
+        let mut kv = mk();
+        let src = kv.alloc_slot().unwrap();
+        let dst = kv.alloc_slot().unwrap();
+        let kvd = kv.kvd;
+        let kp: Vec<f32> = (0..4 * kvd).map(|i| i as f32).collect();
+        let vp: Vec<f32> = (0..4 * kvd).map(|i| 2.0 * i as f32).collect();
+        for layer in 0..2 {
+            kv.write_prefill(layer, src, &kp, &vp);
+        }
+        kv.set_len(src, 4);
+        let bytes = kv.copy_prefix(src, dst, 3);
+        assert_eq!(bytes, 2 * 2 * 3 * kvd * 4);
+        assert_eq!(kv.len(dst), 3);
+        for layer in 0..2 {
+            let (ks, vs) = kv.slices_n(layer, dst, 3);
+            assert_eq!(ks, &kp[..3 * kvd]);
+            assert_eq!(vs, &vp[..3 * kvd]);
+        }
+        // The donor is untouched.
+        let (ks, _, len) = kv.slices(0, src);
+        assert_eq!(len, 4);
+        assert_eq!(ks, &kp[..]);
     }
 
     #[test]

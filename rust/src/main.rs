@@ -85,16 +85,22 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
             f.extend(strategy);
             f.push(trace);
             f.push(val("n", "number of requests"));
-            f.push(val("arrival", "t0|open|bursty|closed"));
-            f.push(val("gap", "mean inter-arrival gap in ticks (open/bursty)"));
+            f.push(val("arrival", "t0|open|bursty|closed|diurnal"));
+            f.push(val("gap", "mean inter-arrival gap in ticks (open/bursty/diurnal)"));
             f.push(val("burst", "requests per burst (bursty)"));
             f.push(val("concurrency", "client concurrency (closed)"));
+            f.push(val("period", "diurnal cycle length in ticks"));
             f.push(val("mean-decode", "mean per-request decode budget"));
             f.push(val("max-decode", "per-request decode budget cap"));
             f.push(val("eos", "EOS token id (enables early termination)"));
             f.push(switch("no-backfill", "disable joining live decode waves"));
             f.push(val("kv-slots", "KV admission pool size in slots"));
             f.push(val("kv-budget", "KV admission pool as a host byte budget"));
+            f.push(switch("slo", "SLO-class scheduling: priority + preemption + per-class stats"));
+            f.push(val("slo-mix", "latency-sensitive tenant fraction in [0,1] (implies --slo)"));
+            f.push(val("prefix-share", "shared-prompt-prefix fraction in [0,1] (implies dedup)"));
+            f.push(val("prefill-chunk", "max requests admitted per scheduler tick (>= 1)"));
+            f.push(val("prefill-chunk-tokens", "chunked prefill: prompt tokens per tick (>= 1)"));
         }
         JobKind::Tables => {
             f.push(val("table", "all|1|4|5|6|7|8|9|10|fig3|fig4|fig7"));
@@ -240,16 +246,24 @@ fn overlay(spec: &mut JobSpec, flags: &std::collections::HashMap<String, String>
     // the current mode, knobs not on the command line keep their
     // current values; when `--arrival` switches mode, only explicit
     // flags apply (the rest take the mode defaults).
-    if ["arrival", "gap", "burst", "concurrency"].iter().any(|k| flags.contains_key(*k)) {
+    if ["arrival", "gap", "burst", "concurrency", "period"]
+        .iter()
+        .any(|k| flags.contains_key(*k))
+    {
         let cur = spec.serve.arrival;
-        let (cur_gap, cur_burst, cur_conc) = if flags.contains_key("arrival") {
-            (None, None, None)
+        let (cur_gap, cur_burst, cur_conc, cur_period) = if flags.contains_key("arrival") {
+            (None, None, None, None)
         } else {
             match cur.mode {
-                ArrivalMode::AtTimeZero => (None, None, None),
-                ArrivalMode::OpenLoop { mean_gap } => (Some(mean_gap), None, None),
-                ArrivalMode::Bursty { mean_gap, burst } => (Some(mean_gap), Some(burst), None),
-                ArrivalMode::ClosedLoop { concurrency } => (None, None, Some(concurrency)),
+                ArrivalMode::AtTimeZero => (None, None, None, None),
+                ArrivalMode::OpenLoop { mean_gap } => (Some(mean_gap), None, None, None),
+                ArrivalMode::Bursty { mean_gap, burst } => {
+                    (Some(mean_gap), Some(burst), None, None)
+                }
+                ArrivalMode::ClosedLoop { concurrency } => (None, None, Some(concurrency), None),
+                ArrivalMode::Diurnal { mean_gap, period } => {
+                    (Some(mean_gap), None, None, Some(period))
+                }
             }
         };
         let name = flags.get("arrival").map(String::as_str).unwrap_or(cur.mode.slug());
@@ -258,9 +272,27 @@ fn overlay(spec: &mut JobSpec, flags: &std::collections::HashMap<String, String>
             num::<f64>(flags, "gap")?.or(cur_gap),
             num::<usize>(flags, "burst")?.or(cur_burst),
             num::<usize>(flags, "concurrency")?.or(cur_conc),
+            num::<f64>(flags, "period")?.or(cur_period),
         )
         .map_err(|e| anyhow!("{e}"))?;
-        spec.serve.arrival = ArrivalSpec { mode, seed: cur.seed };
+        spec.serve.arrival = ArrivalSpec { mode, ..cur };
+    }
+    if flags.contains_key("slo") {
+        spec.serve.slo = true;
+    }
+    if let Some(v) = num::<f64>(flags, "slo-mix")? {
+        spec.serve.slo = true;
+        spec.serve.arrival.latency_frac = v;
+    }
+    if let Some(v) = num::<f64>(flags, "prefix-share")? {
+        spec.serve.prefix_dedup = true;
+        spec.serve.arrival.prefix_share = v;
+    }
+    if let Some(v) = num::<usize>(flags, "prefill-chunk")? {
+        spec.serve.prefill_chunk = Some(v);
+    }
+    if let Some(v) = num::<usize>(flags, "prefill-chunk-tokens")? {
+        spec.serve.prefill_chunk_tokens = Some(v);
     }
     if let Some(v) = num::<usize>(flags, "mean-decode")? {
         spec.serve.mean_decode = v;

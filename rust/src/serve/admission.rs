@@ -17,6 +17,17 @@
 //! * a recycled slot is indistinguishable from a fresh one (prefill
 //!   overwrites, lengths reset — token parity is asserted in
 //!   `tests/integration_serve.rs`).
+//!
+//! With shared-prefix dedup on (DESIGN.md §13) the controller also owns
+//! a **refcounted prefix table**: per distinct shared prefix, one donor
+//! slot from the *same* pool caches the prefix's K/V rows. Later
+//! requests with an equal prefix copy those rows and continue their
+//! prefill from the suffix — the marginal Eq. 2–3 compute/writeback
+//! cost. A donor's refcount counts the in-flight requests admitted
+//! through it; donors with refcount 0 are evicted under pool pressure
+//! and drained at the end of the run, so the no-overrun/no-leak
+//! invariants above survive unchanged (also property-tested, in
+//! `tests/integration_tenancy.rs`).
 
 use std::sync::{Arc, RwLock};
 
@@ -24,6 +35,18 @@ use anyhow::{bail, Result};
 
 use crate::engine::Engine;
 use crate::kv::KvCache;
+
+/// One shared prefix cached in a donor slot of the admission pool.
+#[derive(Debug, Clone)]
+pub struct PrefixEntry {
+    /// The prefix tokens (table key; compared exactly).
+    pub key: Vec<i32>,
+    /// The donor slot holding the prefix's K/V rows.
+    pub slot: usize,
+    /// In-flight requests admitted through this donor. The donor may
+    /// only be evicted at refcount 0.
+    pub refs: usize,
+}
 
 /// Byte-budgeted KV slot pool + lifecycle accounting.
 pub struct AdmissionController {
@@ -33,6 +56,10 @@ pub struct AdmissionController {
     peak_in_use: usize,
     admitted: u64,
     recycled: u64,
+    /// Shared-prefix donor table, in installation order (deterministic).
+    prefixes: Vec<PrefixEntry>,
+    dedup_hits: u64,
+    dedup_bytes: u64,
 }
 
 impl AdmissionController {
@@ -51,6 +78,9 @@ impl AdmissionController {
             peak_in_use: 0,
             admitted: 0,
             recycled: 0,
+            prefixes: Vec::new(),
+            dedup_hits: 0,
+            dedup_bytes: 0,
         })
     }
 
@@ -122,10 +152,115 @@ impl AdmissionController {
         self.recycled += 1;
     }
 
+    // -- shared-prefix dedup (DESIGN.md §13) ---------------------------------
+
+    /// Allocate a slot for an admission; under pool pressure an idle
+    /// (refcount-0) prefix donor is evicted to make room. `None` means
+    /// the pool is genuinely full of live sequences.
+    pub fn alloc_slot(&mut self) -> Option<usize> {
+        if let Some(s) = self.kv.write().unwrap().alloc_slot() {
+            return Some(s);
+        }
+        if !self.evict_idle_donor() {
+            return None;
+        }
+        self.kv.write().unwrap().alloc_slot()
+    }
+
+    /// Admit `dst_slot` through the donor for `prefix`, if one is
+    /// installed: copies the donor's cached rows into `dst_slot`, takes
+    /// a reference on the donor (released by
+    /// [`release_prefix_ref`](Self::release_prefix_ref) when the request
+    /// finishes) and returns the prefix length the caller's prefill can
+    /// now skip.
+    pub fn admit_via_donor(&mut self, prefix: &[i32], dst_slot: usize) -> Option<usize> {
+        let i = self.prefixes.iter().position(|e| e.key == prefix)?;
+        let donor = self.prefixes[i].slot;
+        let bytes = self.kv.write().unwrap().copy_prefix(donor, dst_slot, prefix.len());
+        self.prefixes[i].refs += 1;
+        self.dedup_hits += 1;
+        self.dedup_bytes += bytes as u64;
+        Some(prefix.len())
+    }
+
+    /// Install a donor for `prefix` by copying its rows out of
+    /// `src_slot` (a freshly prefilled sequence beginning with the
+    /// prefix) into a new slot from the same pool. The installing
+    /// request holds the first reference. Returns `false` — and installs
+    /// nothing — when the key is already present or no slot is free.
+    pub fn install_donor(&mut self, prefix: &[i32], src_slot: usize) -> bool {
+        if prefix.is_empty() || self.prefixes.iter().any(|e| e.key == prefix) {
+            return false;
+        }
+        let slot = {
+            let mut kvw = self.kv.write().unwrap();
+            let Some(slot) = kvw.alloc_slot() else {
+                return false;
+            };
+            kvw.copy_prefix(src_slot, slot, prefix.len());
+            slot
+        };
+        self.peak_in_use = self.peak_in_use.max(self.slots_in_use());
+        self.prefixes.push(PrefixEntry { key: prefix.to_vec(), slot, refs: 1 });
+        true
+    }
+
+    /// Drop a finished request's reference on its prefix donor.
+    pub fn release_prefix_ref(&mut self, prefix: &[i32]) {
+        if let Some(e) = self.prefixes.iter_mut().find(|e| e.key == prefix) {
+            assert!(e.refs > 0, "prefix donor refcount underflow");
+            e.refs -= 1;
+        }
+    }
+
+    /// Evict one refcount-0 donor (oldest first); `false` when every
+    /// donor is referenced by an in-flight request.
+    fn evict_idle_donor(&mut self) -> bool {
+        match self.prefixes.iter().position(|e| e.refs == 0) {
+            Some(i) => {
+                let e = self.prefixes.remove(i);
+                self.kv.write().unwrap().free_slot(e.slot);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Free every donor slot. Call once all requests finished — a live
+    /// reference here is a scheduler accounting bug, not load.
+    pub fn drain_donors(&mut self) {
+        for e in std::mem::take(&mut self.prefixes) {
+            assert_eq!(e.refs, 0, "prefix donor dropped with live references");
+            self.kv.write().unwrap().free_slot(e.slot);
+        }
+    }
+
+    /// Installed donors (inspection / tests).
+    pub fn donors(&self) -> &[PrefixEntry] {
+        &self.prefixes
+    }
+
+    /// Requests admitted through a donor copy.
+    pub fn dedup_hits(&self) -> u64 {
+        self.dedup_hits
+    }
+
+    /// Host KV bytes requests did not have to recompute and write back
+    /// (prefix rows copied instead of prefilled).
+    pub fn dedup_bytes(&self) -> u64 {
+        self.dedup_bytes
+    }
+
     /// Tear down: return the pool's bytes to the engine's host budget.
     /// Call after the last request finished; leaked slots indicate a
-    /// scheduler bug and are reported by the caller.
-    pub fn shutdown(self, eng: &mut Engine) {
+    /// scheduler bug and are reported by the caller. Any donors still
+    /// installed are released unconditionally (unlike
+    /// [`drain_donors`](Self::drain_donors), teardown also runs on the
+    /// error path, where live references are expected).
+    pub fn shutdown(mut self, eng: &mut Engine) {
+        for e in std::mem::take(&mut self.prefixes) {
+            self.kv.write().unwrap().free_slot(e.slot);
+        }
         eng.free_kv_pool(&self.kv);
     }
 }
@@ -195,6 +330,45 @@ mod tests {
             adm.shutdown(&mut eng);
             assert_eq!(eng.host_pool.used(), 0, "host pool charge leaked");
         });
+    }
+
+    #[test]
+    fn prefix_donor_table_refcounts_and_evicts() {
+        let mut eng = engine();
+        let mut adm = AdmissionController::with_slots(&mut eng, 3).unwrap();
+        let a = adm.alloc_slot().unwrap();
+        // Pretend slot `a` prefilled a 2-token prefix.
+        adm.kv().write().unwrap().set_len(a, 2);
+        assert!(adm.install_donor(&[7, 8], a));
+        assert!(!adm.install_donor(&[7, 8], a), "no duplicate keys");
+        assert_eq!(adm.slots_in_use(), 2, "the donor holds a pool slot");
+        // A sharer admits through the donor at the marginal copy cost.
+        let b = adm.alloc_slot().unwrap();
+        assert_eq!(adm.admit_via_donor(&[7, 8], b), Some(2));
+        assert_eq!(adm.admit_via_donor(&[9], b), None, "unknown prefix misses");
+        assert_eq!(adm.dedup_hits(), 1);
+        assert!(adm.dedup_bytes() > 0);
+        // Pool exhausted and the donor is referenced: no slot to give.
+        assert!(adm.alloc_slot().is_none());
+        // Finishers drop their references and recycle their own slots.
+        adm.release_prefix_ref(&[7, 8]);
+        adm.recycle(a);
+        adm.release_prefix_ref(&[7, 8]);
+        adm.recycle(b);
+        assert_eq!(adm.donors().len(), 1, "idle donor stays cached");
+        // Two free slots serve without touching the donor; the third
+        // allocation evicts the now-idle donor under pressure.
+        let c = adm.alloc_slot().unwrap();
+        let d = adm.alloc_slot().unwrap();
+        assert_eq!(adm.donors().len(), 1);
+        let e = adm.alloc_slot().unwrap();
+        assert!(adm.donors().is_empty(), "idle donor evicted under pressure");
+        for s in [c, d, e] {
+            adm.recycle(s);
+        }
+        assert_eq!(adm.slots_in_use(), 0, "no leaks through the donor table");
+        adm.shutdown(&mut eng);
+        assert_eq!(eng.host_pool.used(), 0);
     }
 
     #[test]

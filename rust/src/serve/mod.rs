@@ -31,7 +31,7 @@ pub mod wave;
 
 pub use admission::AdmissionController;
 pub use queue::RequestQueue;
-pub use request::{FinishReason, Request, RequestLog, RequestState};
+pub use request::{Class, FinishReason, Request, RequestLog, RequestState};
 pub use wave::WaveScheduler;
 
 use std::collections::VecDeque;
@@ -71,13 +71,32 @@ pub struct ServeConfig {
     /// Admission pool size as a host-memory byte budget (overrides
     /// `kv_slots`; paper Eqs. 2–3 sizing).
     pub kv_budget_bytes: Option<usize>,
+    /// SLO scheduling (DESIGN.md §13): admit latency-class requests
+    /// ahead of throughput-class ones (batch work is aging-protected)
+    /// and report per-class tick percentiles.
+    pub slo: bool,
+    /// Under `slo`, allow decode-wave preemption: park throughput-class
+    /// decodes (KV retained) to seat waiting latency-class requests.
+    pub preempt: bool,
+    /// Override of the per-policy prefill wave width in *requests*
+    /// (module: the plan's `B`; continuous: 1).
+    pub prefill_chunk: Option<usize>,
+    /// Chunked prefill: bound each prefill call to this many prompt
+    /// *tokens*, interleaving long prompts with decode waves.
+    pub prefill_chunk_tokens: Option<usize>,
+    /// Shared-prefix KV dedup: admit requests with an already-cached
+    /// prefix at the marginal (suffix-only) prefill cost.
+    pub prefix_dedup: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             eng: EngineConfig::default(),
-            arrival: ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 1.0 }, seed: 0 },
+            arrival: ArrivalSpec {
+                mode: ArrivalMode::OpenLoop { mean_gap: 1.0 },
+                ..ArrivalSpec::default()
+            },
             num_requests: 64,
             mean_prompt: 24,
             max_prompt: 64,
@@ -87,8 +106,27 @@ impl Default for ServeConfig {
             backfill: true,
             kv_slots: None,
             kv_budget_bytes: None,
+            slo: false,
+            preempt: true,
+            prefill_chunk: None,
+            prefill_chunk_tokens: None,
+            prefix_dedup: false,
         }
     }
+}
+
+/// Per-SLO-class latency percentiles in scheduler ticks. Wall-clock
+/// percentiles vary with host speed; tick percentiles are deterministic
+/// in the trace, so they are what the tenancy tests and the perf gate
+/// compare.
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    pub class: Class,
+    pub requests: usize,
+    pub ttft_p50_ticks: f64,
+    pub ttft_p99_ticks: f64,
+    pub tpot_p50_ticks: f64,
+    pub tpot_p99_ticks: f64,
 }
 
 /// One serving run's results: latency percentiles alongside the
@@ -127,12 +165,45 @@ pub struct ServeReport {
     /// hardware ceiling at the experiment's peak concurrency
     /// ([`crate::trace::roofline`]).
     pub roofline_fraction: f64,
+    /// Per-class tick percentiles (empty unless SLO scheduling was on).
+    pub classes: Vec<ClassStats>,
+    /// Decode-wave preemptions performed (0 unless `slo && preempt`).
+    pub preemptions: u64,
+    /// High-water mark of simultaneously parked requests.
+    pub parked_peak: usize,
+    /// Requests admitted through a shared-prefix donor copy.
+    pub dedup_hits: u64,
+    /// Host KV bytes those admissions copied instead of recomputing.
+    pub dedup_bytes: u64,
     /// Greedy token streams, indexed by request id.
     pub tokens: Vec<Vec<i32>>,
 }
 
 impl ServeReport {
     pub fn summary(&self) -> String {
+        let mut s = self.headline();
+        for c in &self.classes {
+            s.push_str(&format!(
+                "\n  class={:<8} reqs={:<4} ttft-ticks(p50/p99)={:>6.1}/{:<6.1} \
+                 tpot-ticks(p50/p99)={:>5.2}/{:<5.2}",
+                c.class.slug(),
+                c.requests,
+                c.ttft_p50_ticks,
+                c.ttft_p99_ticks,
+                c.tpot_p50_ticks,
+                c.tpot_p99_ticks,
+            ));
+        }
+        if !self.classes.is_empty() || self.preemptions > 0 || self.dedup_hits > 0 {
+            s.push_str(&format!(
+                "\n  tenancy: preemptions={} parked-peak={} dedup-hits={} dedup-bytes={}",
+                self.preemptions, self.parked_peak, self.dedup_hits, self.dedup_bytes,
+            ));
+        }
+        s
+    }
+
+    fn headline(&self) -> String {
         format!(
             "{:<14} reqs={:<5} wall={:>7.2}s total={:>8.1} tok/s \
              ttft(p50/p99)={:>6.1}/{:<6.1}ms tpot(p50/p99)={:>5.2}/{:<5.2}ms \
@@ -155,9 +226,32 @@ impl ServeReport {
             100.0 * self.roofline_fraction,
         )
     }
+
+    /// Publish the report's serving gauges into a metrics registry
+    /// (`moe_gen_serve_*`, DESIGN.md §12 naming; per-class series use a
+    /// `class=<slug>` label).
+    pub fn publish(&self, reg: &mut crate::trace::Registry) {
+        reg.counter("moe_gen_serve_preemptions_total", self.preemptions);
+        reg.counter("moe_gen_serve_prefix_dedup_hits_total", self.dedup_hits);
+        reg.gauge("moe_gen_serve_prefix_dedup_bytes", self.dedup_bytes as f64);
+        reg.gauge("moe_gen_serve_ttft_p99_ms", 1e3 * self.ttft_p99);
+        reg.gauge("moe_gen_serve_tpot_p99_ms", 1e3 * self.tpot_p99);
+        for c in &self.classes {
+            let slug = c.class.slug();
+            reg.gauge(&format!("moe_gen_serve_ttft_p99/class={slug}"), c.ttft_p99_ticks);
+            reg.gauge(&format!("moe_gen_serve_tpot_p99/class={slug}"), c.tpot_p99_ticks);
+        }
+    }
 }
 
 /// Synthesize the deterministic request set a [`ServeConfig`] describes.
+///
+/// The arrival spec's tenant-mix knobs shape the set: `latency_frac`
+/// marks that fraction of requests latency-sensitive, and
+/// `prefix_share` gives that fraction a common system prefix (prepended
+/// to the prompt, total capped at `max_prompt`) so prefix dedup has
+/// something to share. Both default to 0, which reproduces the
+/// single-tenant request set bit-for-bit.
 pub fn synth_requests(cfg: &ServeConfig, vocab: usize) -> Vec<Request> {
     let n = cfg.num_requests;
     let prompts =
@@ -165,12 +259,41 @@ pub fn synth_requests(cfg: &ServeConfig, vocab: usize) -> Vec<Request> {
     let budgets =
         workload::decode_lengths(n, cfg.mean_decode, 1, cfg.max_decode.max(1), cfg.eng.seed);
     let ticks = cfg.arrival.arrival_ticks(n);
+    let mut mix_rng = crate::util::rng::Rng::new(cfg.eng.seed ^ 0x51_0c1a_55);
+    // One deterministic shared prefix; its length leaves at least one
+    // unique suffix token under the prompt cap.
+    let prefix: Vec<i32> = if cfg.arrival.prefix_share > 0.0 && cfg.max_prompt >= 2 {
+        let len = (cfg.mean_prompt / 2).clamp(1, cfg.max_prompt - 1);
+        let mut prng = crate::util::rng::Rng::new(cfg.eng.seed ^ 0x9e_f1ff);
+        (0..len).map(|_| prng.below(vocab.max(1)) as i32).collect()
+    } else {
+        Vec::new()
+    };
     prompts
         .into_iter()
         .zip(budgets)
         .zip(ticks)
         .enumerate()
-        .map(|(id, ((prompt, max_new), arrival))| Request { id, prompt, max_new, arrival })
+        .map(|(id, ((prompt, max_new), arrival))| {
+            let class = if mix_rng.f64() < cfg.arrival.latency_frac {
+                Class::LatencySensitive
+            } else {
+                Class::ThroughputBatch
+            };
+            // Drawn unconditionally so the class assignment above is
+            // stable across prefix-share settings.
+            let share_draw = mix_rng.f64();
+            let shared = !prefix.is_empty() && share_draw < cfg.arrival.prefix_share;
+            let (prompt, prefix_len) = if shared {
+                let keep = prompt.len().min(cfg.max_prompt - prefix.len());
+                let mut p = prefix.clone();
+                p.extend_from_slice(&prompt[..keep]);
+                (p, prefix.len())
+            } else {
+                (prompt, 0)
+            };
+            Request { id, prompt, max_new, arrival, class, prefix_len }
+        })
         .collect()
 }
 
@@ -238,17 +361,34 @@ fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Resu
         if r.max_new == 0 {
             bail!("request {}: zero decode budget", r.id);
         }
+        if r.prefix_len > 0 && r.prefix_len >= r.prompt.len() {
+            bail!(
+                "request {}: shared prefix ({} tokens) must leave a unique suffix",
+                r.id,
+                r.prefix_len
+            );
+        }
         if r.id >= n || seen[r.id] {
             bail!("request ids must be unique and dense in 0..{n}, got {}", r.id);
         }
         seen[r.id] = true;
+    }
+    if cfg.prefill_chunk == Some(0) {
+        bail!("prefill chunk must admit at least one request");
+    }
+    if cfg.prefill_chunk_tokens == Some(0) {
+        bail!("prefill chunk must cover at least one token");
+    }
+    let mut class_of = vec![Class::default(); n];
+    for r in &requests {
+        class_of[r.id] = r.class;
     }
 
     let plan = eng.plan();
     // Per-policy wave shape: module batches prefills at B and backfills
     // hysteretically; continuous inserts batch-1 prefills into a
     // baseline-sized slot pool (the ContinuousRunner discipline, open).
-    let (default_slots, prefill_chunk, backfill) = match policy {
+    let (default_slots, policy_chunk, backfill) = match policy {
         Policy::ModuleBased => {
             let b = plan.accum_batch.max(1);
             (b, b, cfg.backfill)
@@ -256,6 +396,9 @@ fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Resu
         Policy::Continuous => (eng.cfg.baseline_micro_batch.max(1), 1, true),
         p => bail!("serve supports policies module|continuous, got {}", p.name()),
     };
+    // The per-policy wave width is a default, not a law: a validated
+    // JobSpec may narrow or widen the prefill wave explicitly.
+    let prefill_chunk = cfg.prefill_chunk.unwrap_or(policy_chunk);
     let mut adm = match (cfg.kv_budget_bytes, cfg.kv_slots) {
         (Some(budget), _) => AdmissionController::with_budget(eng, budget)?,
         (None, Some(slots)) => AdmissionController::with_slots(eng, slots)?,
@@ -273,8 +416,18 @@ fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Resu
         WaveScheduler::new(adm.kv(), max_in_flight, prefill_chunk, min_backfill, backfill);
 
     let out = serve_loop(eng, cfg, requests, &mut adm, &mut sched);
+    if out.is_ok() {
+        // Every request finished, so every donor refcount is 0; drain
+        // the table before the leak check so cached prefixes never
+        // masquerade as leaked slots.
+        adm.drain_donors();
+    }
     let leaked_slots = adm.slots_in_use();
     let peak_slots = adm.peak_slots_in_use();
+    let dedup_hits = adm.dedup_hits();
+    let dedup_bytes = adm.dedup_bytes();
+    let preemptions = sched.preemptions;
+    let parked_peak = sched.parked_peak;
     adm.shutdown(eng);
     let out = out?;
 
@@ -293,6 +446,40 @@ fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Resu
         }
         if let Some(t) = log.tpot() {
             tpot.push(t);
+        }
+    }
+    let mut classes = Vec::new();
+    // Per-class stats describe the workload, not the scheduler: a mixed
+    // trace reports them even under FIFO (slo = false), which is what
+    // lets tests compare latency-class TTFT against the SLO scheduler.
+    let mixed = class_of.iter().any(|c| *c == Class::LatencySensitive);
+    if cfg.slo || mixed {
+        for class in [Class::LatencySensitive, Class::ThroughputBatch] {
+            let mut cttft = LatencyStats::default();
+            let mut ctpot = LatencyStats::default();
+            let mut count = 0usize;
+            for (id, log) in out.logs.iter().enumerate() {
+                if class_of[id] != class {
+                    continue;
+                }
+                count += 1;
+                if let Some(t) = log.ttft_ticks() {
+                    cttft.push(t as f64);
+                }
+                if let Some(t) = log.tpot_ticks() {
+                    ctpot.push(t);
+                }
+            }
+            if count > 0 {
+                classes.push(ClassStats {
+                    class,
+                    requests: count,
+                    ttft_p50_ticks: cttft.percentile(50.0),
+                    ttft_p99_ticks: cttft.percentile(99.0),
+                    tpot_p50_ticks: ctpot.percentile(50.0),
+                    tpot_p99_ticks: ctpot.percentile(99.0),
+                });
+            }
         }
     }
     let m = &eng.metrics;
@@ -321,8 +508,62 @@ fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Resu
             peak_slots.max(1),
             m.decode_throughput(),
         ),
+        classes,
+        preemptions,
+        parked_peak,
+        dedup_hits,
+        dedup_bytes,
         tokens: out.logs.into_iter().map(|l| l.tokens).collect(),
     })
+}
+
+/// A chunk-admitted request whose prefill has not yet reached the end of
+/// its prompt: it owns a KV slot and counts against the wave's in-flight
+/// cap, but is not in the decode set yet.
+struct Partial {
+    req: Request,
+    slot: usize,
+    off: usize,
+}
+
+/// Handle a freshly produced first token: the request either finishes at
+/// prefill (EOS, or a decode budget of 1) and its slot recycles now, or
+/// it joins the decode set.
+#[allow(clippy::too_many_arguments)]
+fn first_token_into_wave(
+    cfg: &ServeConfig,
+    sched: &mut WaveScheduler,
+    adm: &mut AdmissionController,
+    logs: &mut [RequestLog],
+    dedup_keys: &mut [Option<Vec<i32>>],
+    finished: &mut usize,
+    now: u64,
+    id: usize,
+    slot: usize,
+    len: usize,
+    tok: i32,
+    budget: usize,
+) {
+    let log = &mut logs[id];
+    log.note_first_token_at(now);
+    log.tokens.push(tok);
+    let eos_hit = cfg.eos == Some(tok);
+    if eos_hit || log.tokens.len() >= budget {
+        let reason = if eos_hit { FinishReason::Eos } else { FinishReason::MaxTokens };
+        log.transition(RequestState::Finished(reason));
+        log.note_finished_at(now);
+        if let Some(k) = dedup_keys[id].take() {
+            adm.release_prefix_ref(&k);
+        }
+        adm.recycle(slot);
+        *finished += 1;
+    } else {
+        log.transition(RequestState::Decoding);
+        if !sched.state.is_empty() {
+            sched.backfilled += 1;
+        }
+        sched.push(id, slot, len, tok);
+    }
 }
 
 fn serve_loop(
@@ -334,16 +575,32 @@ fn serve_loop(
 ) -> Result<LoopOut> {
     let n = requests.len();
     let mut max_new = vec![0usize; n];
+    let mut class_of = vec![Class::default(); n];
+    let mut arrival_of = vec![0u64; n];
     for r in &requests {
         max_new[r.id] = r.max_new;
+        class_of[r.id] = r.class;
+        arrival_of[r.id] = r.arrival;
     }
     let closed_concurrency = match cfg.arrival.mode {
         ArrivalMode::ClosedLoop { concurrency } => Some(concurrency.max(1)),
         _ => None,
     };
+    // The multi-tenant admission path (DESIGN.md §13): SLO ordering,
+    // chunked prefill and prefix dedup all admit through the resumable
+    // batch-1 prefill. With every tenancy knob off, the single-tenant
+    // batched prefill wave below runs unchanged. Greedy tokens are
+    // batch-composition-invariant, so the two paths emit identical
+    // streams for the same request set — only latency shifts.
+    let tenancy = cfg.slo || cfg.prefix_dedup || cfg.prefill_chunk_tokens.is_some();
+    let chunk = cfg.prefill_chunk_tokens.unwrap_or(usize::MAX);
 
     let mut queue = RequestQueue::new(requests);
     let mut pending: VecDeque<Request> = VecDeque::new();
+    let mut partials: Vec<Partial> = Vec::new();
+    // Per request: the donor key it holds a reference on (released at
+    // finish), indexed by request id.
+    let mut dedup_keys: Vec<Option<Vec<i32>>> = vec![None; n];
     let mut logs: Vec<RequestLog> = vec![RequestLog::default(); n];
     let kv = adm.kv();
     let mut finished = 0usize;
@@ -362,43 +619,157 @@ fn serve_loop(
             None => queue.release_due(now),
         };
         for r in released {
-            logs[r.id].release();
+            logs[r.id].release_at(now);
             pending.push_back(r);
         }
 
-        // 2. Admission + prefill wave(s): claim KV slots, run the
-        //    batched prefill, emit first tokens, join the decode set.
-        loop {
-            let quota = sched.admit_quota(pending.len(), adm.free_slots(), !queue.is_empty());
-            if quota == 0 {
-                break;
+        if tenancy {
+            // 2t-a. Priority order: latency-class (and aged batch) work
+            //       to the front; FIFO inside a rank.
+            if cfg.slo {
+                queue::schedule_order(pending.make_contiguous(), now, queue::AGING_TICKS);
             }
-            let backfilling = !sched.state.is_empty();
-            let wave: Vec<Request> = pending.drain(..quota.min(sched.prefill_chunk)).collect();
-            let prompts: Vec<Vec<i32>> = wave.iter().map(|r| r.prompt.clone()).collect();
-            for r in &wave {
-                logs[r.id].transition(RequestState::Prefilling);
-            }
-            let (slots, lens, first) = eng.prefill_into(&kv, &prompts)?;
-            adm.note_admitted(slots.len());
-            for (i, r) in wave.iter().enumerate() {
-                let log = &mut logs[r.id];
-                log.note_first_token();
-                log.tokens.push(first[i]);
-                let eos_hit = cfg.eos == Some(first[i]);
-                if eos_hit || log.tokens.len() >= r.max_new {
-                    let reason =
-                        if eos_hit { FinishReason::Eos } else { FinishReason::MaxTokens };
-                    log.transition(RequestState::Finished(reason));
-                    adm.recycle(slots[i]);
-                    finished += 1;
+
+            // 2t-b. Advance every in-progress chunked prefill by one
+            //       chunk; completions join this tick's decode wave.
+            let mut i = 0;
+            while i < partials.len() {
+                let p = &mut partials[i];
+                let (off, first) = eng.prefill_resume(&kv, p.slot, &p.req.prompt, p.off, chunk)?;
+                p.off = off;
+                if cfg.prefix_dedup
+                    && dedup_keys[p.req.id].is_none()
+                    && p.req.prefix_len > 0
+                    && off >= p.req.prefix_len
+                {
+                    let prefix = &p.req.prompt[..p.req.prefix_len];
+                    if adm.install_donor(prefix, p.slot) {
+                        dedup_keys[p.req.id] = Some(prefix.to_vec());
+                    }
+                }
+                if let Some(tok) = first {
+                    let p = partials.remove(i);
+                    first_token_into_wave(
+                        cfg, sched, adm, &mut logs, &mut dedup_keys, &mut finished, now,
+                        p.req.id, p.slot, p.off, tok, max_new[p.req.id],
+                    );
                 } else {
-                    log.transition(RequestState::Decoding);
-                    sched.push(r.id, slots[i], lens[i], first[i]);
-                    if backfilling {
-                        // Counted per request actually joining a live
-                        // decode set (finish-at-prefill never joins).
-                        sched.backfilled += 1;
+                    i += 1;
+                }
+            }
+
+            // 2t-c. Decode-wave preemption: when waiting latency-class
+            //       requests outnumber free wave seats (and a KV slot is
+            //       available for them — parked requests keep theirs),
+            //       the youngest in-flight batch-class request yields.
+            if cfg.slo && cfg.preempt {
+                let idle_donors = adm.donors().iter().filter(|e| e.refs == 0).count();
+                let avail = adm.free_slots() + idle_donors;
+                let lat_pending = pending
+                    .iter()
+                    .filter(|r| r.class == Class::LatencySensitive)
+                    .count()
+                    .min(avail);
+                let mut room = sched.room().saturating_sub(partials.len());
+                while room < lat_pending {
+                    let victim = (0..sched.ids.len())
+                        .filter(|&i| class_of[sched.ids[i]] == Class::ThroughputBatch)
+                        .max_by_key(|&i| (arrival_of[sched.ids[i]], sched.ids[i]));
+                    let Some(vi) = victim else { break };
+                    let id = sched.park(vi);
+                    logs[id].transition(RequestState::Preempted);
+                    room += 1;
+                }
+            }
+
+            // 2t-d. Admission, one request at a time: rank-0 pending
+            //       work seats first, then parked requests resume, then
+            //       fresh batch-class admissions. Partials count toward
+            //       the in-flight cap (they hold seats-to-be).
+            loop {
+                if sched.room().saturating_sub(partials.len()) == 0 {
+                    break;
+                }
+                let rank0 = cfg.slo
+                    && pending
+                        .front()
+                        .is_some_and(|r| queue::class_rank(r, now, queue::AGING_TICKS) == 0);
+                if !rank0 && !sched.parked.is_empty() {
+                    let id = sched.resume_one().expect("parked entry vanished");
+                    logs[id].transition(RequestState::Decoding);
+                    continue;
+                }
+                if pending.is_empty() {
+                    break;
+                }
+                let Some(slot) = adm.alloc_slot() else { break };
+                let r = pending.pop_front().expect("pending emptied underfoot");
+                logs[r.id].transition(RequestState::Prefilling);
+                let mut off = 0usize;
+                if cfg.prefix_dedup && r.prefix_len > 0 {
+                    let prefix = &r.prompt[..r.prefix_len];
+                    if let Some(l) = adm.admit_via_donor(prefix, slot) {
+                        off = l;
+                        dedup_keys[r.id] = Some(prefix.to_vec());
+                    }
+                }
+                let (off, first) = eng.prefill_resume(&kv, slot, &r.prompt, off, chunk)?;
+                adm.note_admitted(1);
+                if cfg.prefix_dedup
+                    && dedup_keys[r.id].is_none()
+                    && r.prefix_len > 0
+                    && off >= r.prefix_len
+                {
+                    let prefix = &r.prompt[..r.prefix_len];
+                    if adm.install_donor(prefix, slot) {
+                        dedup_keys[r.id] = Some(prefix.to_vec());
+                    }
+                }
+                if let Some(tok) = first {
+                    first_token_into_wave(
+                        cfg, sched, adm, &mut logs, &mut dedup_keys, &mut finished, now,
+                        r.id, slot, off, tok, max_new[r.id],
+                    );
+                } else {
+                    partials.push(Partial { req: r, slot, off });
+                }
+            }
+        } else {
+            // 2. Admission + prefill wave(s): claim KV slots, run the
+            //    batched prefill, emit first tokens, join the decode set.
+            loop {
+                let quota = sched.admit_quota(pending.len(), adm.free_slots(), !queue.is_empty());
+                if quota == 0 {
+                    break;
+                }
+                let backfilling = !sched.state.is_empty();
+                let wave: Vec<Request> = pending.drain(..quota.min(sched.prefill_chunk)).collect();
+                let prompts: Vec<Vec<i32>> = wave.iter().map(|r| r.prompt.clone()).collect();
+                for r in &wave {
+                    logs[r.id].transition(RequestState::Prefilling);
+                }
+                let (slots, lens, first) = eng.prefill_into(&kv, &prompts)?;
+                adm.note_admitted(slots.len());
+                for (i, r) in wave.iter().enumerate() {
+                    let log = &mut logs[r.id];
+                    log.note_first_token_at(now);
+                    log.tokens.push(first[i]);
+                    let eos_hit = cfg.eos == Some(first[i]);
+                    if eos_hit || log.tokens.len() >= r.max_new {
+                        let reason =
+                            if eos_hit { FinishReason::Eos } else { FinishReason::MaxTokens };
+                        log.transition(RequestState::Finished(reason));
+                        log.note_finished_at(now);
+                        adm.recycle(slots[i]);
+                        finished += 1;
+                    } else {
+                        log.transition(RequestState::Decoding);
+                        sched.push(r.id, slots[i], lens[i], first[i]);
+                        if backfilling {
+                            // Counted per request actually joining a live
+                            // decode set (finish-at-prefill never joins).
+                            sched.backfilled += 1;
+                        }
                     }
                 }
             }
@@ -427,6 +798,10 @@ fn serve_loop(
                     let reason =
                         if eos_hit { FinishReason::Eos } else { FinishReason::MaxTokens };
                     log.transition(RequestState::Finished(reason));
+                    log.note_finished_at(now);
+                    if let Some(k) = dedup_keys[id].take() {
+                        adm.release_prefix_ref(&k);
+                    }
                     adm.recycle(slot);
                     finished += 1;
                 }
@@ -434,9 +809,14 @@ fn serve_loop(
         }
 
         // 4. Advance the virtual clock; fast-forward idle gaps in the
-        //    trace (nothing in flight, nothing pending).
+        //    trace (nothing in flight, parked or pending).
         now += 1;
-        if sched.state.is_empty() && pending.is_empty() && closed_concurrency.is_none() {
+        if sched.state.is_empty()
+            && pending.is_empty()
+            && partials.is_empty()
+            && sched.parked.is_empty()
+            && closed_concurrency.is_none()
+        {
             if let Some(t) = queue.next_arrival() {
                 now = now.max(t);
             }
@@ -484,6 +864,11 @@ mod tests {
                 ..TimelineStats::default()
             },
             roofline_fraction: 0.33,
+            classes: vec![],
+            preemptions: 0,
+            parked_peak: 0,
+            dedup_hits: 0,
+            dedup_bytes: 0,
             tokens: vec![],
         };
         let s = r.summary();
@@ -495,6 +880,62 @@ mod tests {
         assert!(s.contains("backfilled=4"));
         assert!(s.contains("tl-overlap= 25.0%"), "{s}");
         assert!(s.contains("roofline= 33.0%"), "{s}");
+        assert!(!s.contains("tenancy:"), "single-tenant summary stays single-line");
+    }
+
+    #[test]
+    fn summary_appends_tenancy_lines_when_slo_ran() {
+        let mut r = ServeReport {
+            policy: Policy::ModuleBased,
+            requests: 4,
+            prefill_tokens: 10,
+            decode_tokens: 10,
+            wall_secs: 1.0,
+            total_tp: 20.0,
+            ttft_p50: 0.01,
+            ttft_p99: 0.02,
+            tpot_p50: 0.001,
+            tpot_p99: 0.002,
+            expert_avg_batch: 4.0,
+            weight_hit_rate: 1.0,
+            finished_eos: 0,
+            finished_max: 4,
+            peak_slots: 4,
+            leaked_slots: 0,
+            backfilled: 0,
+            decode_waves: 6,
+            timeline: TimelineStats::default(),
+            roofline_fraction: 0.1,
+            classes: vec![ClassStats {
+                class: Class::LatencySensitive,
+                requests: 2,
+                ttft_p50_ticks: 1.0,
+                ttft_p99_ticks: 3.0,
+                tpot_p50_ticks: 1.0,
+                tpot_p99_ticks: 1.5,
+            }],
+            preemptions: 2,
+            parked_peak: 1,
+            dedup_hits: 3,
+            dedup_bytes: 4096,
+            tokens: vec![],
+        };
+        let s = r.summary();
+        assert!(s.contains("class=latency"), "{s}");
+        assert!(s.contains("preemptions=2"), "{s}");
+        assert!(s.contains("dedup-bytes=4096"), "{s}");
+        // The serve gauges land in a registry under the §12 names.
+        let mut reg = crate::trace::Registry::new();
+        r.publish(&mut reg);
+        let text = reg.render_prometheus();
+        assert!(text.contains("moe_gen_serve_preemptions_total"), "{text}");
+        assert!(text.contains("moe_gen_serve_prefix_dedup_bytes"), "{text}");
+        assert!(text.contains("class=\"latency\""), "{text}");
+        // Without classes the per-class series simply disappear.
+        r.classes.clear();
+        let mut reg2 = crate::trace::Registry::new();
+        r.publish(&mut reg2);
+        assert!(!reg2.render_prometheus().contains("class=\"latency\""));
     }
 
     #[test]
@@ -519,15 +960,28 @@ mod tests {
     fn serve_rejects_bad_requests_and_policies() {
         let cfg = ServeConfig::default();
         assert!(serve(&cfg, vec![]).is_err(), "empty request set");
-        let bad = vec![Request { id: 0, prompt: vec![], max_new: 4, arrival: 0 }];
+        let bad = vec![Request { id: 0, prompt: vec![], max_new: 4, ..Request::default() }];
         assert!(serve(&cfg, bad).is_err(), "empty prompt");
-        let zero = vec![Request { id: 0, prompt: vec![1], max_new: 0, arrival: 0 }];
+        let zero = vec![Request { id: 0, prompt: vec![1], max_new: 0, ..Request::default() }];
         assert!(serve(&cfg, zero).is_err(), "zero budget");
+        let wide = vec![Request {
+            id: 0,
+            prompt: vec![1, 2],
+            max_new: 4,
+            prefix_len: 2,
+            ..Request::default()
+        }];
+        assert!(serve(&cfg, wide).is_err(), "prefix must leave a unique suffix");
+        let chunk0 = ServeConfig { prefill_chunk: Some(0), ..ServeConfig::default() };
+        let ok0 = vec![Request { id: 0, prompt: vec![1], max_new: 2, ..Request::default() }];
+        assert!(serve(&chunk0, ok0.clone()).is_err(), "zero-request prefill chunk");
+        let tok0 = ServeConfig { prefill_chunk_tokens: Some(0), ..ServeConfig::default() };
+        assert!(serve(&tok0, ok0).is_err(), "zero-token prefill chunk");
         let dcfg = ServeConfig {
             eng: EngineConfig { policy: Policy::ModelBased, ..EngineConfig::default() },
             ..ServeConfig::default()
         };
-        let ok = vec![Request { id: 0, prompt: vec![1], max_new: 2, arrival: 0 }];
+        let ok = vec![Request { id: 0, prompt: vec![1], max_new: 2, ..Request::default() }];
         assert!(serve(&dcfg, ok).is_err(), "model-based policy is offline-only");
     }
 }

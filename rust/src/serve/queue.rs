@@ -5,10 +5,39 @@
 //! fully deterministic) and released either by the virtual clock
 //! ([`RequestQueue::release_due`], open-loop modes) or by completion
 //! pressure ([`RequestQueue::release_n`], closed-loop concurrency).
+//!
+//! Under SLO scheduling (DESIGN.md §13) released-but-unadmitted requests
+//! are additionally *ordered* by class priority with aging
+//! ([`schedule_order`]): latency-sensitive requests admit first, but a
+//! throughput-class request waiting longer than the aging window is
+//! promoted to the same rank, so batch traffic can never starve.
 
 use std::collections::VecDeque;
 
-use crate::serve::request::Request;
+use crate::serve::request::{Class, Request};
+
+/// Ticks a throughput-class request may wait before it ranks with the
+/// latency class (the anti-starvation window of [`schedule_order`]).
+pub const AGING_TICKS: u64 = 8;
+
+/// Admission rank of a released request at `now`: 0 admits first.
+/// Latency-sensitive requests and throughput requests older than
+/// `aging_ticks` share rank 0; ties always break by (arrival, id), so an
+/// aged batch request outranks a newer latency arrival.
+pub fn class_rank(r: &Request, now: u64, aging_ticks: u64) -> u8 {
+    match r.class {
+        Class::LatencySensitive => 0,
+        Class::ThroughputBatch if now.saturating_sub(r.arrival) >= aging_ticks => 0,
+        Class::ThroughputBatch => 1,
+    }
+}
+
+/// Sort the released-but-unadmitted set into admission order:
+/// (class rank with aging, arrival, id). The sort is total, so the order
+/// is deterministic for any trace.
+pub fn schedule_order(ready: &mut [Request], now: u64, aging_ticks: u64) {
+    ready.sort_by_key(|r| (class_rank(r, now, aging_ticks), r.arrival, r.id));
+}
 
 /// Requests not yet released to the server, sorted by (arrival, id).
 #[derive(Debug, Default)]
@@ -58,7 +87,11 @@ mod tests {
     use super::*;
 
     fn req(id: usize, arrival: u64) -> Request {
-        Request { id, prompt: vec![1], max_new: 1, arrival }
+        Request { id, prompt: vec![1], max_new: 1, arrival, ..Request::default() }
+    }
+
+    fn classed(id: usize, arrival: u64, class: Class) -> Request {
+        Request { class, ..req(id, arrival) }
     }
 
     #[test]
@@ -85,5 +118,32 @@ mod tests {
         let r = q.release_n(2);
         assert_eq!(r.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(q.release_n(5).len(), 1, "release caps at what remains");
+    }
+
+    #[test]
+    fn latency_class_ranks_ahead_of_fresh_batch_traffic() {
+        let mut ready = vec![
+            classed(0, 0, Class::ThroughputBatch),
+            classed(1, 2, Class::LatencySensitive),
+            classed(2, 1, Class::LatencySensitive),
+        ];
+        schedule_order(&mut ready, 3, AGING_TICKS);
+        assert_eq!(ready.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn aging_promotes_waiting_batch_requests_past_latency_arrivals() {
+        // The batch request arrived at tick 0; a latency request lands at
+        // tick 9. Before the aging window closes the latency request
+        // leads; once the batch request has waited AGING_TICKS it shares
+        // rank 0 and its earlier arrival wins — starvation is bounded.
+        let batch = classed(0, 0, Class::ThroughputBatch);
+        let lat = classed(1, 9, Class::LatencySensitive);
+        let mut early = vec![batch.clone(), lat.clone()];
+        schedule_order(&mut early, 5, AGING_TICKS);
+        assert_eq!(early[0].id, 1, "young batch request yields to latency class");
+        let mut late = vec![batch, lat];
+        schedule_order(&mut late, 9, AGING_TICKS);
+        assert_eq!(late[0].id, 0, "aged batch request is promoted");
     }
 }

@@ -2,17 +2,42 @@
 //!
 //! ```text
 //!   Queued ──► Prefilling ──► Decoding ──► Finished{Eos | MaxTokens}
-//!                   │                          ▲
-//!                   └──────────────────────────┘   (EOS or a budget of 1
-//!                                                   at the first token)
+//!                   │            │  ▲           ▲
+//!                   │            ▼  │           │
+//!                   │          Preempted        │   (EOS or a budget of 1
+//!                   └───────────────────────────┘    at the first token)
 //! ```
 //!
 //! Transitions are enforced ([`RequestState::can_transition`]): a request
 //! cannot decode before prefilling, cannot finish twice, and cannot leave
-//! `Finished`. The [`RequestLog`] stamps wall-clock instants at release,
-//! first token and completion — TTFT and TPOT derive from those.
+//! `Finished`. `Preempted` is the parked state of the multi-tenant layer
+//! (DESIGN.md §13): a decoding throughput-class request evicted from the
+//! wave keeps its KV slot and may only re-enter `Decoding`. The
+//! [`RequestLog`] stamps wall-clock instants at release, first token and
+//! completion — TTFT and TPOT derive from those — plus the virtual-tick
+//! equivalents the deterministic per-class percentiles use.
 
 use std::time::Instant;
+
+/// SLO class of a request (the tenant mix, DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Class {
+    /// Interactive traffic: admitted ahead of batch work, may preempt it.
+    LatencySensitive,
+    /// Bulk traffic: fills leftover capacity, protected by aging.
+    #[default]
+    ThroughputBatch,
+}
+
+impl Class {
+    /// Stable lower-case name (report lines, metric labels, config keys).
+    pub fn slug(self) -> &'static str {
+        match self {
+            Class::LatencySensitive => "latency",
+            Class::ThroughputBatch => "batch",
+        }
+    }
+}
 
 /// One client request of the simulated open system.
 #[derive(Debug, Clone)]
@@ -25,6 +50,26 @@ pub struct Request {
     /// Arrival tick in the deterministic trace
     /// ([`crate::workload::ArrivalSpec`]).
     pub arrival: u64,
+    /// SLO class; [`Class::ThroughputBatch`] unless the tenant mix says
+    /// otherwise.
+    pub class: Class,
+    /// Leading tokens of `prompt` that are a shared system prefix
+    /// (0 = none). Requests with equal prefixes admit at the marginal
+    /// KV byte cost when prefix dedup is on.
+    pub prefix_len: usize,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            id: 0,
+            prompt: Vec::new(),
+            max_new: 0,
+            arrival: 0,
+            class: Class::default(),
+            prefix_len: 0,
+        }
+    }
 }
 
 /// Why a request finished.
@@ -45,6 +90,10 @@ pub enum RequestState {
     Prefilling,
     /// In the decode set (an active slot of the current waves).
     Decoding,
+    /// Evicted from the decode wave to make room for latency-class
+    /// traffic; its KV slot stays allocated, so resuming replays no
+    /// prefill.
+    Preempted,
     /// Retired; its KV slot has been recycled.
     Finished(FinishReason),
 }
@@ -57,6 +106,8 @@ impl RequestState {
             (RequestState::Queued, RequestState::Prefilling)
                 | (RequestState::Prefilling, RequestState::Decoding)
                 | (RequestState::Prefilling, RequestState::Finished(_))
+                | (RequestState::Decoding, RequestState::Preempted)
+                | (RequestState::Preempted, RequestState::Decoding)
                 | (RequestState::Decoding, RequestState::Finished(_))
         )
     }
@@ -71,6 +122,13 @@ pub struct RequestLog {
     released: Option<Instant>,
     first_token: Option<Instant>,
     finished: Option<Instant>,
+    /// Virtual-tick stamps mirroring the instants above. Wall-clock
+    /// latencies depend on host speed; the per-class SLO percentiles
+    /// compare scheduling disciplines, so they use the deterministic
+    /// scheduler clock instead.
+    released_tick: Option<u64>,
+    first_token_tick: Option<u64>,
+    finished_tick: Option<u64>,
 }
 
 impl Default for RequestLog {
@@ -81,6 +139,9 @@ impl Default for RequestLog {
             released: None,
             first_token: None,
             finished: None,
+            released_tick: None,
+            first_token_tick: None,
+            finished_tick: None,
         }
     }
 }
@@ -91,10 +152,32 @@ impl RequestLog {
         self.released = Some(Instant::now());
     }
 
+    /// [`RequestLog::release`] plus the virtual-tick stamp.
+    pub fn release_at(&mut self, tick: u64) {
+        self.release();
+        self.released_tick = Some(tick);
+    }
+
     /// Stamp first-token emission (prefill completed for this request).
     pub fn note_first_token(&mut self) {
         if self.first_token.is_none() {
             self.first_token = Some(Instant::now());
+        }
+    }
+
+    /// [`RequestLog::note_first_token`] plus the virtual-tick stamp.
+    pub fn note_first_token_at(&mut self, tick: u64) {
+        self.note_first_token();
+        if self.first_token_tick.is_none() {
+            self.first_token_tick = Some(tick);
+        }
+    }
+
+    /// Stamp the completion tick (the wall-clock stamp rides
+    /// [`RequestLog::transition`] into `Finished`).
+    pub fn note_finished_at(&mut self, tick: u64) {
+        if self.finished_tick.is_none() {
+            self.finished_tick = Some(tick);
         }
     }
 
@@ -130,6 +213,25 @@ impl RequestLog {
             _ => None,
         }
     }
+
+    /// Time-to-first-token in scheduler ticks (deterministic).
+    pub fn ttft_ticks(&self) -> Option<u64> {
+        match (self.released_tick, self.first_token_tick) {
+            (Some(r), Some(f)) => Some(f.saturating_sub(r)),
+            _ => None,
+        }
+    }
+
+    /// Time-per-output-token in scheduler ticks (deterministic);
+    /// `None` for single-token requests.
+    pub fn tpot_ticks(&self) -> Option<f64> {
+        match (self.first_token_tick, self.finished_tick) {
+            (Some(f), Some(d)) if self.tokens.len() > 1 => {
+                Some(d.saturating_sub(f) as f64 / (self.tokens.len() - 1) as f64)
+            }
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +245,13 @@ mod tests {
         assert!(Prefilling.can_transition(Decoding));
         assert!(Prefilling.can_transition(Finished(FinishReason::Eos)));
         assert!(Decoding.can_transition(Finished(FinishReason::MaxTokens)));
+        // Preemption parks a decoding request and only resumes it.
+        assert!(Decoding.can_transition(Preempted));
+        assert!(Preempted.can_transition(Decoding));
+        assert!(!Preempted.can_transition(Prefilling));
+        assert!(!Preempted.can_transition(Finished(FinishReason::Eos)));
+        assert!(!Prefilling.can_transition(Preempted));
+        assert!(!Queued.can_transition(Preempted));
         // Illegal: skipping prefill, reviving a finished request, …
         assert!(!Queued.can_transition(Decoding));
         assert!(!Queued.can_transition(Finished(FinishReason::Eos)));
@@ -185,5 +294,31 @@ mod tests {
         log.transition(RequestState::Finished(FinishReason::Eos));
         assert!(log.ttft().is_some());
         assert_eq!(log.tpot(), None);
+    }
+
+    #[test]
+    fn tick_stamps_are_idempotent_and_deterministic() {
+        let mut log = RequestLog::default();
+        assert_eq!(log.ttft_ticks(), None);
+        log.release_at(3);
+        log.transition(RequestState::Prefilling);
+        log.note_first_token_at(7);
+        log.note_first_token_at(9); // later duplicate is ignored
+        log.tokens.extend([5, 6, 7]);
+        log.transition(RequestState::Decoding);
+        log.transition(RequestState::Finished(FinishReason::MaxTokens));
+        log.note_finished_at(11);
+        assert_eq!(log.ttft_ticks(), Some(4));
+        assert_eq!(log.tpot_ticks(), Some(2.0));
+    }
+
+    #[test]
+    fn class_defaults_to_batch_with_stable_slugs() {
+        assert_eq!(Class::default(), Class::ThroughputBatch);
+        assert_eq!(Class::LatencySensitive.slug(), "latency");
+        assert_eq!(Class::ThroughputBatch.slug(), "batch");
+        let r = Request { id: 4, prompt: vec![1], max_new: 2, ..Request::default() };
+        assert_eq!(r.class, Class::ThroughputBatch);
+        assert_eq!(r.prefix_len, 0);
     }
 }

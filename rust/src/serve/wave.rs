@@ -19,11 +19,29 @@
 //!   `min_backfill = 1`: every released request is inserted alone as
 //!   soon as a slot frees (the vLLM-style TTFT-optimizing insertion the
 //!   offline [`crate::baselines::ContinuousRunner`] implements).
+//!
+//! Under SLO scheduling the wave additionally supports **decode-wave
+//! preemption** (DESIGN.md §13): a throughput-class member can be parked
+//! ([`WaveScheduler::park`]) — removed from the decode set while its KV
+//! slot, length and last token are retained — to free a wave seat for a
+//! latency-class admission, and later resumed
+//! ([`WaveScheduler::resume_one`]) with no recomputation. Greedy tokens
+//! are batch-composition-invariant, so parking only delays a request's
+//! remaining tokens; it never changes them.
 
 use std::sync::{Arc, RwLock};
 
 use crate::exec::BatchState;
 use crate::kv::KvCache;
+
+/// A preempted request: off the decode wave, KV slot still held.
+#[derive(Debug, Clone, Copy)]
+pub struct Parked {
+    pub id: usize,
+    pub slot: usize,
+    pub len: usize,
+    pub last: i32,
+}
 
 /// In-flight decode set + backfill policy.
 pub struct WaveScheduler {
@@ -45,6 +63,13 @@ pub struct WaveScheduler {
     pub backfilled: u64,
     /// Decode waves launched.
     pub decode_waves: u64,
+    /// Preempted requests in park order (resume is FIFO, so the longest-
+    /// parked request returns first).
+    pub parked: Vec<Parked>,
+    /// Decode-wave preemptions performed.
+    pub preemptions: u64,
+    /// High-water mark of simultaneously parked requests.
+    pub parked_peak: usize,
 }
 
 impl WaveScheduler {
@@ -64,6 +89,9 @@ impl WaveScheduler {
             backfill,
             backfilled: 0,
             decode_waves: 0,
+            parked: Vec::new(),
+            preemptions: 0,
+            parked_peak: 0,
         }
     }
 
@@ -113,14 +141,43 @@ impl WaveScheduler {
         (id, slot)
     }
 
+    /// Park batch position `i` (decode-wave preemption): the request
+    /// leaves the decode set but keeps its KV slot, length and last
+    /// token, so resuming continues the greedy stream exactly where it
+    /// stopped. Returns the parked request's id.
+    pub fn park(&mut self, i: usize) -> usize {
+        let len = self.state.lens[i];
+        let last = self.state.last[i];
+        let id = self.ids.swap_remove(i);
+        let slot = self.state.swap_remove(i);
+        self.parked.push(Parked { id, slot, len, last });
+        self.preemptions += 1;
+        self.parked_peak = self.parked_peak.max(self.parked.len());
+        id
+    }
+
+    /// Resume the longest-parked request into the decode set (FIFO);
+    /// returns its id, or `None` when nothing is parked. The caller must
+    /// have checked [`WaveScheduler::room`].
+    pub fn resume_one(&mut self) -> Option<usize> {
+        if self.parked.is_empty() {
+            return None;
+        }
+        let p = self.parked.remove(0);
+        self.push(p.id, p.slot, p.len, p.last);
+        Some(p.id)
+    }
+
     /// Publish scheduling counters into a metrics registry
     /// (`moe_gen_serve_*`; DESIGN.md §12 naming).
     pub fn publish(&self, reg: &mut crate::trace::Registry) {
         reg.counter("moe_gen_serve_backfilled_total", self.backfilled);
         reg.counter("moe_gen_serve_decode_waves_total", self.decode_waves);
+        reg.counter("moe_gen_serve_preemptions_total", self.preemptions);
         reg.gauge("moe_gen_serve_in_flight", self.in_flight() as f64);
         reg.gauge("moe_gen_serve_max_in_flight", self.max_in_flight as f64);
         reg.gauge("moe_gen_serve_min_backfill", self.min_backfill as f64);
+        reg.gauge("moe_gen_serve_parked", self.parked.len() as f64);
     }
 }
 
@@ -186,5 +243,31 @@ mod tests {
         assert_eq!(s.ids, vec![12, 11]);
         assert_eq!(s.state.slots, vec![2, 1]);
         assert_eq!(s.state.lens, vec![5, 4]);
+    }
+
+    #[test]
+    fn park_retains_slot_state_and_resume_is_fifo() {
+        let mut s = sched(4, 1, true);
+        s.push(10, 0, 3, 7);
+        s.push(11, 1, 4, 8);
+        s.push(12, 2, 5, 9);
+        assert_eq!(s.park(1), 11);
+        assert_eq!(s.park(1), 12, "swap-remove moved 12 into position 1");
+        assert_eq!(s.in_flight(), 1);
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.parked_peak, 2);
+        // Parked entries carry the exact resume point.
+        assert_eq!(s.parked[0].slot, 1);
+        assert_eq!(s.parked[0].len, 4);
+        assert_eq!(s.parked[0].last, 8);
+        // FIFO resume: longest-parked first, state restored verbatim.
+        assert_eq!(s.resume_one(), Some(11));
+        assert_eq!(s.resume_one(), Some(12));
+        assert_eq!(s.resume_one(), None);
+        assert_eq!(s.in_flight(), 3);
+        assert_eq!(s.ids, vec![10, 11, 12]);
+        assert_eq!(s.state.slots, vec![0, 1, 2]);
+        assert_eq!(s.state.lens, vec![3, 4, 5]);
+        assert_eq!(s.state.last, vec![7, 8, 9]);
     }
 }

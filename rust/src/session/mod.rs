@@ -464,16 +464,29 @@ impl Session {
         m.insert("strategy_source".into(), Json::Str(self.spec.strategy.slug().into()));
         // The perf-trajectory gate (tools/perf_gate.py) groups records by
         // this key: only same-config runs are comparable across history.
-        m.insert(
-            "config_key".into(),
-            Json::Str(format!(
-                "{}/{}/{}/nd{}",
-                self.spec.kind.slug(),
-                self.spec.eng.policy.slug(),
-                self.spec.strategy.slug(),
-                self.spec.eng.n_devices
-            )),
+        // Tenancy knobs extend the key only when off their defaults, so
+        // every pre-tenancy record keeps its original grouping.
+        let mut config_key = format!(
+            "{}/{}/{}/nd{}",
+            self.spec.kind.slug(),
+            self.spec.eng.policy.slug(),
+            self.spec.strategy.slug(),
+            self.spec.eng.n_devices
         );
+        let sv = &self.spec.serve;
+        if sv.slo {
+            config_key.push_str(&format!("/slo{:.0}", 100.0 * sv.arrival.latency_frac));
+        }
+        if sv.prefix_dedup {
+            config_key.push_str(&format!("/dedup{:.0}", 100.0 * sv.arrival.prefix_share));
+        }
+        if let Some(t) = sv.prefill_chunk_tokens {
+            config_key.push_str(&format!("/pct{t}"));
+        }
+        if let Some(n) = sv.prefill_chunk {
+            config_key.push_str(&format!("/pc{n}"));
+        }
+        m.insert("config_key".into(), Json::Str(config_key));
         m.insert("git".into(), Json::Str(git_describe()));
         m.insert("n_devices".into(), Json::Num(self.spec.eng.n_devices as f64));
         m.insert(
@@ -529,6 +542,25 @@ impl Session {
         m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
         m.insert("backfilled".into(), Json::Num(r.backfilled as f64));
         m.insert("roofline_fraction".into(), Json::Num(r.roofline_fraction));
+        m.insert("preemptions".into(), Json::Num(r.preemptions as f64));
+        m.insert("parked_peak".into(), Json::Num(r.parked_peak as f64));
+        m.insert("prefix_dedup_hits".into(), Json::Num(r.dedup_hits as f64));
+        m.insert("prefix_dedup_bytes".into(), Json::Num(r.dedup_bytes as f64));
+        if !r.classes.is_empty() {
+            // Per-SLO-class virtual-tick percentiles, keyed by class slug
+            // — what the SLO smoke checks and dashboards group on.
+            let mut cj = BTreeMap::new();
+            for c in &r.classes {
+                let mut cm = BTreeMap::new();
+                cm.insert("requests".into(), Json::Num(c.requests as f64));
+                cm.insert("ttft_p50_ticks".into(), Json::Num(c.ttft_p50_ticks));
+                cm.insert("ttft_p99_ticks".into(), Json::Num(c.ttft_p99_ticks));
+                cm.insert("tpot_p50_ticks".into(), Json::Num(c.tpot_p50_ticks));
+                cm.insert("tpot_p99_ticks".into(), Json::Num(c.tpot_p99_ticks));
+                cj.insert(c.class.slug().to_string(), Json::Obj(cm));
+            }
+            m.insert("classes".into(), Json::Obj(cj));
+        }
         m.insert("timeline".into(), timeline_json(&r.timeline));
         append_bench_record(&path, Json::Obj(m));
     }
@@ -819,6 +851,40 @@ mod tests {
         let r = s.serve().unwrap();
         assert_eq!(r.requests, 4);
         assert_eq!(r.leaked_slots, 0);
+    }
+
+    #[test]
+    fn serve_slo_record_extends_config_key() {
+        let dir = std::env::temp_dir().join("moe_gen_session_slo_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_live.json");
+        let _ = std::fs::remove_file(&path);
+        let mut spec = quiet_spec();
+        spec.kind = JobKind::Serve;
+        spec.serve.mean_decode = 2;
+        spec.serve.max_decode = 4;
+        spec.serve.slo = true;
+        spec.serve.arrival.latency_frac = 0.5;
+        spec.serve.prefix_dedup = true;
+        spec.serve.arrival.prefix_share = 0.5;
+        spec.bench_log = Some(path.clone());
+        let mut s = Session::open(spec).unwrap();
+        s.serve().unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rec = &v.req("runs").as_arr().unwrap()[0];
+        assert_eq!(
+            rec.req("config_key").as_str(),
+            Some("serve/module/defaults/nd1/slo50/dedup50"),
+            "tenancy knobs must fork the trajectory grouping key"
+        );
+        assert!(rec.req("preemptions").as_f64().is_some());
+        assert!(rec.req("prefix_dedup_bytes").as_f64().is_some());
+        let classes = rec.req("classes");
+        assert!(
+            matches!(classes, Json::Obj(m) if !m.is_empty()),
+            "an SLO run must record per-class percentiles, got {classes:?}"
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

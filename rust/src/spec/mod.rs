@@ -195,6 +195,19 @@ pub struct ServeSpec {
     /// KV admission pool as a host-memory byte budget (overrides
     /// `kv_slots`; paper Eqs. 2–3 sizing).
     pub kv_budget_bytes: Option<usize>,
+    /// Enable SLO-class scheduling (per-class priority with aging,
+    /// decode-wave preemption, per-class latency percentiles).
+    pub slo: bool,
+    /// Cap on requests admitted per scheduler tick (prefill-side wave
+    /// width override). `Some(0)` is rejected at validation.
+    pub prefill_chunk: Option<usize>,
+    /// Chunked prefill: bound each admitted request's prefill to this
+    /// many prompt tokens per tick, interleaving the remainder with
+    /// decode waves. `Some(0)` is rejected at validation.
+    pub prefill_chunk_tokens: Option<usize>,
+    /// Shared-prefix KV dedup: admit requests that share a synthesized
+    /// prompt prefix by copying a refcounted donor slot's rows.
+    pub prefix_dedup: bool,
 }
 
 impl Default for ServeSpec {
@@ -206,7 +219,7 @@ impl Default for ServeSpec {
             // opted into explicitly).
             arrival: ArrivalSpec {
                 mode: crate::workload::ArrivalMode::OpenLoop { mean_gap: 1.0 },
-                seed: 0,
+                ..ArrivalSpec::default()
             },
             mean_decode: 8,
             max_decode: 16,
@@ -214,6 +227,10 @@ impl Default for ServeSpec {
             backfill: true,
             kv_slots: None,
             kv_budget_bytes: None,
+            slo: false,
+            prefill_chunk: None,
+            prefill_chunk_tokens: None,
+            prefix_dedup: false,
         }
     }
 }
@@ -333,7 +350,7 @@ impl JobSpec {
             ));
         }
         let s = &self.serve;
-        s.arrival.mode.validate().map_err(|e| anyhow!("serve: {e}"))?;
+        s.arrival.validate().map_err(|e| anyhow!("serve: {e}"))?;
         if s.mean_decode == 0 {
             return Err(anyhow!("serve: mean_decode must be >= 1"));
         }
@@ -349,6 +366,12 @@ impl JobSpec {
         }
         if s.kv_budget_bytes == Some(0) {
             return Err(anyhow!("serve: kv_budget_bytes = 0 admits nothing"));
+        }
+        if s.prefill_chunk == Some(0) {
+            return Err(anyhow!("serve: prefill_chunk = 0 admits nothing per tick"));
+        }
+        if s.prefill_chunk_tokens == Some(0) {
+            return Err(anyhow!("serve: prefill_chunk_tokens = 0 covers no prompt tokens"));
         }
         if self.kind == JobKind::Serve
             && !matches!(self.eng.policy, Policy::ModuleBased | Policy::Continuous)
@@ -400,6 +423,11 @@ impl JobSpec {
             backfill: self.serve.backfill,
             kv_slots: self.serve.kv_slots,
             kv_budget_bytes: self.serve.kv_budget_bytes,
+            slo: self.serve.slo,
+            preempt: true,
+            prefill_chunk: self.serve.prefill_chunk,
+            prefill_chunk_tokens: self.serve.prefill_chunk_tokens,
+            prefix_dedup: self.serve.prefix_dedup,
         }
     }
 
@@ -448,6 +476,16 @@ impl JobSpec {
             "kv_budget_bytes".into(),
             s.kv_budget_bytes.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
         );
+        sv.insert("slo".into(), Json::Bool(s.slo));
+        sv.insert(
+            "prefill_chunk".into(),
+            s.prefill_chunk.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+        );
+        sv.insert(
+            "prefill_chunk_tokens".into(),
+            s.prefill_chunk_tokens.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+        );
+        sv.insert("prefix_dedup".into(), Json::Bool(s.prefix_dedup));
 
         let sc = &self.scenario;
         let mut scn = BTreeMap::new();
@@ -585,7 +623,8 @@ impl JobSpec {
             check_keys(
                 s,
                 &["arrival", "mean_decode", "max_decode", "eos", "backfill", "kv_slots",
-                  "kv_budget_bytes"],
+                  "kv_budget_bytes", "slo", "prefill_chunk", "prefill_chunk_tokens",
+                  "prefix_dedup"],
                 "serve",
             )?;
             if let Some(a) = s.get("arrival") {
@@ -612,6 +651,20 @@ impl JobSpec {
                     _ => Some(as_uint(t, "serve", "kv_budget_bytes")? as usize),
                 };
             }
+            get_bool(s, "serve", "slo", &mut spec.serve.slo)?;
+            if let Some(t) = s.get("prefill_chunk") {
+                spec.serve.prefill_chunk = match t {
+                    Json::Null => None,
+                    _ => Some(as_uint(t, "serve", "prefill_chunk")? as usize),
+                };
+            }
+            if let Some(t) = s.get("prefill_chunk_tokens") {
+                spec.serve.prefill_chunk_tokens = match t {
+                    Json::Null => None,
+                    _ => Some(as_uint(t, "serve", "prefill_chunk_tokens")? as usize),
+                };
+            }
+            get_bool(s, "serve", "prefix_dedup", &mut spec.serve.prefix_dedup)?;
         }
         if let Some(s) = v.get("scenario") {
             check_keys(s, &["model", "testbed", "prompt_len", "decode_len"], "scenario")?;
@@ -782,13 +835,22 @@ mod tests {
             },
             workload: WorkloadSpec { num_requests: 17, mean_prompt: 9, max_prompt: 33, steps: 5 },
             serve: ServeSpec {
-                arrival: ArrivalSpec { mode: ArrivalMode::Bursty { mean_gap: 6.5, burst: 4 }, seed: 9 },
+                arrival: ArrivalSpec {
+                    mode: ArrivalMode::Bursty { mean_gap: 6.5, burst: 4 },
+                    seed: 9,
+                    latency_frac: 0.5,
+                    prefix_share: 0.25,
+                },
                 mean_decode: 3,
                 max_decode: 7,
                 eos: Some(11),
                 backfill: false,
                 kv_slots: Some(24),
                 kv_budget_bytes: Some(1 << 20),
+                slo: true,
+                prefill_chunk: Some(3),
+                prefill_chunk_tokens: Some(8),
+                prefix_dedup: true,
             },
             scenario: ScenarioSpec {
                 model: "deepseek-v2".into(),
@@ -858,6 +920,9 @@ mod tests {
         assert!(JobSpec::from_str(r#"{"engine": {"prefetch": 1}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"serve": {"eos": 1.5}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"serve": {"kv_slots": 2.5}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"serve": {"prefill_chunk": 2.5}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"serve": {"prefill_chunk_tokens": -4}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"serve": {"slo": 1}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"throttle_htod": "fast"}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"n_devices": 2.5}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"placement": "striped"}}"#).is_err());
@@ -929,9 +994,20 @@ mod tests {
         bad.serve.max_decode = 4;
         assert!(bad.validate().is_err(), "mean_decode > max_decode");
         let mut bad = JobSpec::default();
-        bad.serve.arrival =
-            ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: -2.0 }, seed: 0 };
+        bad.serve.arrival = ArrivalSpec {
+            mode: ArrivalMode::OpenLoop { mean_gap: -2.0 },
+            ..ArrivalSpec::default()
+        };
         assert!(bad.validate().is_err(), "negative arrival gap must fail at build time");
+        let mut bad = JobSpec::default();
+        bad.serve.arrival.latency_frac = 1.5;
+        assert!(bad.validate().is_err(), "latency_frac outside [0, 1]");
+        let mut bad = JobSpec::default();
+        bad.serve.prefill_chunk = Some(0);
+        assert!(bad.validate().is_err(), "zero prefill chunk admits nothing");
+        let mut bad = JobSpec::default();
+        bad.serve.prefill_chunk_tokens = Some(0);
+        assert!(bad.validate().is_err(), "zero-token prefill chunk never finishes");
     }
 
     #[test]
@@ -949,6 +1025,11 @@ mod tests {
         assert_eq!(sc.backfill, spec.serve.backfill);
         assert_eq!(sc.kv_slots, spec.serve.kv_slots);
         assert_eq!(sc.kv_budget_bytes, spec.serve.kv_budget_bytes);
+        assert_eq!(sc.slo, spec.serve.slo);
+        assert!(sc.preempt, "spec-level SLO serving keeps preemption armed");
+        assert_eq!(sc.prefill_chunk, spec.serve.prefill_chunk);
+        assert_eq!(sc.prefill_chunk_tokens, spec.serve.prefill_chunk_tokens);
+        assert_eq!(sc.prefix_dedup, spec.serve.prefix_dedup);
     }
 
     #[test]

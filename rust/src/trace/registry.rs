@@ -169,7 +169,10 @@ impl Registry {
 }
 
 /// Split `"family/label"` into a sanitized metric name and a Prometheus
-/// label selector. A name with no `/` gets an empty selector.
+/// label selector. A name with no `/` gets an empty selector. A bare
+/// label names the implicit `module` dimension; a `key=value` label
+/// (e.g. `moe_gen_serve_ttft_p99/class=latency`) picks its own label
+/// name, which is how per-SLO-class serving series render.
 fn split_series(name: &str) -> (String, String) {
     let (base, label) = match name.split_once('/') {
         Some((b, l)) => (b, Some(l)),
@@ -180,7 +183,10 @@ fn split_series(name: &str) -> (String, String) {
         .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
         .collect();
     let sel = match label {
-        Some(l) => format!("{{module=\"{l}\"}}"),
+        Some(l) => match l.split_once('=') {
+            Some((k, v)) => format!("{{{k}=\"{v}\"}}"),
+            None => format!("{{module=\"{l}\"}}"),
+        },
         None => String::new(),
     };
     (base, sel)
@@ -255,6 +261,17 @@ mod tests {
         assert_eq!(text.matches("# TYPE moe_gen_module_secs summary").count(), 1);
         assert!(text.contains("moe_gen_module_secs_count{module=\"attn\"} 10"));
         assert!(text.contains("moe_gen_module_secs_sum{module=\"expert_ffn\"} 0.02"));
+    }
+
+    #[test]
+    fn key_value_labels_pick_their_own_dimension() {
+        let mut r = Registry::new();
+        r.gauge("moe_gen_serve_ttft_p99/class=latency", 3.0);
+        r.gauge("moe_gen_serve_ttft_p99/class=batch", 9.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("moe_gen_serve_ttft_p99{class=\"latency\"} 3"), "{text}");
+        assert!(text.contains("moe_gen_serve_ttft_p99{class=\"batch\"} 9"), "{text}");
+        assert_eq!(text.matches("# TYPE moe_gen_serve_ttft_p99 gauge").count(), 1);
     }
 
     #[test]

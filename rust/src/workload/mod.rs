@@ -34,13 +34,35 @@ pub enum ArrivalMode {
     /// released only while fewer than `concurrency` are in the system
     /// (arrival is completion-driven, so there is no arrival-tick trace).
     ClosedLoop { concurrency: usize },
+    /// Open loop with a sinusoidal daily cycle: exponential gaps whose
+    /// instantaneous mean swings around `mean_gap` with the given
+    /// `period` (in ticks) — rush hour at the trough, lull at the crest.
+    Diurnal { mean_gap: f64, period: f64 },
 }
 
-/// A deterministic arrival process: mode + seed.
+/// A deterministic arrival process: mode + seed + tenant mix.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ArrivalSpec {
     pub mode: ArrivalMode,
     pub seed: u64,
+    /// Fraction of requests tagged latency-sensitive
+    /// ([`crate::serve::Class::LatencySensitive`]); the rest are
+    /// throughput-batch. 0 = single-tenant.
+    pub latency_frac: f64,
+    /// Fraction of requests given the workload's common prompt prefix
+    /// (what shared-prefix KV dedup shares). 0 = fully distinct prompts.
+    pub prefix_share: f64,
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        ArrivalSpec {
+            mode: ArrivalMode::AtTimeZero,
+            seed: 0,
+            latency_frac: 0.0,
+            prefix_share: 0.0,
+        }
+    }
 }
 
 impl ArrivalMode {
@@ -52,20 +74,22 @@ impl ArrivalMode {
             ArrivalMode::OpenLoop { .. } => "open",
             ArrivalMode::Bursty { .. } => "bursty",
             ArrivalMode::ClosedLoop { .. } => "closed",
+            ArrivalMode::Diurnal { .. } => "diurnal",
         }
     }
 
     /// The single owner of the mode vocabulary and per-mode knob
     /// defaults — both the CLI (`--arrival` + `--gap`/`--burst`/
-    /// `--concurrency`) and the JSON decoding build modes through this,
-    /// so they cannot drift apart. A knob the mode does not use is an
-    /// error, not a silent no-op: `--arrival t0 --gap 3` must fail
-    /// loudly instead of measuring the wrong regime.
+    /// `--concurrency`/`--period`) and the JSON decoding build modes
+    /// through this, so they cannot drift apart. A knob the mode does
+    /// not use is an error, not a silent no-op: `--arrival t0 --gap 3`
+    /// must fail loudly instead of measuring the wrong regime.
     pub fn from_parts(
         name: &str,
         mean_gap: Option<f64>,
         burst: Option<usize>,
         concurrency: Option<usize>,
+        period: Option<f64>,
     ) -> Result<ArrivalMode, String> {
         let reject = |knob: &str, mode: &str| {
             Err(format!("arrival mode {mode} does not take {knob} (it would be ignored)"))
@@ -81,6 +105,9 @@ impl ArrivalMode {
                 if concurrency.is_some() {
                     return reject("a concurrency", "t0");
                 }
+                if period.is_some() {
+                    return reject("a period", "t0");
+                }
                 ArrivalMode::AtTimeZero
             }
             "open" => {
@@ -90,11 +117,17 @@ impl ArrivalMode {
                 if concurrency.is_some() {
                     return reject("a concurrency", "open");
                 }
+                if period.is_some() {
+                    return reject("a period", "open");
+                }
                 ArrivalMode::OpenLoop { mean_gap: mean_gap.unwrap_or(1.0) }
             }
             "bursty" => {
                 if concurrency.is_some() {
                     return reject("a concurrency", "bursty");
+                }
+                if period.is_some() {
+                    return reject("a period", "bursty");
                 }
                 ArrivalMode::Bursty {
                     mean_gap: mean_gap.unwrap_or(4.0),
@@ -108,10 +141,27 @@ impl ArrivalMode {
                 if burst.is_some() {
                     return reject("a burst", "closed");
                 }
+                if period.is_some() {
+                    return reject("a period", "closed");
+                }
                 ArrivalMode::ClosedLoop { concurrency: concurrency.unwrap_or(16) }
             }
+            "diurnal" => {
+                if burst.is_some() {
+                    return reject("a burst", "diurnal");
+                }
+                if concurrency.is_some() {
+                    return reject("a concurrency", "diurnal");
+                }
+                ArrivalMode::Diurnal {
+                    mean_gap: mean_gap.unwrap_or(4.0),
+                    period: period.unwrap_or(64.0),
+                }
+            }
             other => {
-                return Err(format!("unknown arrival mode {other:?}; try t0|open|bursty|closed"))
+                return Err(format!(
+                    "unknown arrival mode {other:?}; try t0|open|bursty|closed|diurnal"
+                ))
             }
         })
     }
@@ -122,7 +172,9 @@ impl ArrivalMode {
     pub fn validate(&self) -> Result<(), String> {
         match *self {
             ArrivalMode::AtTimeZero => {}
-            ArrivalMode::OpenLoop { mean_gap } | ArrivalMode::Bursty { mean_gap, .. } => {
+            ArrivalMode::OpenLoop { mean_gap }
+            | ArrivalMode::Bursty { mean_gap, .. }
+            | ArrivalMode::Diurnal { mean_gap, .. } => {
                 if !mean_gap.is_finite() || mean_gap < 0.0 {
                     return Err(format!(
                         "arrival: mean_gap must be a non-negative number, got {mean_gap}"
@@ -140,17 +192,37 @@ impl ArrivalMode {
                 return Err("arrival: burst must be >= 1".into());
             }
         }
+        if let ArrivalMode::Diurnal { period, .. } = *self {
+            if !period.is_finite() || period <= 0.0 {
+                return Err(format!("arrival: period must be a positive number, got {period}"));
+            }
+        }
         Ok(())
     }
 }
 
 impl ArrivalSpec {
     pub fn at_time_zero() -> Self {
-        ArrivalSpec { mode: ArrivalMode::AtTimeZero, seed: 0 }
+        ArrivalSpec::default()
+    }
+
+    /// Tenant-mix sanity: both fractions must be probabilities. Called
+    /// from [`crate::spec::JobSpec::validate`] alongside
+    /// [`ArrivalMode::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        self.mode.validate()?;
+        for (name, v) in [("latency_frac", self.latency_frac), ("prefix_share", self.prefix_share)]
+        {
+            if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                return Err(format!("arrival: {name} must be a fraction in [0, 1], got {v}"));
+            }
+        }
+        Ok(())
     }
 
     /// JSON encoding (`{"mode": "bursty", "mean_gap": 4, "burst": 8,
-    /// "seed": 0}`); mode-irrelevant knobs are omitted.
+    /// "seed": 0}`); mode-irrelevant knobs and zero tenant-mix
+    /// fractions are omitted.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("mode".to_string(), Json::Str(self.mode.slug().to_string()));
@@ -167,6 +239,16 @@ impl ArrivalSpec {
             ArrivalMode::ClosedLoop { concurrency } => {
                 m.insert("concurrency".to_string(), Json::Num(concurrency as f64));
             }
+            ArrivalMode::Diurnal { mean_gap, period } => {
+                m.insert("mean_gap".to_string(), Json::Num(mean_gap));
+                m.insert("period".to_string(), Json::Num(period));
+            }
+        }
+        if self.latency_frac != 0.0 {
+            m.insert("latency_frac".to_string(), Json::Num(self.latency_frac));
+        }
+        if self.prefix_share != 0.0 {
+            m.insert("prefix_share".to_string(), Json::Num(self.prefix_share));
         }
         Json::Obj(m)
     }
@@ -202,9 +284,17 @@ impl ArrivalSpec {
             num("mean_gap")?,
             uint("burst")?.map(|n| n as usize),
             uint("concurrency")?.map(|n| n as usize),
+            num("period")?,
         )
         .map_err(|e| format!("arrival: {e}"))?;
-        Ok(ArrivalSpec { mode, seed: uint("seed")?.unwrap_or(0) })
+        let spec = ArrivalSpec {
+            mode,
+            seed: uint("seed")?.unwrap_or(0),
+            latency_frac: num("latency_frac")?.unwrap_or(0.0),
+            prefix_share: num("prefix_share")?.unwrap_or(0.0),
+        };
+        spec.validate()?;
+        Ok(spec)
     }
 
     /// Arrival tick per request (non-decreasing, deterministic in the
@@ -234,6 +324,20 @@ impl ArrivalSpec {
                     t += rng.exp(mean_gap);
                 }
                 out
+            }
+            ArrivalMode::Diurnal { mean_gap, period } => {
+                let period = period.max(1e-6);
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|_| {
+                        // The instantaneous mean gap swings sinusoidally
+                        // around the configured mean — a lull at the
+                        // crest, rush hour near the trough.
+                        let swing = (std::f64::consts::TAU * t / period).sin();
+                        t += rng.exp(mean_gap * (1.0 + 0.75 * swing));
+                        t.round() as u64
+                    })
+                    .collect()
             }
         }
     }
@@ -372,29 +476,40 @@ mod tests {
 
     #[test]
     fn arrival_ticks_deterministic_and_monotone() {
-        let spec = ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 2.0 }, seed: 11 };
+        let spec = ArrivalSpec {
+            mode: ArrivalMode::OpenLoop { mean_gap: 2.0 },
+            seed: 11,
+            ..ArrivalSpec::default()
+        };
         let a = spec.arrival_ticks(64);
         let b = spec.arrival_ticks(64);
         assert_eq!(a, b, "trace must be deterministic in the seed");
         assert!(a.windows(2).all(|w| w[0] <= w[1]), "ticks must be non-decreasing");
         assert!(*a.last().unwrap() > 0, "open-loop arrivals must spread over time");
-        let c = ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 2.0 }, seed: 12 }
-            .arrival_ticks(64);
+        let c = ArrivalSpec {
+            mode: ArrivalMode::OpenLoop { mean_gap: 2.0 },
+            seed: 12,
+            ..ArrivalSpec::default()
+        }
+        .arrival_ticks(64);
         assert_ne!(a, c, "different seeds must give different traces");
     }
 
     #[test]
     fn at_time_zero_and_closed_loop_release_everything_up_front() {
         for mode in [ArrivalMode::AtTimeZero, ArrivalMode::ClosedLoop { concurrency: 4 }] {
-            let ticks = ArrivalSpec { mode, seed: 3 }.arrival_ticks(10);
+            let ticks = ArrivalSpec { mode, seed: 3, ..ArrivalSpec::default() }.arrival_ticks(10);
             assert_eq!(ticks, vec![0; 10]);
         }
     }
 
     #[test]
     fn bursty_trace_groups_arrivals() {
-        let spec =
-            ArrivalSpec { mode: ArrivalMode::Bursty { mean_gap: 16.0, burst: 8 }, seed: 5 };
+        let spec = ArrivalSpec {
+            mode: ArrivalMode::Bursty { mean_gap: 16.0, burst: 8 },
+            seed: 5,
+            ..ArrivalSpec::default()
+        };
         let ticks = spec.arrival_ticks(32);
         assert_eq!(ticks.len(), 32);
         assert!(ticks.windows(2).all(|w| w[0] <= w[1]));
@@ -408,9 +523,21 @@ mod tests {
     fn arrival_spec_json_roundtrip() {
         let specs = [
             ArrivalSpec::at_time_zero(),
-            ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 2.5 }, seed: 7 },
-            ArrivalSpec { mode: ArrivalMode::Bursty { mean_gap: 8.0, burst: 32 }, seed: 1 },
-            ArrivalSpec { mode: ArrivalMode::ClosedLoop { concurrency: 16 }, seed: 3 },
+            ArrivalSpec {
+                mode: ArrivalMode::OpenLoop { mean_gap: 2.5 },
+                seed: 7,
+                ..ArrivalSpec::default()
+            },
+            ArrivalSpec {
+                mode: ArrivalMode::Bursty { mean_gap: 8.0, burst: 32 },
+                seed: 1,
+                ..ArrivalSpec::default()
+            },
+            ArrivalSpec {
+                mode: ArrivalMode::ClosedLoop { concurrency: 16 },
+                seed: 3,
+                ..ArrivalSpec::default()
+            },
         ];
         for s in specs {
             let back = ArrivalSpec::from_json(&s.to_json()).unwrap();
@@ -422,12 +549,12 @@ mod tests {
 
     #[test]
     fn from_parts_rejects_knobs_the_mode_cannot_use() {
-        assert!(ArrivalMode::from_parts("t0", Some(3.0), None, None).is_err());
-        assert!(ArrivalMode::from_parts("open", None, Some(8), None).is_err());
-        assert!(ArrivalMode::from_parts("closed", Some(1.0), None, None).is_err());
-        assert!(ArrivalMode::from_parts("bursty", None, None, Some(4)).is_err());
+        assert!(ArrivalMode::from_parts("t0", Some(3.0), None, None, None).is_err());
+        assert!(ArrivalMode::from_parts("open", None, Some(8), None, None).is_err());
+        assert!(ArrivalMode::from_parts("closed", Some(1.0), None, None, None).is_err());
+        assert!(ArrivalMode::from_parts("bursty", None, None, Some(4), None).is_err());
         assert_eq!(
-            ArrivalMode::from_parts("bursty", Some(2.0), Some(4), None),
+            ArrivalMode::from_parts("bursty", Some(2.0), Some(4), None, None),
             Ok(ArrivalMode::Bursty { mean_gap: 2.0, burst: 4 })
         );
         // Strict numbers in the JSON decoding too.
@@ -445,6 +572,77 @@ mod tests {
         assert!(ArrivalMode::ClosedLoop { concurrency: 0 }.validate().is_err());
         assert!(ArrivalMode::AtTimeZero.validate().is_ok());
         assert!(ArrivalMode::OpenLoop { mean_gap: 0.0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn diurnal_trace_is_deterministic_and_cyclic() {
+        let spec = ArrivalSpec {
+            mode: ArrivalMode::Diurnal { mean_gap: 2.0, period: 64.0 },
+            seed: 4,
+            ..ArrivalSpec::default()
+        };
+        let a = spec.arrival_ticks(128);
+        assert_eq!(a, spec.arrival_ticks(128), "trace must be deterministic");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "ticks must be non-decreasing");
+        assert!(*a.last().unwrap() > 0);
+        // The sinusoidal rate must actually modulate density: count
+        // arrivals per period-sized window and expect real spread.
+        let last = *a.last().unwrap();
+        let windows = (last / 64 + 1) as usize;
+        let mut per = vec![0usize; windows];
+        for &t in &a {
+            per[(t / 64) as usize] += 1;
+        }
+        let lo = per.iter().copied().min().unwrap();
+        let hi = per.iter().copied().max().unwrap();
+        assert!(hi > lo, "diurnal trace should have dense and sparse phases, got {per:?}");
+    }
+
+    #[test]
+    fn diurnal_from_parts_and_json_roundtrip() {
+        assert_eq!(
+            ArrivalMode::from_parts("diurnal", Some(2.0), None, None, Some(32.0)),
+            Ok(ArrivalMode::Diurnal { mean_gap: 2.0, period: 32.0 })
+        );
+        assert!(ArrivalMode::from_parts("diurnal", None, Some(4), None, None).is_err());
+        assert!(ArrivalMode::from_parts("diurnal", None, None, Some(4), None).is_err());
+        assert!(ArrivalMode::from_parts("t0", None, None, None, Some(8.0)).is_err());
+        assert!(ArrivalMode::from_parts("open", None, None, None, Some(8.0)).is_err());
+        let s = ArrivalSpec {
+            mode: ArrivalMode::Diurnal { mean_gap: 3.0, period: 48.0 },
+            seed: 2,
+            latency_frac: 0.5,
+            prefix_share: 0.25,
+        };
+        let back = ArrivalSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert!(ArrivalMode::Diurnal { mean_gap: 1.0, period: 0.0 }.validate().is_err());
+        assert!(ArrivalMode::Diurnal { mean_gap: 1.0, period: f64::NAN }.validate().is_err());
+        assert!(ArrivalMode::Diurnal { mean_gap: 1.0, period: 16.0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn tenant_mix_fractions_validate_and_roundtrip() {
+        let mut s = ArrivalSpec::default();
+        assert!(s.validate().is_ok());
+        s.latency_frac = 1.5;
+        assert!(s.validate().is_err(), "latency_frac above 1 must be rejected");
+        s.latency_frac = -0.1;
+        assert!(s.validate().is_err());
+        s.latency_frac = 0.5;
+        s.prefix_share = f64::NAN;
+        assert!(s.validate().is_err(), "NaN prefix_share must be rejected");
+        s.prefix_share = 0.75;
+        assert!(s.validate().is_ok());
+        // Zero fractions are omitted from the JSON (stable old encoding)…
+        let plain = ArrivalSpec::default().to_json();
+        assert!(plain.get("latency_frac").is_none());
+        assert!(plain.get("prefix_share").is_none());
+        // …and bad fractions in a config file fail the decode.
+        let bad = Json::parse(r#"{"mode": "t0", "latency_frac": 2.0}"#).unwrap();
+        assert!(ArrivalSpec::from_json(&bad).is_err());
+        let back = ArrivalSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
     }
 
     #[test]

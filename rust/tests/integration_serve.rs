@@ -36,7 +36,13 @@ fn fixed_requests(prompts: &[Vec<i32>], max_new: usize, arrivals: &[u64]) -> Vec
         .iter()
         .zip(arrivals)
         .enumerate()
-        .map(|(id, (p, &arrival))| Request { id, prompt: p.clone(), max_new, arrival })
+        .map(|(id, (p, &arrival))| Request {
+            id,
+            prompt: p.clone(),
+            max_new,
+            arrival,
+            ..Request::default()
+        })
         .collect()
 }
 
@@ -70,7 +76,11 @@ fn serve_at_t0_without_eos_matches_run_offline() {
 #[test]
 fn module_and_continuous_serve_the_same_trace_with_identical_tokens() {
     let ps = prompts(8);
-    let arrival = ArrivalSpec { mode: ArrivalMode::OpenLoop { mean_gap: 1.0 }, seed: 9 };
+    let arrival = ArrivalSpec {
+        mode: ArrivalMode::OpenLoop { mean_gap: 1.0 },
+        seed: 9,
+        ..ArrivalSpec::default()
+    };
     let arrivals = arrival.arrival_ticks(ps.len());
     let mut reports = Vec::new();
     for policy in [Policy::ModuleBased, Policy::Continuous] {
@@ -113,7 +123,13 @@ fn backfill_keeps_expert_batch_near_offline_while_draining() {
         ps.iter()
             .zip(&budgets)
             .enumerate()
-            .map(|(id, (p, &b))| Request { id, prompt: p.clone(), max_new: b, arrival: 0 })
+            .map(|(id, (p, &b))| Request {
+                id,
+                prompt: p.clone(),
+                max_new: b,
+                arrival: 0,
+                ..Request::default()
+            })
             .collect::<Vec<_>>()
     };
     let cfg = ServeConfig {
@@ -194,7 +210,10 @@ fn closed_loop_concurrency_bounds_the_in_flight_set() {
     let ps = prompts(9);
     let cfg = ServeConfig {
         eng: eng_cfg(Policy::ModuleBased),
-        arrival: ArrivalSpec { mode: ArrivalMode::ClosedLoop { concurrency: 3 }, seed: 0 },
+        arrival: ArrivalSpec {
+            mode: ArrivalMode::ClosedLoop { concurrency: 3 },
+            ..ArrivalSpec::default()
+        },
         ..ServeConfig::default()
     };
     let rep = serve::serve(&cfg, fixed_requests(&ps, 4, &[0; 9])).unwrap();

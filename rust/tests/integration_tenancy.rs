@@ -1,0 +1,397 @@
+//! Integration: the multi-tenant serving layer (DESIGN.md §13).
+//!
+//! The tenancy contract:
+//!
+//! * **scheduling is throughput-only** — SLO priority, decode-wave
+//!   preemption, chunked prefill and shared-prefix dedup are all
+//!   latency/memory knobs: for the same request set they emit
+//!   bit-identical greedy token streams (wave membership never changes
+//!   the math, and a donor's copied prefix rows equal recomputed ones);
+//! * **SLO classes pay off** — on a mixed 50/50 burst, latency-class
+//!   p99 TTFT under the SLO scheduler beats plain FIFO by at least 2×
+//!   while total work is unchanged;
+//! * **aging prevents starvation** — a batch-class request facing a
+//!   continuous latency stream is promoted after `AGING_TICKS` and
+//!   finishes in bounded time;
+//! * **no slot is ever leaked or double-owned** — across random
+//!   admit/preempt/finish interleavings the KV pool accounting stays
+//!   exact, donors refcount correctly, and teardown returns every byte.
+//!
+//! Everything runs hermetically on the reference backend; the legacy
+//! `serve::serve` wrapper is exercised on purpose (deprecated thin
+//! wrapper over the session layer, behaviour-pinned until removal).
+#![allow(deprecated)]
+
+use moe_gen::config::{EngineConfig, Policy};
+use moe_gen::engine::Engine;
+use moe_gen::serve::{
+    self, AdmissionController, Class, ClassStats, Request, ServeConfig, ServeReport, WaveScheduler,
+};
+use moe_gen::util::prop::prop_check;
+use moe_gen::workload::{self, ArrivalSpec};
+
+/// A narrow engine (wave width 4) so a handful of requests exercises
+/// queueing, preemption and seat contention.
+fn narrow_eng() -> EngineConfig {
+    EngineConfig {
+        policy: Policy::ModuleBased,
+        max_batch: 4,
+        attn_micro: 2,
+        ..EngineConfig::default()
+    }
+}
+
+fn class_stats(rep: &ServeReport, class: Class) -> &ClassStats {
+    rep.classes
+        .iter()
+        .find(|c| c.class == class)
+        .unwrap_or_else(|| panic!("report has no stats for {class:?}"))
+}
+
+#[test]
+fn preemption_is_token_invariant_and_parks_batch_work() {
+    // 12 long batch-class decodes arrive at t = 0 and fill the 4-wide
+    // wave; 6 short latency-class requests trickle in afterwards. With
+    // more KV slots (8) than wave seats (4), the preemptor must park
+    // decoding batch work (keeping its slot) to seat them immediately.
+    let ps = workload::generate_prompts(18, 6, 10, 512, 21);
+    let mk_reqs = || {
+        ps.iter()
+            .enumerate()
+            .map(|(id, p)| {
+                let latency = id >= 12;
+                Request {
+                    id,
+                    prompt: p.clone(),
+                    max_new: if latency { 3 } else { 12 },
+                    arrival: if latency { 2 + (id as u64 - 12) } else { 0 },
+                    class: if latency { Class::LatencySensitive } else { Class::ThroughputBatch },
+                    ..Request::default()
+                }
+            })
+            .collect::<Vec<_>>()
+    };
+    let cfg = ServeConfig {
+        eng: narrow_eng(),
+        arrival: ArrivalSpec::at_time_zero(),
+        kv_slots: Some(8),
+        slo: true,
+        preempt: true,
+        ..ServeConfig::default()
+    };
+    let rep_on = serve::serve(&cfg, mk_reqs()).unwrap();
+    let cfg_off = ServeConfig { preempt: false, ..cfg };
+    let rep_off = serve::serve(&cfg_off, mk_reqs()).unwrap();
+
+    assert!(rep_on.preemptions > 0, "slots outnumber seats: batch work must park");
+    assert!(rep_on.parked_peak >= 1);
+    assert_eq!(rep_off.preemptions, 0, "preemption disabled must never park");
+    assert_eq!(
+        rep_on.tokens, rep_off.tokens,
+        "preemption changed greedy tokens (must be throughput-only)"
+    );
+    for rep in [&rep_on, &rep_off] {
+        assert_eq!(rep.finished_eos + rep.finished_max, 18);
+        assert_eq!(rep.leaked_slots, 0, "parked slots must all come back");
+    }
+    // Parking exists to serve latency-class work sooner.
+    let on = class_stats(&rep_on, Class::LatencySensitive);
+    let off = class_stats(&rep_off, Class::LatencySensitive);
+    assert!(
+        on.ttft_p99_ticks <= off.ttft_p99_ticks,
+        "preemption made latency TTFT worse: {} vs {}",
+        on.ttft_p99_ticks,
+        off.ttft_p99_ticks
+    );
+}
+
+#[test]
+fn slo_scheduling_beats_fifo_on_latency_class_ttft() {
+    // A 50/50 mixed burst at t = 0: short latency-class requests
+    // interleaved (by id) with long batch-class decodes, through a
+    // 4-seat wave. FIFO admits in id order, so latency work queues
+    // behind whole batch waves; the SLO scheduler seats every
+    // latency-class request first.
+    let ps = workload::generate_prompts(32, 6, 10, 512, 17);
+    let mk_reqs = || {
+        ps.iter()
+            .enumerate()
+            .map(|(id, p)| {
+                let latency = id % 2 == 1;
+                Request {
+                    id,
+                    prompt: p.clone(),
+                    max_new: if latency { 2 } else { 10 },
+                    arrival: 0,
+                    class: if latency { Class::LatencySensitive } else { Class::ThroughputBatch },
+                    ..Request::default()
+                }
+            })
+            .collect::<Vec<_>>()
+    };
+    let base = ServeConfig {
+        eng: narrow_eng(),
+        arrival: ArrivalSpec::at_time_zero(),
+        kv_slots: Some(4),
+        ..ServeConfig::default()
+    };
+    let fifo = serve::serve(&base, mk_reqs()).unwrap();
+    let slo = serve::serve(&ServeConfig { slo: true, ..base }, mk_reqs()).unwrap();
+
+    // Same math, same work: scheduling only moves latency around.
+    assert_eq!(slo.tokens, fifo.tokens, "SLO scheduling changed greedy tokens");
+    assert_eq!(slo.decode_tokens, fifo.decode_tokens);
+    for rep in [&fifo, &slo] {
+        assert_eq!(rep.finished_eos + rep.finished_max, 32);
+        assert_eq!(rep.leaked_slots, 0);
+    }
+    // The acceptance bar: latency-class p99 TTFT at least 2x better.
+    let f = class_stats(&fifo, Class::LatencySensitive);
+    let s = class_stats(&slo, Class::LatencySensitive);
+    assert_eq!(f.requests, 16);
+    assert_eq!(s.requests, 16);
+    assert!(
+        2.0 * s.ttft_p99_ticks <= f.ttft_p99_ticks,
+        "SLO p99 TTFT {} ticks is not 2x better than FIFO {} ticks",
+        s.ttft_p99_ticks,
+        f.ttft_p99_ticks
+    );
+    assert!(s.ttft_p50_ticks < f.ttft_p50_ticks, "median latency-class TTFT must improve too");
+}
+
+#[test]
+fn prefix_dedup_is_token_invariant_and_saves_kv_bytes() {
+    // Ten requests sharing a 4-token prefix: with dedup on, the first
+    // admission installs a donor and every later one copies the donor's
+    // rows instead of re-prefilling them. Tokens must not move.
+    let prefix = [11, 22, 33, 44];
+    let mk_reqs = || {
+        (0..10)
+            .map(|id| {
+                let mut prompt = prefix.to_vec();
+                prompt.extend([100 + id as i32, 7]);
+                Request {
+                    id,
+                    prompt,
+                    max_new: 4,
+                    arrival: 0,
+                    prefix_len: prefix.len(),
+                    ..Request::default()
+                }
+            })
+            .collect::<Vec<_>>()
+    };
+    let cfg = ServeConfig {
+        eng: narrow_eng(),
+        arrival: ArrivalSpec::at_time_zero(),
+        kv_slots: Some(6),
+        prefix_dedup: true,
+        ..ServeConfig::default()
+    };
+    let rep_on = serve::serve(&cfg, mk_reqs()).unwrap();
+    let cfg_off = ServeConfig { prefix_dedup: false, ..cfg };
+    let rep_off = serve::serve(&cfg_off, mk_reqs()).unwrap();
+
+    assert!(rep_on.dedup_hits > 0, "sharers must admit through the donor");
+    assert!(rep_on.dedup_bytes > 0, "donor copies must account saved KV bytes");
+    assert_eq!(rep_off.dedup_hits, 0);
+    assert_eq!(rep_off.dedup_bytes, 0);
+    assert_eq!(
+        rep_on.tokens, rep_off.tokens,
+        "prefix dedup changed greedy tokens (copied rows must equal recomputed rows)"
+    );
+    for rep in [&rep_on, &rep_off] {
+        assert_eq!(rep.finished_eos + rep.finished_max, 10);
+        assert_eq!(rep.leaked_slots, 0, "donor slots must drain, not leak");
+    }
+}
+
+#[test]
+fn chunked_prefill_is_token_invariant() {
+    // Long prompts pushed through a 3-token prefill budget per tick:
+    // admissions span several ticks as partials, but the resumable
+    // prefill is bit-identical to the whole-prompt one.
+    let ps = workload::generate_prompts(8, 12, 20, 512, 5);
+    let mk_reqs = || {
+        ps.iter()
+            .enumerate()
+            .map(|(id, p)| Request {
+                id,
+                prompt: p.clone(),
+                max_new: 4,
+                arrival: 0,
+                ..Request::default()
+            })
+            .collect::<Vec<_>>()
+    };
+    let base = ServeConfig {
+        eng: narrow_eng(),
+        arrival: ArrivalSpec::at_time_zero(),
+        kv_slots: Some(4),
+        ..ServeConfig::default()
+    };
+    let whole = serve::serve(&base, mk_reqs()).unwrap();
+    let chunked =
+        serve::serve(&ServeConfig { prefill_chunk_tokens: Some(3), ..base }, mk_reqs()).unwrap();
+
+    assert_eq!(chunked.tokens, whole.tokens, "chunked prefill changed greedy tokens");
+    for rep in [&whole, &chunked] {
+        assert_eq!(rep.finished_eos + rep.finished_max, 8);
+        assert_eq!(rep.leaked_slots, 0);
+    }
+}
+
+#[test]
+fn aging_prevents_batch_class_starvation() {
+    // One batch-class request vs a continuous latency stream through a
+    // single seat. Pure priority would starve it until the stream ends
+    // (~24 ticks); aging promotes it to rank 0 after AGING_TICKS (8),
+    // and its earlier arrival then wins the tie, bounding its TTFT.
+    let ps = workload::generate_prompts(13, 5, 8, 512, 31);
+    let reqs: Vec<Request> = ps
+        .iter()
+        .enumerate()
+        .map(|(id, p)| {
+            if id == 0 {
+                Request { id, prompt: p.clone(), max_new: 3, arrival: 0, ..Request::default() }
+            } else {
+                Request {
+                    id,
+                    prompt: p.clone(),
+                    max_new: 2,
+                    arrival: id as u64 - 1,
+                    class: Class::LatencySensitive,
+                    ..Request::default()
+                }
+            }
+        })
+        .collect();
+    let cfg = ServeConfig {
+        eng: EngineConfig { max_batch: 1, attn_micro: 1, ..narrow_eng() },
+        arrival: ArrivalSpec::at_time_zero(),
+        kv_slots: Some(1),
+        slo: true,
+        preempt: false,
+        ..ServeConfig::default()
+    };
+    let rep = serve::serve(&cfg, reqs).unwrap();
+    assert_eq!(rep.finished_eos + rep.finished_max, 13);
+    assert_eq!(rep.leaked_slots, 0);
+    let batch = class_stats(&rep, Class::ThroughputBatch);
+    assert_eq!(batch.requests, 1);
+    assert!(
+        batch.ttft_p99_ticks <= 16.0,
+        "aged batch request waited {} ticks: starved past the aging bound",
+        batch.ttft_p99_ticks
+    );
+    assert_eq!(class_stats(&rep, Class::LatencySensitive).requests, 12);
+}
+
+#[test]
+fn prop_random_admit_preempt_finish_interleavings_never_leak() {
+    // 100 random interleavings of admit (plain / via-donor / installing
+    // a donor), decode-wave preemption (park), resume and finish over a
+    // small shared pool. Throughout: the pool accounting is exact, no
+    // KV slot is ever owned twice, donor refcounts equal the live
+    // sharers, and teardown returns the pool to zero bytes.
+    fn finish(
+        i: usize,
+        sched: &mut WaveScheduler,
+        adm: &mut AdmissionController,
+        live: &mut Vec<(usize, usize, bool)>,
+        prefix: &[i32],
+    ) {
+        let (id, slot) = sched.retire(i);
+        let pos = live
+            .iter()
+            .position(|&(lid, _, _)| lid == id)
+            .expect("retired a request that was never admitted");
+        let (_, admitted_slot, has_ref) = live.swap_remove(pos);
+        assert_eq!(admitted_slot, slot, "scheduler returned a different slot than admitted");
+        if has_ref {
+            adm.release_prefix_ref(prefix);
+        }
+        adm.recycle(slot);
+    }
+
+    prop_check(100, |rng| {
+        let mut eng = Engine::new(EngineConfig::default()).unwrap();
+        let total = rng.range(3, 8);
+        let mut adm = AdmissionController::with_slots(&mut eng, total).unwrap();
+        let mut sched = WaveScheduler::new(adm.kv(), total, 1, 1, true);
+        let prefix: Vec<i32> = vec![3, 1, 4];
+        let mut next_id = 0usize;
+        // Live requests: (id, slot, holds a donor reference).
+        let mut live: Vec<(usize, usize, bool)> = Vec::new();
+        let mut parks = 0u64;
+
+        for _ in 0..rng.range(20, 80) {
+            match rng.below(4) {
+                0 | 1 => {
+                    // Admit: claim a slot (evicting an idle donor under
+                    // pressure), optionally through or installing the donor.
+                    if let Some(slot) = adm.alloc_slot() {
+                        let donor_up = adm.donors().iter().any(|e| e.key == prefix);
+                        let mut has_ref = false;
+                        if donor_up && rng.f64() < 0.5 {
+                            assert_eq!(adm.admit_via_donor(&prefix, slot), Some(prefix.len()));
+                            has_ref = true;
+                        } else if rng.f64() < 0.3 {
+                            adm.kv().write().unwrap().set_len(slot, prefix.len());
+                            has_ref = adm.install_donor(&prefix, slot);
+                        }
+                        adm.note_admitted(1);
+                        sched.push(next_id, slot, 1, 7);
+                        live.push((next_id, slot, has_ref));
+                        next_id += 1;
+                    }
+                }
+                2 => {
+                    // Preempt: park a random in-flight request (keeps slot).
+                    if sched.in_flight() > 0 {
+                        let i = rng.below(sched.in_flight());
+                        sched.park(i);
+                        parks += 1;
+                    }
+                }
+                _ => {
+                    // Finish: retire a random in-flight request; resume a
+                    // parked one first when the decode set ran dry.
+                    if sched.in_flight() == 0 && !sched.parked.is_empty() {
+                        sched.resume_one();
+                    }
+                    if sched.in_flight() > 0 {
+                        let i = rng.below(sched.in_flight());
+                        finish(i, &mut sched, &mut adm, &mut live, &prefix);
+                    }
+                }
+            }
+
+            // Invariants after every operation.
+            assert_eq!(sched.in_flight() + sched.parked.len(), live.len());
+            assert_eq!(adm.slots_in_use(), live.len() + adm.donors().len());
+            assert!(adm.slots_in_use() <= adm.total_slots(), "pool over-committed");
+            let refs: usize = adm.donors().iter().map(|e| e.refs).sum();
+            assert_eq!(refs, live.iter().filter(|&&(_, _, r)| r).count());
+            let mut owned: Vec<usize> = sched.state.slots.clone();
+            owned.extend(sched.parked.iter().map(|p| p.slot));
+            owned.extend(adm.donors().iter().map(|e| e.slot));
+            let n_owned = owned.len();
+            owned.sort_unstable();
+            owned.dedup();
+            assert_eq!(owned.len(), n_owned, "a KV slot is owned twice (double free ahead)");
+        }
+
+        // Drain: resume everything parked, finish everything in flight.
+        while sched.resume_one().is_some() {}
+        while sched.in_flight() > 0 {
+            finish(0, &mut sched, &mut adm, &mut live, &prefix);
+        }
+        assert!(live.is_empty());
+        assert_eq!(sched.preemptions, parks);
+        adm.drain_donors();
+        assert_eq!(adm.slots_in_use(), 0, "slots leaked after drain");
+        adm.shutdown(&mut eng);
+        assert_eq!(eng.host_pool.used(), 0, "host pool bytes leaked");
+    });
+}

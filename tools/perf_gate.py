@@ -3,9 +3,22 @@
 
 Records appended by ``session::append_bench_record`` carry a
 ``config_key`` (``{job}/{policy}/{strategy_source}/nd{n_devices}`` for
-session runs, ``bench/...`` for standalone benches). Only records with
-the same key measure the same experiment, so the gate groups by key and
-diffs the **newest record against the one before it**:
+session runs, ``bench/...`` for standalone benches). Serve jobs with
+non-default tenancy knobs (DESIGN.md §13) extend the key with ordered
+suffixes so multi-tenant experiments gate against their own history
+rather than the single-tenant trajectory:
+
+* ``/slo{pct}`` — SLO-class scheduling on, with the latency-sensitive
+  tenant fraction as a whole percentage (``/slo50`` = 50% mix);
+* ``/dedup{pct}`` — shared-prefix KV dedup on, with the prefix-share
+  fraction (``/dedup25`` = 25% of requests share the prefix);
+* ``/pct{T}`` — chunked prefill at ``T`` prompt tokens per tick;
+* ``/pc{N}`` — an explicit prefill wave width of ``N`` requests.
+
+e.g. ``serve/module/defaults/nd1/slo50/dedup50``. Knobs left at their
+defaults add nothing, so pre-tenancy keys are unchanged. Only records
+with the same key measure the same experiment, so the gate groups by
+key and diffs the **newest record against the one before it**:
 
 * throughput (first of ``total_tps``, ``decode_tps``, ``speedup``)
   dropping more than ``--max-regression`` (default 10%) fails;
