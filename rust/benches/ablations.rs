@@ -8,6 +8,7 @@
 //!   * prefetch vs on-demand weight fetching (under a throttled link)
 //!   * baseline micro-batch size (the unified batch the model-based and
 //!     continuous baselines push through the whole model)
+//!   * sticky expert replication (fraction of S_Expert; DESIGN.md §14)
 //!
 //! Every row constructs its job through the typed [`JobSpec`] layer and
 //! runs it through a [`Session`] — the same path the CLI uses — so the
@@ -37,7 +38,15 @@ fn run(spec: JobSpec, prompts: &[Vec<i32>], steps: usize) -> (f64, f64, Vec<Vec<
     (t0.elapsed().as_secs_f64(), rep.decode_tp, rep.tokens)
 }
 
+/// Substring section filters, hotpath-bench style: `cargo bench --bench
+/// ablations -- replication` runs only the matching sections (CI smokes
+/// a single section this way); no args runs everything.
+fn enabled(filters: &[String], name: &str) -> bool {
+    filters.is_empty() || filters.iter().any(|f| name.contains(f.as_str()))
+}
+
 fn main() {
+    let filters: Vec<String> = std::env::args().skip(1).collect();
     let prompts = workload::generate_prompts(48, 24, 64, 512, 3);
     let steps = 12;
     let mut reference: Option<Vec<Vec<i32>>> = None;
@@ -48,136 +57,214 @@ fn main() {
         }
     }
 
-    println!("== ablation: accumulated batch B (max_batch) ==");
-    for b in [4usize, 16, 48] {
-        let mut spec = base_spec();
-        spec.eng.max_batch = b;
-        // Keep the spec valid: attention can never micro-batch more
-        // sequences than the wave accumulates (validate rejects b_a > B).
-        spec.eng.attn_micro = spec.eng.attn_micro.min(b);
-        let (wall, dtp, toks) = run(spec, &prompts, steps);
-        check(&mut reference, "max_batch", &toks);
-        println!("bench: ablate_B_{b:<4}        wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
+    if enabled(&filters, "max_batch") {
+        println!("== ablation: accumulated batch B (max_batch) ==");
+        for b in [4usize, 16, 48] {
+            let mut spec = base_spec();
+            spec.eng.max_batch = b;
+            // Keep the spec valid: attention can never micro-batch more
+            // sequences than the wave accumulates (validate rejects b_a > B).
+            spec.eng.attn_micro = spec.eng.attn_micro.min(b);
+            let (wall, dtp, toks) = run(spec, &prompts, steps);
+            check(&mut reference, "max_batch", &toks);
+            println!("bench: ablate_B_{b:<4}        wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
+        }
     }
 
     // b_a = 128 is omitted from the default sweep: on the PJRT-CPU
     // testbed the padded [128, ctx] staged window makes each attention
     // launch ~1.5 s (see hotpath bench), i.e. the exact pathology the
     // paper's search avoids by keeping b_a small.
-    println!("\n== ablation: attention micro-batch b_a ==");
-    for ba in [8usize, 16, 32] {
-        let mut spec = base_spec();
-        spec.eng.attn_micro = ba;
-        spec.eng.max_batch = 48;
-        let (wall, dtp, toks) = run(spec, &prompts, steps);
-        check(&mut reference, "attn_micro", &toks);
-        println!("bench: ablate_ba_{ba:<4}       wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
+    if enabled(&filters, "attn_micro") {
+        println!("\n== ablation: attention micro-batch b_a ==");
+        for ba in [8usize, 16, 32] {
+            let mut spec = base_spec();
+            spec.eng.attn_micro = ba;
+            spec.eng.max_batch = 48;
+            let (wall, dtp, toks) = run(spec, &prompts, steps);
+            check(&mut reference, "attn_micro", &toks);
+            println!("bench: ablate_ba_{ba:<4}       wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
+        }
     }
 
     // ω moves sequences onto the bf16-consistent CPU kernel; the paper's
     // contract (App. B) is numerical *consistency*, not bitwise equality,
     // so greedy near-ties may flip. Report token agreement instead of
     // asserting exactness (must stay near 100%).
-    println!("\n== ablation: ω CPU-attention split (live Fig. 7) ==");
-    for omega in [0.0f64, 0.25, 0.5, 0.75, 1.0] {
-        let mut spec = base_spec();
-        spec.eng.omega = omega;
-        spec.eng.max_batch = 48;
-        let (wall, dtp, toks) = run(spec, &prompts, steps);
-        let r = reference.as_ref().unwrap();
-        let total: usize = r.iter().map(|t| t.len()).sum();
-        let agree: usize = r
-            .iter()
-            .zip(&toks)
-            .map(|(a, b)| a.iter().zip(b).filter(|(x, y)| x == y).count())
-            .sum();
-        let pct = 100.0 * agree as f64 / total as f64;
-        assert!(pct > 90.0, "omega={omega}: agreement collapsed to {pct:.1}%");
-        println!(
-            "bench: ablate_omega_{omega:<4} wall {wall:>7.2}s decode {dtp:>8.1} tok/s \
-             agreement {pct:>5.1}%"
-        );
-    }
-
-    println!("\n== ablation: prefetch vs on-demand (300 MB/s link) ==");
-    for prefetch in [true, false] {
-        let mut spec = base_spec();
-        spec.eng.prefetch = prefetch;
-        spec.eng.throttle_htod = Some(300e6);
-        spec.eng.max_batch = 48;
-        let (wall, dtp, toks) = run(spec, &prompts, steps);
-        check(&mut reference, "prefetch", &toks);
-        println!(
-            "bench: ablate_prefetch_{:<5} wall {wall:>7.2}s decode {dtp:>8.1} tok/s",
-            prefetch
-        );
-    }
-
-    println!("\n== ablation: weight cache on/off (300 MB/s link) ==");
-    for cache in [true, false] {
-        let mut spec = base_spec();
-        spec.eng.weight_cache_bytes = if cache { 256 << 20 } else { 0 };
-        spec.eng.throttle_htod = Some(300e6);
-        spec.eng.max_batch = 48;
-        let (wall, dtp, toks) = run(spec, &prompts, steps);
-        check(&mut reference, "weight_cache", &toks);
-        println!(
-            "bench: ablate_wcache_{:<5} wall {wall:>7.2}s decode {dtp:>8.1} tok/s",
-            cache
-        );
-    }
-
-    println!("\n== ablation: baseline micro-batch (continuous policy) ==");
-    for micro in [4usize, 8, 16] {
-        let mut spec = base_spec();
-        spec.eng.policy = Policy::Continuous;
-        spec.eng.baseline_micro_batch = micro;
-        let (wall, dtp, toks) = run(spec, &prompts, steps);
-        check(&mut reference, "baseline_micro_batch", &toks);
-        println!("bench: ablate_micro_{micro:<4}     wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
-    }
-
-    println!("\n== ablation: expert-parallel n_devices (virtual topology) ==");
-    for nd in [1usize, 2, 4] {
-        let mut spec = base_spec();
-        spec.eng.n_devices = nd;
-        spec.eng.max_batch = 48;
-        let mut s = Session::open(spec).expect("artifacts missing — run `make artifacts`");
-        let t0 = std::time::Instant::now();
-        let rep = s.run_prompts(&prompts, steps).expect("ablation run");
-        let wall = t0.elapsed().as_secs_f64();
-        check(&mut reference, "n_devices", &rep.tokens);
-        let ici_ms = 1e3 * rep.timeline.busy(moe_gen::exec::Stream::Interconnect);
-        if nd == 1 {
-            assert_eq!(ici_ms, 0.0, "single device must not touch the interconnect");
-        } else {
-            assert!(ici_ms > 0.0, "nd={nd} moved no all-to-all bytes");
+    if enabled(&filters, "omega") {
+        println!("\n== ablation: ω CPU-attention split (live Fig. 7) ==");
+        for omega in [0.0f64, 0.25, 0.5, 0.75, 1.0] {
+            let mut spec = base_spec();
+            spec.eng.omega = omega;
+            spec.eng.max_batch = 48;
+            let (wall, dtp, toks) = run(spec, &prompts, steps);
+            let Some(r) = reference.as_ref() else {
+                reference = Some(toks);
+                continue;
+            };
+            let total: usize = r.iter().map(|t| t.len()).sum();
+            let agree: usize = r
+                .iter()
+                .zip(&toks)
+                .map(|(a, b)| a.iter().zip(b).filter(|(x, y)| x == y).count())
+                .sum();
+            let pct = 100.0 * agree as f64 / total as f64;
+            assert!(pct > 90.0, "omega={omega}: agreement collapsed to {pct:.1}%");
+            println!(
+                "bench: ablate_omega_{omega:<4} wall {wall:>7.2}s decode {dtp:>8.1} tok/s \
+                 agreement {pct:>5.1}%"
+            );
         }
-        println!(
-            "bench: ablate_ndev_{nd:<4}      wall {wall:>7.2}s decode {:>8.1} tok/s \
-             ici {ici_ms:>7.3}ms",
-            rep.decode_tp
-        );
+    }
+
+    if enabled(&filters, "prefetch") {
+        println!("\n== ablation: prefetch vs on-demand (300 MB/s link) ==");
+        for prefetch in [true, false] {
+            let mut spec = base_spec();
+            spec.eng.prefetch = prefetch;
+            spec.eng.throttle_htod = Some(300e6);
+            spec.eng.max_batch = 48;
+            let (wall, dtp, toks) = run(spec, &prompts, steps);
+            check(&mut reference, "prefetch", &toks);
+            println!(
+                "bench: ablate_prefetch_{:<5} wall {wall:>7.2}s decode {dtp:>8.1} tok/s",
+                prefetch
+            );
+        }
+    }
+
+    if enabled(&filters, "wcache") {
+        println!("\n== ablation: weight cache on/off (300 MB/s link) ==");
+        for cache in [true, false] {
+            let mut spec = base_spec();
+            spec.eng.weight_cache_bytes = if cache { 256 << 20 } else { 0 };
+            spec.eng.throttle_htod = Some(300e6);
+            spec.eng.max_batch = 48;
+            let (wall, dtp, toks) = run(spec, &prompts, steps);
+            check(&mut reference, "weight_cache", &toks);
+            println!(
+                "bench: ablate_wcache_{:<5} wall {wall:>7.2}s decode {dtp:>8.1} tok/s",
+                cache
+            );
+        }
+    }
+
+    if enabled(&filters, "micro") {
+        println!("\n== ablation: baseline micro-batch (continuous policy) ==");
+        for micro in [4usize, 8, 16] {
+            let mut spec = base_spec();
+            spec.eng.policy = Policy::Continuous;
+            spec.eng.baseline_micro_batch = micro;
+            let (wall, dtp, toks) = run(spec, &prompts, steps);
+            check(&mut reference, "baseline_micro_batch", &toks);
+            println!("bench: ablate_micro_{micro:<4}     wall {wall:>7.2}s decode {dtp:>8.1} tok/s");
+        }
+    }
+
+    if enabled(&filters, "ndev") {
+        println!("\n== ablation: expert-parallel n_devices (virtual topology) ==");
+        for nd in [1usize, 2, 4] {
+            let mut spec = base_spec();
+            spec.eng.n_devices = nd;
+            spec.eng.max_batch = 48;
+            let mut s = Session::open(spec).expect("artifacts missing — run `make artifacts`");
+            let t0 = std::time::Instant::now();
+            let rep = s.run_prompts(&prompts, steps).expect("ablation run");
+            let wall = t0.elapsed().as_secs_f64();
+            check(&mut reference, "n_devices", &rep.tokens);
+            let ici_ms = 1e3 * rep.timeline.busy(moe_gen::exec::Stream::Interconnect);
+            if nd == 1 {
+                assert_eq!(ici_ms, 0.0, "single device must not touch the interconnect");
+            } else {
+                assert!(ici_ms > 0.0, "nd={nd} moved no all-to-all bytes");
+            }
+            println!(
+                "bench: ablate_ndev_{nd:<4}      wall {wall:>7.2}s decode {:>8.1} tok/s \
+                 ici {ici_ms:>7.3}ms",
+                rep.decode_tp
+            );
+        }
+    }
+
+    // Replication rows are budgeted as a fraction of the strategy's
+    // S_Expert, so they run through an explicit strategy (the spec path
+    // that carries `replication_bytes`). A two-expert cache thrashes on
+    // demand fetches, which is exactly where pinning cross-request-hot
+    // experts pays; prefetch stays off so the lift is replication's
+    // alone. Unlike the other sweeps these rows ARE recorded: the CI
+    // smoke diffs their `expert_hit_rate` against the rep=0 row via the
+    // `/rep{pct}` config-key suffix.
+    if enabled(&filters, "replication") {
+        println!("\n== ablation: sticky expert replication (fraction of S_Expert) ==");
+        let probe = Session::open(base_spec()).expect("artifacts missing — run `make artifacts`");
+        let per = probe.engine().weights.sizes.expert;
+        drop(probe);
+        let s_expert = 4 * per;
+        let mut hit0 = None;
+        for frac in [0.0f64, 0.25, 0.5] {
+            let rep = (s_expert as f64 * frac) as usize;
+            let mut spec = base_spec();
+            spec.eng.max_batch = 48;
+            spec.eng.prefetch = false;
+            spec.bench_log = Some(moe_gen::spec::default_bench_log());
+            spec.strategy = moe_gen::spec::StrategySource::Explicit {
+                decode: moe_gen::sched::Strategy {
+                    b: 48,
+                    b_a: 8,
+                    b_e: 512,
+                    omega: 0.0,
+                    s_expert,
+                    s_params: 2 * per,
+                    reuse: 1.0,
+                    n_devices: 1,
+                    placement: moe_gen::batching::ExpertPlacement::RoundRobin,
+                    replication_bytes: rep,
+                },
+                prefill: None,
+            };
+            let mut s = Session::open(spec).expect("artifacts missing — run `make artifacts`");
+            let t0 = std::time::Instant::now();
+            let r = s.run_prompts(&prompts, steps).expect("ablation run");
+            let wall = t0.elapsed().as_secs_f64();
+            check(&mut reference, "replication", &r.tokens);
+            match hit0 {
+                None => hit0 = Some(r.expert_hit_rate),
+                Some(base) => assert!(
+                    r.expert_hit_rate > base,
+                    "replication {frac} must lift expert hit-rate: {} vs {base}",
+                    r.expert_hit_rate
+                ),
+            }
+            println!(
+                "bench: ablate_rep_{:<4}      wall {wall:>7.2}s decode {:>8.1} tok/s \
+                 expert-hit {:>5.1}% (recorded to BENCH_live.json)",
+                format!("{:.0}", 100.0 * frac),
+                r.decode_tp,
+                100.0 * r.expert_hit_rate,
+            );
+        }
     }
 
     // One baseline row recorded into the perf trajectory (the sweep rows
     // above stay out of it on purpose — they ablate, they don't track).
-    let mut spec = base_spec();
-    spec.eng.max_batch = 48;
-    spec.bench_log = Some(moe_gen::spec::default_bench_log());
-    let mut s = Session::open(spec).expect("artifacts missing — run `make artifacts`");
-    let t0 = std::time::Instant::now();
-    let rep = s.run_prompts(&prompts, steps).expect("ablation run");
-    let wall = t0.elapsed().as_secs_f64();
-    check(&mut reference, "baseline_record", &rep.tokens);
-    // The session stamps the record with config_key/git/roofline_fraction
-    // (tools/perf_gate.py diffs consecutive same-key records).
-    println!(
-        "\nbench: baseline_B48          wall {wall:>7.2}s decode {:>8.1} tok/s \
-         roofline {:>5.1}% (recorded to BENCH_live.json)",
-        rep.decode_tp,
-        100.0 * rep.roofline_fraction,
-    );
+    if enabled(&filters, "baseline") {
+        let mut spec = base_spec();
+        spec.eng.max_batch = 48;
+        spec.bench_log = Some(moe_gen::spec::default_bench_log());
+        let mut s = Session::open(spec).expect("artifacts missing — run `make artifacts`");
+        let t0 = std::time::Instant::now();
+        let rep = s.run_prompts(&prompts, steps).expect("ablation run");
+        let wall = t0.elapsed().as_secs_f64();
+        check(&mut reference, "baseline_record", &rep.tokens);
+        // The session stamps the record with config_key/git/roofline_fraction
+        // (tools/perf_gate.py diffs consecutive same-key records).
+        println!(
+            "\nbench: baseline_B48          wall {wall:>7.2}s decode {:>8.1} tok/s \
+             roofline {:>5.1}% (recorded to BENCH_live.json)",
+            rep.decode_tp,
+            100.0 * rep.roofline_fraction,
+        );
+    }
 
     println!("\ntoken invariance across all ablations ✓");
 }

@@ -264,6 +264,7 @@ fn main() {
             b: 1024, b_a: 64, b_e: 8192, omega: 0.0,
             s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
             n_devices: 1, placement: moe_gen::batching::ExpertPlacement::RoundRobin,
+            replication_bytes: 0,
         };
         let g = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 3);
         println!("(dag nodes: {})", g.len());

@@ -122,6 +122,17 @@ pub struct EngineConfig {
     pub n_devices: usize,
     /// Expert→device placement policy used when `n_devices > 1`.
     pub placement: ExpertPlacement,
+    /// Sticky expert-replication sub-budget in bytes, carved out of the
+    /// predictive-prefetch reserve (`S_Expert`): the popularity layer
+    /// pins this many bytes of cross-request-hot experts resident
+    /// ([`crate::weights::PopularityTable`]). `None` follows the active
+    /// plan's searched `replication_bytes`; `Some(0)` forces replication
+    /// off regardless of the strategy.
+    pub replication_bytes: Option<usize>,
+    /// Half-life, in routed tokens, of the decayed router statistics the
+    /// popularity layer keeps (see
+    /// [`crate::weights::PopularityTable::DEFAULT_HALF_LIFE`]).
+    pub popularity_half_life: f64,
     pub seed: u64,
     /// Print per-phase diagnostics.
     pub verbose: bool,
@@ -160,6 +171,12 @@ impl EngineConfig {
                 return Err(format!("throttle_htod must be a positive bandwidth, got {bw}"));
             }
         }
+        if !self.popularity_half_life.is_finite() || self.popularity_half_life <= 0.0 {
+            return Err(format!(
+                "popularity_half_life must be a positive token count, got {}",
+                self.popularity_half_life
+            ));
+        }
         let max_dev = crate::exec::MAX_DEVICES;
         if self.n_devices == 0 || self.n_devices > max_dev {
             return Err(format!(
@@ -186,6 +203,8 @@ impl Default for EngineConfig {
             baseline_micro_batch: 8,
             n_devices: 1,
             placement: ExpertPlacement::RoundRobin,
+            replication_bytes: None,
+            popularity_half_life: crate::weights::PopularityTable::DEFAULT_HALF_LIFE,
             seed: 0,
             verbose: false,
         }
@@ -239,6 +258,8 @@ mod tests {
             EngineConfig { throttle_htod: Some(-1.0), ..EngineConfig::default() },
             EngineConfig { n_devices: 0, ..EngineConfig::default() },
             EngineConfig { n_devices: crate::exec::MAX_DEVICES + 1, ..EngineConfig::default() },
+            EngineConfig { popularity_half_life: 0.0, ..EngineConfig::default() },
+            EngineConfig { popularity_half_life: f64::NAN, ..EngineConfig::default() },
         ];
         for cfg in bad {
             assert!(cfg.validate().is_err(), "must reject {cfg:?}");
@@ -256,5 +277,7 @@ mod tests {
         assert_eq!(c.baseline_micro_batch, 8, "paper-default baseline micro-batch");
         assert_eq!(c.n_devices, 1, "single-device offloading by default");
         assert_eq!(c.placement, ExpertPlacement::RoundRobin);
+        assert_eq!(c.replication_bytes, None, "replication follows the strategy by default");
+        assert_eq!(c.popularity_half_life, crate::weights::PopularityTable::DEFAULT_HALF_LIFE);
     }
 }

@@ -43,7 +43,7 @@ use crate::memory::{MemoryPool, TransferEngine, TransferHandle};
 use crate::metrics::Metrics;
 use crate::runtime::{default_backend, Backend, RtConfig};
 use crate::sched::Strategy;
-use crate::weights::{WeightResidency, WeightSizes};
+use crate::weights::{WeightKey, WeightResidency, WeightSizes};
 
 pub use crate::exec::BatchState;
 
@@ -71,6 +71,14 @@ pub struct Engine {
     /// (drained at phase ends).
     pending_fetch: Vec<TransferHandle>,
     plan: Plan,
+    /// Live sticky-replication sub-budget in bytes (of `S_Expert`): how
+    /// much of the weight cache the popularity layer may pin as sticky
+    /// expert replicas. Sourced from the searched strategy via the plan,
+    /// overridden by `cfg.replication_bytes` when set.
+    replication_bytes: usize,
+    /// The replica set currently installed — re-derived from the decayed
+    /// popularity table at phase boundaries ([`Engine::refresh_replication`]).
+    replicas: Vec<WeightKey>,
     /// Scratch arena recycling bucket-shaped host tensors through the
     /// expert/projection hot paths (DESIGN.md §10). Owned here so buffers
     /// stay warm across waves; `reset_accounting` clears its counters but
@@ -108,6 +116,7 @@ impl Engine {
                 reuse: cfg.weight_reuse,
                 n_devices: cfg.n_devices,
                 placement: cfg.placement,
+                replication_bytes: 0,
             },
             None,
             backend.cfg(),
@@ -119,14 +128,17 @@ impl Engine {
         // the plan round-trips through set_plan unchanged.
         plan.prefetch_bytes = None;
         plan.cache_bytes = None;
-        let weights =
+        plan.replication_bytes = None;
+        let mut weights =
             WeightResidency::new(WeightSizes::from_cfg(backend.cfg()), cfg.weight_cache_bytes);
+        weights.popularity.set_half_life(cfg.popularity_half_life);
         let mut timeline = Timeline::with_topology(
             cfg.throttle_htod.unwrap_or(hw::VIRTUAL_HTOD_BW),
             hw::VIRTUAL_DTOH_BW,
             Topology { devices: cfg.n_devices, interconnect_bw: hw::VIRTUAL_ICI_BW },
         );
         timeline.set_serialized(!cfg.prefetch);
+        let replication_bytes = cfg.replication_bytes.unwrap_or(0);
         Ok(Engine {
             backend,
             cfg,
@@ -139,6 +151,8 @@ impl Engine {
             cpu_threads,
             pending_fetch: Vec::new(),
             plan,
+            replication_bytes,
+            replicas: Vec::new(),
             arena: TensorArena::new(),
         })
     }
@@ -186,6 +200,67 @@ impl Engine {
         if let Some(buffer) = self.plan.prefetch_bytes {
             self.weights.sched.buffer_bytes = Some(buffer);
         }
+        // cfg.replication_bytes is the operator override; a searched
+        // strategy's knob applies only when the config leaves it unset.
+        if let Some(bytes) = self.cfg.replication_bytes.or(self.plan.replication_bytes) {
+            self.replication_bytes = bytes;
+        }
+        self.refresh_replication();
+    }
+
+    /// The sticky-replication sub-budget currently in force (bytes).
+    pub fn replication_budget(&self) -> usize {
+        self.replication_bytes
+    }
+
+    /// Set the sticky-replication sub-budget directly and re-derive the
+    /// replica set (the ablations path; spec-driven runs arrive here via
+    /// [`Engine::set_strategy`] / `cfg.replication_bytes`).
+    pub fn set_replication_budget(&mut self, bytes: usize) {
+        self.replication_bytes = bytes;
+        self.refresh_replication();
+    }
+
+    /// Re-derive the sticky replica set from the decayed popularity
+    /// table: experts hot across requests (decayed share above uniform,
+    /// confident layers only) are installed into the weight cache as
+    /// sticky residents, up to `replication_bytes / expert_bytes` slots;
+    /// replicas whose share decayed out of the hot set are demoted to
+    /// plain LRU entries. Called at phase boundaries — never inside a
+    /// wave — so residency churn stays off the launch path. Replication
+    /// is a residency policy only: tokens are bit-identical with it on
+    /// or off (tests/integration_weights.rs).
+    pub fn refresh_replication(&mut self) {
+        let per = self.weights.sizes.expert;
+        let slots = if per > 0 { self.replication_bytes / per } else { 0 };
+        let desired: Vec<WeightKey> = self
+            .weights
+            .popularity
+            .hot_set(slots)
+            .into_iter()
+            .map(|(layer, expert)| WeightKey::Expert(layer, expert))
+            .collect();
+        for key in &self.replicas {
+            if !desired.contains(key) {
+                self.weights.cache.unstick(*key);
+            }
+        }
+        for key in &desired {
+            if self.weights.cache.is_replicated(*key) {
+                continue;
+            }
+            // Promoting an already-cached entry costs nothing; a fresh
+            // install is a real HtoD copy, metered like any weight fetch
+            // but charged at the phase boundary (off the launch path).
+            let needs_copy = !self.weights.cache.contains(*key);
+            if self.weights.cache.install_replica(*key, per) && needs_copy {
+                self.metrics.htod_bytes += per as u64;
+                self.metrics.htod_overlapped_bytes += per as u64;
+                self.timeline.xfer_htod_on(0, "replica_install", per, &[]);
+                self.htod.account(per).wait();
+            }
+        }
+        self.replicas = desired;
     }
 
     /// Pre-compile every module variant so serving never compile-stalls.
@@ -249,7 +324,10 @@ impl Engine {
     /// Reset the accumulated metrics *and* the virtual timeline — one
     /// experiment, one schedule (the run/serve drivers call this). The
     /// scratch arena's counters reset too, but its pooled buffers stay
-    /// warm: the next wave re-checks them out as hits.
+    /// warm: the next wave re-checks them out as hits. The decayed
+    /// popularity table deliberately survives: it is *cross-request*
+    /// state — resetting it per experiment would erase exactly the
+    /// signal replication and learned prefetch exist to exploit.
     pub fn reset_accounting(&mut self) {
         self.metrics = Metrics::new();
         self.timeline.reset();
@@ -314,6 +392,7 @@ impl Engine {
         let out = pipeline.prefill_into(&mut cx, kv, prompts);
         self.metrics.timeline = self.timeline.stats();
         self.metrics.arena = self.arena.stats();
+        self.refresh_replication();
         out
     }
 
@@ -335,6 +414,7 @@ impl Engine {
         let out = pipeline.prefill_resume(&mut cx, kv, slot, prompt, off, take);
         self.metrics.timeline = self.timeline.stats();
         self.metrics.arena = self.arena.stats();
+        self.refresh_replication();
         out
     }
 
@@ -345,6 +425,7 @@ impl Engine {
         let out = pipeline.decode_step(&mut cx, state);
         self.metrics.timeline = self.timeline.stats();
         self.metrics.arena = self.arena.stats();
+        self.refresh_replication();
         out
     }
 
@@ -465,6 +546,7 @@ mod tests {
             b: 64, b_a: 16, b_e: 32, omega: 0.5,
             s_expert: 500_000, s_params: 1_000_000, reuse: 2.0,
             n_devices: 2, placement: crate::batching::ExpertPlacement::Contiguous,
+            replication_bytes: 250_000,
         };
         eng.set_strategy(&dec, None);
         let p = eng.plan();
@@ -475,9 +557,46 @@ mod tests {
         assert_eq!(p.n_devices, 2);
         assert_eq!(p.placement, crate::batching::ExpertPlacement::Contiguous);
         // Residency fields go live: S_Params re-budgets the cache,
-        // S_Expert sizes the predictive-prefetch buffer.
+        // S_Expert sizes the predictive-prefetch buffer, and the
+        // replication sub-budget lands on the popularity layer.
         assert_eq!(eng.weights.cache.budget(), 1_000_000);
         assert_eq!(eng.weights.sched.buffer_bytes, Some(500_000));
+        assert_eq!(eng.replication_budget(), 250_000);
+    }
+
+    #[test]
+    fn replication_installs_and_demotes_with_popularity() {
+        let mut eng = engine();
+        let per = eng.weights.sizes.expert;
+        assert!(per > 0);
+        eng.weights.cache.set_budget(16 * per);
+        eng.set_replication_budget(2 * per);
+        assert_eq!(
+            eng.weights.cache.replicated_bytes(),
+            0,
+            "a cold table replicates nothing"
+        );
+        // Warm layer 1 with a skew toward experts 3 and 5 past the
+        // confidence floor.
+        for _ in 0..8 {
+            eng.weights.popularity.observe(1, &[0, 0, 0, 40, 0, 10, 0, 0]);
+        }
+        eng.refresh_replication();
+        assert!(eng.weights.cache.is_replicated(WeightKey::Expert(1, 3)));
+        assert!(eng.weights.cache.is_replicated(WeightKey::Expert(1, 5)));
+        assert_eq!(eng.weights.cache.replicated_bytes(), 2 * per);
+        // The trace shifts to expert 6; the old favourites' shares decay
+        // below uniform and their replicas demote.
+        for _ in 0..64 {
+            eng.weights.popularity.observe(1, &[0, 0, 0, 0, 0, 0, 500, 0]);
+        }
+        eng.refresh_replication();
+        assert!(eng.weights.cache.is_replicated(WeightKey::Expert(1, 6)));
+        assert!(!eng.weights.cache.is_replicated(WeightKey::Expert(1, 3)));
+        assert!(!eng.weights.cache.is_replicated(WeightKey::Expert(1, 5)));
+        // Shrinking the budget to zero drops every replica.
+        eng.set_replication_budget(0);
+        assert_eq!(eng.weights.cache.replicated_bytes(), 0);
     }
 
     #[test]

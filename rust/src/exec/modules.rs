@@ -578,6 +578,9 @@ impl Router {
         for &e in &idx {
             counts[e as usize] += 1;
         }
+        // Feed the cross-request popularity table from every router
+        // output — offline waves and serve ticks alike (DESIGN.md §14).
+        cx.weights.popularity.observe(layer, &counts);
         cx.prefetch_hot_experts(layer + 1, &counts);
         Ok((xn, idx, wts))
     }
@@ -883,6 +886,7 @@ mod tests {
             omega: 0.0,
             prefetch_bytes: None,
             cache_bytes: None,
+            replication_bytes: None,
             reuse: 1.0,
             n_devices: 1,
             placement: crate::batching::ExpertPlacement::RoundRobin,

@@ -65,6 +65,12 @@ pub struct Plan {
     /// faithfully (every launch streams); `None` keeps the engine's
     /// configured default budget.
     pub cache_bytes: Option<usize>,
+    /// Sticky expert-replication sub-budget of `S_Expert` in bytes —
+    /// the strategy's `replication_bytes`, live (the engine installs
+    /// the hottest decayed-popularity experts as protected cache
+    /// residents, DESIGN.md §14). `Some(0)` = replication explicitly
+    /// off; `None` keeps the engine's current configuration.
+    pub replication_bytes: Option<usize>,
     /// Weight-fetch reuse factor: one fetch is held resident for this
     /// many launches before becoming LRU-evictable (FlexGen /
     /// MoE-Lightning multi-round reuse; 1.0 = plain LRU).
@@ -98,6 +104,7 @@ impl Plan {
             omega: dec.omega.clamp(0.0, 1.0),
             prefetch_bytes: Some(dec.s_expert),
             cache_bytes: Some(dec.s_params),
+            replication_bytes: Some(dec.replication_bytes),
             reuse: dec.reuse.max(1.0),
             n_devices: dec.n_devices.max(1),
             placement: dec.placement,
@@ -342,15 +349,29 @@ impl ExecCtx<'_> {
         // The cache's ledger is authoritative for evictions (it also
         // counts set_budget shrinks); mirror it wholesale.
         self.metrics.weight_evictions = self.weights.cache.stats().evictions;
+        // Per-source expert residency split (DESIGN.md §14): a hit on a
+        // sticky replica, a consumed predictive prefetch, and a plain
+        // demand hit are three different policies earning their keep.
+        let is_expert = matches!(key, WeightKey::Expert(..));
         match outcome {
             Acquire::Hit => {
                 self.metrics.weight_hits += 1;
+                if is_expert {
+                    if self.weights.cache.is_replicated(key) {
+                        self.metrics.expert_replicated_hits += 1;
+                    } else {
+                        self.metrics.expert_demand_hits += 1;
+                    }
+                }
                 self.fetch_ev = None;
             }
             Acquire::HitInFlight(h, ev) => {
                 h.wait();
                 self.metrics.weight_hits += 1;
                 self.metrics.prefetch_hits += 1;
+                if is_expert {
+                    self.metrics.expert_predicted_hits += 1;
+                }
                 // Prefetches are issued on device 0's link (the router
                 // runs there). A launch pinned to another device cannot
                 // depend on a device-0 copy without routing through the
@@ -361,6 +382,9 @@ impl ExecCtx<'_> {
             }
             Acquire::Miss | Acquire::Bypass => {
                 self.metrics.weight_misses += 1;
+                if is_expert {
+                    self.metrics.expert_misses += 1;
+                }
                 self.metrics.htod_bytes += bytes as u64;
                 let ev = self.timeline.xfer_htod_on(self.device, "weight_fetch", bytes, &[]);
                 self.fetch_ev = Some(ev);
@@ -407,13 +431,16 @@ impl ExecCtx<'_> {
 
     /// Predictively prefetch the hottest experts of layer `layer` from
     /// the previous layer's router output (`counts[e]` = tokens routed to
-    /// expert `e`), bounded by the reserved prefetch buffer.
+    /// expert `e`), bounded by the reserved prefetch buffer. Once the
+    /// cross-request popularity table is warm for the target layer, the
+    /// ranking blends the live counts with its learned decayed
+    /// distribution ([`crate::weights::WeightResidency::ranked_hot_experts`]).
     pub fn prefetch_hot_experts(&mut self, layer: usize, counts: &[u64]) {
         if !self.prefetch || layer >= self.weights.sizes.num_layers {
             return;
         }
         let depth = self.weights.sched.expert_depth(&self.weights.sizes);
-        for e in self.weights.sched.hot_experts(counts, depth) {
+        for e in self.weights.ranked_hot_experts(layer, counts, depth) {
             self.issue_prefetch(WeightKey::Expert(layer, e));
         }
     }
@@ -919,12 +946,12 @@ mod tests {
         let cfg = RtConfig::tiny();
         let dec = Strategy {
             b: 28_000, b_a: 256, b_e: 8192, omega: 0.6,
-            s_expert: 123, s_params: 456, reuse: 4.0,
+            s_expert: 123, s_params: 456, reuse: 4.0, replication_bytes: 77,
             n_devices: 2, placement: ExpertPlacement::Contiguous,
         };
         let pre = Strategy {
             b: 8192, b_a: 4, b_e: 2048, omega: 0.0,
-            s_expert: 0, s_params: 0, reuse: 1.0,
+            s_expert: 0, s_params: 0, reuse: 1.0, replication_bytes: 0,
             n_devices: 1, placement: ExpertPlacement::RoundRobin,
         };
         let p = Plan::from_strategy(&dec, Some(&pre), &cfg, 128);
@@ -935,6 +962,7 @@ mod tests {
         assert!((p.omega - 0.6).abs() < 1e-12);
         assert_eq!(p.prefetch_bytes, Some(123), "S_Expert becomes the live prefetch buffer");
         assert_eq!(p.cache_bytes, Some(456), "S_Params becomes the live cache budget");
+        assert_eq!(p.replication_bytes, Some(77), "replication sub-budget projects live");
         assert!((p.reuse - 4.0).abs() < 1e-12, "reuse factor is executable");
         assert_eq!(p.n_devices, 2, "expert sharding projects into the plan");
         assert_eq!(p.placement, ExpertPlacement::Contiguous);

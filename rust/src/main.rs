@@ -57,6 +57,8 @@ fn flags_for(kind: JobKind) -> Vec<Flag> {
         val("micro-batch", "baseline unified micro-batch"),
         val("n-devices", "virtual expert-parallel devices (1 = single-device offloading)"),
         val("placement", "expert→device placement: round_robin|contiguous|popularity"),
+        val("replication", "sticky expert-replication sub-budget in bytes (0 forces it off)"),
+        val("half-life", "popularity decay half-life in routed tokens"),
         val("bench-log", "trajectory file for run records, or 'none'"),
     ];
     let trace = val("trace-out", "write a Chrome trace-event JSON (Perfetto), or 'none'");
@@ -192,6 +194,12 @@ fn overlay(spec: &mut JobSpec, flags: &std::collections::HashMap<String, String>
         spec.eng.placement = ExpertPlacement::parse(p).ok_or_else(|| {
             anyhow!("unknown placement {p:?}; try round_robin|contiguous|popularity")
         })?;
+    }
+    if let Some(v) = num::<usize>(flags, "replication")? {
+        spec.eng.replication_bytes = Some(v);
+    }
+    if let Some(v) = num::<f64>(flags, "half-life")? {
+        spec.eng.popularity_half_life = v;
     }
     if let Some(p) = flags.get("bench-log") {
         spec.bench_log = match p.as_str() {

@@ -118,6 +118,16 @@ pub struct Metrics {
     /// experts) and how many a later launch consumed while in flight.
     pub prefetch_issued: u64,
     pub prefetch_hits: u64,
+    /// Per-source split of *expert* weight fetches (a strict subset of
+    /// the `weight_*` counters above, restricted to
+    /// [`crate::weights::WeightKey::Expert`]): resident hits on a plain
+    /// cache entry, hits on a still-in-flight predictive prefetch,
+    /// hits on a sticky replica installed by the popularity layer, and
+    /// fetches the cache could not serve (miss or bypass).
+    pub expert_demand_hits: u64,
+    pub expert_predicted_hits: u64,
+    pub expert_replicated_hits: u64,
+    pub expert_misses: u64,
     pub cpu_attn_seqs: u64,
     pub gpu_attn_seqs: u64,
     /// Snapshot of the engine's virtual multi-stream timeline
@@ -178,6 +188,11 @@ impl Metrics {
         reg.counter("moe_gen_weight_cache_evictions_total", self.weight_evictions);
         reg.counter("moe_gen_prefetch_issued_total", self.prefetch_issued);
         reg.counter("moe_gen_prefetch_hits_total", self.prefetch_hits);
+        reg.counter("moe_gen_expert_fetches_total/source=demand", self.expert_demand_hits);
+        reg.counter("moe_gen_expert_fetches_total/source=predicted", self.expert_predicted_hits);
+        reg.counter("moe_gen_expert_fetches_total/source=replicated", self.expert_replicated_hits);
+        reg.counter("moe_gen_expert_fetches_total/source=miss", self.expert_misses);
+        reg.gauge("moe_gen_expert_hit_rate", self.expert_hit_rate());
         reg.counter("moe_gen_cpu_attn_seq_steps_total", self.cpu_attn_seqs);
         reg.counter("moe_gen_gpu_attn_seq_steps_total", self.gpu_attn_seqs);
         reg.counter("moe_gen_timeline_dropped_ops_total", self.timeline.dropped_ops as u64);
@@ -232,6 +247,20 @@ impl Metrics {
         let total = self.weight_hits + self.weight_misses;
         if total > 0 {
             self.weight_hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of *expert* weight fetches served from the cache, by any
+    /// source (resident entry, in-flight prefetch, or sticky replica).
+    /// The replication ablations compare exactly this quantity across
+    /// `replication_bytes` settings.
+    pub fn expert_hit_rate(&self) -> f64 {
+        let hits = self.expert_demand_hits + self.expert_predicted_hits + self.expert_replicated_hits;
+        let total = hits + self.expert_misses;
+        if total > 0 {
+            hits as f64 / total as f64
         } else {
             0.0
         }
@@ -331,6 +360,22 @@ impl Metrics {
                 self.weight_evictions,
                 self.prefetch_issued,
                 self.prefetch_hits,
+            ));
+        }
+        if self.expert_demand_hits
+            + self.expert_predicted_hits
+            + self.expert_replicated_hits
+            + self.expert_misses
+            > 0
+        {
+            s.push_str(&format!(
+                "experts: hit-rate {:.1}% (demand {} / predicted {} / replicated {} hits, \
+                 {} misses)\n",
+                100.0 * self.expert_hit_rate(),
+                self.expert_demand_hits,
+                self.expert_predicted_hits,
+                self.expert_replicated_hits,
+                self.expert_misses,
             ));
         }
         if self.htod_overlapped_bytes + self.htod_stalled_bytes > 0 {
@@ -450,6 +495,27 @@ mod tests {
         let r = m.report();
         assert!(r.contains("hit-rate 75.0%"));
         assert!(r.contains("90.0% overlapped"));
+    }
+
+    #[test]
+    fn expert_hit_rate_splits_by_source() {
+        let mut m = Metrics::new();
+        assert_eq!(m.expert_hit_rate(), 0.0, "no expert fetches -> rate 0");
+        assert!(!m.report().contains("experts:"), "silent without expert fetches");
+        m.expert_demand_hits = 4;
+        m.expert_predicted_hits = 2;
+        m.expert_replicated_hits = 2;
+        m.expert_misses = 2;
+        assert!((m.expert_hit_rate() - 0.8).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("experts: hit-rate 80.0%"), "{r}");
+        assert!(r.contains("replicated 2 hits"), "{r}");
+        let mut reg = crate::trace::Registry::new();
+        m.publish(&mut reg);
+        let text = reg.render_prometheus();
+        assert!(text.contains("moe_gen_expert_fetches_total{source=\"replicated\"} 2"), "{text}");
+        assert!(text.contains("moe_gen_expert_fetches_total{source=\"miss\"} 2"), "{text}");
+        assert!(text.contains("moe_gen_expert_hit_rate 0.8"), "{text}");
     }
 
     #[test]

@@ -50,17 +50,30 @@ pub struct Scenario {
     /// Virtual expert-parallel devices the decode DAG shards experts
     /// across (1 = the classic single-device offloading schedule).
     pub n_devices: usize,
+    /// Live per-expert popularity counts (decayed router statistics,
+    /// [`crate::weights::PopularityTable::placement_counts`]) observed
+    /// before this plan — `None` until the table is warm, keeping the
+    /// uniform-routing assumption. Feeds
+    /// [`ExpertPlacement::PopularityAware`] at plan time.
+    pub popularity: Option<Vec<usize>>,
 }
 
 impl Scenario {
     pub fn new(model: ModelDesc, hw: HwProfile, prompt_len: usize, decode_len: usize) -> Self {
-        Scenario { model, hw, prompt_len, decode_len, n_devices: 1 }
+        Scenario { model, hw, prompt_len, decode_len, n_devices: 1, popularity: None }
     }
 
     /// Builder: shard experts across `n` virtual devices (clamped to
     /// `1..=MAX_DEVICES`).
     pub fn with_devices(mut self, n: usize) -> Self {
         self.n_devices = n.clamp(1, MAX_DEVICES);
+        self
+    }
+
+    /// Builder: carry observed per-expert popularity counts into the
+    /// plan (re-plan path in serve; `None`-equivalent when absent).
+    pub fn with_popularity(mut self, counts: Option<Vec<usize>>) -> Self {
+        self.popularity = counts;
         self
     }
 
@@ -96,6 +109,11 @@ pub struct Strategy {
     /// FlexGen/MoE-Lightning multi-round reuse). Searches copy it from
     /// the policy's [`Knobs::reuse`] so it executes live.
     pub reuse: f64,
+    /// Sticky expert-replication sub-budget of `s_expert` (bytes): the
+    /// hottest cross-request experts are held permanently resident
+    /// ([`crate::weights::WeightCache`] replicas) and cost zero HtoD in
+    /// the DAG replay (DESIGN.md §14). 0 = no replication.
+    pub replication_bytes: usize,
     /// Virtual expert-parallel devices (1 = no sharding). Searched
     /// jointly with the batch sizes when the scenario scales out.
     pub n_devices: usize,
@@ -133,6 +151,13 @@ impl Strategy {
                 self.n_devices
             ));
         }
+        if self.replication_bytes > self.s_expert {
+            return Err(format!(
+                "strategy: replication_bytes = {} exceeds s_expert = {} (replication \
+                 is a sub-budget of the expert buffer)",
+                self.replication_bytes, self.s_expert
+            ));
+        }
         Ok(())
     }
 
@@ -146,6 +171,7 @@ impl Strategy {
         m.insert("s_expert".to_string(), Json::Num(self.s_expert as f64));
         m.insert("s_params".to_string(), Json::Num(self.s_params as f64));
         m.insert("reuse".to_string(), Json::Num(self.reuse));
+        m.insert("replication_bytes".to_string(), Json::Num(self.replication_bytes as f64));
         m.insert("n_devices".to_string(), Json::Num(self.n_devices as f64));
         m.insert("placement".to_string(), Json::Str(self.placement.slug().to_string()));
         Json::Obj(m)
@@ -203,6 +229,7 @@ impl Strategy {
             s_expert: opt_uint("s_expert", 0)?,
             s_params: opt_uint("s_params", 0)?,
             reuse: num("reuse")?.unwrap_or(1.0),
+            replication_bytes: opt_uint("replication_bytes", 0)?,
             n_devices: opt_uint("n_devices", 1)?,
             placement,
         })
@@ -450,13 +477,27 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
         let launches_per_expert =
             ((b * m.top_k as f64 / e_act as f64) / s.b_e as f64).ceil().max(1.0);
         let exp_bytes = m.expert_bytes() as f64 * (1.0 - cached) / k.reuse;
+        // Sticky replicas (DESIGN.md §14): `replication_bytes` worth of
+        // experts are permanently device-resident, so that many of the
+        // activated experts cost zero HtoD. Which concrete experts those
+        // are is the popularity layer's runtime decision; the plan-time
+        // model prices the *count* the sub-budget buys.
+        let rep_experts = if m.expert_bytes() > 0 {
+            (s.replication_bytes / m.expert_bytes()).min(e_act)
+        } else {
+            0
+        };
+        let fetch_bytes = |e: usize| if e < rep_experts { 0.0 } else { exp_bytes };
         let exp_cost = launches_per_expert
             * hw.gpu_time(tpe * m.expert_flops_per_token(), m.expert_bytes() as f64, tpe);
         if nd == 1 {
             let mut last_exec = post;
             for e in 0..e_act {
-                let f_e =
-                    g.add(format!("L{l}/fetch_e{e}"), hw.htod_time(exp_bytes), Resource::HtoD);
+                let f_e = g.add(
+                    format!("L{l}/fetch_e{e}"),
+                    hw.htod_time(fetch_bytes(e)),
+                    Resource::HtoD,
+                );
                 chain(&mut g, &mut prev_htod, f_e);
                 if !k.prefetch {
                     // On-demand policy: the next expert's fetch starts only
@@ -476,9 +517,10 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
             }
         } else {
             // Expert-parallel: shard the activated experts by placement.
-            // No popularity signal exists at plan time, so the model
-            // assumes the searched uniform routing (counts = None).
-            let place = s.placement.assign(e_act, nd, None);
+            // The scenario carries the decayed cross-request router
+            // statistics when the popularity table is warm; until then
+            // `None` keeps the searched uniform-routing assumption.
+            let place = s.placement.assign(e_act, nd, scn.popularity.as_deref());
             let mut dev_experts = vec![0usize; nd];
             for &d in &place {
                 dev_experts[d] += 1;
@@ -509,7 +551,7 @@ pub fn build_decode_dag(scn: &Scenario, s: &Strategy, k: &Knobs, layers: usize) 
                 let d = place[e];
                 let f_e = g.add(
                     format!("L{l}/fetch_e{e}"),
-                    hw.htod_time(exp_bytes),
+                    hw.htod_time(fetch_bytes(e)),
                     if d == 0 { Resource::HtoD } else { Resource::HtoDOn(d) },
                 );
                 if d == 0 {
@@ -777,42 +819,52 @@ pub fn search_decode(scn: &Scenario, knobs: &Knobs) -> SearchResult {
                         let s_expert = s_expert_mult * scn.model.expert_bytes();
                         // Remaining GPU space can cache params.
                         for params_frac in [0.0, 0.5] {
-                            for &placement in placements {
-                                let s = Strategy {
-                                    b,
-                                    b_a,
-                                    b_e,
-                                    omega,
-                                    s_expert,
-                                    s_params: ((gpu_free
-                                        - s_expert as f64
-                                        - intermediate_bytes(
-                                            scn,
-                                            &Strategy {
-                                                b, b_a, b_e, omega,
-                                                s_expert,
-                                                s_params: 0,
-                                                reuse: knobs.reuse,
-                                                n_devices: scn.n_devices,
-                                                placement,
-                                            },
-                                            true,
-                                        ))
-                                    .max(0.0)
-                                        * params_frac)
-                                        as usize,
-                                    reuse: knobs.reuse,
-                                    n_devices: scn.n_devices,
-                                    placement,
-                                };
-                                if !host_feasible(scn, s.b) || !gpu_feasible(scn, &s, true) {
-                                    continue;
-                                }
-                                evaluated += 1;
-                                let t = decode_step_time(scn, &s, knobs);
-                                let tp = s.b as f64 / t;
-                                if best.as_ref().map(|(_, b_tp)| tp > *b_tp).unwrap_or(true) {
-                                    best = Some((s, tp));
+                            // Replication knob: carve a fraction of the
+                            // expert buffer into sticky replicas priced
+                            // as zero-HtoD experts in the DAG replay.
+                            for rep_frac in [0.0, 0.25, 0.5] {
+                                for &placement in placements {
+                                    let replication_bytes =
+                                        (rep_frac * s_expert as f64) as usize;
+                                    let s = Strategy {
+                                        b,
+                                        b_a,
+                                        b_e,
+                                        omega,
+                                        s_expert,
+                                        s_params: ((gpu_free
+                                            - s_expert as f64
+                                            - intermediate_bytes(
+                                                scn,
+                                                &Strategy {
+                                                    b, b_a, b_e, omega,
+                                                    s_expert,
+                                                    s_params: 0,
+                                                    reuse: knobs.reuse,
+                                                    replication_bytes,
+                                                    n_devices: scn.n_devices,
+                                                    placement,
+                                                },
+                                                true,
+                                            ))
+                                        .max(0.0)
+                                            * params_frac)
+                                            as usize,
+                                        reuse: knobs.reuse,
+                                        replication_bytes,
+                                        n_devices: scn.n_devices,
+                                        placement,
+                                    };
+                                    if !host_feasible(scn, s.b) || !gpu_feasible(scn, &s, true) {
+                                        continue;
+                                    }
+                                    evaluated += 1;
+                                    let t = decode_step_time(scn, &s, knobs);
+                                    let tp = s.b as f64 / t;
+                                    if best.as_ref().map(|(_, b_tp)| tp > *b_tp).unwrap_or(true)
+                                    {
+                                        best = Some((s, tp));
+                                    }
                                 }
                             }
                         }
@@ -824,6 +876,7 @@ pub fn search_decode(scn: &Scenario, knobs: &Knobs) -> SearchResult {
     let (strategy, throughput) = best.unwrap_or((
         Strategy {
             b: 1, b_a: 1, b_e: 1, omega: 0.0, s_expert: 0, s_params: 0, reuse: 1.0,
+            replication_bytes: 0,
             n_devices: scn.n_devices, placement: ExpertPlacement::RoundRobin,
         },
         0.0,
@@ -854,6 +907,10 @@ pub fn search_prefill(scn: &Scenario, knobs: &Knobs) -> SearchResult {
                     s_expert: 2 * scn.model.expert_bytes(),
                     s_params: 0,
                     reuse: knobs.reuse,
+                    // Replication pays off across decode steps, not
+                    // within one prefill wave — the prefill search
+                    // leaves the sub-budget at zero.
+                    replication_bytes: 0,
                     // P-D disaggregation: prefill waves run single-device
                     // (the prefill DAG carries no all-to-all traffic).
                     n_devices: 1,
@@ -875,6 +932,7 @@ pub fn search_prefill(scn: &Scenario, knobs: &Knobs) -> SearchResult {
     let (strategy, throughput) = best.unwrap_or((
         Strategy {
             b: 1, b_a: 1, b_e: 1, omega: 0.0, s_expert: 0, s_params: 0, reuse: 1.0,
+            replication_bytes: 0,
             n_devices: 1, placement: ExpertPlacement::RoundRobin,
         },
         0.0,
@@ -901,6 +959,7 @@ mod tests {
         let s = Strategy {
             b: 1024, b_a: 256, b_e: 8192, omega: 0.6,
             s_expert: 352_321_536, s_params: 1_073_741_824, reuse: 4.0,
+            replication_bytes: 176_160_768,
             n_devices: 2, placement: ExpertPlacement::PopularityAware,
         };
         assert!(s.validate().is_ok());
@@ -911,6 +970,7 @@ mod tests {
         let d = Strategy::from_json(&legacy).unwrap();
         assert_eq!(d.n_devices, 1);
         assert_eq!(d.placement, ExpertPlacement::RoundRobin);
+        assert_eq!(d.replication_bytes, 0, "legacy strategies default to no replication");
         // Missing required field.
         assert!(Strategy::from_json(&Json::parse(r#"{"b": 8}"#).unwrap()).is_err());
         // Unknown / wrong-typed placement is an error, not a coercion.
@@ -935,6 +995,10 @@ mod tests {
         assert!(Strategy { b_e: 0, ..s }.validate().is_err());
         assert!(Strategy { n_devices: 0, ..s }.validate().is_err());
         assert!(Strategy { n_devices: crate::exec::MAX_DEVICES + 1, ..s }.validate().is_err());
+        assert!(
+            Strategy { replication_bytes: s.s_expert + 1, ..s }.validate().is_err(),
+            "replication must fit inside the expert buffer"
+        );
     }
 
     #[test]
@@ -959,11 +1023,11 @@ mod tests {
         // Huge attention micro-batch on DeepSeek: the ×71 up-projection
         // blows past 24 GB.
         let s = Strategy { b: 1024, b_a: 4096, b_e: 8192, omega: 0.0, s_expert: 0,
-                           s_params: 0, reuse: 1.0,
+                           s_params: 0, reuse: 1.0, replication_bytes: 0,
                            n_devices: 1, placement: ExpertPlacement::RoundRobin };
         assert!(!gpu_feasible(&scn, &s, true));
         let small = Strategy { b: 1024, b_a: 64, b_e: 8192, omega: 0.0, s_expert: 0,
-                               s_params: 0, reuse: 1.0,
+                               s_params: 0, reuse: 1.0, replication_bytes: 0,
                                n_devices: 1, placement: ExpertPlacement::RoundRobin };
         assert!(gpu_feasible(&scn, &small, true));
     }
@@ -975,7 +1039,7 @@ mod tests {
         // name, and the per-layer order matches the pipeline's.
         let scn = scn_8x7b();
         let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.3,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0, replication_bytes: 0,
                            n_devices: 1, placement: ExpertPlacement::RoundRobin };
         let g = build_decode_dag(&scn, &s, &Knobs::moe_gen(), 1);
         for kind in crate::exec::ModuleKind::decode_layer_order() {
@@ -999,7 +1063,7 @@ mod tests {
     fn decode_dag_has_expected_structure() {
         let scn = scn_8x7b();
         let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0, replication_bytes: 0,
                            n_devices: 1, placement: ExpertPlacement::RoundRobin };
         let g = build_decode_dag(&scn, &s, &Knobs::moe_gen(), 1);
         assert!(g.topo_order().is_some(), "DAG must be acyclic");
@@ -1014,7 +1078,7 @@ mod tests {
         // Isolate the prefetch flag: identical knobs otherwise.
         let scn = scn_8x7b();
         let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0, replication_bytes: 0,
                            n_devices: 1, placement: ExpertPlacement::RoundRobin };
         let with = Knobs {
             prefetch: true, reuse: 1.0, kv_on_gpu: true,
@@ -1037,7 +1101,7 @@ mod tests {
         // live executor reports from.
         let scn = scn_8x7b();
         let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0, replication_bytes: 0,
                            n_devices: 1, placement: ExpertPlacement::RoundRobin };
         let with = Knobs {
             prefetch: true, reuse: 1.0, kv_on_gpu: true,
@@ -1061,7 +1125,7 @@ mod tests {
         let k = Knobs::moe_gen_gpu_only();
         let mk = |b: usize| Strategy {
             b, b_a: 256, b_e: 8192, omega: 0.0,
-            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0, replication_bytes: 0,
             n_devices: 1, placement: ExpertPlacement::RoundRobin,
         };
         let tp = |b: usize| b as f64 / decode_step_time(&scn, &mk(b), &k);
@@ -1077,7 +1141,7 @@ mod tests {
         let k = Knobs::moe_gen();
         let mk = |omega: f64| Strategy {
             b: 2048, b_a: 256, b_e: 8192, omega,
-            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0, replication_bytes: 0,
             n_devices: 1, placement: ExpertPlacement::RoundRobin,
         };
         let t0 = decode_step_time(&scn, &mk(0.0), &k);
@@ -1134,7 +1198,7 @@ mod tests {
         // dep routes through the interconnect).
         let scn = scn_8x7b().with_devices(2);
         let s = Strategy { b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0, replication_bytes: 0,
                            n_devices: 2, placement: ExpertPlacement::RoundRobin };
         let g = build_decode_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 2);
         assert!(g.topo_order().is_some(), "multidev DAG must stay acyclic");
@@ -1172,10 +1236,96 @@ mod tests {
     }
 
     #[test]
+    fn replication_prices_zero_htod_for_replicated_experts() {
+        // ISSUE 10: a replication sub-budget worth N experts removes N
+        // expert fetches from the HtoD lane, shortening the modeled
+        // step whenever the link is the long pole.
+        let scn = scn_8x7b();
+        let k = Knobs::moe_gen_gpu_only();
+        let mk = |rep: usize| Strategy {
+            b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
+            s_expert: 4 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+            replication_bytes: rep * scn.model.expert_bytes(),
+            n_devices: 1, placement: ExpertPlacement::RoundRobin,
+        };
+        let htod = |s: &Strategy| build_decode_dag(&scn, s, &k, 1).busy_time(Resource::HtoD);
+        let h0 = htod(&mk(0));
+        let h2 = htod(&mk(2));
+        assert!(h2 < h0, "2 replicated experts must shed HtoD bytes ({h2} !< {h0})");
+        let t0 = decode_step_time(&scn, &mk(0), &k);
+        let t2 = decode_step_time(&scn, &mk(2), &k);
+        assert!(t2 <= t0, "replication never slows the modeled step ({t2} > {t0})");
+        // The sub-budget saturates at the activated expert count.
+        let h_all = htod(&mk(4));
+        assert!(h_all <= h2);
+        // Multi-device pricing drops the same fetches.
+        let scn2 = scn_8x7b().with_devices(2);
+        let s2 = Strategy { n_devices: 2, ..mk(2) };
+        let g2 = build_decode_dag(&scn2, &s2, &k, 1);
+        let s0 = Strategy { n_devices: 2, ..mk(0) };
+        let g0 = build_decode_dag(&scn2, &s0, &k, 1);
+        let total2 = g2.busy_time(Resource::HtoD) + g2.busy_time(Resource::HtoDOn(1));
+        let total0 = g0.busy_time(Resource::HtoD) + g0.busy_time(Resource::HtoDOn(1));
+        assert!(total2 < total0, "sharded replicas shed fetches too");
+    }
+
+    #[test]
+    fn search_prices_the_replication_knob() {
+        let scn = scn_8x7b();
+        let res = search_decode(&scn, &Knobs::moe_gen_gpu_only());
+        assert!(res.strategy.replication_bytes <= res.strategy.s_expert);
+        assert!(res.strategy.validate().is_ok());
+        // The grid tripled: the search must have evaluated the
+        // replication points, not just carried the field along.
+        assert!(res.candidates_evaluated > 150, "{}", res.candidates_evaluated);
+    }
+
+    #[test]
+    fn scenario_popularity_feeds_placement_at_plan_time() {
+        // ISSUE 10 satellite: a warm popularity signal reaches
+        // PopularityAware placement when the decode DAG shards experts;
+        // skew concentrates hot experts' fetches differently than the
+        // uniform assumption, changing per-device expert assignment.
+        let scn = scn_8x7b().with_devices(2);
+        let e_act = scn.model.num_experts;
+        // Heavy skew onto expert 0: LPT assignment differs from uniform.
+        let mut counts = vec![1usize; e_act];
+        counts[0] = 1000;
+        let scn_pop = scn.clone().with_popularity(Some(counts));
+        assert!(scn_pop.popularity.is_some());
+        let s = Strategy {
+            b: 1024, b_a: 256, b_e: 8192, omega: 0.0,
+            s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+            replication_bytes: 0,
+            n_devices: 2, placement: ExpertPlacement::PopularityAware,
+        };
+        let k = Knobs { prefetch: true, reuse: 1.0, kv_on_gpu: true,
+                        cpu_attention: false, fetch_all_experts: true };
+        let g_uniform = build_decode_dag(&scn, &s, &k, 1);
+        let g_skewed = build_decode_dag(&scn_pop, &s, &k, 1);
+        assert!(g_skewed.topo_order().is_some());
+        // Under skew LPT isolates the hot expert; dispatch/combine byte
+        // volumes shift, so the interconnect busy time must differ.
+        assert!(
+            (g_skewed.busy_time(Resource::Interconnect)
+                - g_uniform.busy_time(Resource::Interconnect))
+                .abs()
+                > 0.0,
+            "popularity signal must change the planned layout"
+        );
+        // The None fallback is exactly the old uniform plan.
+        let g_none = build_decode_dag(&scn.clone().with_popularity(None), &s, &k, 1);
+        assert_eq!(
+            g_none.busy_time(Resource::Interconnect),
+            g_uniform.busy_time(Resource::Interconnect)
+        );
+    }
+
+    #[test]
     fn prefill_dag_acyclic_and_positive() {
         let scn = scn_dsv2();
         let s = Strategy { b: 8192, b_a: 8, b_e: 8192, omega: 0.0,
-                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
+                           s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0, replication_bytes: 0,
                            n_devices: 1, placement: ExpertPlacement::RoundRobin };
         let g = build_prefill_dag(&scn, &s, &Knobs::moe_gen_gpu_only(), 2);
         assert!(g.topo_order().is_some());

@@ -147,6 +147,10 @@ pub struct ServeReport {
     pub tpot_p99: f64,
     pub expert_avg_batch: f64,
     pub weight_hit_rate: f64,
+    /// Stall-free fraction of expert-weight fetches (demand hit +
+    /// predictive prefetch + sticky replica) —
+    /// [`crate::metrics::Metrics::expert_hit_rate`].
+    pub expert_hit_rate: f64,
     pub finished_eos: usize,
     pub finished_max: usize,
     /// High-water mark of KV slots in use (admission pressure).
@@ -496,6 +500,7 @@ fn serve_on(eng: &mut Engine, cfg: &ServeConfig, requests: Vec<Request>) -> Resu
         tpot_p99: tpot.percentile(99.0),
         expert_avg_batch: m.avg_batch("expert_ffn"),
         weight_hit_rate: m.weight_hit_rate(),
+        expert_hit_rate: m.expert_hit_rate(),
         finished_eos,
         finished_max,
         peak_slots,
@@ -851,6 +856,7 @@ mod tests {
             tpot_p99: 0.0081,
             expert_avg_batch: 9.5,
             weight_hit_rate: 0.9,
+            expert_hit_rate: 0.85,
             finished_eos: 3,
             finished_max: 9,
             peak_slots: 16,
@@ -898,6 +904,7 @@ mod tests {
             tpot_p99: 0.002,
             expert_avg_batch: 4.0,
             weight_hit_rate: 1.0,
+            expert_hit_rate: 1.0,
             finished_eos: 0,
             finished_max: 4,
             peak_slots: 4,

@@ -34,6 +34,10 @@ pub struct RunReport {
     /// Fraction of weight fetches served from the GPU weight cache
     /// ([`crate::weights`]).
     pub weight_hit_rate: f64,
+    /// Fraction of expert-weight fetches served without a demand HtoD
+    /// copy (cache hit, predictive prefetch, or sticky replica) —
+    /// [`crate::metrics::Metrics::expert_hit_rate`].
+    pub expert_hit_rate: f64,
     /// Fraction of HtoD bytes that overlapped compute (vs. stalling) —
     /// the raw byte-counter view.
     pub htod_overlap_fraction: f64,
@@ -139,6 +143,7 @@ pub fn execute(eng: &mut Engine, prompts: &[Vec<i32>], steps: usize) -> Result<R
         htod_bytes: m.htod_bytes,
         dtoh_bytes: m.dtoh_bytes,
         weight_hit_rate: m.weight_hit_rate(),
+        expert_hit_rate: m.expert_hit_rate(),
         htod_overlap_fraction: m.htod_overlap_fraction(),
         weight_evictions: m.weight_evictions,
         timeline: eng.timeline.stats(),
@@ -191,6 +196,7 @@ mod tests {
             htod_bytes: 1024,
             dtoh_bytes: 2048,
             weight_hit_rate: 0.875,
+            expert_hit_rate: 0.8,
             htod_overlap_fraction: 0.9,
             weight_evictions: 3,
             timeline: TimelineStats {

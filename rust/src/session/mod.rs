@@ -280,6 +280,10 @@ impl Session {
                             // profile has no interconnect rows to rank it).
                             n_devices: eng_cfg.n_devices,
                             placement: eng_cfg.placement,
+                            // Like the cache budgets above: the measured
+                            // objective cannot rank replication, so the
+                            // config's setting carries through.
+                            replication_bytes: eng_cfg.replication_bytes.unwrap_or(0),
                         };
                         best = Some((s, tp));
                     }
@@ -311,6 +315,9 @@ impl Session {
             // P-D disaggregation: prefill waves run single-device.
             n_devices: 1,
             placement: crate::batching::ExpertPlacement::RoundRobin,
+            // Replication amortizes across decode steps; a prefill wave
+            // touches every expert once, so it buys nothing there.
+            replication_bytes: 0,
         });
         Ok(SearchOutcome {
             decode,
@@ -331,7 +338,11 @@ impl Session {
             .spec
             .scenario
             .to_scenario()?
-            .with_devices(self.spec.eng.n_devices);
+            .with_devices(self.spec.eng.n_devices)
+            // A warm popularity table (decayed live router statistics)
+            // feeds the popularity-aware placement at plan time; a cold
+            // one keeps the synthetic-skew fallback (None).
+            .with_popularity(self.eng.weights.popularity.placement_counts());
         let knobs = knobs_for(self.spec.eng.policy);
         let dec = sched::search_decode(&scn, &knobs);
         if dec.throughput <= 0.0 {
@@ -486,6 +497,16 @@ impl Session {
         if let Some(n) = sv.prefill_chunk {
             config_key.push_str(&format!("/pc{n}"));
         }
+        // Sticky expert replication forks the grouping key as a percent
+        // of the prefetch reserve (`S_Expert`): hit-rates at different
+        // replication budgets are different experiments. Appended last so
+        // every replication-free record keeps its original key.
+        let rep = self.eng.replication_budget();
+        if rep > 0 {
+            let s_exp = plan.prefetch_bytes.unwrap_or(0);
+            let pct = if s_exp > 0 { (100 * rep) / s_exp } else { 100 };
+            config_key.push_str(&format!("/rep{pct}"));
+        }
         m.insert("config_key".into(), Json::Str(config_key));
         m.insert("git".into(), Json::Str(git_describe()));
         m.insert("n_devices".into(), Json::Num(self.spec.eng.n_devices as f64));
@@ -518,6 +539,7 @@ impl Session {
         m.insert("total_tps".into(), Json::Num(r.total_tp));
         m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
         m.insert("weight_cache_hit_rate".into(), Json::Num(r.weight_hit_rate));
+        m.insert("expert_hit_rate".into(), Json::Num(r.expert_hit_rate));
         m.insert("htod_overlap_fraction".into(), Json::Num(r.htod_overlap_fraction));
         m.insert("arena_hit_rate".into(), Json::Num(r.arena_hit_rate));
         m.insert("arena_recycled_bytes".into(), Json::Num(r.arena_recycled_bytes as f64));
@@ -540,6 +562,7 @@ impl Session {
         m.insert("tpot_p50_ms".into(), Json::Num(r.tpot_p50 * 1e3));
         m.insert("tpot_p99_ms".into(), Json::Num(r.tpot_p99 * 1e3));
         m.insert("expert_avg_batch".into(), Json::Num(r.expert_avg_batch));
+        m.insert("expert_hit_rate".into(), Json::Num(r.expert_hit_rate));
         m.insert("backfilled".into(), Json::Num(r.backfilled as f64));
         m.insert("roofline_fraction".into(), Json::Num(r.roofline_fraction));
         m.insert("preemptions".into(), Json::Num(r.preemptions as f64));
@@ -915,6 +938,7 @@ mod tests {
         // Run metadata for the perf-trajectory gate: grouping key, build
         // identity, roofline annotation.
         assert_eq!(runs[0].req("config_key").as_str(), Some("run/module/defaults/nd1"));
+        assert!(runs[0].req("expert_hit_rate").as_f64().is_some());
         assert!(runs[0].req("git").as_str().is_some(), "every record carries a git identity");
         assert_eq!(runs[0].req("n_devices").as_usize(), Some(1));
         let rf = runs[0].req("roofline_fraction").as_f64().unwrap();

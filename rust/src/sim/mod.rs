@@ -148,6 +148,7 @@ fn decode_setup(scn: &Scenario, sys: System) -> Option<(Strategy, Knobs)> {
             Strategy {
                 b, b_a: b, b_e: 8192, omega, s_expert: 0, s_params: 0, reuse: k.reuse,
                 n_devices: 1, placement: ExpertPlacement::RoundRobin,
+                replication_bytes: 0,
             },
             k,
         )
@@ -266,6 +267,7 @@ pub fn prefill_tp(scn: &Scenario, sys: System) -> Option<f64> {
                 b: scn.prompt_len, b_a: 1, b_e: 8192, omega: 0.0,
                 s_expert: 0, s_params: 0, reuse: k.reuse,
                 n_devices: 1, placement: ExpertPlacement::RoundRobin,
+                replication_bytes: 0,
             };
             let t = prefill_wave_time(scn, &s, &k);
             Some(scn.prompt_len as f64 / t)
@@ -282,6 +284,7 @@ pub fn prefill_tp(scn: &Scenario, sys: System) -> Option<f64> {
                 b: tokens, b_a: b_seqs, b_e: 8192, omega: 0.0,
                 s_expert: 0, s_params: 0, reuse: knobs.reuse,
                 n_devices: 1, placement: ExpertPlacement::RoundRobin,
+                replication_bytes: 0,
             };
             let t = prefill_wave_time(scn, &s, &knobs);
             Some(tokens as f64 / t)
@@ -691,6 +694,7 @@ mod tests {
                 b, b_a: 256, b_e: 8192, omega,
                 s_expert: 2 * s.model.expert_bytes(), s_params: 0, reuse: 1.0,
                 n_devices: 1, placement: ExpertPlacement::RoundRobin,
+                replication_bytes: 0,
             };
             b as f64 / decode_step_time(&s, &st, &Knobs::moe_gen())
         };

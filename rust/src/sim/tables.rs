@@ -299,6 +299,7 @@ pub fn decode_tp_at_batch(scn: &Scenario, sys: System, b: usize) -> Option<f64> 
         reuse: knobs.reuse,
         n_devices: 1,
         placement: crate::batching::ExpertPlacement::RoundRobin,
+        replication_bytes: 0,
     };
     Some(b as f64 / decode_step_time(scn, &st, &knobs))
 }
@@ -387,6 +388,7 @@ pub fn fig7() -> String {
             b, b_a: 256, b_e: 8192, omega,
             s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
             n_devices: 1, placement: crate::batching::ExpertPlacement::RoundRobin,
+            replication_bytes: 0,
         };
         let tp = b as f64 / decode_step_time(&scn, &st, &Knobs::moe_gen());
         if tp > best.1 {

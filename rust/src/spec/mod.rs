@@ -451,6 +451,11 @@ impl JobSpec {
         eng.insert("baseline_micro_batch".into(), Json::Num(e.baseline_micro_batch as f64));
         eng.insert("n_devices".into(), Json::Num(e.n_devices as f64));
         eng.insert("placement".into(), Json::Str(e.placement.slug().into()));
+        eng.insert(
+            "replication_bytes".into(),
+            e.replication_bytes.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+        );
+        eng.insert("popularity_half_life".into(), Json::Num(e.popularity_half_life));
         eng.insert("seed".into(), Json::Num(e.seed as f64));
         eng.insert("verbose".into(), Json::Bool(e.verbose));
 
@@ -569,7 +574,8 @@ impl JobSpec {
                 &[
                     "artifacts_dir", "policy", "omega", "max_batch", "attn_micro",
                     "throttle_htod", "prefetch", "weight_cache_bytes", "weight_reuse",
-                    "baseline_micro_batch", "n_devices", "placement", "seed", "verbose",
+                    "baseline_micro_batch", "n_devices", "placement", "replication_bytes",
+                    "popularity_half_life", "seed", "verbose",
                 ],
                 "engine",
             )?;
@@ -607,6 +613,13 @@ impl JobSpec {
                     )
                 })?;
             }
+            if let Some(t) = e.get("replication_bytes") {
+                c.replication_bytes = match t {
+                    Json::Null => None,
+                    _ => Some(as_uint(t, "engine", "replication_bytes")? as usize),
+                };
+            }
+            get_f64(e, "engine", "popularity_half_life", &mut c.popularity_half_life)?;
             if let Some(t) = e.get("seed") {
                 c.seed = as_uint(t, "engine", "seed")?;
             }
@@ -830,6 +843,8 @@ mod tests {
                 baseline_micro_batch: 6,
                 n_devices: 2,
                 placement: ExpertPlacement::Contiguous,
+                replication_bytes: Some(512),
+                popularity_half_life: 2048.0,
                 seed: 42,
                 verbose: true,
             },
@@ -863,11 +878,13 @@ mod tests {
                     b: 96, b_a: 12, b_e: 256, omega: 0.25,
                     s_expert: 1024, s_params: 2048, reuse: 2.0,
                     n_devices: 2, placement: ExpertPlacement::PopularityAware,
+                    replication_bytes: 256,
                 },
                 prefill: Some(Strategy {
                     b: 4096, b_a: 4, b_e: 512, omega: 0.0,
                     s_expert: 0, s_params: 0, reuse: 1.0,
                     n_devices: 1, placement: ExpertPlacement::RoundRobin,
+                    replication_bytes: 0,
                 }),
             },
             search_basis: SearchBasis::Measured,
@@ -925,6 +942,9 @@ mod tests {
         assert!(JobSpec::from_str(r#"{"serve": {"slo": 1}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"throttle_htod": "fast"}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"n_devices": 2.5}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"replication_bytes": -4}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"replication_bytes": 1.5}}"#).is_err());
+        assert!(JobSpec::from_str(r#"{"engine": {"popularity_half_life": "fast"}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"placement": "striped"}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"engine": {"placement": 3}}"#).is_err());
         assert!(JobSpec::from_str(r#"{"bench_log": true}"#).is_err());
@@ -983,6 +1003,7 @@ mod tests {
                 decode: Strategy {
                     b: 8, b_a: 16, b_e: 32, omega: 0.0, s_expert: 0, s_params: 0, reuse: 1.0,
                     n_devices: 1, placement: ExpertPlacement::RoundRobin,
+                    replication_bytes: 0,
                 },
                 prefill: None,
             },
@@ -1008,6 +1029,9 @@ mod tests {
         let mut bad = JobSpec::default();
         bad.serve.prefill_chunk_tokens = Some(0);
         assert!(bad.validate().is_err(), "zero-token prefill chunk never finishes");
+        let mut bad = JobSpec::default();
+        bad.eng.popularity_half_life = -1.0;
+        assert!(bad.validate().is_err(), "non-positive popularity half-life");
     }
 
     #[test]

@@ -109,6 +109,11 @@ struct Entry {
     pins: u32,
     /// Remaining reuse rounds this fetch is held resident for.
     sticky: u32,
+    /// A sticky replica installed by the popularity layer
+    /// (DESIGN.md §14): protected from LRU eviction until explicitly
+    /// demoted with [`WeightCache::unstick`] — unlike `sticky` rounds,
+    /// replication never expires through the launch-count path.
+    replicated: bool,
     /// LRU clock stamp of the last touch.
     stamp: u64,
 }
@@ -206,6 +211,7 @@ impl WeightCache {
         reg.gauge("moe_gen_weight_cache_used_bytes", self.used() as f64);
         reg.gauge("moe_gen_weight_cache_peak_bytes", self.peak_bytes() as f64);
         reg.gauge("moe_gen_weight_cache_entries", self.len() as f64);
+        reg.gauge("moe_gen_weights_replicated_bytes", self.replicated_bytes() as f64);
     }
 
     /// Begin a launch that needs `key` (`bytes` wide). On success the
@@ -241,7 +247,14 @@ impl WeightCache {
         self.pool.alloc(bytes).expect("make_room guarantees capacity");
         self.entries.insert(
             key,
-            Entry { bytes, state: Residency::Resident, pins: 1, sticky, stamp: self.clock },
+            Entry {
+                bytes,
+                state: Residency::Resident,
+                pins: 1,
+                sticky,
+                replicated: false,
+                stamp: self.clock,
+            },
         );
         self.stats.misses += 1;
         Acquire::Miss
@@ -253,6 +266,76 @@ impl WeightCache {
             e.pins = e.pins.saturating_sub(1);
             e.sticky = e.sticky.saturating_sub(1);
         }
+    }
+
+    /// Explicitly set a cached entry's remaining reuse rounds (the
+    /// launch-count-independent path — the reuse decrement in
+    /// [`release`](WeightCache::release) still applies afterwards).
+    /// Returns `false` if the key is not cached.
+    pub fn set_sticky(&mut self, key: WeightKey, rounds: u32) -> bool {
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.sticky = rounds;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Demote `key` immediately: clear its replication flag *and* any
+    /// remaining reuse rounds, so the entry becomes a plain LRU victim
+    /// right now instead of waiting for the launch-count decrement path
+    /// (ISSUE 10 satellite bugfix). Pins are untouched — an in-use
+    /// launch still completes safely.
+    pub fn unstick(&mut self, key: WeightKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.sticky = 0;
+            e.replicated = false;
+        }
+    }
+
+    /// Install `key` as a sticky replica: resident and protected from
+    /// LRU eviction until [`unstick`](WeightCache::unstick). An already
+    /// cached entry (any state) is promoted in place; otherwise room is
+    /// made by LRU eviction and the caller owns the HtoD transfer of
+    /// `bytes` (metered like any weight fetch). Returns `false` — and
+    /// installs nothing — if the budget cannot admit the replica.
+    pub fn install_replica(&mut self, key: WeightKey, bytes: usize) -> bool {
+        if bytes == 0 || !self.enabled() {
+            return false;
+        }
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.replicated = true;
+            e.stamp = self.clock;
+            return true;
+        }
+        if !self.make_room(bytes) {
+            return false;
+        }
+        self.pool.alloc(bytes).expect("make_room guarantees capacity");
+        self.entries.insert(
+            key,
+            Entry {
+                bytes,
+                state: Residency::Resident,
+                pins: 0,
+                sticky: 0,
+                replicated: true,
+                stamp: self.clock,
+            },
+        );
+        true
+    }
+
+    /// Whether `key` is currently held as a sticky replica.
+    pub fn is_replicated(&self, key: WeightKey) -> bool {
+        self.entries.get(&key).is_some_and(|e| e.replicated)
+    }
+
+    /// Bytes currently held by sticky replicas.
+    pub fn replicated_bytes(&self) -> usize {
+        self.entries.values().filter(|e| e.replicated).map(|e| e.bytes).sum()
     }
 
     /// Reserve space for an overlapped prefetch of `key`. Prefetch is
@@ -272,7 +355,14 @@ impl WeightCache {
         self.pool.alloc(bytes).expect("make_room guarantees capacity");
         self.entries.insert(
             key,
-            Entry { bytes, state: Residency::Reserved, pins: 0, sticky: 0, stamp: self.clock },
+            Entry {
+                bytes,
+                state: Residency::Reserved,
+                pins: 0,
+                sticky: 0,
+                replicated: false,
+                stamp: self.clock,
+            },
         );
         self.stats.prefetch_issued += 1;
         true
@@ -348,7 +438,7 @@ impl WeightCache {
         let evictable: usize = self
             .entries
             .values()
-            .filter(|e| e.pins == 0 && e.sticky == 0)
+            .filter(|e| e.pins == 0 && e.sticky == 0 && !e.replicated)
             .map(|e| e.bytes)
             .sum();
         if self.pool.free_bytes() + evictable < bytes {
@@ -365,13 +455,15 @@ impl WeightCache {
     /// Evict the least-recently-used victim. Victims are unpinned entries
     /// past their reuse rounds — speculative entries (reserved/in-flight
     /// prefetches) included, so demand always outranks speculation; their
-    /// fresh LRU stamps just make them the last resort. An in-flight
+    /// fresh LRU stamps just make them the last resort. Sticky replicas
+    /// are protected like reuse rounds (`allow_sticky` overrides both —
+    /// the budget-shrink path must be able to shed them). An in-flight
     /// transfer is completed before its bytes are freed.
     fn evict_lru(&mut self, allow_sticky: bool) -> bool {
         let victim = self
             .entries
             .iter()
-            .filter(|(_, e)| e.pins == 0 && (allow_sticky || e.sticky == 0))
+            .filter(|(_, e)| e.pins == 0 && (allow_sticky || (e.sticky == 0 && !e.replicated)))
             .min_by_key(|(_, e)| e.stamp)
             .map(|(k, _)| *k);
         match victim {
@@ -502,6 +594,86 @@ mod tests {
         assert_eq!(c.used(), 100);
         assert!(c.contains(WeightKey::Expert(0, 2)), "MRU entry survives the shrink");
         assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn replicas_resist_lru_until_demoted() {
+        let e = 100;
+        let mut c = WeightCache::new(2 * e);
+        let rep = WeightKey::Expert(0, 0);
+        assert!(c.install_replica(rep, e));
+        assert!(c.is_replicated(rep));
+        assert_eq!(c.replicated_bytes(), e);
+        // A replica hits without any link traffic.
+        assert!(matches!(c.acquire(rep, e, 0), Acquire::Hit));
+        c.release(rep);
+        assert!(c.is_replicated(rep), "release never demotes a replica");
+        // Demand traffic fills the rest of the budget, then needs room:
+        // the replica is not a victim even though it is the LRU entry.
+        let (k1, k2) = (WeightKey::Expert(0, 1), WeightKey::Expert(0, 2));
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Miss));
+        c.release(k1);
+        // Make the replica the LRU entry by touching k1 after it.
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Hit));
+        c.release(k1);
+        assert!(matches!(c.acquire(k2, e, 0), Acquire::Miss));
+        c.release(k2);
+        assert!(c.contains(rep), "replica survives LRU pressure");
+        assert!(!c.contains(k1), "plain entry evicted instead");
+    }
+
+    /// ISSUE 10 satellite bugfix: demotion via `unstick` makes a replica
+    /// LRU-evictable *immediately* — no launch-count decrement needed.
+    #[test]
+    fn demoted_replica_is_immediately_evictable() {
+        let e = 100;
+        let mut c = WeightCache::new(e);
+        let rep = WeightKey::Expert(0, 0);
+        assert!(c.install_replica(rep, e));
+        let k1 = WeightKey::Expert(0, 1);
+        assert!(matches!(c.acquire(k1, e, 0), Acquire::Bypass), "replica blocks the budget");
+        c.unstick(rep);
+        assert!(!c.is_replicated(rep));
+        assert_eq!(c.replicated_bytes(), 0);
+        assert!(
+            matches!(c.acquire(k1, e, 0), Acquire::Miss),
+            "demoted replica evicts on the very next demand fetch"
+        );
+        assert!(!c.contains(rep) && c.contains(k1));
+    }
+
+    #[test]
+    fn set_sticky_and_replica_promotion_in_place() {
+        let e = 100;
+        let mut c = WeightCache::new(e);
+        let k = WeightKey::Expert(1, 3);
+        assert!(!c.set_sticky(k, 2), "uncached keys cannot be made sticky");
+        assert!(matches!(c.acquire(k, e, 0), Acquire::Miss));
+        c.release(k);
+        // Promote the demand-cached entry to a replica in place.
+        assert!(c.install_replica(k, e));
+        assert!(c.is_replicated(k));
+        // set_sticky layers reuse rounds on top; unstick clears both.
+        assert!(c.set_sticky(k, 5));
+        c.unstick(k);
+        let other = WeightKey::Expert(1, 4);
+        assert!(matches!(c.acquire(other, e, 0), Acquire::Miss), "fully demoted -> evictable");
+        assert!(!c.contains(k));
+        // Replication respects the budget hard invariant.
+        assert!(!c.install_replica(WeightKey::Expert(2, 0), 10 * e));
+        let mut zero = WeightCache::new(0);
+        assert!(!zero.install_replica(k, e), "disabled cache refuses replicas");
+    }
+
+    #[test]
+    fn set_budget_sheds_replicas_when_forced() {
+        let e = 100;
+        let mut c = WeightCache::new(2 * e);
+        assert!(c.install_replica(WeightKey::Expert(0, 0), e));
+        assert!(c.install_replica(WeightKey::Expert(0, 1), e));
+        c.set_budget(e);
+        assert_eq!(c.used(), e, "budget shrink may shed replicas (allow_sticky path)");
+        assert!(c.used() <= c.budget());
     }
 
     #[test]

@@ -38,8 +38,10 @@
 //! off (asserted in `tests/integration_weights.rs`).
 
 pub mod cache;
+pub mod popularity;
 
 pub use cache::{Acquire, CacheStats, WeightCache, WeightKey, WeightSizes};
+pub use popularity::PopularityTable;
 
 /// Decides which weights to move ahead of demand (see module docs).
 #[derive(Debug, Clone, Copy)]
@@ -80,6 +82,39 @@ impl PrefetchScheduler {
         order.truncate(depth);
         order
     }
+
+    /// Learned speculative prefetch: rank the upcoming layer's experts
+    /// by a blend of the live layer-`l` router counts and the decayed
+    /// cross-request distribution of the *target* layer (`learned` is
+    /// that layer's normalized shares). Each side contributes half the
+    /// score; an expert the trace has never favoured still prefetches
+    /// if the live batch routes to it, and a cross-request favourite
+    /// prefetches even when the live batch misses it. Without a learned
+    /// distribution the ranking degrades to [`hot_experts`] exactly.
+    pub fn hot_experts_blended(
+        &self,
+        counts: &[u64],
+        learned: Option<&[f64]>,
+        depth: usize,
+    ) -> Vec<usize> {
+        let learned = match learned {
+            Some(d) if d.len() == counts.len() => d,
+            _ => return self.hot_experts(counts, depth),
+        };
+        let live_total: u64 = counts.iter().sum();
+        let score = |e: usize| {
+            let live = if live_total > 0 {
+                counts[e] as f64 / live_total as f64
+            } else {
+                0.0
+            };
+            0.5 * live + 0.5 * learned[e]
+        };
+        let mut order: Vec<usize> = (0..counts.len()).filter(|&e| score(e) > 0.0).collect();
+        order.sort_by(|&a, &b| score(b).total_cmp(&score(a)).then_with(|| a.cmp(&b)));
+        order.truncate(depth);
+        order
+    }
 }
 
 /// The engine-owned residency bundle lent to [`crate::exec::ExecCtx`].
@@ -87,14 +122,37 @@ pub struct WeightResidency {
     pub cache: WeightCache,
     pub sizes: WeightSizes,
     pub sched: PrefetchScheduler,
+    /// EWMA-decayed cross-request router statistics — fed by every
+    /// router launch, consumed by the blended prefetch ranking, sticky
+    /// replication and plan-time popularity-aware placement.
+    pub popularity: PopularityTable,
 }
 
 impl WeightResidency {
     pub fn new(sizes: WeightSizes, cache_budget: usize) -> Self {
+        let popularity = PopularityTable::new(
+            sizes.num_layers,
+            sizes.num_experts,
+            PopularityTable::DEFAULT_HALF_LIFE,
+        );
         WeightResidency {
             cache: WeightCache::new(cache_budget),
             sizes,
             sched: PrefetchScheduler::default(),
+            popularity,
+        }
+    }
+
+    /// Rank layer `layer`'s experts for predictive prefetch: the live
+    /// previous-layer counts blended with the learned distribution of
+    /// the target layer once it carries enough decayed mass, pure live
+    /// counts while cold.
+    pub fn ranked_hot_experts(&self, layer: usize, counts: &[u64], depth: usize) -> Vec<usize> {
+        if self.popularity.is_confident(layer) {
+            let learned = self.popularity.distribution(layer);
+            self.sched.hot_experts_blended(counts, learned.as_deref(), depth)
+        } else {
+            self.sched.hot_experts(counts, depth)
         }
     }
 }
@@ -124,5 +182,46 @@ mod tests {
         assert_eq!(sched.hot_experts(&counts, 3), vec![1, 3, 2]);
         assert_eq!(sched.hot_experts(&counts, 10), vec![1, 3, 2, 5]);
         assert!(sched.hot_experts(&[0, 0], 4).is_empty(), "cold experts never prefetch");
+    }
+
+    #[test]
+    fn blended_ranking_mixes_live_and_learned() {
+        let sched = PrefetchScheduler::default();
+        let counts = [8u64, 2, 0, 0];
+        // No learned signal (or a mis-sized one): identical to the
+        // single-wave ranking.
+        assert_eq!(sched.hot_experts_blended(&counts, None, 4), sched.hot_experts(&counts, 4));
+        assert_eq!(
+            sched.hot_experts_blended(&counts, Some(&[1.0]), 4),
+            sched.hot_experts(&counts, 4)
+        );
+        // The trace strongly favours expert 2, which the live batch
+        // never touched: the blend surfaces it ahead of the weak live
+        // expert 1 (score 0.45 vs 0.125).
+        let learned = [0.05, 0.05, 0.9, 0.0];
+        assert_eq!(sched.hot_experts_blended(&counts, Some(&learned), 3), vec![2, 0, 1]);
+        // A cold live batch ranks purely by the learned distribution.
+        assert_eq!(sched.hot_experts_blended(&[0, 0, 0, 0], Some(&learned), 2), vec![2, 0]);
+        // Zero-score experts never prefetch.
+        assert_eq!(sched.hot_experts_blended(&[0, 0, 0, 0], Some(&[0.0; 4]), 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn residency_blends_only_once_confident() {
+        let sizes = WeightSizes::from_cfg(&RtConfig::tiny());
+        let mut res = WeightResidency::new(sizes, 0);
+        let live = [0u64, 9, 1, 0, 0, 0, 0, 0];
+        assert_eq!(
+            res.ranked_hot_experts(1, &live, 2),
+            res.sched.hot_experts(&live, 2),
+            "cold table falls back to the single-wave predictor"
+        );
+        // Warm layer 1 with a skew toward expert 3 past MIN_CONFIDENCE.
+        for _ in 0..8 {
+            res.popularity.observe(1, &[0, 0, 2, 30, 0, 0, 0, 0]);
+        }
+        assert!(res.popularity.is_confident(1));
+        let ranked = res.ranked_hot_experts(1, &live, 2);
+        assert_eq!(ranked[0], 3, "learned favourite outranks the weak live counts");
     }
 }

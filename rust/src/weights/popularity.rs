@@ -1,0 +1,330 @@
+//! Cross-request expert popularity: EWMA-decayed router statistics.
+//!
+//! The single-wave predictor ([`crate::weights::PrefetchScheduler`])
+//! only sees layer `l`'s router output for one batch — but expert
+//! popularity is heavily skewed and *stable across requests* ("Fast MoE
+//! Inference via Predictive Prefetching and Expert Replication",
+//! PAPERS.md). [`PopularityTable`] accumulates every router output —
+//! offline waves and serve ticks alike — into a per-`(layer, expert)`
+//! counter table under exponential decay, so the distribution tracks
+//! the live workload instead of its whole history:
+//!
+//! * On each [`observe`](PopularityTable::observe) of a layer's routed
+//!   token counts, the layer's counters first decay by
+//!   `0.5^(batch_tokens / half_life)` — a half-life measured in routed
+//!   tokens, so the decay rate is workload-speed invariant — then the
+//!   new counts are added.
+//! * [`distribution`](PopularityTable::distribution) exposes the
+//!   normalized per-expert share; [`confidence`](PopularityTable::confidence)
+//!   is the decayed sample mass behind it, so consumers can fall back
+//!   to live-counts-only behaviour until the table is warm
+//!   ([`PopularityTable::MIN_CONFIDENCE`]).
+//! * [`hot_set`](PopularityTable::hot_set) ranks `(layer, expert)`
+//!   pairs whose decayed share exceeds the uniform share — the sticky
+//!   replication candidates the engine installs into the
+//!   [`crate::weights::WeightCache`] under `Strategy.replication_bytes`.
+//!
+//! Everything here is deterministic: observation order fixes the table
+//! exactly, ties rank toward the lower `(layer, expert)` — and the
+//! table only ever influences *transfer/placement policy* (prefetch
+//! ranking, replication, device assignment), never module math, so
+//! generated tokens are bit-identical with popularity tracking on or
+//! off (asserted in `tests/integration_weights.rs`).
+
+/// EWMA-decayed per-`(layer, expert)` routed-token counter table.
+#[derive(Debug, Clone)]
+pub struct PopularityTable {
+    /// Decay half-life in routed tokens: after observing `half_life`
+    /// tokens on a layer, old mass has decayed to half its weight.
+    half_life: f64,
+    /// Decayed routed-token count per `[layer][expert]`.
+    counts: Vec<Vec<f64>>,
+    /// Decayed total sample mass per layer (the confidence signal).
+    mass: Vec<f64>,
+}
+
+impl PopularityTable {
+    /// Decayed sample mass (in routed tokens) below which a layer's
+    /// distribution is considered too cold to act on — consumers fall
+    /// back to pure live-count behaviour.
+    pub const MIN_CONFIDENCE: f64 = 64.0;
+
+    /// Default decay half-life in routed tokens.
+    pub const DEFAULT_HALF_LIFE: f64 = 4096.0;
+
+    pub fn new(num_layers: usize, num_experts: usize, half_life: f64) -> Self {
+        assert!(half_life.is_finite() && half_life > 0.0, "half-life must be positive");
+        PopularityTable {
+            half_life,
+            counts: vec![vec![0.0; num_experts]; num_layers],
+            mass: vec![0.0; num_layers],
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.counts.first().map_or(0, |l| l.len())
+    }
+
+    pub fn half_life(&self) -> f64 {
+        self.half_life
+    }
+
+    /// Re-target the decay half-life (engine knob); existing mass keeps
+    /// its current weights and decays at the new rate from here on.
+    pub fn set_half_life(&mut self, half_life: f64) {
+        assert!(half_life.is_finite() && half_life > 0.0, "half-life must be positive");
+        self.half_life = half_life;
+    }
+
+    /// Forget everything (e.g. the engine's accounting reset).
+    pub fn reset(&mut self) {
+        for l in &mut self.counts {
+            l.iter_mut().for_each(|c| *c = 0.0);
+        }
+        self.mass.iter_mut().for_each(|m| *m = 0.0);
+    }
+
+    /// Fold one router output into the table: `counts[e]` = tokens the
+    /// router sent to expert `e` of `layer` this batch. The layer's
+    /// existing mass first decays by `0.5^(batch_tokens / half_life)`.
+    pub fn observe(&mut self, layer: usize, counts: &[u64]) {
+        if layer >= self.counts.len() {
+            return;
+        }
+        let batch: u64 = counts.iter().sum();
+        if batch == 0 {
+            return;
+        }
+        let decay = 0.5f64.powf(batch as f64 / self.half_life);
+        let row = &mut self.counts[layer];
+        for c in row.iter_mut() {
+            *c *= decay;
+        }
+        self.mass[layer] *= decay;
+        for (e, &c) in counts.iter().enumerate().take(row.len()) {
+            row[e] += c as f64;
+        }
+        self.mass[layer] += batch as f64;
+    }
+
+    /// Decayed sample mass behind `layer`'s distribution.
+    pub fn confidence(&self, layer: usize) -> f64 {
+        self.mass.get(layer).copied().unwrap_or(0.0)
+    }
+
+    /// Whether `layer`'s distribution carries enough decayed mass to be
+    /// acted on (prefetch blending, replication).
+    pub fn is_confident(&self, layer: usize) -> bool {
+        self.confidence(layer) >= Self::MIN_CONFIDENCE
+    }
+
+    /// `layer`'s decayed share of expert `e` (0 when cold).
+    pub fn share(&self, layer: usize, e: usize) -> f64 {
+        let m = self.confidence(layer);
+        if m <= 0.0 {
+            return 0.0;
+        }
+        self.counts
+            .get(layer)
+            .and_then(|row| row.get(e))
+            .map_or(0.0, |&c| c / m)
+    }
+
+    /// Normalized per-expert distribution of `layer`, or `None` while
+    /// the layer is cold (no observed mass).
+    pub fn distribution(&self, layer: usize) -> Option<Vec<f64>> {
+        let m = self.confidence(layer);
+        if m <= 0.0 {
+            return None;
+        }
+        Some(self.counts[layer].iter().map(|&c| c / m).collect())
+    }
+
+    /// The globally hottest `(layer, expert)` pairs whose decayed share
+    /// strictly exceeds the uniform share `1 / num_experts` — the sticky
+    /// replication candidates, ranked by decayed count descending with
+    /// deterministic `(layer, expert)` tie-breaks. Only layers past
+    /// [`MIN_CONFIDENCE`](Self::MIN_CONFIDENCE) contribute; at most
+    /// `max_slots` pairs are returned.
+    pub fn hot_set(&self, max_slots: usize) -> Vec<(usize, usize)> {
+        if max_slots == 0 || self.num_experts() == 0 {
+            return Vec::new();
+        }
+        let uniform = 1.0 / self.num_experts() as f64;
+        let mut cands: Vec<(usize, usize, f64)> = Vec::new();
+        for (l, row) in self.counts.iter().enumerate() {
+            if !self.is_confident(l) {
+                continue;
+            }
+            let m = self.mass[l];
+            for (e, &c) in row.iter().enumerate() {
+                if c / m > uniform {
+                    cands.push((l, e, c));
+                }
+            }
+        }
+        cands.sort_by(|a, b| b.2.total_cmp(&a.2).then_with(|| (a.0, a.1).cmp(&(b.0, b.1))));
+        cands.truncate(max_slots);
+        cands.into_iter().map(|(l, e, _)| (l, e)).collect()
+    }
+
+    /// Integer per-expert counts aggregated across all confident layers
+    /// — the plan-time popularity signal for
+    /// [`crate::batching::ExpertPlacement::PopularityAware`]. `None`
+    /// while no layer is warm, preserving the uniform-assumption
+    /// fallback at the call sites.
+    pub fn placement_counts(&self) -> Option<Vec<usize>> {
+        let ne = self.num_experts();
+        if ne == 0 {
+            return None;
+        }
+        let mut agg = vec![0.0f64; ne];
+        let mut warm = false;
+        for (l, row) in self.counts.iter().enumerate() {
+            if !self.is_confident(l) {
+                continue;
+            }
+            warm = true;
+            for (e, &c) in row.iter().enumerate() {
+                agg[e] += c;
+            }
+        }
+        if !warm {
+            return None;
+        }
+        Some(agg.into_iter().map(|c| c.round() as usize).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn observe_accumulates_and_normalizes() {
+        let mut t = PopularityTable::new(2, 4, 1000.0);
+        assert_eq!(t.distribution(0), None, "cold layer has no distribution");
+        t.observe(0, &[6, 2, 0, 0]);
+        let d = t.distribution(0).unwrap();
+        assert!((d[0] - 0.75).abs() < 1e-12 && (d[1] - 0.25).abs() < 1e-12);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((t.confidence(0) - 8.0).abs() < 1e-9);
+        assert_eq!(t.distribution(1), None, "layers are independent");
+    }
+
+    #[test]
+    fn decay_forgets_old_mass_at_the_half_life() {
+        let mut t = PopularityTable::new(1, 2, 100.0);
+        t.observe(0, &[100, 0]);
+        // One half-life of fresh mass on the other expert: the old
+        // expert's count halves before the new one lands.
+        t.observe(0, &[0, 100]);
+        let d = t.distribution(0).unwrap();
+        assert!(d[1] > d[0], "fresh mass outweighs decayed mass");
+        assert!((t.share(0, 0) * t.confidence(0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hot_set_ranks_above_uniform_with_deterministic_ties() {
+        let mut t = PopularityTable::new(2, 4, 10_000.0);
+        // uniform share = 0.25; expert 1 of layer 0 and expert 2 of
+        // layer 1 are hot, the rest at or below uniform.
+        t.observe(0, &[10, 70, 10, 10]);
+        t.observe(1, &[5, 5, 85, 5]);
+        assert_eq!(t.hot_set(8), vec![(1, 2), (0, 1)]);
+        assert_eq!(t.hot_set(1), vec![(1, 2)], "slot cap truncates the ranking");
+        assert!(t.hot_set(0).is_empty());
+        // Equal decayed counts tie toward the lower (layer, expert).
+        let mut u = PopularityTable::new(2, 2, 10_000.0);
+        u.observe(0, &[70, 30]);
+        u.observe(1, &[70, 30]);
+        assert_eq!(u.hot_set(8), vec![(0, 0), (1, 0)]);
+    }
+
+    #[test]
+    fn hot_set_and_placement_ignore_cold_layers() {
+        let mut t = PopularityTable::new(2, 4, 1000.0);
+        t.observe(0, &[8, 1, 1, 1]); // mass 11 < MIN_CONFIDENCE
+        assert!(!t.is_confident(0));
+        assert!(t.hot_set(4).is_empty(), "cold layers never nominate replicas");
+        assert_eq!(t.placement_counts(), None);
+        t.observe(0, &[80, 10, 10, 10]);
+        assert!(t.is_confident(0));
+        assert_eq!(t.hot_set(4), vec![(0, 0)]);
+        let pc = t.placement_counts().unwrap();
+        assert_eq!(pc.len(), 4);
+        assert!(pc[0] > pc[1]);
+    }
+
+    #[test]
+    fn reset_and_half_life_knob() {
+        let mut t = PopularityTable::new(1, 2, 500.0);
+        t.observe(0, &[100, 100]);
+        assert!(t.confidence(0) > 0.0);
+        t.set_half_life(2048.0);
+        assert!((t.half_life() - 2048.0).abs() < 1e-12);
+        t.reset();
+        assert_eq!(t.confidence(0), 0.0);
+        assert_eq!(t.distribution(0), None);
+    }
+
+    /// ISSUE 10 satellite: 100-case property test — decay monotonicity,
+    /// normalization, confidence growth, determinism under a fixed seed.
+    #[test]
+    fn prop_decayed_table_invariants() {
+        prop_check(100, |rng| {
+            let layers = rng.range(1, 4);
+            let experts = rng.range(2, 8);
+            let half_life = rng.range(64, 4096) as f64;
+            let mut t = PopularityTable::new(layers, experts, half_life);
+            let mut twin = t.clone();
+            let mut prev_mass = vec![0.0f64; layers];
+            for _ in 0..rng.range(1, 24) {
+                let layer = rng.below(layers);
+                let counts: Vec<u64> =
+                    (0..experts).map(|_| rng.below(64) as u64).collect();
+                let batch: u64 = counts.iter().sum();
+                let stale = prev_mass[layer];
+                t.observe(layer, &counts);
+                twin.observe(layer, &counts);
+
+                // Decay monotonicity: the surviving share of pre-batch
+                // mass is exactly decay * stale — never more.
+                let decay = 0.5f64.powf(batch as f64 / half_life);
+                let expect = decay * stale + batch as f64;
+                if batch > 0 {
+                    assert!(
+                        (t.confidence(layer) - expect).abs() < 1e-6 * expect.max(1.0),
+                        "mass {} != decayed {}",
+                        t.confidence(layer),
+                        expect
+                    );
+                    assert!(t.confidence(layer) <= stale + batch as f64 + 1e-9);
+                    // Confidence growth: fresh mass always lands.
+                    assert!(t.confidence(layer) >= batch as f64 - 1e-9);
+                } else {
+                    assert_eq!(t.confidence(layer), stale, "empty batches are no-ops");
+                }
+                prev_mass[layer] = t.confidence(layer);
+
+                // Normalization: any warm distribution sums to 1.
+                if let Some(d) = t.distribution(layer) {
+                    let s: f64 = d.iter().sum();
+                    assert!((s - 1.0).abs() < 1e-9, "distribution sums to {s}");
+                    assert!(d.iter().all(|&p| (0.0..=1.0 + 1e-12).contains(&p)));
+                }
+            }
+            // Determinism: the identically-fed twin matches bit-for-bit.
+            for l in 0..layers {
+                assert_eq!(t.confidence(l).to_bits(), twin.confidence(l).to_bits());
+                assert_eq!(t.distribution(l), twin.distribution(l));
+            }
+            assert_eq!(t.hot_set(experts), twin.hot_set(experts));
+        });
+    }
+}

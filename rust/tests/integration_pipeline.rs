@@ -314,13 +314,13 @@ fn extreme_plans_are_throughput_only() {
     let plans = [
         // One-sequence attention launches, one-token expert launches.
         Plan { accum_batch: 128, attn_micro: 1, prefill_attn_micro: 1, expert_micro: 1,
-               omega: 0.0, prefetch_bytes: None, cache_bytes: None, reuse: 1.0 },
+               omega: 0.0, prefetch_bytes: None, cache_bytes: None, reuse: 1.0, replication_bytes: None },
         // Everything on the CPU attention path.
         Plan { accum_batch: 128, attn_micro: 8, prefill_attn_micro: 16, expert_micro: 512,
-               omega: 1.0, prefetch_bytes: None, cache_bytes: None, reuse: 1.0 },
+               omega: 1.0, prefetch_bytes: None, cache_bytes: None, reuse: 1.0, replication_bytes: None },
         // Tiny accumulated batch: three separate prefill/decode waves.
         Plan { accum_batch: 2, attn_micro: 8, prefill_attn_micro: 16, expert_micro: 512,
-               omega: 0.5, prefetch_bytes: None, cache_bytes: None, reuse: 1.0 },
+               omega: 0.5, prefetch_bytes: None, cache_bytes: None, reuse: 1.0, replication_bytes: None },
     ];
     for plan in plans {
         let mut eng = ref_engine(EngineConfig::default());

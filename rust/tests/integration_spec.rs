@@ -124,6 +124,7 @@ fn explicit_strategy_source_applies_verbatim() {
     let decode = moe_gen::sched::Strategy {
         b: 16, b_a: 4, b_e: 32, omega: 0.0, s_expert: 1 << 20, s_params: 1 << 22, reuse: 2.0,
         n_devices: 1, placement: moe_gen::batching::ExpertPlacement::RoundRobin,
+        replication_bytes: 0,
     };
     let mut spec = small_spec();
     spec.strategy = StrategySource::Explicit { decode, prefill: None };
@@ -168,6 +169,7 @@ fn tokens_invariant_across_strategy_sources() {
             decode: moe_gen::sched::Strategy {
                 b: 8, b_a: 2, b_e: 16, omega: 0.5, s_expert: 0, s_params: 0, reuse: 1.0,
                 n_devices: 1, placement: moe_gen::batching::ExpertPlacement::RoundRobin,
+                replication_bytes: 0,
             },
             prefill: None,
         },

@@ -164,6 +164,7 @@ fn searched_strategy_budget_goes_live() {
         reuse: 1.0,
         n_devices: 1,
         placement: moe_gen::batching::ExpertPlacement::RoundRobin,
+        replication_bytes: 0,
     };
     eng.set_strategy(&dec, None);
     assert_eq!(eng.weights.cache.budget(), sizes.total());
@@ -172,4 +173,52 @@ fn searched_strategy_budget_goes_live() {
     let toks = eng.generate(&prompts(), 3).unwrap();
     assert_eq!(toks.len(), 6);
     assert!(eng.metrics.weight_hit_rate() > 0.5);
+}
+
+#[test]
+fn replication_lifts_expert_hit_rate_without_changing_tokens() {
+    // Cross-request expert replication (DESIGN.md §14) is a residency
+    // policy only: greedy tokens are bit-identical with it off, fully
+    // budgeted, or squeezed to one slot. Under a two-expert cache the
+    // demand path thrashes (every launch sweeps more experts than fit),
+    // so pinning the cross-request-hot experts as sticky replicas must
+    // strictly lift the expert hit-rate on the skewed router trace the
+    // reference model produces.
+    let steps = 10;
+    let sizes = WeightSizes::from_cfg(&RtConfig::tiny());
+    let mk = |rep: usize| EngineConfig {
+        weight_cache_bytes: 2 * sizes.expert,
+        prefetch: false, // isolate replication from predictive prefetch
+        replication_bytes: Some(rep),
+        ..EngineConfig::default()
+    };
+
+    let mut off = ref_engine(mk(0));
+    let t_off = off.generate(&prompts(), steps).unwrap();
+    assert_eq!(off.weights.cache.replicated_bytes(), 0, "rep=0 forces replication off");
+    assert_eq!(off.metrics.expert_replicated_hits, 0);
+
+    let mut on = ref_engine(mk(2 * sizes.expert));
+    let t_on = on.generate(&prompts(), steps).unwrap();
+    assert_eq!(t_off, t_on, "replication must not change greedy tokens");
+    assert!(
+        on.weights.cache.replicated_bytes() > 0,
+        "a confident skewed table must install replicas"
+    );
+    assert!(
+        on.metrics.expert_replicated_hits > 0,
+        "hot experts must serve launches from their sticky replicas"
+    );
+    assert!(
+        on.metrics.expert_hit_rate() > off.metrics.expert_hit_rate(),
+        "replication must lift expert hit-rate: on={} off={}",
+        on.metrics.expert_hit_rate(),
+        off.metrics.expert_hit_rate()
+    );
+
+    // One-slot budget: still token-identical, replicas capped at one expert.
+    let mut tiny = ref_engine(mk(sizes.expert));
+    let t_tiny = tiny.generate(&prompts(), steps).unwrap();
+    assert_eq!(t_off, t_tiny, "a tiny replication budget must not change greedy tokens");
+    assert!(tiny.weights.cache.replicated_bytes() <= sizes.expert, "budget caps the replica set");
 }

@@ -62,6 +62,7 @@ fn prop_decode_time_monotone_in_batch_work() {
             b, b_a: 64, b_e: 8192, omega: 0.0,
             s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
             n_devices: 1, placement: moe_gen::batching::ExpertPlacement::RoundRobin,
+            replication_bytes: 0,
         };
         let t1 = sched::decode_step_time(&scn, &mk(b1), &Knobs::moe_gen_gpu_only());
         let t2 = sched::decode_step_time(&scn, &mk(b2), &Knobs::moe_gen_gpu_only());
@@ -84,6 +85,7 @@ fn prop_weight_reuse_never_hurts() {
             b_a: 64, b_e: 8192, omega: 0.0,
             s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
             n_devices: 1, placement: moe_gen::batching::ExpertPlacement::RoundRobin,
+            replication_bytes: 0,
         };
         let base = Knobs::moe_gen_gpu_only();
         let reused = Knobs { reuse: 4.0, ..base };
@@ -169,6 +171,7 @@ fn prop_dag_edges_scale_linearly_with_layers() {
             b: 256, b_a: 64, b_e: 8192, omega: 0.3,
             s_expert: 2 * scn.model.expert_bytes(), s_params: 0, reuse: 1.0,
             n_devices: 1, placement: moe_gen::batching::ExpertPlacement::RoundRobin,
+            replication_bytes: 0,
         };
         let g1 = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen(), 1);
         let g2 = sched::build_decode_dag(&scn, &s, &Knobs::moe_gen(), 2);

@@ -13,7 +13,12 @@ rather than the single-tenant trajectory:
 * ``/dedup{pct}`` — shared-prefix KV dedup on, with the prefix-share
   fraction (``/dedup25`` = 25% of requests share the prefix);
 * ``/pct{T}`` — chunked prefill at ``T`` prompt tokens per tick;
-* ``/pc{N}`` — an explicit prefill wave width of ``N`` requests.
+* ``/pc{N}`` — an explicit prefill wave width of ``N`` requests;
+* ``/rep{pct}`` — sticky expert replication on (any job kind), with the
+  replication budget as a whole percentage of the strategy's
+  expert-prefetch reserve ``S_Expert`` (``/rep25`` = a quarter of the
+  reserve pinned as cross-request-hot replicas; DESIGN.md §14). Always
+  the last suffix.
 
 e.g. ``serve/module/defaults/nd1/slo50/dedup50``. Knobs left at their
 defaults add nothing, so pre-tenancy keys are unchanged. Only records
